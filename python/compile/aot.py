@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 model functions to HLO *text* artifacts.
+
+This is the only place Python runs; the Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` via the `xla` crate's PJRT CPU client and never
+touches Python again.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--presets tiny,vision,...]
+
+Emits, per preset:
+  <preset>_init.hlo.txt        (seed i32[1]) -> (params f32[P])
+  <preset>_train_step.hlo.txt  (params, global, x, y, lr, mu) -> (params', loss, correct)
+  <preset>_eval_step.hlo.txt   (params, x, y) -> (loss_sum, correct)
+  <preset>_aggregate.hlo.txt   (updates f32[K,P], weights f32[K]) -> (params f32[P])
+  <preset>_manifest.json       shapes + metadata consumed by rust/src/runtime
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_preset(cfg: M.ModelConfig):
+    """Lower all four entry points for one model preset. Returns
+    {artifact_name: hlo_text} plus the manifest dict."""
+    P = cfg.param_count
+    B = cfg.batch_size
+    D = cfg.input_dim
+    K = cfg.agg_k
+
+    f32, i32 = jnp.float32, jnp.int32
+
+    def train_fn(params, glob, x, y, lr, mu):
+        return M.train_step(cfg, params, glob, x, y, lr, mu)
+
+    def eval_fn(params, x, y):
+        return M.eval_step(cfg, params, x, y)
+
+    def init_fn(seed):
+        return (M.init_params(cfg, seed),)
+
+    def agg_fn(updates, weights):
+        return (M.aggregate(cfg, updates, weights),)
+
+    lowerings = {
+        "train_step": jax.jit(train_fn).lower(
+            _spec((P,)), _spec((P,)), _spec((B, D)), _spec((B,), i32),
+            _spec((1,)), _spec((1,)),
+        ),
+        "eval_step": jax.jit(eval_fn).lower(
+            _spec((P,)), _spec((B, D)), _spec((B,), i32),
+        ),
+        "init": jax.jit(init_fn).lower(_spec((1,), i32)),
+        "aggregate": jax.jit(agg_fn).lower(
+            _spec((K, P)), _spec((K,)),
+        ),
+    }
+    texts = {name: to_hlo_text(low) for name, low in lowerings.items()}
+
+    manifest = {
+        "preset": cfg.name,
+        "param_count": P,
+        "input_dim": D,
+        "num_classes": cfg.num_classes,
+        "batch_size": B,
+        "agg_k": K,
+        "hidden": list(cfg.hidden),
+        "artifacts": {name: f"{cfg.name}_{name}.hlo.txt" for name in texts},
+        "entry_points": {
+            "train_step": {
+                "inputs": [["f32", [P]], ["f32", [P]], ["f32", [B, D]],
+                           ["i32", [B]], ["f32", [1]], ["f32", [1]]],
+                "outputs": [["f32", [P]], ["f32", [1]], ["i32", [1]]],
+            },
+            "eval_step": {
+                "inputs": [["f32", [P]], ["f32", [B, D]], ["i32", [B]]],
+                "outputs": [["f32", [1]], ["i32", [1]]],
+            },
+            "init": {
+                "inputs": [["i32", [1]]],
+                "outputs": [["f32", [P]]],
+            },
+            "aggregate": {
+                "inputs": [["f32", [K, P]], ["f32", [K]]],
+                "outputs": [["f32", [P]]],
+            },
+        },
+    }
+    return texts, manifest
+
+
+def emit(out_dir: str, presets):
+    os.makedirs(out_dir, exist_ok=True)
+    for name in presets:
+        cfg = M.PRESETS[name]
+        texts, manifest = lower_preset(cfg)
+        for fn_name, text in texts.items():
+            path = os.path.join(out_dir, f"{cfg.name}_{fn_name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        mpath = os.path.join(out_dir, f"{cfg.name}_manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=2)
+        print(f"wrote {mpath} (P={manifest['param_count']})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets", default="tiny,vision,seq,speech",
+        help="comma-separated preset names (see model.PRESETS)",
+    )
+    args = ap.parse_args()
+    emit(args.out_dir, [p for p in args.presets.split(",") if p])
+
+
+if __name__ == "__main__":
+    main()

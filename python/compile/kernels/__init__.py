@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for FedZero's training compute path.
+
+Every kernel here runs in ``interpret=True`` mode so the lowered HLO is
+executable on the CPU PJRT plugin (real Mosaic lowering would emit a TPU
+custom-call). The kernels are nonetheless *structured* for TPU: MXU-shaped
+tiled matmuls with VMEM-resident blocks, and 1-D VPU-style elementwise
+kernels over the flat parameter vector.
+
+Public API:
+  matmul(x, w, bias=None, relu=False)      -- tiled matmul + fused epilogue
+  dense(x, w, b, relu)                     -- custom-VJP dense layer (fwd+bwd in Pallas)
+  relu_grad(g, y)                          -- backward mask for fused ReLU
+  fedprox_step(p, p0, g, lr, mu)           -- fused FedProx-SGD parameter update
+  weighted_sum(updates, weights)           -- FedAvg aggregation (K x P -> P)
+"""
+
+from .matmul import matmul, dense, relu_grad
+from .elementwise import fedprox_step
+from .aggregate import weighted_sum
+from . import ref
+
+__all__ = [
+    "matmul",
+    "dense",
+    "relu_grad",
+    "fedprox_step",
+    "weighted_sum",
+    "ref",
+]

@@ -1,0 +1,52 @@
+"""FedAvg aggregation kernel: out[P] = sum_k weights[k] * updates[k, P].
+
+Tiled over P; each grid step holds a (K, bp) slab of client updates plus the
+full (K,) weight vector in VMEM and reduces with a single matvec — on real
+hardware this is one MXU pass per tile with the weights resident in SMEM.
+Zero-weight rows make fixed-K padding free, which is how the Rust server
+handles rounds that return fewer than K clients.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEFAULT_BLOCK = 4096
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _weighted_sum_kernel(u_ref, w_ref, o_ref):
+    # (K,) @ (K, bp) -> (bp,)
+    o_ref[...] = jnp.dot(
+        w_ref[...], u_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def weighted_sum(updates, weights, block=None):
+    """sum_k weights[k] * updates[k, :] as a tiled Pallas kernel.
+
+    Args:
+      updates: f32[K, P] stacked client parameter vectors.
+      weights: f32[K] aggregation weights (0 for padding rows).
+    Returns:
+      f32[P] weighted sum (un-normalised).
+    """
+    k, p = updates.shape
+    bp = _pick_block(p, block or _DEFAULT_BLOCK)
+    return pl.pallas_call(
+        _weighted_sum_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), updates.dtype),
+        interpret=True,
+    )(updates, weights)

@@ -1,0 +1,55 @@
+"""1-D elementwise Pallas kernels over the flat parameter vector.
+
+VPU-style: the flat f32[P] vector is tiled into VMEM-sized 1-D blocks; the
+scalar hyper-parameters ride along as (1,)-shaped operands broadcast to every
+block (the interpret-mode stand-in for SMEM scalar prefetch).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 * 128 lanes * 8 sublanes -- a comfortable VPU tile; must divide P or we
+# fall back to the largest divisor.
+_DEFAULT_BLOCK = 8192
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _fedprox_kernel(p_ref, p0_ref, g_ref, lr_ref, mu_ref, o_ref):
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    p = p_ref[...]
+    o_ref[...] = p - lr * (g_ref[...] + mu * (p - p0_ref[...]))
+
+
+def fedprox_step(p, p0, g, lr, mu, block=None):
+    """Fused FedProx-SGD update over the flat parameter vector.
+
+    p <- p - lr * (g + mu * (p - p0))
+
+    Args:
+      p: flat local params, f32[P].
+      p0: flat global (round-start) params, f32[P].
+      g: flat gradient, f32[P].
+      lr, mu: scalars (python float or 0-d/1-d arrays).
+    """
+    (n,) = p.shape
+    b = _pick_block(n, block or _DEFAULT_BLOCK)
+    lr = jnp.asarray(lr, p.dtype).reshape((1,))
+    mu = jnp.asarray(mu, p.dtype).reshape((1,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    vec_spec = pl.BlockSpec((b,), lambda i: (i,))
+    return pl.pallas_call(
+        _fedprox_kernel,
+        grid=(n // b,),
+        in_specs=[vec_spec, vec_spec, vec_spec, scalar_spec, scalar_spec],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=True,
+    )(p, p0, g, lr, mu)

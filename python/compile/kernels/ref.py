@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+These are the ground truth against which the Pallas kernels are verified
+(pytest + hypothesis in ``python/tests``). Keep them boring: plain jnp ops,
+no tiling, no fusion tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w, bias=None, relu=False):
+    """y = x @ w (+ bias) (relu?)."""
+    y = jnp.dot(x, w, preferred_element_type=x.dtype)
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
+
+
+def relu_grad(g, y):
+    """Backward of fused ReLU: pass gradient where the activation was > 0."""
+    return g * (y > 0).astype(g.dtype)
+
+
+def fedprox_step(p, p0, g, lr, mu):
+    """FedProx-SGD update: p <- p - lr * (g + mu * (p - p0)).
+
+    ``p0`` is the round's global model; the proximal term pulls local
+    iterates back toward it (Li et al., MLSys'20).
+    """
+    return p - lr * (g + mu * (p - p0))
+
+
+def weighted_sum(updates, weights):
+    """FedAvg numerator: sum_k weights[k] * updates[k, :].
+
+    Normalisation by sum(weights) happens in the caller so zero-padded
+    entries (weight 0) are free.
+    """
+    return jnp.einsum("k,kp->p", weights, updates)

@@ -1,0 +1,182 @@
+"""Layer-2: the per-client FL training computation in JAX.
+
+An MLP classifier (the compute pattern shared by the paper's four
+model/dataset pairs at reproduction scale) with:
+
+  * forward + backward through the Pallas ``dense`` layer (custom VJP, so
+    both GEMM directions run in the L1 kernel),
+  * softmax cross-entropy loss,
+  * FedProx-SGD local update (proximal term toward the round's global
+    model, Li et al. MLSys'20 — the paper trains three of its four tasks
+    with FedProx),
+  * an eval step and the FedAvg weighted aggregation.
+
+All functions operate on a single *flat* f32[P] parameter vector so the
+Rust coordinator can treat model state as one buffer; (un)packing happens
+inside the traced function and is free after XLA fusion.
+
+Presets mirror the paper's four tasks at testbed scale (see DESIGN.md §2
+for the substitution rationale).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + training-step configuration."""
+
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    num_classes: int
+    batch_size: int
+    agg_k: int = 16  # fixed aggregation fan-in (zero-padded)
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = (self.input_dim,) + tuple(self.hidden) + (self.num_classes,)
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def param_count(self) -> int:
+        return sum(d_in * d_out + d_out for d_in, d_out in self.layer_dims)
+
+
+# The paper's four dataset/model pairs, downscaled to synthetic tasks with
+# matched statistical structure (DESIGN.md §2). `tiny` exists for tests and
+# the quickstart example.
+PRESETS = {
+    "tiny": ModelConfig("tiny", input_dim=32, hidden=(64,), num_classes=8,
+                        batch_size=16),
+    "vision": ModelConfig("vision", input_dim=256, hidden=(256, 128),
+                          num_classes=20, batch_size=16),  # CIFAR-100-like
+    "imagenet": ModelConfig("imagenet", input_dim=384, hidden=(256, 128),
+                            num_classes=40, batch_size=16),  # TinyImageNet-like
+    "seq": ModelConfig("seq", input_dim=128, hidden=(256,), num_classes=32,
+                       batch_size=16),  # Shakespeare-like
+    "speech": ModelConfig("speech", input_dim=128, hidden=(192, 96),
+                          num_classes=30, batch_size=16),  # GSC/KWT-like
+}
+
+
+def unpack(cfg: ModelConfig, flat):
+    """Split the flat f32[P] vector into [(w, b), ...] per layer."""
+    params = []
+    off = 0
+    for d_in, d_out in cfg.layer_dims:
+        w = flat[off:off + d_in * d_out].reshape(d_in, d_out)
+        off += d_in * d_out
+        b = flat[off:off + d_out]
+        off += d_out
+        params.append((w, b))
+    return params
+
+
+def pack(params):
+    """Inverse of :func:`unpack`."""
+    leaves = []
+    for w, b in params:
+        leaves.append(w.reshape(-1))
+        leaves.append(b)
+    return jnp.concatenate(leaves)
+
+
+def forward(cfg: ModelConfig, flat, x):
+    """Logits for a batch. Hidden layers use fused dense+ReLU."""
+    params = unpack(cfg, flat)
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = kernels.dense(h, w, b, not last)
+    return h
+
+
+def _ce_loss(cfg: ModelConfig, flat, x, y):
+    """Mean softmax cross-entropy (the FedProx proximal term is applied in
+    the update kernel, not the loss — its gradient is mu*(p-p0))."""
+    logits = forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), logits
+
+
+def train_step(cfg: ModelConfig, flat, flat_global, x, y, lr, mu):
+    """One local FedProx-SGD step on a minibatch.
+
+    Args:
+      flat: local model, f32[P].
+      flat_global: round-start global model, f32[P].
+      x: f32[B, D] features. y: i32[B] labels.
+      lr, mu: f32[1] learning rate / proximal coefficient.
+    Returns:
+      (new_flat f32[P], loss f32[1], correct i32[1])
+    """
+    (loss, logits), grad = jax.value_and_grad(
+        lambda p: _ce_loss(cfg, p, x, y), has_aux=True
+    )(flat)
+    new_flat = kernels.fedprox_step(flat, flat_global, grad, lr[0], mu[0])
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return new_flat, loss.reshape(1), correct.reshape(1)
+
+
+def eval_step(cfg: ModelConfig, flat, x, y):
+    """Summed loss + correct count over one eval batch (server reduces)."""
+    logits = forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return jnp.sum(nll).reshape(1), correct.reshape(1)
+
+
+def init_params(cfg: ModelConfig, seed):
+    """He-initialised flat parameter vector from an i32[1] seed."""
+    key = jax.random.PRNGKey(seed[0])
+    parts = []
+    for d_in, d_out in cfg.layer_dims:
+        key, wk = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / d_in)
+        parts.append((jax.random.normal(wk, (d_in, d_out)) * scale).reshape(-1))
+        parts.append(jnp.zeros((d_out,)))
+    return jnp.concatenate(parts)
+
+
+def aggregate(cfg: ModelConfig, updates, weights):
+    """FedAvg: weighted mean of K stacked flat models (0-weight padding ok)."""
+    total = kernels.weighted_sum(updates, weights)
+    denom = jnp.maximum(jnp.sum(weights), 1e-12)
+    return total / denom
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp oracles (no Pallas) used by the pytest suite to validate the full
+# step, not just individual kernels.
+# ---------------------------------------------------------------------------
+
+def forward_ref(cfg: ModelConfig, flat, x):
+    params = unpack(cfg, flat)
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = jnp.maximum(h, 0)
+    return h
+
+
+def train_step_ref(cfg: ModelConfig, flat, flat_global, x, y, lr, mu):
+    def loss_fn(p):
+        logits = forward_ref(cfg, p, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return jnp.mean(-jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0])
+
+    loss, grad = jax.value_and_grad(loss_fn)(flat)
+    new_flat = flat - lr[0] * (grad + mu[0] * (flat - flat_global))
+    logits = forward_ref(cfg, flat, x)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return new_flat, loss.reshape(1), correct.reshape(1)

@@ -1,0 +1,7 @@
+"""Make `import compile` work regardless of pytest's invocation directory
+(the Makefile runs `cd python && pytest tests/`; the top-level check runs
+`pytest python/tests/` from the repo root)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,171 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including prime sizes that force non-default
+block shapes) and dtypes; assert_allclose against ref.py is THE core
+correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rngs(seed, *shapes, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, dtype=dtype) for k, s in zip(keys, shapes)]
+
+
+dims = st.integers(min_value=1, max_value=67)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1),
+       bias=st.booleans(), relu=st.booleans())
+def test_matmul_matches_ref(m, k, n, seed, bias, relu):
+    x, w = rngs(seed, (m, k), (k, n))
+    b = rngs(seed + 1, (n,))[0] if bias else None
+    out = kernels.matmul(x, w, bias=b, relu=relu)
+    expect = ref.matmul(x, w, bias=b, relu=relu)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       bm=st.integers(1, 16), bn=st.integers(1, 16), bk=st.integers(1, 16))
+def test_matmul_block_overrides(seed, bm, bn, bk):
+    """Any requested tile size must give identical numerics (blocks only
+    change the schedule, never the math)."""
+    x, w, b = rngs(seed, (16, 16), (16, 16), (16,))
+    out = kernels.matmul(x, w, bias=b, relu=True, bm=bm, bn=bn, bk=bk)
+    expect = ref.matmul(x, w, bias=b, relu=True)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_bf16():
+    x, w = rngs(7, (32, 48), (48, 24), dtype=jnp.bfloat16)
+    out = kernels.matmul(x, w)
+    expect = ref.matmul(x, w)
+    np.testing.assert_allclose(
+        out.astype(np.float32), expect.astype(np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_shape_mismatch_raises():
+    x, w = rngs(0, (4, 5), (6, 7))
+    with pytest.raises(AssertionError):
+        kernels.matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# relu_grad / dense VJP
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_relu_grad_matches_ref(m, n, seed):
+    g, y = rngs(seed, (m, n), (m, n))
+    np.testing.assert_allclose(
+        kernels.relu_grad(g, y), ref.relu_grad(g, y), rtol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), relu=st.booleans(),
+       m=st.integers(1, 9), k=st.integers(1, 9), n=st.integers(1, 9))
+def test_dense_vjp_matches_autodiff_of_ref(seed, relu, m, k, n):
+    """The custom VJP (Pallas bwd kernels) must equal jax.grad through the
+    reference forward."""
+    x, w, b, ct = rngs(seed, (m, k), (k, n), (n,), (m, n))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(kernels.dense(x, w, b, relu) * ct)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul(x, w, bias=b, relu=relu) * ct)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fedprox_step
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(p=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(0.0, 1.0), mu=st.floats(0.0, 1.0))
+def test_fedprox_matches_ref(p, seed, lr, mu):
+    pv, p0, g = rngs(seed, (p,), (p,), (p,))
+    np.testing.assert_allclose(
+        kernels.fedprox_step(pv, p0, g, lr, mu),
+        ref.fedprox_step(pv, p0, g, lr, mu),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_fedprox_zero_lr_is_identity():
+    pv, p0, g = rngs(3, (257,), (257,), (257,))
+    np.testing.assert_allclose(kernels.fedprox_step(pv, p0, g, 0.0, 0.5), pv)
+
+
+def test_fedprox_mu_zero_is_sgd():
+    pv, p0, g = rngs(4, (64,), (64,), (64,))
+    np.testing.assert_allclose(
+        kernels.fedprox_step(pv, p0, g, 0.1, 0.0), pv - 0.1 * g, rtol=1e-6
+    )
+
+
+def test_fedprox_pulls_toward_global():
+    """With g=0, the update must move p strictly toward p0."""
+    pv, p0 = rngs(5, (128,), (128,))
+    out = kernels.fedprox_step(pv, p0, jnp.zeros_like(pv), 0.5, 0.3)
+    assert float(jnp.linalg.norm(out - p0)) < float(jnp.linalg.norm(pv - p0))
+
+
+# ---------------------------------------------------------------------------
+# weighted_sum (aggregation)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 20), p=st.integers(1, 3000),
+       seed=st.integers(0, 2**31 - 1))
+def test_weighted_sum_matches_ref(k, p, seed):
+    u = rngs(seed, (k, p))[0]
+    w = jnp.abs(rngs(seed + 1, (k,))[0])
+    np.testing.assert_allclose(
+        kernels.weighted_sum(u, w), ref.weighted_sum(u, w),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_weighted_sum_zero_padding_invariant():
+    """Appending zero-weight rows must not change the result — this is what
+    lets the server use a fixed-K aggregation artifact."""
+    u = rngs(9, (4, 500))[0]
+    w = jnp.array([0.3, 0.5, 0.1, 0.7])
+    base = kernels.weighted_sum(u, w)
+    pad_u = jnp.concatenate([u, rngs(10, (3, 500))[0]])
+    pad_w = jnp.concatenate([w, jnp.zeros(3)])
+    np.testing.assert_allclose(
+        kernels.weighted_sum(pad_u, pad_w), base, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_weighted_sum_one_hot_selects_row():
+    u = rngs(11, (6, 100))[0]
+    w = jnp.zeros(6).at[2].set(1.0)
+    np.testing.assert_allclose(kernels.weighted_sum(u, w), u[2], rtol=1e-6)

@@ -1,0 +1,46 @@
+"""The L1 perf model must agree with the actual kernel block picking and
+stay within hardware envelopes for every preset."""
+
+import pytest
+
+from compile import model as M
+from compile import perf_analysis as P
+from compile.kernels.matmul import _pick_block
+
+
+@pytest.mark.parametrize("preset", sorted(M.PRESETS))
+def test_vmem_always_fits(preset):
+    cfg = M.PRESETS[preset]
+    for r in P.preset_reports(cfg):
+        assert r.vmem_frac < 0.5, f"{r.name} would not double-buffer: {r.vmem_frac}"
+        assert r.bm <= r.m and r.bn <= r.n and r.bk <= r.k
+
+
+def test_blocks_match_kernel_picker():
+    r = P.analyze_matmul("x", 16, 256, 128)
+    assert r.bm == _pick_block(16, 128)
+    assert r.bk == _pick_block(256, 128)
+    assert r.bn == _pick_block(128, 128)
+
+
+def test_mxu_efficiency_monotone_in_tile_size():
+    small = P.analyze_matmul("s", 8, 8, 8)
+    big = P.analyze_matmul("b", 128, 128, 128)
+    assert big.mxu_tile_eff == 1.0
+    assert small.mxu_tile_eff < big.mxu_tile_eff
+
+
+def test_arithmetic_intensity_increases_with_reuse():
+    # bigger N means each x-tile is reused across more output tiles only if
+    # bn < n; at fixed tiles, larger matmuls amortise output traffic
+    low = P.analyze_matmul("low", 16, 32, 32)
+    high = P.analyze_matmul("high", 128, 128, 128)
+    assert high.arithmetic_intensity > low.arithmetic_intensity
+
+
+def test_batch16_mlps_are_bandwidth_bound():
+    # honest negative result: at B=16 the fwd matmuls of our presets are
+    # bandwidth-bound on TPUv4 (documented in DESIGN.md §Perf)
+    cfg = M.PRESETS["vision"]
+    fwd = [r for r in P.preset_reports(cfg) if "fwd" in r.name]
+    assert any(not r.compute_bound for r in fwd)

@@ -1,0 +1,166 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  * blocklist α — fairness (between-domain participation std) vs
+//!    training throughput (§4.4: "high α ... can extend training time but
+//!    ensures fair participation");
+//!  * over-selection factor for the Random baseline — rounds vs wasted
+//!    energy (§3.1's critique of 1.3n over-selection);
+//!  * greedy vs exact branch-and-bound selection — objective gap & cost
+//!    (our Gurobi substitution, DESIGN.md §2);
+//!  * semi-synchronous deadline (§7 extension) — rounds vs discarded work.
+//!
+//! Mock backend: measures L3 scheduling behaviour, no artifacts needed.
+
+use std::time::Instant;
+
+use fedzero::config::Scenario;
+use fedzero::coordinator::{build_dataset, ExperimentSpec};
+use fedzero::config::{build, ScenarioConfig};
+use fedzero::client::ModelKind;
+use fedzero::fl::MockBackend;
+use fedzero::selection::baselines::Baseline;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::semisync::SemiSync;
+use fedzero::selection::Strategy;
+use fedzero::sim::{SimConfig, Simulation};
+use fedzero::solver::mip::{branch_and_bound, greedy, SelClient, SelInstance};
+use fedzero::trace::forecast::ErrorLevel;
+use fedzero::util::rng::Rng;
+
+fn run_mock(strategy: &mut dyn Strategy, seed: u64) -> (usize, f64, f64, Vec<usize>, Vec<usize>) {
+    let spec = ExperimentSpec {
+        preset: "tiny".into(),
+        scenario: Scenario::Global,
+        days: 2,
+        n_clients: 40,
+        n_per_round: 6,
+        seed,
+        dataset_scale: 0.2,
+        use_mock: true,
+        ..Default::default()
+    };
+    let (_, partition) = build_dataset(&spec, 16);
+    let scfg = ScenarioConfig {
+        scenario: spec.scenario,
+        n_clients: spec.n_clients,
+        days: spec.days,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let built = build(&scfg, ModelKind::Vision, 10, &partition);
+    let mut backend = MockBackend::new(spec.n_clients, 16, 0.3, seed);
+    let sim_cfg = SimConfig {
+        horizon: built.horizon,
+        n_per_round: spec.n_per_round,
+        d_max: 60,
+        eval_every: 10,
+        seed,
+        step_minutes: 1.0,
+    };
+    let domains = built.client_domains();
+    let mut sim = Simulation::new(
+        sim_cfg,
+        built.clients,
+        built.domains,
+        built.load_actual,
+        built.load_fc,
+        ErrorLevel::Realistic,
+        &mut backend,
+        strategy,
+    );
+    sim.run().unwrap();
+    let rounds = sim.metrics.rounds.len();
+    let kwh = sim.metrics.total_energy_kwh();
+    let counts = sim.metrics.participation_counts(40);
+    (rounds, kwh, sim.metrics.best_accuracy(), counts, domains)
+}
+
+fn between_domain_std(counts: &[usize], domains: &[usize], rounds: usize) -> f64 {
+    let n_domains = domains.iter().max().map(|&d| d + 1).unwrap_or(1);
+    let mut sums = vec![0.0; n_domains];
+    let mut ns = vec![0usize; n_domains];
+    for (c, &d) in domains.iter().enumerate() {
+        sums[d] += counts[c] as f64 / rounds.max(1) as f64;
+        ns[d] += 1;
+    }
+    let means: Vec<f64> = sums
+        .iter()
+        .zip(&ns)
+        .map(|(s, &n)| if n > 0 { s / n as f64 } else { 0.0 })
+        .collect();
+    fedzero::util::stats::std(&means)
+}
+
+fn main() {
+    println!("== ablations ==");
+
+    println!("\n[A] blocklist α (fairness vs throughput)");
+    println!("{:>6} {:>8} {:>10} {:>22}", "alpha", "rounds", "kWh", "between-domain std %");
+    for alpha in [0.25, 1.0, 4.0] {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        fz.blocklist = fedzero::selection::fairness::Blocklist::new(alpha);
+        let (rounds, kwh, _acc, counts, domains) = run_mock(&mut fz, 1);
+        println!(
+            "{alpha:>6} {rounds:>8} {kwh:>10.2} {:>21.2}%",
+            between_domain_std(&counts, &domains, rounds) * 100.0
+        );
+    }
+
+    println!("\n[B] over-selection factor (Random baseline)");
+    println!("{:>8} {:>8} {:>10} {:>12}", "factor", "rounds", "kWh", "kWh/round");
+    for factor in [1.0, 1.3, 1.6] {
+        let mut b = Baseline::random();
+        b.over_select = factor;
+        let (rounds, kwh, _, _, _) = run_mock(&mut b, 2);
+        println!(
+            "{factor:>8} {rounds:>8} {kwh:>10.2} {:>12.4}",
+            kwh / rounds.max(1) as f64
+        );
+    }
+
+    println!("\n[C] greedy vs exact selection (objective gap, 30 candidates)");
+    let mut rng = Rng::new(3);
+    let inst = SelInstance {
+        n: 6,
+        clients: (0..30)
+            .map(|_| {
+                let m_min = rng.range_f64(2.0, 15.0);
+                SelClient {
+                    domain: rng.below(5),
+                    sigma: rng.range_f64(0.1, 10.0),
+                    delta: rng.range_f64(0.05, 0.5),
+                    m_min,
+                    m_max: m_min * 5.0,
+                    spare: (0..60).map(|_| rng.range_f64(0.0, 30.0)).collect(),
+                }
+            })
+            .collect(),
+        energy: (0..5)
+            .map(|_| (0..60).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .collect(),
+    };
+    let t0 = Instant::now();
+    let g = greedy(&inst, 1);
+    let tg = t0.elapsed();
+    let t1 = Instant::now();
+    let e = branch_and_bound(&inst, 500_000);
+    let te = t1.elapsed();
+    println!(
+        "  greedy: obj {:.1} in {:.2} ms | exact: obj {:.1} in {:.1} ms (optimal={}) | ratio {:.3}",
+        g.objective,
+        tg.as_secs_f64() * 1e3,
+        e.objective,
+        te.as_secs_f64() * 1e3,
+        e.optimal,
+        g.objective / e.objective.max(1e-9),
+    );
+
+    println!("\n[D] semi-sync deadline (§7 extension, FedZero inner)");
+    println!("{:>10} {:>8} {:>10} {:>10}", "deadline", "rounds", "kWh", "best acc");
+    for deadline in [10usize, 30, 60] {
+        let mut s = SemiSync::new(FedZero::new(SolverKind::Greedy), deadline);
+        let (rounds, kwh, acc, _, _) = run_mock(&mut s, 4);
+        println!("{deadline:>10} {rounds:>8} {kwh:>10.2} {acc:>10.3}");
+    }
+    println!("== done ==");
+}

@@ -1,0 +1,51 @@
+//! End-to-end throughput benches: simulated rounds per wallclock second —
+//! the cost of regenerating Table 3 / Fig 5 — for the mock backend (pure
+//! L3 cost) and the PJRT backend (L3 + real compute).
+
+use std::time::Instant;
+
+use fedzero::config::Scenario;
+use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
+
+fn spec(mock: bool, strategy: StrategyKind) -> ExperimentSpec {
+    ExperimentSpec {
+        preset: "tiny".into(),
+        scenario: Scenario::Global,
+        strategy,
+        days: 1,
+        n_clients: 30,
+        n_per_round: 5,
+        d_max: 60,
+        dataset_scale: 0.15,
+        use_mock: mock,
+        eval_every: 10,
+        eval_subset: 200,
+        ..Default::default()
+    }
+}
+
+fn run(label: &str, s: &ExperimentSpec) {
+    let t0 = Instant::now();
+    match run_experiment(s) {
+        Ok(report) => {
+            let dt = t0.elapsed().as_secs_f64();
+            let rounds = report.metrics.rounds.len();
+            println!(
+                "bench e2e/{label:<26} {rounds:>5} rounds in {dt:>6.2} s  ({:>7.1} rounds/s, {} train steps, select {:.0} ms)",
+                rounds as f64 / dt,
+                report.steps_executed,
+                report.select_time_ms,
+            );
+        }
+        Err(e) => eprintln!("skipping {label}: {e:#}"),
+    }
+}
+
+fn main() {
+    println!("== end-to-end benches (1 simulated day, 30 clients) ==");
+    run("mock_fedzero", &spec(true, StrategyKind::FedZero));
+    run("mock_random", &spec(true, StrategyKind::Random));
+    run("xla_fedzero", &spec(false, StrategyKind::FedZero));
+    run("xla_random_1.3n", &spec(false, StrategyKind::RandomOver));
+    println!("== done ==");
+}

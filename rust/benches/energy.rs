@@ -1,0 +1,52 @@
+//! Energy-subsystem benches: the runtime power-attribution loop (§4.5) —
+//! executed once per domain per timestep inside every round — and the
+//! trace generators.
+
+use fedzero::energy::{attribute_power, waterfill, PowerRequest};
+use fedzero::trace::load::LoadModel;
+use fedzero::trace::solar;
+use fedzero::util::bench::{bench, Config};
+use fedzero::util::rng::Rng;
+
+fn requests(n: usize, seed: u64) -> Vec<PowerRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let min = rng.range_f64(0.0, 5.0);
+            PowerRequest {
+                need_min_wh: min,
+                need_max_wh: min + rng.range_f64(0.0, 10.0),
+                usable_wh: rng.range_f64(0.0, 12.0),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = Config::default();
+    println!("== energy benches ==");
+
+    for n in [2usize, 5, 10, 50] {
+        let reqs = requests(n, n as u64);
+        bench(&format!("attribute_power/{n}_clients"), cfg, || {
+            attribute_power(10.0, &reqs)
+        });
+    }
+
+    let w: Vec<f64> = (0..20).map(|i| 1.0 + i as f64).collect();
+    let caps: Vec<f64> = (0..20).map(|i| 2.0 + (i % 5) as f64).collect();
+    bench("waterfill/20_clients", cfg, || waterfill(25.0, &w, &caps));
+
+    // trace generation (scenario build cost)
+    let site = &solar::global_sites()[0];
+    bench("solar_trace/7d_1min", cfg, || {
+        let mut rng = Rng::new(9);
+        solar::generate(site, 800.0, 160, 7 * 1440, 1.0, &mut rng, None)
+    });
+    bench("load_trace/7d_1min", cfg, || {
+        let mut rng = Rng::new(10);
+        let m = LoadModel::sample(&mut rng, 0.0);
+        m.generate(7 * 1440, 1.0, &mut rng)
+    });
+    println!("== done ==");
+}

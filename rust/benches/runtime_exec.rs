@@ -1,0 +1,51 @@
+//! PJRT hot-path benches: per-entry-point execution latency of the AOT
+//! artifacts — the compute cost underlying every simulated batch
+//! (Table 2's samples/minute are *simulated* speeds; this is the real
+//! testbed cost that bounds experiment wallclock).
+//!
+//! Requires `make artifacts`; skips gracefully if artifacts are missing.
+
+use fedzero::runtime::ModelRuntime;
+use fedzero::util::bench::{bench, quick, Config};
+use fedzero::util::rng::Rng;
+
+fn bench_preset(preset: &str) -> anyhow::Result<()> {
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), preset)?;
+    let p = rt.param_count();
+    let b = rt.batch_size();
+    let d = rt.manifest.input_dim;
+    let k = rt.manifest.agg_k;
+    println!("-- preset {preset}: P={p} B={b} D={d} --");
+
+    let params = rt.init_params(1)?;
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..b)
+        .map(|_| rng.below(rt.manifest.num_classes) as i32)
+        .collect();
+
+    let cfg = Config::default();
+    bench(&format!("train_step/{preset}"), cfg, || {
+        rt.train_step(&params, &params, &x, &y, 0.05, 0.01).unwrap()
+    });
+    bench(&format!("eval_step/{preset}"), cfg, || {
+        rt.eval_step(&params, &x, &y).unwrap()
+    });
+    let updates: Vec<Vec<f32>> = (0..k.min(10)).map(|_| params.clone()).collect();
+    let weights = vec![1.0f32; updates.len()];
+    bench(&format!("aggregate/{preset}_k{}", updates.len()), quick(), || {
+        rt.aggregate(&updates, &weights).unwrap()
+    });
+    bench(&format!("init/{preset}"), quick(), || rt.init_params(3).unwrap());
+    Ok(())
+}
+
+fn main() {
+    println!("== runtime exec benches ==");
+    for preset in ["tiny", "vision"] {
+        if let Err(e) = bench_preset(preset) {
+            eprintln!("skipping {preset}: {e:#} (run `make artifacts`)");
+        }
+    }
+    println!("== done ==");
+}

@@ -1,0 +1,87 @@
+//! Fig 8 reproduction bench: selection overhead vs scale.
+//!
+//! (a) runtime vs number of clients (with domains = clients/10)
+//! (b) runtime vs number of domains at fixed clients
+//! plus the paper's headline points: 100 clients/10 domains/60 steps
+//! (paper: ~0.1 s with Gurobi) and 100k/100k/1440 (paper: < 2 min).
+//! Pass --full to include the 100k-scale points.
+
+use std::time::Instant;
+
+use fedzero::solver::mip::{greedy, SelClient, SelInstance};
+use fedzero::util::bench::{bench, fmt_ns, Config};
+use fedzero::util::rng::Rng;
+
+fn instance(c: usize, p: usize, t: usize, seed: u64) -> SelInstance {
+    let mut rng = Rng::new(seed);
+    SelInstance {
+        n: 10,
+        clients: (0..c)
+            .map(|_| {
+                let m_min = rng.range_f64(5.0, 40.0);
+                SelClient {
+                    domain: rng.below(p),
+                    sigma: rng.range_f64(0.1, 10.0),
+                    delta: rng.range_f64(0.05, 0.5),
+                    m_min,
+                    m_max: m_min * 5.0,
+                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                }
+            })
+            .collect(),
+        energy: (0..p)
+            .map(|_| (0..t).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .collect(),
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("== selection scaling (Fig 8) ==");
+
+    // (a) clients sweep — evaluation scale measured precisely
+    let eval_scale = instance(100, 10, 60, 1);
+    let r = bench("fig8a/100c_10p_60t", Config::default(), || {
+        greedy(&eval_scale, 1)
+    });
+    println!(
+        "   paper reports ~0.1 s at this scale (Gurobi); ours: {}",
+        fmt_ns(r.median_ns())
+    );
+
+    for c in [1_000usize, 10_000] {
+        let inst = instance(c, c / 10, 60, 2);
+        let t0 = Instant::now();
+        let _ = greedy(&inst, 1);
+        println!(
+            "fig8a/{c}c: single run {:.3} s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // (b) domains sweep at fixed clients
+    for p in [10usize, 100, 1_000] {
+        let inst = instance(10_000, p, 60, 3);
+        let t0 = Instant::now();
+        let _ = greedy(&inst, 1);
+        println!(
+            "fig8b/10kc_{p}p: single run {:.3} s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    if full {
+        for (c, p, t) in [(100_000usize, 10_000usize, 60usize), (100_000, 100_000, 1_440)] {
+            let inst = instance(c, p, t, 4);
+            let t0 = Instant::now();
+            let _ = greedy(&inst, 1);
+            println!(
+                "fig8/{c}c_{p}p_{t}t: single run {:.2} s (paper envelope: 120 s)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    } else {
+        println!("(pass --full for the 100k-client paper-scale points)");
+    }
+    println!("== done ==");
+}

@@ -1,0 +1,113 @@
+//! Solver micro-benchmarks: the per-domain allocation flow, the dense
+//! simplex, and greedy vs exact selection — the costs behind Fig 8 and
+//! the ablation "greedy vs Gurobi-style exact" (DESIGN.md §2).
+
+use fedzero::solver::alloc::{AllocClient, AllocProblem};
+use fedzero::solver::lp::{Cmp, Lp};
+use fedzero::solver::mip::{branch_and_bound, enumerate, greedy, SelClient, SelInstance};
+use fedzero::util::bench::{bench, Config};
+use fedzero::util::rng::Rng;
+
+fn alloc_problem(c: usize, t: usize, seed: u64) -> AllocProblem {
+    let mut rng = Rng::new(seed);
+    AllocProblem {
+        clients: (0..c)
+            .map(|_| {
+                let min = rng.range_f64(1.0, 10.0);
+                AllocClient {
+                    min_batches: min,
+                    max_batches: min * 5.0,
+                    delta: rng.range_f64(0.05, 0.5),
+                    weight: rng.range_f64(0.1, 10.0),
+                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                }
+            })
+            .collect(),
+        energy: (0..t).map(|_| rng.range_f64(1.0, 14.0)).collect(),
+    }
+}
+
+fn sel_instance(c: usize, p: usize, t: usize, n: usize, seed: u64) -> SelInstance {
+    let mut rng = Rng::new(seed);
+    SelInstance {
+        n,
+        clients: (0..c)
+            .map(|_| {
+                let m_min = rng.range_f64(2.0, 20.0);
+                SelClient {
+                    domain: rng.below(p),
+                    sigma: rng.range_f64(0.1, 10.0),
+                    delta: rng.range_f64(0.05, 0.5),
+                    m_min,
+                    m_max: m_min * 5.0,
+                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                }
+            })
+            .collect(),
+        energy: (0..p)
+            .map(|_| (0..t).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .collect(),
+    }
+}
+
+fn main() {
+    let cfg = Config::default();
+    println!("== solver benches ==");
+
+    // per-domain allocation flow at round-execution scales
+    for (c, t) in [(3usize, 60usize), (10, 60), (10, 240), (30, 60)] {
+        let p = alloc_problem(c, t, 1);
+        bench(&format!("alloc_flow/{c}c_{t}t"), cfg, || {
+            p.solve().map(|a| a.objective)
+        });
+    }
+
+    // dense simplex on the same allocation problem (the cross-check path)
+    {
+        let p = alloc_problem(3, 12, 2);
+        bench("lp_simplex/3c_12t", cfg, || {
+            let c_n = p.clients.len();
+            let t_n = p.energy.len();
+            let nv = c_n * t_n;
+            let mut obj = vec![0.0; nv];
+            for i in 0..c_n {
+                for j in 0..t_n {
+                    obj[i * t_n + j] = p.clients[i].weight;
+                }
+            }
+            let mut lp = Lp::new(nv).maximize(&obj);
+            for i in 0..c_n {
+                let mut row = vec![0.0; nv];
+                for j in 0..t_n {
+                    row[i * t_n + j] = 1.0;
+                }
+                lp.constrain(&row, Cmp::Ge, p.clients[i].min_batches);
+                lp.constrain(&row, Cmp::Le, p.clients[i].max_batches);
+                for j in 0..t_n {
+                    lp.upper_bound(i * t_n + j, p.clients[i].spare[j]);
+                }
+            }
+            for j in 0..t_n {
+                let mut row = vec![0.0; nv];
+                for i in 0..c_n {
+                    row[i * t_n + j] = p.clients[i].delta;
+                }
+                lp.constrain(&row, Cmp::Le, p.energy[j]);
+            }
+            lp.solve()
+        });
+    }
+
+    // selection: greedy vs exact at evaluation scale (100 clients)
+    let inst = sel_instance(100, 10, 60, 10, 3);
+    bench("select_greedy/100c_10p_60t", cfg, || greedy(&inst, 1));
+    let quick = fedzero::util::bench::quick();
+    bench("select_bnb/100c_10p_60t", quick, || {
+        branch_and_bound(&inst, 20_000)
+    });
+
+    // tiny instance: enumerate as ground truth
+    let tiny = sel_instance(12, 3, 20, 4, 4);
+    bench("select_enumerate/12c_choose_4", quick, || enumerate(&tiny));
+    println!("== done ==");
+}

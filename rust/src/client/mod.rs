@@ -1,0 +1,82 @@
+//! FL client modelling: device profiles (paper Table 2), per-client
+//! capacity/efficiency constants, and the static client descriptor used by
+//! selection and simulation.
+
+pub mod profile;
+
+pub use profile::{ClientProfile, DeviceType, ModelKind};
+
+/// Static description of one registered client (paper §4.1): capacity
+/// `m_c` (batches/timestep), efficiency `δ_c` (Wh/batch), power domain,
+/// and its local data shard.
+#[derive(Clone, Debug)]
+pub struct ClientInfo {
+    pub id: usize,
+    pub domain: usize,
+    pub profile: ClientProfile,
+    /// indices into the training split owned by this client
+    pub samples: Vec<usize>,
+    /// minimum batches per round (1 local epoch in the paper)
+    pub m_min: f64,
+    /// maximum batches per round (5 local epochs)
+    pub m_max: f64,
+}
+
+impl ClientInfo {
+    /// Build from a profile + data shard with the paper's 1–5 local epoch
+    /// bounds at the given batch size.
+    pub fn new(
+        id: usize,
+        domain: usize,
+        profile: ClientProfile,
+        samples: Vec<usize>,
+        batch_size: usize,
+    ) -> Self {
+        let batches_per_epoch =
+            (samples.len() as f64 / batch_size as f64).ceil().max(1.0);
+        ClientInfo {
+            id,
+            domain,
+            profile,
+            samples,
+            m_min: batches_per_epoch,
+            m_max: 5.0 * batches_per_epoch,
+        }
+    }
+
+    /// capacity in batches per timestep
+    pub fn capacity(&self) -> f64 {
+        self.profile.batches_per_step
+    }
+
+    /// energy per batch in Wh
+    pub fn delta(&self) -> f64 {
+        self.profile.wh_per_batch
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_bounds_follow_shard_size() {
+        let p = ClientProfile::new(DeviceType::Mid, ModelKind::Vision, 10, 1.0);
+        let c = ClientInfo::new(0, 0, p, (0..95).collect(), 10);
+        assert_eq!(c.m_min, 10.0); // ceil(95/10)
+        assert_eq!(c.m_max, 50.0);
+        assert_eq!(c.num_samples(), 95);
+    }
+
+    #[test]
+    fn tiny_shard_still_has_one_batch() {
+        let p = ClientProfile::new(DeviceType::Small, ModelKind::Seq, 10, 1.0);
+        let c = ClientInfo::new(1, 2, p, vec![7], 10);
+        assert_eq!(c.m_min, 1.0);
+        assert_eq!(c.m_max, 5.0);
+    }
+}

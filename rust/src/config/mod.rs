@@ -1,0 +1,288 @@
+//! Scenario configuration: builds the paper's two evaluation scenarios
+//! (§5.1) — 100 clients over 10 solar power domains, global (ten cities
+//! worldwide, June) or co-located (ten German cities, July) — plus the
+//! Berlin-unlimited variant of Fig 6b / Table 4.
+
+use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+use crate::data::Partition;
+use crate::energy::PowerDomain;
+use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
+use crate::trace::load::{plan_forecast, LoadModel};
+use crate::trace::solar;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    Global,
+    Colocated,
+}
+
+impl Scenario {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Global => "global",
+            Scenario::Colocated => "co-located",
+        }
+    }
+
+    pub fn sites(self) -> Vec<solar::Site> {
+        match self {
+            Scenario::Global => solar::global_sites(),
+            Scenario::Colocated => solar::colocated_sites(),
+        }
+    }
+
+    /// paper dates: June 8 (global) / July 15 (co-located)
+    pub fn start_day_of_year(self) -> u32 {
+        match self {
+            Scenario::Global => 159,
+            Scenario::Colocated => 196,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub scenario: Scenario,
+    pub n_clients: usize,
+    pub days: usize,
+    pub step_minutes: f64,
+    /// max output per power domain (paper: 800 W)
+    pub domain_capacity_w: f64,
+    pub energy_error: ErrorLevel,
+    pub load_error: ErrorLevel,
+    /// give this domain unlimited energy + its clients unlimited capacity
+    pub unlimited_domain: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            scenario: Scenario::Global,
+            n_clients: 100,
+            days: 7,
+            step_minutes: 1.0,
+            domain_capacity_w: 800.0,
+            energy_error: ErrorLevel::Realistic,
+            load_error: ErrorLevel::Realistic,
+            unlimited_domain: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the simulator needs about the environment.
+pub struct BuiltScenario {
+    pub clients: Vec<ClientInfo>,
+    pub domains: Vec<PowerDomain>,
+    /// actual utilisation per client per step
+    pub load_actual: Vec<Vec<f64>>,
+    /// spare-capacity forecasters (batches/step series)
+    pub load_fc: Vec<SeriesForecaster>,
+    pub horizon: usize,
+}
+
+impl BuiltScenario {
+    pub fn client_domains(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.domain).collect()
+    }
+}
+
+/// Build clients/domains/traces. `partition` provides each client's data
+/// shard (and thereby m_min/m_max); `model` picks the Table-2 column.
+pub fn build(
+    cfg: &ScenarioConfig,
+    model: ModelKind,
+    batch_size: usize,
+    partition: &Partition,
+) -> BuiltScenario {
+    assert_eq!(partition.clients.len(), cfg.n_clients);
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    let horizon = (cfg.days as f64 * 24.0 * 60.0 / cfg.step_minutes) as usize;
+    let sites = cfg.scenario.sites();
+    let n_domains = sites.len();
+    let start_day = cfg.scenario.start_day_of_year();
+
+    // --- power domains -----------------------------------------------------
+    let regional = match cfg.scenario {
+        Scenario::Colocated => Some(solar::regional_cloud_series(
+            horizon,
+            cfg.step_minutes,
+            0.4,
+            &mut rng.fork(0xC10D),
+        )),
+        Scenario::Global => None,
+    };
+    let mut domains: Vec<PowerDomain> = sites
+        .iter()
+        .enumerate()
+        .map(|(i, site)| {
+            let mut site_rng = rng.fork(0x50 + i as u64);
+            let power = solar::generate(
+                site,
+                cfg.domain_capacity_w,
+                start_day,
+                horizon,
+                cfg.step_minutes,
+                &mut site_rng,
+                regional.as_deref(),
+            );
+            let forecaster = match cfg.energy_error {
+                ErrorLevel::Perfect => SeriesForecaster::perfect(power.clone()),
+                _ => SeriesForecaster::realistic(
+                    power.clone(),
+                    cfg.seed ^ (i as u64) << 8,
+                    60.0 / cfg.step_minutes,
+                ),
+            };
+            PowerDomain::new(
+                i,
+                site.name,
+                cfg.domain_capacity_w,
+                power,
+                forecaster,
+                cfg.step_minutes,
+            )
+        })
+        .collect();
+    if let Some(u) = cfg.unlimited_domain {
+        domains[u].unlimited = true;
+    }
+
+    // --- clients ------------------------------------------------------------
+    let mut clients = Vec::with_capacity(cfg.n_clients);
+    let mut load_actual = Vec::with_capacity(cfg.n_clients);
+    let mut load_fc = Vec::with_capacity(cfg.n_clients);
+    for i in 0..cfg.n_clients {
+        let domain = rng.below(n_domains);
+        let device = DeviceType::sample(&mut rng);
+        let profile =
+            ClientProfile::new(device, model, batch_size, cfg.step_minutes);
+        let info = ClientInfo::new(
+            i,
+            domain,
+            profile,
+            partition.clients[i].clone(),
+            batch_size,
+        );
+
+        let unlimited_client = cfg.unlimited_domain == Some(domain);
+        let mut load_rng = rng.fork(0x10AD + i as u64);
+        let util: Vec<f64> = if unlimited_client {
+            vec![0.0; horizon] // unlimited computing resources (Fig 6b)
+        } else {
+            LoadModel::sample(&mut load_rng, sites[domain].utc_offset_h)
+                .generate(horizon, cfg.step_minutes, &mut load_rng)
+        };
+        // spare series in batches/step
+        let cap = info.capacity();
+        let spare: Vec<f64> = util.iter().map(|&u| cap * (1.0 - u)).collect();
+        let fc = match cfg.load_error {
+            ErrorLevel::Perfect => SeriesForecaster::perfect(spare.clone()),
+            _ => {
+                // gpu_plan-style: hourly-mean plan as the forecast basis
+                let plan = plan_forecast(&spare, cfg.step_minutes);
+                SeriesForecaster::perfect(plan)
+            }
+        };
+        clients.push(info);
+        load_actual.push(util);
+        load_fc.push(fc);
+    }
+
+    BuiltScenario { clients, domains, load_actual, load_fc, horizon }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::dirichlet_partition;
+
+    fn quick_partition(n_clients: usize, rng: &mut Rng) -> Partition {
+        let labels: Vec<i32> = (0..2000).map(|i| (i % 10) as i32).collect();
+        dirichlet_partition(&labels, n_clients, 0.5, rng)
+    }
+
+    #[test]
+    fn builds_paper_scale_scenario() {
+        let mut rng = Rng::new(1);
+        let part = quick_partition(100, &mut rng);
+        let cfg = ScenarioConfig { days: 1, ..Default::default() };
+        let b = build(&cfg, ModelKind::Vision, 10, &part);
+        assert_eq!(b.clients.len(), 100);
+        assert_eq!(b.domains.len(), 10);
+        assert_eq!(b.horizon, 1440);
+        assert_eq!(b.load_actual.len(), 100);
+        // all domains referenced
+        let doms = b.client_domains();
+        assert!(doms.iter().all(|&d| d < 10));
+        // device types are mixed
+        let smalls = b
+            .clients
+            .iter()
+            .filter(|c| c.profile.device == DeviceType::Small)
+            .count();
+        assert!(smalls > 10 && smalls < 60, "smalls={smalls}");
+    }
+
+    #[test]
+    fn colocated_domains_share_daylight() {
+        let mut rng = Rng::new(2);
+        let part = quick_partition(20, &mut rng);
+        let cfg = ScenarioConfig {
+            scenario: Scenario::Colocated,
+            n_clients: 20,
+            days: 1,
+            ..Default::default()
+        };
+        let b = build(&cfg, ModelKind::Vision, 10, &part);
+        // daylight overlap between first two domains > 90%
+        let sunny = |d: &PowerDomain| -> Vec<bool> {
+            d.power_w.iter().map(|&p| p > 1.0).collect()
+        };
+        let a = sunny(&b.domains[0]);
+        let c = sunny(&b.domains[1]);
+        let agree =
+            a.iter().zip(&c).filter(|(x, y)| x == y).count() as f64;
+        assert!(agree / a.len() as f64 > 0.85);
+    }
+
+    #[test]
+    fn unlimited_domain_flag_propagates() {
+        let mut rng = Rng::new(3);
+        let part = quick_partition(30, &mut rng);
+        let cfg = ScenarioConfig {
+            n_clients: 30,
+            days: 1,
+            unlimited_domain: Some(0),
+            ..Default::default()
+        };
+        let b = build(&cfg, ModelKind::Vision, 10, &part);
+        assert!(b.domains[0].unlimited);
+        assert!(!b.domains[1].unlimited);
+        // clients in domain 0 have zero load (unlimited capacity)
+        for (i, c) in b.clients.iter().enumerate() {
+            if c.domain == 0 {
+                assert!(b.load_actual[i].iter().all(|&u| u == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(4);
+        let part = quick_partition(10, &mut rng);
+        let cfg = ScenarioConfig {
+            n_clients: 10,
+            days: 1,
+            seed: 42,
+            ..Default::default()
+        };
+        let a = build(&cfg, ModelKind::Seq, 10, &part);
+        let b = build(&cfg, ModelKind::Seq, 10, &part);
+        assert_eq!(a.domains[3].power_w, b.domains[3].power_w);
+        assert_eq!(a.load_actual[5], b.load_actual[5]);
+        assert_eq!(a.client_domains(), b.client_domains());
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic federated datasets (substitutes for CIFAR-100, Tiny ImageNet,
+//! Shakespeare and Google Speech Commands — DESIGN.md §2).
+//!
+//! What matters to the paper's results is not pixel content but the
+//! *statistical shape* of the federation: label skew (Dirichlet α=0.5 for
+//! the vision pairs), extreme per-client sample imbalance (Shakespeare:
+//! 2365±4674 samples, min 730 / max 27950), and speaker-partitioning
+//! (Google Speech). [`synth`] builds learnable Gaussian-prototype tasks at
+//! the model preset's dimensions; [`partition`] reproduces the skews.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{dirichlet_partition, imbalanced_partition, Partition};
+pub use synth::{SynthConfig, SynthDataset};

@@ -1,0 +1,183 @@
+//! Gaussian-prototype classification data.
+//!
+//! Per class k we draw a prototype p_k ~ N(0, I); a sample of class k is
+//! tanh(M·(p_k + ν·ε)) with a fixed random mixing matrix M shared by all
+//! classes — separable enough that an MLP learns it, non-trivial enough
+//! (nonlinear mixing, overlapping clusters) that learning takes many
+//! rounds and data heterogeneity matters, mirroring the role of the
+//! paper's real datasets.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub dim: usize,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// within-class noise scale ν (larger = harder task)
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    pub fn new(dim: usize, classes: usize, n_train: usize, n_test: usize) -> Self {
+        SynthConfig { dim, classes, n_train, n_test, noise: 0.9, seed: 0 }
+    }
+}
+
+/// Row-major dataset; features f32 (the dtype the HLO artifacts expect).
+#[derive(Clone, Debug)]
+pub struct SynthDataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl SynthDataset {
+    pub fn generate(cfg: &SynthConfig) -> SynthDataset {
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_DA7A);
+        let d = cfg.dim;
+        // prototypes and a shared mixing matrix
+        let protos: Vec<Vec<f64>> = (0..cfg.classes)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let mix: Vec<f64> = {
+            // sparse-ish random rotation: M[i][j], row-major
+            let scale = 1.0 / (d as f64).sqrt();
+            (0..d * d).map(|_| rng.normal() * scale).collect()
+        };
+
+        let sample = |class: usize, rng: &mut Rng, out: &mut Vec<f32>| {
+            let p = &protos[class];
+            let mut raw = vec![0.0f64; d];
+            for (i, r) in raw.iter_mut().enumerate() {
+                *r = p[i] + cfg.noise * rng.normal();
+            }
+            for i in 0..d {
+                let mut acc = 0.0;
+                let row = &mix[i * d..(i + 1) * d];
+                for (j, &m) in row.iter().enumerate() {
+                    acc += m * raw[j];
+                }
+                out.push(acc.tanh() as f32);
+            }
+        };
+
+        let gen_split = |n: usize, rng: &mut Rng| {
+            let mut xs = Vec::with_capacity(n * d);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let class = i % cfg.classes; // balanced overall
+                ys.push(class as i32);
+                sample(class, rng, &mut xs);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen_split(cfg.n_train, &mut rng);
+        let (test_x, test_y) = gen_split(cfg.n_test, &mut rng);
+        SynthDataset {
+            dim: d,
+            classes: cfg.classes,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Borrow the feature row of train sample `i`.
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn test_row(&self, i: usize) -> &[f32] {
+        &self.test_x[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let cfg = SynthConfig::new(16, 4, 200, 40);
+        let ds = SynthDataset::generate(&cfg);
+        assert_eq!(ds.train_x.len(), 200 * 16);
+        assert_eq!(ds.train_y.len(), 200);
+        assert_eq!(ds.test_len(), 40);
+        assert!(ds.train_x.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        assert!(ds.train_y.iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SynthConfig::new(8, 3, 50, 10);
+        let a = SynthDataset::generate(&cfg);
+        let b = SynthDataset::generate(&cfg);
+        assert_eq!(a.train_x, b.train_x);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 1;
+        let c = SynthDataset::generate(&cfg2);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn classes_are_separable_by_centroid() {
+        // nearest-centroid classification on train data should beat chance
+        // comfortably — the task must be learnable.
+        let cfg = SynthConfig::new(32, 5, 500, 100);
+        let ds = SynthDataset::generate(&cfg);
+        let d = ds.dim;
+        let mut centroids = vec![vec![0.0f64; d]; 5];
+        let mut counts = vec![0usize; 5];
+        for i in 0..ds.train_len() {
+            let y = ds.train_y[i] as usize;
+            counts[y] += 1;
+            for (j, &x) in ds.train_row(i).iter().enumerate() {
+                centroids[y][j] += x as f64;
+            }
+        }
+        for (c, n) in centroids.iter_mut().zip(&counts) {
+            for v in c.iter_mut() {
+                *v /= *n as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.test_len() {
+            let row = ds.test_row(i);
+            let best = (0..5)
+                .min_by(|&a, &b| {
+                    let da: f64 = row
+                        .iter()
+                        .zip(&centroids[a])
+                        .map(|(&x, &c)| (x as f64 - c).powi(2))
+                        .sum();
+                    let db: f64 = row
+                        .iter()
+                        .zip(&centroids[b])
+                        .map(|(&x, &c)| (x as f64 - c).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == ds.test_y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.test_len() as f64;
+        assert!(acc > 0.5, "centroid acc {acc} (chance 0.2)");
+    }
+}

@@ -1,0 +1,88 @@
+//! Energy bookkeeping: Wh consumed per client / domain / round, the basis
+//! of the paper's energy-to-accuracy metric (Table 3) and the fairness
+//! analyses (Fig 6).
+
+#[derive(Clone, Debug, Default)]
+pub struct EnergyMeter {
+    per_client_wh: Vec<f64>,
+    per_domain_wh: Vec<f64>,
+    per_round_wh: Vec<f64>,
+    total_wh: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(n_clients: usize, n_domains: usize) -> Self {
+        EnergyMeter {
+            per_client_wh: vec![0.0; n_clients],
+            per_domain_wh: vec![0.0; n_domains],
+            per_round_wh: Vec::new(),
+            total_wh: 0.0,
+        }
+    }
+
+    pub fn begin_round(&mut self) {
+        self.per_round_wh.push(0.0);
+    }
+
+    pub fn record(&mut self, client: usize, domain: usize, wh: f64) {
+        debug_assert!(wh >= 0.0);
+        self.per_client_wh[client] += wh;
+        self.per_domain_wh[domain] += wh;
+        if let Some(r) = self.per_round_wh.last_mut() {
+            *r += wh;
+        }
+        self.total_wh += wh;
+    }
+
+    pub fn total_kwh(&self) -> f64 {
+        self.total_wh / 1000.0
+    }
+
+    pub fn client_wh(&self, client: usize) -> f64 {
+        self.per_client_wh[client]
+    }
+
+    pub fn domain_wh(&self, domain: usize) -> f64 {
+        self.per_domain_wh[domain]
+    }
+
+    pub fn round_wh(&self, round: usize) -> f64 {
+        self.per_round_wh.get(round).copied().unwrap_or(0.0)
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.per_round_wh.len()
+    }
+
+    /// cumulative kWh up to and including `round`
+    pub fn cumulative_kwh(&self, round: usize) -> f64 {
+        self.per_round_wh[..=round.min(self.per_round_wh.len().saturating_sub(1))]
+            .iter()
+            .sum::<f64>()
+            / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tallies_roll_up() {
+        let mut m = EnergyMeter::new(3, 2);
+        m.begin_round();
+        m.record(0, 0, 100.0);
+        m.record(1, 1, 50.0);
+        m.begin_round();
+        m.record(0, 0, 25.0);
+        assert_eq!(m.client_wh(0), 125.0);
+        assert_eq!(m.client_wh(2), 0.0);
+        assert_eq!(m.domain_wh(1), 50.0);
+        assert_eq!(m.round_wh(0), 150.0);
+        assert_eq!(m.round_wh(1), 25.0);
+        assert!((m.total_kwh() - 0.175).abs() < 1e-12);
+        assert!((m.cumulative_kwh(0) - 0.15).abs() < 1e-12);
+        assert!((m.cumulative_kwh(1) - 0.175).abs() < 1e-12);
+        assert_eq!(m.rounds(), 2);
+    }
+}

@@ -1,0 +1,236 @@
+//! Runtime power sharing within a power domain (paper §4.5).
+//!
+//! When several participating clients share one domain's excess energy,
+//! the domain controller attributes power in two steps:
+//!
+//!  1. clients below their minimum participation m_min get power first,
+//!     weighted by the energy still required to reach the threshold,
+//!     δ_c·(m_min − m_comp);
+//!  2. leftover power goes to clients below m_max, weighted by
+//!     δ_c·(m_max − m_comp).
+//!
+//! Each step is a capped proportional water-filling: a client can absorb
+//! at most `usable_wh` (its spare compute this timestep × δ), so freed
+//! shares are redistributed among unsaturated clients until exhausted.
+
+const EPS: f64 = 1e-12;
+
+/// One participating client's demand at this timestep.
+#[derive(Clone, Debug)]
+pub struct PowerRequest {
+    /// δ_c · max(0, m_min − m_comp): energy still needed to reach minimum
+    pub need_min_wh: f64,
+    /// δ_c · max(0, m_max − m_comp): energy usable up to the maximum
+    pub need_max_wh: f64,
+    /// δ_c · min(spare_{c,t}, m_max − m_comp): what the client can
+    /// physically absorb this step (capacity constraint)
+    pub usable_wh: f64,
+}
+
+/// Capped proportional allocation: distribute `available` across clients
+/// proportionally to `weights`, never exceeding `caps`, redistributing
+/// freed remainder. Returns per-client allocation.
+pub fn waterfill(available: f64, weights: &[f64], caps: &[f64]) -> Vec<f64> {
+    assert_eq!(weights.len(), caps.len());
+    let n = weights.len();
+    let mut alloc = vec![0.0; n];
+    let mut remaining = available.max(0.0);
+    let mut active: Vec<usize> = (0..n)
+        .filter(|&i| weights[i] > EPS && caps[i] > EPS)
+        .collect();
+    while remaining > EPS && !active.is_empty() {
+        let wsum: f64 = active.iter().map(|&i| weights[i]).sum();
+        if wsum <= EPS {
+            break;
+        }
+        let mut saturated = Vec::new();
+        let mut distributed = 0.0;
+        for &i in &active {
+            let share = remaining * weights[i] / wsum;
+            let take = share.min(caps[i] - alloc[i]);
+            alloc[i] += take;
+            distributed += take;
+            if caps[i] - alloc[i] <= EPS {
+                saturated.push(i);
+            }
+        }
+        remaining -= distributed;
+        if saturated.is_empty() || distributed <= EPS {
+            break; // all got full proportional share; done
+        }
+        active.retain(|i| !saturated.contains(i));
+    }
+    alloc
+}
+
+/// Two-step attribution. Returns Wh granted to each client.
+pub fn attribute_power(available_wh: f64, reqs: &[PowerRequest]) -> Vec<f64> {
+    let n = reqs.len();
+    if n == 0 || available_wh <= EPS {
+        return vec![0.0; n];
+    }
+    // Step 1: minimum thresholds first.
+    let w1: Vec<f64> = reqs.iter().map(|r| r.need_min_wh.max(0.0)).collect();
+    let c1: Vec<f64> = reqs
+        .iter()
+        .map(|r| r.need_min_wh.max(0.0).min(r.usable_wh.max(0.0)))
+        .collect();
+    let step1 = waterfill(available_wh, &w1, &c1);
+    let used1: f64 = step1.iter().sum();
+
+    // Step 2: leftover toward maxima.
+    let w2: Vec<f64> = reqs
+        .iter()
+        .zip(&step1)
+        .map(|(r, &got)| (r.need_max_wh - got).max(0.0))
+        .collect();
+    let c2: Vec<f64> = reqs
+        .iter()
+        .zip(&step1)
+        .map(|(r, &got)| (r.usable_wh - got).max(0.0).min((r.need_max_wh - got).max(0.0)))
+        .collect();
+    let step2 = waterfill(available_wh - used1, &w2, &c2);
+
+    step1.iter().zip(&step2).map(|(a, b)| a + b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn req(min: f64, max: f64, usable: f64) -> PowerRequest {
+        PowerRequest { need_min_wh: min, need_max_wh: max, usable_wh: usable }
+    }
+
+    #[test]
+    fn single_client_takes_what_it_can_use() {
+        let a = attribute_power(10.0, &[req(2.0, 8.0, 5.0)]);
+        assert!((a[0] - 5.0).abs() < 1e-9); // capacity-limited
+        let b = attribute_power(3.0, &[req(2.0, 8.0, 5.0)]);
+        assert!((b[0] - 3.0).abs() < 1e-9); // energy-limited
+    }
+
+    #[test]
+    fn minimums_have_priority() {
+        // client 0 needs 4 to reach min; client 1 already past min.
+        // available 4 -> all of it goes to client 0.
+        let a = attribute_power(
+            4.0,
+            &[req(4.0, 10.0, 10.0), req(0.0, 10.0, 10.0)],
+        );
+        assert!((a[0] - 4.0).abs() < 1e-9, "{a:?}");
+        assert!(a[1].abs() < 1e-9);
+    }
+
+    #[test]
+    fn step1_weighted_by_remaining_need() {
+        // both below min; needs 6 vs 2; available 4 -> 3 vs 1
+        let a = attribute_power(
+            4.0,
+            &[req(6.0, 10.0, 10.0), req(2.0, 10.0, 10.0)],
+        );
+        assert!((a[0] - 3.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 1.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn leftover_flows_to_step2() {
+        // minimums take 2+2, leftover 6 split by remaining max-need 8 vs 4
+        let a = attribute_power(
+            10.0,
+            &[req(2.0, 10.0, 100.0), req(2.0, 6.0, 100.0)],
+        );
+        assert!((a[0] - 2.0 - 4.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 2.0 - 2.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn capacity_caps_redistribute() {
+        // equal weights but client 0 can only absorb 1; client 1 takes rest
+        let a = attribute_power(
+            8.0,
+            &[req(4.0, 4.0, 1.0), req(4.0, 8.0, 100.0)],
+        );
+        assert!((a[0] - 1.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 7.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn waterfill_zero_weights_get_nothing() {
+        let a = waterfill(10.0, &[0.0, 1.0], &[5.0, 5.0]);
+        assert_eq!(a[0], 0.0);
+        assert!((a[1] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_conservation_and_caps() {
+        forall(300, |rng| {
+            let n = rng.range(1, 7);
+            let reqs: Vec<PowerRequest> = (0..n)
+                .map(|_| {
+                    let min = rng.range_f64(0.0, 5.0);
+                    let max = min + rng.range_f64(0.0, 8.0);
+                    PowerRequest {
+                        need_min_wh: min,
+                        need_max_wh: max,
+                        usable_wh: rng.range_f64(0.0, 10.0),
+                    }
+                })
+                .collect();
+            let available = rng.range_f64(0.0, 20.0);
+            let alloc = attribute_power(available, &reqs);
+            let total: f64 = alloc.iter().sum();
+            // never over-allocate the domain budget
+            assert!(total <= available + 1e-6, "total {total} > {available}");
+            for (a, r) in alloc.iter().zip(&reqs) {
+                assert!(*a >= -1e-9);
+                // capacity and max-participation caps respected
+                assert!(*a <= r.usable_wh + 1e-6);
+                assert!(*a <= r.need_max_wh + 1e-6);
+            }
+            // work-conserving: if energy remains, every client is saturated
+            let absorbable: f64 = reqs
+                .iter()
+                .map(|r| r.usable_wh.min(r.need_max_wh))
+                .sum();
+            if available > absorbable + 1e-6 {
+                for (a, r) in alloc.iter().zip(&reqs) {
+                    let cap = r.usable_wh.min(r.need_max_wh);
+                    assert!(
+                        *a >= cap - 1e-6,
+                        "unsaturated client with spare energy"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_minimums_met_when_energy_suffices() {
+        forall(300, |rng| {
+            let n = rng.range(1, 6);
+            let reqs: Vec<PowerRequest> = (0..n)
+                .map(|_| {
+                    let min = rng.range_f64(0.0, 4.0);
+                    PowerRequest {
+                        need_min_wh: min,
+                        need_max_wh: min + rng.range_f64(0.0, 5.0),
+                        // usable always covers the min here
+                        usable_wh: min + rng.range_f64(0.0, 5.0),
+                    }
+                })
+                .collect();
+            let total_min: f64 = reqs.iter().map(|r| r.need_min_wh).sum();
+            let available = total_min + rng.range_f64(0.0, 5.0);
+            let alloc = attribute_power(available, &reqs);
+            for (a, r) in alloc.iter().zip(&reqs) {
+                assert!(
+                    *a >= r.need_min_wh - 1e-6,
+                    "minimum unmet: {a} < {}",
+                    r.need_min_wh
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Battery storage extension (paper §7 future work: "explicitly taking
+//! energy storage ... into account").
+//!
+//! A simple but physically honest model: capacity-limited state of charge,
+//! separate charge/discharge power limits, round-trip efficiency split
+//! between the two directions, and a cycle-throughput counter as the aging
+//! proxy the paper cites ([36]: frequent charge cycles accelerate aging).
+//!
+//! Integration: a power domain with a battery buffers excess energy that
+//! clients cannot absorb in a step and releases it in later steps; the
+//! ablation bench (`cargo bench --bench ablation`) quantifies how much a
+//! small buffer narrows the gap between FedZero and the unconstrained
+//! upper bound.
+
+#[derive(Clone, Debug)]
+pub struct Battery {
+    /// usable capacity, Wh
+    pub capacity_wh: f64,
+    /// max charge energy per step, Wh
+    pub max_charge_wh: f64,
+    /// max discharge energy per step, Wh
+    pub max_discharge_wh: f64,
+    /// one-way charge efficiency (0, 1]
+    pub charge_eff: f64,
+    /// one-way discharge efficiency (0, 1]
+    pub discharge_eff: f64,
+    /// current state of charge, Wh
+    pub soc_wh: f64,
+    /// lifetime energy throughput (aging proxy), Wh
+    pub throughput_wh: f64,
+}
+
+impl Battery {
+    /// A battery with the given capacity and a C/2 power limit, 95%/95%
+    /// one-way efficiencies (≈90% round trip, typical Li-ion).
+    pub fn new(capacity_wh: f64) -> Battery {
+        Battery {
+            capacity_wh,
+            max_charge_wh: capacity_wh / 2.0,
+            max_discharge_wh: capacity_wh / 2.0,
+            charge_eff: 0.95,
+            discharge_eff: 0.95,
+            soc_wh: 0.0,
+            throughput_wh: 0.0,
+        }
+    }
+
+    /// Offer `surplus_wh` for charging; returns the energy actually drawn
+    /// from the source (≥ stored, due to charge losses).
+    pub fn charge(&mut self, surplus_wh: f64) -> f64 {
+        if surplus_wh <= 0.0 || self.soc_wh >= self.capacity_wh {
+            return 0.0;
+        }
+        let room = self.capacity_wh - self.soc_wh;
+        // drawing d from the source stores d * eff
+        let draw = surplus_wh
+            .min(self.max_charge_wh)
+            .min(room / self.charge_eff);
+        self.soc_wh += draw * self.charge_eff;
+        self.throughput_wh += draw * self.charge_eff;
+        draw
+    }
+
+    /// Request `want_wh` of delivered energy; returns what the battery
+    /// actually delivers (≤ want, limited by SoC, power limit, losses).
+    pub fn discharge(&mut self, want_wh: f64) -> f64 {
+        if want_wh <= 0.0 || self.soc_wh <= 0.0 {
+            return 0.0;
+        }
+        // delivering d drains d / eff from the cells
+        let deliverable = (self.soc_wh * self.discharge_eff)
+            .min(self.max_discharge_wh)
+            .min(want_wh);
+        self.soc_wh -= deliverable / self.discharge_eff;
+        self.soc_wh = self.soc_wh.max(0.0);
+        self.throughput_wh += deliverable / self.discharge_eff;
+        deliverable
+    }
+
+    /// equivalent full cycles so far (aging proxy)
+    pub fn equivalent_cycles(&self) -> f64 {
+        if self.capacity_wh <= 0.0 {
+            0.0
+        } else {
+            self.throughput_wh / (2.0 * self.capacity_wh)
+        }
+    }
+
+    pub fn round_trip_efficiency(&self) -> f64 {
+        self.charge_eff * self.discharge_eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn charge_respects_capacity_and_losses() {
+        let mut b = Battery::new(100.0);
+        let drawn = b.charge(30.0);
+        assert!((drawn - 30.0).abs() < 1e-9);
+        assert!((b.soc_wh - 28.5).abs() < 1e-9); // 30 * 0.95
+        // fill to the brim
+        let mut total = drawn;
+        for _ in 0..20 {
+            total += b.charge(50.0);
+        }
+        assert!(b.soc_wh <= 100.0 + 1e-9);
+        // energy conservation: stored = drawn * eff
+        assert!((total * 0.95 - b.soc_wh).abs() < 1e-6);
+    }
+
+    #[test]
+    fn discharge_respects_soc_and_losses() {
+        let mut b = Battery::new(100.0);
+        b.soc_wh = 50.0;
+        let got = b.discharge(1000.0);
+        // limited by max_discharge (50) and soc*eff (47.5)
+        assert!((got - 47.5).abs() < 1e-9);
+        assert!(b.soc_wh.abs() < 1e-9);
+        assert_eq!(b.discharge(10.0), 0.0);
+    }
+
+    #[test]
+    fn power_limits_enforced() {
+        let mut b = Battery::new(100.0);
+        b.max_charge_wh = 5.0;
+        assert!((b.charge(50.0) - 5.0).abs() < 1e-9);
+        b.soc_wh = 100.0;
+        b.max_discharge_wh = 7.0;
+        assert!((b.discharge(50.0) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycle_counter_accumulates() {
+        let mut b = Battery::new(10.0);
+        for _ in 0..10 {
+            b.charge(5.0);
+            b.discharge(5.0);
+        }
+        assert!(b.equivalent_cycles() > 1.0);
+    }
+
+    #[test]
+    fn prop_soc_always_in_bounds_and_no_free_energy() {
+        forall(200, |rng: &mut Rng| {
+            let mut b = Battery::new(rng.range_f64(1.0, 200.0));
+            let mut drawn_total = 0.0;
+            let mut delivered_total = 0.0;
+            for _ in 0..100 {
+                if rng.bool(0.5) {
+                    drawn_total += b.charge(rng.range_f64(0.0, 60.0));
+                } else {
+                    delivered_total += b.discharge(rng.range_f64(0.0, 60.0));
+                }
+                assert!(b.soc_wh >= -1e-9 && b.soc_wh <= b.capacity_wh + 1e-9);
+            }
+            // can never deliver more than round-trip efficiency of input
+            assert!(
+                delivered_total
+                    <= drawn_total * b.round_trip_efficiency() + 1e-6,
+                "free energy: in {drawn_total} out {delivered_total}"
+            );
+        });
+    }
+}

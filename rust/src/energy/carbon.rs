@@ -1,0 +1,119 @@
+//! Grid carbon-intensity extension (paper §3.3 / §4.3: environments where
+//! excess energy is not always available "need to default to a less
+//! radical approach and consider carbon-intensive grid energy at times";
+//! §7 lists grid carbon intensity as future work).
+//!
+//! Provides a synthetic gCO₂/kWh trace with the structure of real grids
+//! (diurnal swing — solar noon dip, evening ramp — plus slow weather
+//! drift) and a carbon ledger. The `relaxed` FedZero mode uses it: when
+//! Algorithm 1 finds no feasible selection at d_max, the round may fall
+//! back to grid energy and the ledger prices its emissions.
+
+use crate::util::rng::Rng;
+
+/// Synthetic grid carbon-intensity series, gCO₂eq/kWh per step.
+pub fn carbon_intensity_series(
+    steps: usize,
+    step_minutes: f64,
+    base_g_per_kwh: f64,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xC02);
+    let mut drift = 0.0f64;
+    let alpha = (-step_minutes / 600.0f64).exp(); // ~10 h weather drift
+    (0..steps)
+        .map(|i| {
+            let h = (i as f64 * step_minutes / 60.0).rem_euclid(24.0);
+            // solar dip around noon, evening peak around 19:00
+            let solar_dip =
+                -0.25 * (-((h - 13.0) / 3.5).powi(2)).exp();
+            let evening_peak = 0.2 * (-((h - 19.5) / 2.5).powi(2)).exp();
+            drift = alpha * drift + (1.0 - alpha) * 0.1 * rng.normal();
+            (base_g_per_kwh * (1.0 + solar_dip + evening_peak + drift))
+                .max(20.0)
+        })
+        .collect()
+}
+
+/// Carbon bookkeeping for runs that may touch grid energy.
+#[derive(Clone, Debug, Default)]
+pub struct CarbonLedger {
+    /// kWh drawn from (zero-carbon) excess energy
+    pub excess_kwh: f64,
+    /// kWh drawn from the grid
+    pub grid_kwh: f64,
+    /// accumulated emissions, gCO₂eq
+    pub emissions_g: f64,
+}
+
+impl CarbonLedger {
+    pub fn record_excess(&mut self, wh: f64) {
+        self.excess_kwh += wh / 1000.0;
+    }
+
+    pub fn record_grid(&mut self, wh: f64, intensity_g_per_kwh: f64) {
+        self.grid_kwh += wh / 1000.0;
+        self.emissions_g += wh / 1000.0 * intensity_g_per_kwh;
+    }
+
+    pub fn total_kwh(&self) -> f64 {
+        self.excess_kwh + self.grid_kwh
+    }
+
+    /// operational emissions in kg CO₂eq
+    pub fn emissions_kg(&self) -> f64 {
+        self.emissions_g / 1000.0
+    }
+
+    /// fraction of energy that was zero-carbon
+    pub fn excess_share(&self) -> f64 {
+        if self.total_kwh() <= 0.0 {
+            1.0
+        } else {
+            self.excess_kwh / self.total_kwh()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn series_has_noon_dip_and_evening_peak() {
+        let s = carbon_intensity_series(7 * 1440, 1.0, 400.0, 1);
+        let minute_mean = |min: usize| -> f64 {
+            (0..7).map(|d| s[d * 1440 + min]).sum::<f64>() / 7.0
+        };
+        let noon = minute_mean(13 * 60);
+        let evening = minute_mean(19 * 60 + 30);
+        let night = minute_mean(3 * 60);
+        assert!(noon < night, "noon {noon} !< night {night}");
+        assert!(evening > noon, "evening {evening} !> noon {noon}");
+    }
+
+    #[test]
+    fn series_is_positive_and_bounded() {
+        let s = carbon_intensity_series(2000, 1.0, 300.0, 2);
+        assert!(stats::min(&s) >= 20.0);
+        assert!(stats::max(&s) < 900.0);
+    }
+
+    #[test]
+    fn ledger_accounts_correctly() {
+        let mut l = CarbonLedger::default();
+        l.record_excess(500.0);
+        l.record_grid(250.0, 400.0);
+        assert!((l.total_kwh() - 0.75).abs() < 1e-12);
+        assert!((l.emissions_kg() - 0.1).abs() < 1e-12);
+        assert!((l.excess_share() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_energy_is_fully_clean() {
+        let l = CarbonLedger::default();
+        assert_eq!(l.excess_share(), 1.0);
+        assert_eq!(l.emissions_kg(), 0.0);
+    }
+}

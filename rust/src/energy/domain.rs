@@ -1,0 +1,117 @@
+//! Power domains: disjoint groups of clients sharing one source of
+//! renewable excess energy (paper §3.1), each with an actual power trace
+//! and a forecaster queried by the server at round start.
+
+use crate::trace::forecast::SeriesForecaster;
+
+#[derive(Clone, Debug)]
+pub struct PowerDomain {
+    pub id: usize,
+    pub name: String,
+    /// nameplate capacity in W (the paper's domains: 800 W)
+    pub capacity_w: f64,
+    /// actual excess power per step, W
+    pub power_w: Vec<f64>,
+    /// forecaster over the same series (may be perfect/realistic)
+    pub forecaster: SeriesForecaster,
+    /// step duration in minutes (converts W to Wh per step)
+    pub step_minutes: f64,
+    /// experiment knob: unlimited energy (paper's Berlin-unlimited, Fig 6b)
+    pub unlimited: bool,
+}
+
+impl PowerDomain {
+    pub fn new(
+        id: usize,
+        name: &str,
+        capacity_w: f64,
+        power_w: Vec<f64>,
+        forecaster: SeriesForecaster,
+        step_minutes: f64,
+    ) -> Self {
+        PowerDomain {
+            id,
+            name: name.to_string(),
+            capacity_w,
+            power_w,
+            forecaster,
+            step_minutes,
+            unlimited: false,
+        }
+    }
+
+    /// actual excess energy available in step `t`, Wh
+    pub fn energy_wh(&self, t: usize) -> f64 {
+        if self.unlimited {
+            return f64::INFINITY;
+        }
+        self.power_w.get(t).copied().unwrap_or(0.0) * self.step_minutes / 60.0
+    }
+
+    /// forecast excess energy for step `t` issued at `t0`, Wh
+    pub fn forecast_energy_wh(&self, t0: usize, t: usize) -> f64 {
+        if self.unlimited {
+            // forecasting infinite energy confuses the MIP scaling; expose
+            // a very large but finite budget instead
+            return self.capacity_w.max(1.0) * self.step_minutes / 60.0 * 1e6;
+        }
+        self.forecaster.forecast(t0, t) * self.step_minutes / 60.0
+    }
+
+    /// forecast window [t0, t0+h) in Wh per step
+    pub fn forecast_window_wh(&self, t0: usize, horizon: usize) -> Vec<f64> {
+        (t0..t0 + horizon)
+            .map(|t| self.forecast_energy_wh(t0, t))
+            .collect()
+    }
+
+    /// does the domain currently produce any excess power?
+    pub fn has_power(&self, t: usize) -> bool {
+        self.energy_wh(t) > 1e-9
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.power_w.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::forecast::SeriesForecaster;
+
+    fn domain(power: Vec<f64>) -> PowerDomain {
+        let f = SeriesForecaster::perfect(power.clone());
+        PowerDomain::new(0, "test", 800.0, power, f, 1.0)
+    }
+
+    #[test]
+    fn energy_conversion_w_to_wh() {
+        let d = domain(vec![600.0, 0.0]);
+        assert!((d.energy_wh(0) - 10.0).abs() < 1e-12); // 600 W for 1 min
+        assert_eq!(d.energy_wh(1), 0.0);
+        assert_eq!(d.energy_wh(99), 0.0); // out of range
+        assert!(d.has_power(0));
+        assert!(!d.has_power(1));
+    }
+
+    #[test]
+    fn perfect_forecast_equals_actual() {
+        let d = domain(vec![120.0, 240.0, 360.0]);
+        for t in 0..3 {
+            assert!((d.forecast_energy_wh(0, t) - d.energy_wh(t)).abs() < 1e-12);
+        }
+        let w = d.forecast_window_wh(0, 3);
+        assert_eq!(w.len(), 3);
+        assert!((w[2] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unlimited_domain() {
+        let mut d = domain(vec![0.0; 5]);
+        d.unlimited = true;
+        assert!(d.energy_wh(2).is_infinite());
+        assert!(d.forecast_energy_wh(0, 2) > 1e6);
+        assert!(d.has_power(4));
+    }
+}

@@ -1,0 +1,15 @@
+//! Energy subsystem: power domains, runtime power attribution, and energy
+//! accounting — the Vessim-equivalent substrate plus the paper's §4.5
+//! runtime power-sharing contribution.
+
+pub mod accounting;
+pub mod battery;
+pub mod carbon;
+pub mod attribution;
+pub mod domain;
+
+pub use accounting::EnergyMeter;
+pub use battery::Battery;
+pub use carbon::CarbonLedger;
+pub use attribution::{attribute_power, waterfill, PowerRequest};
+pub use domain::PowerDomain;

@@ -1,0 +1,174 @@
+//! PJRT-backed training backend: the production path that executes the
+//! AOT-compiled HLO artifacts on real (synthetic-task) data.
+
+use anyhow::{anyhow, Result};
+
+use super::{BatchStats, TrainBackend};
+use crate::data::{Partition, SynthDataset};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// Per-client epoch cursor: shuffled order over the client's shard,
+/// re-shuffled at each epoch boundary so local training visits data the
+/// way a real FL client does.
+struct Cursor {
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl Cursor {
+    fn new(samples: &[usize], seed: u64) -> Cursor {
+        let mut rng = Rng::new(seed);
+        let mut order = samples.to_vec();
+        rng.shuffle(&mut order);
+        Cursor { order, pos: 0, rng }
+    }
+
+    fn next_batch(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.pos >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            out.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+}
+
+pub struct XlaBackend {
+    pub runtime: ModelRuntime,
+    pub dataset: SynthDataset,
+    cursors: Vec<Cursor>,
+    pub lr: f32,
+    pub mu: f32,
+    /// cap on eval set size (speeds up frequent evals; 0 = all)
+    pub eval_subset: usize,
+}
+
+impl XlaBackend {
+    pub fn new(
+        runtime: ModelRuntime,
+        dataset: SynthDataset,
+        partition: &Partition,
+        lr: f32,
+        mu: f32,
+        seed: u64,
+    ) -> Result<XlaBackend> {
+        if dataset.dim != runtime.manifest.input_dim {
+            return Err(anyhow!(
+                "dataset dim {} != model input dim {}",
+                dataset.dim,
+                runtime.manifest.input_dim
+            ));
+        }
+        let cursors = partition
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, samples)| Cursor::new(samples, seed ^ (i as u64) << 17))
+            .collect();
+        Ok(XlaBackend {
+            runtime,
+            dataset,
+            cursors,
+            lr,
+            mu,
+            eval_subset: 0,
+        })
+    }
+
+    fn gather_batch(&self, ids: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let d = self.dataset.dim;
+        let mut x = Vec::with_capacity(ids.len() * d);
+        let mut y = Vec::with_capacity(ids.len());
+        for &i in ids {
+            x.extend_from_slice(self.dataset.train_row(i));
+            y.push(self.dataset.train_y[i]);
+        }
+        (x, y)
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn param_count(&self) -> usize {
+        self.runtime.param_count()
+    }
+
+    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+        self.runtime.init_params(seed)
+    }
+
+    fn train_batches(
+        &mut self,
+        client: usize,
+        params: &mut Vec<f32>,
+        global: &[f32],
+        n_batches: usize,
+    ) -> Result<BatchStats> {
+        let b = self.runtime.batch_size();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0i64;
+        for _ in 0..n_batches {
+            let ids = self.cursors[client].next_batch(b);
+            let (x, y) = self.gather_batch(&ids);
+            let out =
+                self.runtime.train_step(params, global, &x, &y, self.lr, self.mu)?;
+            *params = out.params;
+            loss_sum += out.loss as f64;
+            correct += out.correct as i64;
+        }
+        Ok(BatchStats {
+            batches: n_batches,
+            mean_loss: if n_batches > 0 {
+                loss_sum / n_batches as f64
+            } else {
+                0.0
+            },
+            accuracy: if n_batches > 0 {
+                correct as f64 / (n_batches * b) as f64
+            } else {
+                0.0
+            },
+        })
+    }
+
+    fn aggregate(&mut self, updates: &[Vec<f32>], weights: &[f32]) -> Result<Vec<f32>> {
+        let k = self.runtime.manifest.agg_k;
+        if updates.len() <= k {
+            return self.runtime.aggregate(updates, weights);
+        }
+        // chunked aggregation for > K participants: combine partial
+        // weighted means with their weight masses
+        let mut partials: Vec<Vec<f32>> = Vec::new();
+        let mut masses: Vec<f32> = Vec::new();
+        for (chunk_u, chunk_w) in
+            updates.chunks(k).zip(weights.chunks(k))
+        {
+            partials.push(self.runtime.aggregate(chunk_u, chunk_w)?);
+            masses.push(chunk_w.iter().sum());
+        }
+        self.runtime.aggregate(&partials, &masses)
+    }
+
+    fn evaluate(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+        let n = if self.eval_subset > 0 {
+            self.eval_subset.min(self.dataset.test_len())
+        } else {
+            self.dataset.test_len()
+        };
+        let d = self.dataset.dim;
+        self.runtime.evaluate_dataset(
+            params,
+            &self.dataset.test_x[..n * d],
+            &self.dataset.test_y[..n],
+        )
+    }
+
+    fn steps_executed(&self) -> u64 {
+        self.runtime.steps_executed.get()
+    }
+}

@@ -1,0 +1,66 @@
+//! Federated-learning server substrate: the training backend abstraction
+//! (PJRT-backed in production, deterministic mock for simulator tests),
+//! local client training state, and FedAvg aggregation plumbing.
+
+pub mod backend;
+pub mod mock;
+
+pub use backend::XlaBackend;
+pub use mock::MockBackend;
+
+use anyhow::Result;
+
+/// Stats reported by a client after a chunk of local batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    pub batches: usize,
+    pub mean_loss: f64,
+    pub accuracy: f64,
+}
+
+/// The compute interface the simulator drives. Implementations own the
+/// model state layout (flat f32 vector) and the local datasets.
+pub trait TrainBackend {
+    fn param_count(&self) -> usize;
+
+    /// fresh global model
+    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>>;
+
+    /// Run `n_batches` local minibatches for `client`, updating `params`
+    /// in place (FedProx against `global`). Implementations keep the
+    /// per-client data cursor so consecutive calls continue the epoch.
+    fn train_batches(
+        &mut self,
+        client: usize,
+        params: &mut Vec<f32>,
+        global: &[f32],
+        n_batches: usize,
+    ) -> Result<BatchStats>;
+
+    /// FedAvg over client models with the given weights.
+    fn aggregate(&mut self, updates: &[Vec<f32>], weights: &[f32]) -> Result<Vec<f32>>;
+
+    /// centralized test-set evaluation -> (accuracy, mean loss)
+    fn evaluate(&mut self, params: &[f32]) -> Result<(f64, f64)>;
+
+    /// total train-step executions so far (perf accounting)
+    fn steps_executed(&self) -> u64 {
+        0
+    }
+}
+
+/// FedAvg weights from sample counts (the standard weighting the paper's
+/// Flower setup uses).
+pub fn fedavg_weights(sample_counts: &[usize]) -> Vec<f32> {
+    sample_counts.iter().map(|&s| s as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedavg_weights_are_sample_counts() {
+        assert_eq!(fedavg_weights(&[10, 0, 5]), vec![10.0, 0.0, 5.0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! # FedZero — paper reproduction
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *FedZero: Leveraging
+//! Renewable Excess Energy in Federated Learning* (Wiesner et al.,
+//! ACM e-Energy '24). The Rust layer hosts the paper's contribution —
+//! energy-aware client selection and runtime power sharing — plus the full
+//! evaluation substrate (energy simulator, trace models, MIP solvers, FL
+//! server, metrics); the compute path executes AOT-compiled JAX/Pallas
+//! HLO artifacts through PJRT. See DESIGN.md for the system inventory.
+pub mod client;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod fl;
+pub mod metrics;
+pub mod runtime;
+pub mod selection;
+pub mod sim;
+pub mod solver;
+pub mod trace;
+pub mod util;

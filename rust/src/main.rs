@@ -1,0 +1,53 @@
+//! fedzero — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   train                  run one experiment (see --help)
+//!   selftest               load artifacts, verify PJRT numerics
+//!   repro <id>             regenerate a paper table/figure:
+//!       fig1 fig2 fig4 table2 fig5 table3 fig6 table4 fig7 fig8
+//!   help
+//!
+//! Every repro harness prints the same rows/series the paper reports, at a
+//! reduced default scale (--full for paper scale; see EXPERIMENTS.md).
+
+use anyhow::Result;
+use fedzero::util::cli::Args;
+
+mod repro;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    match args.subcommand.as_deref() {
+        Some("train") => repro::cmd_train(&args),
+        Some("selftest") => repro::cmd_selftest(&args),
+        Some("repro") => repro::cmd_repro(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedzero — FedZero paper reproduction (e-Energy '24)
+
+USAGE:
+    fedzero train   [--preset tiny|vision|imagenet|seq|speech]
+                    [--scenario global|colocated] [--strategy <name>]
+                    [--days N] [--clients N] [--n N] [--dmax N]
+                    [--seed N] [--scale X] [--mock] [--out FILE]
+    fedzero selftest [--preset tiny] [--artifacts DIR]
+    fedzero repro   fig1|fig2|fig4|table2|fig5|table3|fig6|table4|fig7|fig8
+                    [--full] [--mock] [--preset ...] [--seed N]
+
+Strategies: FedZero, FedZero-exact, Random, Random-1.3n, Random-fc,
+            Oort, Oort-1.3n, Oort-fc, Upper-bound.
+Artifacts must exist (make artifacts) unless --mock is given."
+    );
+}

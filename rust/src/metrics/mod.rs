@@ -1,0 +1,300 @@
+//! Experiment metrics: everything the paper reports.
+//!
+//! Round records + periodic evaluations roll up into the paper's headline
+//! numbers: best accuracy, time-to-accuracy (days), energy-to-accuracy
+//! (kWh) [Table 3], round-duration statistics (§5.2), and per-client /
+//! per-domain participation shares (Fig 6).
+
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub start_step: usize,
+    pub duration_steps: usize,
+    pub selected: Vec<usize>,
+    pub participants: Vec<usize>,
+    pub batches: f64,
+    pub energy_wh: f64,
+    pub mean_loss: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub round: usize,
+    pub step: usize,
+    pub accuracy: f64,
+    pub loss: f64,
+    /// cumulative energy at eval time, kWh
+    pub cumulative_kwh: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub rounds: Vec<RoundRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub step_minutes: f64,
+}
+
+impl MetricsLog {
+    pub fn new(step_minutes: f64) -> Self {
+        MetricsLog { rounds: Vec::new(), evals: Vec::new(), step_minutes }
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.evals.iter().map(|e| e.accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.evals.last().map(|e| e.accuracy).unwrap_or(0.0)
+    }
+
+    fn step_to_days(&self, step: usize) -> f64 {
+        step as f64 * self.step_minutes / 60.0 / 24.0
+    }
+
+    /// First eval index that SUSTAINS `target` accuracy: the eval and its
+    /// successor are both >= target (a single-point crossing of a noisy
+    /// eval curve is not "reached"); the last eval counts alone.
+    fn sustained_index(&self, target: f64) -> Option<usize> {
+        (0..self.evals.len()).find(|&i| {
+            self.evals[i].accuracy >= target
+                && self
+                    .evals
+                    .get(i + 1)
+                    .map(|n| n.accuracy >= target)
+                    .unwrap_or(true)
+        })
+    }
+
+    /// first sim-time (days) at which evals sustainably reach `target`
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.sustained_index(target)
+            .map(|i| self.step_to_days(self.evals[i].step))
+    }
+
+    /// energy (kWh) consumed up to sustainably reaching `target` accuracy
+    pub fn energy_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.sustained_index(target)
+            .map(|i| self.evals[i].cumulative_kwh)
+    }
+
+    pub fn total_energy_kwh(&self) -> f64 {
+        self.rounds.iter().map(|r| r.energy_wh).sum::<f64>() / 1000.0
+    }
+
+    pub fn round_durations_min(&self) -> Vec<f64> {
+        self.rounds
+            .iter()
+            .map(|r| r.duration_steps as f64 * self.step_minutes)
+            .collect()
+    }
+
+    pub fn mean_round_duration_min(&self) -> f64 {
+        stats::mean(&self.round_durations_min())
+    }
+
+    /// participation count per client id (who completed m_min)
+    pub fn participation_counts(&self, n_clients: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_clients];
+        for r in &self.rounds {
+            for &c in &r.participants {
+                counts[c] += 1;
+            }
+        }
+        counts
+    }
+
+    /// fraction of rounds each client participated in
+    pub fn participation_shares(&self, n_clients: usize) -> Vec<f64> {
+        let total = self.rounds.len().max(1) as f64;
+        self.participation_counts(n_clients)
+            .into_iter()
+            .map(|c| c as f64 / total)
+            .collect()
+    }
+
+    /// mean ± std of participation share per power domain (Fig 6):
+    /// returns (mean_share, within_domain_std) per domain plus the
+    /// between-domain std of the means.
+    pub fn participation_by_domain(
+        &self,
+        client_domains: &[usize],
+        n_domains: usize,
+    ) -> (Vec<(f64, f64)>, f64) {
+        let shares = self.participation_shares(client_domains.len());
+        let mut per_domain: Vec<Vec<f64>> = vec![Vec::new(); n_domains];
+        for (c, &d) in client_domains.iter().enumerate() {
+            per_domain[d].push(shares[c]);
+        }
+        let summaries: Vec<(f64, f64)> = per_domain
+            .iter()
+            .map(|v| (stats::mean(v), stats::std(v)))
+            .collect();
+        let means: Vec<f64> = summaries.iter().map(|&(m, _)| m).collect();
+        (summaries, stats::std(&means))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("step_minutes", num(self.step_minutes)),
+            ("best_accuracy", num(self.best_accuracy())),
+            ("total_energy_kwh", num(self.total_energy_kwh())),
+            (
+                "rounds",
+                arr(self
+                    .rounds
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", num(r.round as f64)),
+                            ("start_step", num(r.start_step as f64)),
+                            ("duration", num(r.duration_steps as f64)),
+                            ("participants", num(r.participants.len() as f64)),
+                            ("batches", num(r.batches)),
+                            ("energy_wh", num(r.energy_wh)),
+                            ("mean_loss", num(r.mean_loss)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "evals",
+                arr(self
+                    .evals
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("round", num(e.round as f64)),
+                            ("step", num(e.step as f64)),
+                            ("accuracy", num(e.accuracy)),
+                            ("loss", num(e.loss)),
+                            ("kwh", num(e.cumulative_kwh)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// one-line human summary
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name:<14} rounds {:>4}  best acc {:>6.2}%  energy {:>7.2} kWh  mean round {:>5.1} min",
+            self.rounds.len(),
+            self.best_accuracy() * 100.0,
+            self.total_energy_kwh(),
+            self.mean_round_duration_min(),
+        )
+    }
+
+    /// write a JSON report next to stdout prints
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn dummy_for_tests() -> Self {
+        let mut m = MetricsLog::new(1.0);
+        for round in 0..4 {
+            m.rounds.push(RoundRecord {
+                round,
+                start_step: round * 20,
+                duration_steps: 10,
+                selected: vec![0, 1],
+                participants: vec![round % 2],
+                batches: 50.0,
+                energy_wh: 500.0,
+                mean_loss: 1.0,
+            });
+            m.evals.push(EvalRecord {
+                round,
+                step: round * 20 + 10,
+                accuracy: 0.2 + 0.1 * round as f64,
+                loss: 2.0 - 0.2 * round as f64,
+                cumulative_kwh: 0.5 * (round + 1) as f64,
+            });
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_and_energy_to_target() {
+        let m = MetricsLog::dummy_for_tests();
+        assert!((m.best_accuracy() - 0.5).abs() < 1e-12);
+        // target 0.4 first reached at round 2, step 50
+        let days = m.time_to_accuracy(0.4).unwrap();
+        assert!((days - 50.0 / 60.0 / 24.0).abs() < 1e-9);
+        assert!((m.energy_to_accuracy(0.4).unwrap() - 1.5).abs() < 1e-12);
+        assert!(m.time_to_accuracy(0.99).is_none());
+        assert!((m.total_energy_kwh() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn participation_accounting() {
+        let m = MetricsLog::dummy_for_tests();
+        let counts = m.participation_counts(3);
+        assert_eq!(counts, vec![2, 2, 0]);
+        let shares = m.participation_shares(3);
+        assert!((shares[0] - 0.5).abs() < 1e-12);
+        let (per_domain, between) =
+            m.participation_by_domain(&[0, 0, 1], 2);
+        assert!((per_domain[0].0 - 0.5).abs() < 1e-12);
+        assert_eq!(per_domain[1].0, 0.0);
+        assert!(between > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let m = MetricsLog::dummy_for_tests();
+        let j = m.to_json();
+        let text = j.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("best_accuracy").unwrap().as_f64().unwrap(),
+            0.5
+        );
+        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn sustained_crossing_ignores_single_spikes() {
+        let mut m = MetricsLog::new(1.0);
+        // acc: 0.1, 0.9 (spike), 0.2, 0.9, 0.9 -> target 0.8 sustained at
+        // the 4th eval (index 3), not the spike at index 1
+        for (i, acc) in [0.1, 0.9, 0.2, 0.9, 0.9].iter().enumerate() {
+            m.evals.push(EvalRecord {
+                round: i,
+                step: (i + 1) * 10,
+                accuracy: *acc,
+                loss: 1.0,
+                cumulative_kwh: (i + 1) as f64,
+            });
+        }
+        let days = m.time_to_accuracy(0.8).unwrap();
+        assert!((days - 40.0 / 1440.0).abs() < 1e-9, "days={days}");
+        assert!((m.energy_to_accuracy(0.8).unwrap() - 4.0).abs() < 1e-12);
+        // final eval counts alone (no successor required)
+        let mut m2 = MetricsLog::new(1.0);
+        m2.evals.push(EvalRecord {
+            round: 0,
+            step: 10,
+            accuracy: 0.95,
+            loss: 0.1,
+            cumulative_kwh: 1.0,
+        });
+        assert!(m2.time_to_accuracy(0.9).is_some());
+    }
+
+    #[test]
+    fn durations() {
+        let m = MetricsLog::dummy_for_tests();
+        assert!((m.mean_round_duration_min() - 10.0).abs() < 1e-12);
+    }
+}

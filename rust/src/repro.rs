@@ -1,0 +1,587 @@
+//! The benchmark/repro harness behind `fedzero repro <id>` — one function
+//! per paper table/figure (DESIGN.md §5 maps each to modules).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use fedzero::client::{ClientProfile, DeviceType, ModelKind};
+use fedzero::config::Scenario;
+use fedzero::coordinator::{run_experiment, ExperimentSpec, RunReport, StrategyKind};
+use fedzero::runtime::ModelRuntime;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
+use fedzero::solver::mip::{greedy, SelClient, SelInstance};
+use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
+use fedzero::trace::{curtailment, solar};
+use fedzero::util::cli::Args;
+use fedzero::util::rng::Rng;
+use fedzero::util::stats::{self, Histogram};
+
+// ---------------------------------------------------------------------------
+// shared plumbing
+// ---------------------------------------------------------------------------
+
+fn spec_from_args(args: &Args) -> ExperimentSpec {
+    let full = args.flag("full");
+    let mut spec = ExperimentSpec {
+        preset: args.get_str("preset", "tiny").to_string(),
+        scenario: match args.get_str("scenario", "global") {
+            "colocated" | "co-located" => Scenario::Colocated,
+            _ => Scenario::Global,
+        },
+        days: args.get_usize("days", if full { 7 } else { 2 }),
+        n_clients: args.get_usize("clients", if full { 100 } else { 40 }),
+        n_per_round: args.get_usize("n", if full { 10 } else { 6 }),
+        d_max: args.get_usize("dmax", 60),
+        seed: args.get_usize("seed", 0) as u64,
+        dataset_scale: args.get_f64("scale", if full { 1.0 } else { 0.25 }),
+        use_mock: args.flag("mock"),
+        eval_every: args.get_usize("eval-every", 5),
+        eval_subset: args.get_usize("eval-subset", 0),
+        artifact_dir: PathBuf::from(args.get_str("artifacts", "artifacts")),
+        ..Default::default()
+    };
+    spec.lr = args.get_f64("lr", 0.05) as f32;
+    spec.mu = args.get_f64("mu", 0.01) as f32;
+    spec
+}
+
+fn run_and_summarize(spec: &ExperimentSpec) -> Result<RunReport> {
+    let t0 = Instant::now();
+    let report = run_experiment(spec)?;
+    println!(
+        "  {:<36} {}  [{:.1}s wall, {} steps, select {:.1} ms]",
+        report.spec_name,
+        report.metrics.summary(""),
+        t0.elapsed().as_secs_f64(),
+        report.steps_executed,
+        report.select_time_ms,
+    );
+    Ok(report)
+}
+
+fn fmt_opt_days(x: Option<f64>) -> String {
+    x.map(|d| format!("{d:.1} d")).unwrap_or_else(|| "-".into())
+}
+
+fn fmt_opt_kwh(x: Option<f64>) -> String {
+    x.map(|k| format!("{k:.1} kWh")).unwrap_or_else(|| "-".into())
+}
+
+// ---------------------------------------------------------------------------
+// train / selftest
+// ---------------------------------------------------------------------------
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let mut spec = spec_from_args(args);
+    spec.strategy = StrategyKind::parse(args.get_str("strategy", "FedZero"))?;
+    let report = run_and_summarize(&spec)?;
+    if let Some(path) = args.get("out") {
+        report.metrics.save(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn cmd_selftest(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let preset = args.get_str("preset", "tiny");
+    println!("loading {preset} artifacts from {dir:?}...");
+    let rt = ModelRuntime::load(&dir, preset)?;
+    let p = rt.param_count();
+    let b = rt.batch_size();
+    let d = rt.manifest.input_dim;
+    println!("  param_count={p} batch={b} dim={d}");
+
+    let params = rt.init_params(7)?;
+    assert_eq!(params.len(), p);
+    let norm: f32 = params.iter().map(|x| x * x).sum::<f32>().sqrt();
+    println!("  init ok, |params| = {norm:.3}");
+
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..b)
+        .map(|_| rng.below(rt.manifest.num_classes) as i32)
+        .collect();
+    let t0 = Instant::now();
+    let out = rt.train_step(&params, &params, &x, &y, 0.05, 0.01)?;
+    let first = t0.elapsed();
+    println!("  train_step ok: loss={:.4} correct={}", out.loss, out.correct);
+
+    // loss must decrease over repeated steps on the same batch
+    let mut pcur = params.clone();
+    let mut last_loss = f32::INFINITY;
+    for _ in 0..8 {
+        let o = rt.train_step(&pcur, &params, &x, &y, 0.05, 0.01)?;
+        pcur = o.params;
+        last_loss = o.loss;
+    }
+    if last_loss >= out.loss {
+        return Err(anyhow!("loss did not decrease: {} -> {last_loss}", out.loss));
+    }
+    println!("  8 steps on one batch: loss {:.4} -> {last_loss:.4}", out.loss);
+
+    let t1 = Instant::now();
+    let iters = 50;
+    let mut pp = params.clone();
+    for _ in 0..iters {
+        pp = rt.train_step(&pp, &params, &x, &y, 0.05, 0.01)?.params;
+    }
+    let per = t1.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "  train_step latency: first {:.1} ms, steady {:.3} ms",
+        first.as_secs_f64() * 1e3,
+        per * 1e3
+    );
+
+    let (loss_sum, correct) = rt.eval_step(&params, &x, &y)?;
+    println!("  eval_step ok: loss_sum={loss_sum:.3} correct={correct}");
+
+    let agg = rt.aggregate(&[params.clone(), pcur], &[1.0, 1.0])?;
+    assert_eq!(agg.len(), p);
+    println!("  aggregate ok");
+    println!("selftest PASSED");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// repro dispatch
+// ---------------------------------------------------------------------------
+
+pub fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("repro needs a figure/table id"))?;
+    match which {
+        "fig1" => fig1(args),
+        "fig2" | "fig4" => fig2_fig4(args),
+        "table2" => table2(args),
+        "fig5" | "table3" => fig5_table3(args),
+        "fig6" | "table4" => fig6_table4(args),
+        "fig7" => fig7(args),
+        "fig8" => fig8(args),
+        "all" => {
+            for id in ["fig1", "fig2", "table2", "fig5", "fig6", "fig7", "fig8"] {
+                let mut a = args.clone();
+                a.positional = vec![id.to_string()];
+                cmd_repro(&a)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown repro target {other}")),
+    }
+}
+
+// --- Fig 1: CAISO curtailment ----------------------------------------------
+
+fn fig1(_args: &Args) -> Result<()> {
+    println!("=== Fig 1: quarterly wind+solar curtailment, CAISO-style model ===");
+    let series = curtailment::caiso_series(2015, 2024, 1);
+    println!("{:>6} {:>4} {:>14}", "year", "qtr", "curtailed GWh");
+    for r in &series {
+        let bar = "#".repeat((r.curtailment_gwh / 25.0) as usize);
+        println!("{:>6} {:>4} {:>14.0}  {bar}", r.year, r.quarter, r.curtailment_gwh);
+    }
+    for y in [2018, 2020, 2022, 2024] {
+        println!("  annual {y}: {:.2} TWh", curtailment::annual_twh(&series, y));
+    }
+    println!("(paper cites >2.4 TWh CAISO solar curtailment in 2022 — ~7% of its solar)");
+    Ok(())
+}
+
+// --- Fig 2 / Fig 4: excess power + client availability ----------------------
+
+fn fig2_fig4(args: &Args) -> Result<()> {
+    println!("=== Fig 2/4: excess power and client availability ===");
+    for scenario in [Scenario::Global, Scenario::Colocated] {
+        let sites = scenario.sites();
+        let days = args.get_usize("days", 7);
+        let steps = days * 24 * 60;
+        let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+        let regional = match scenario {
+            Scenario::Colocated => Some(solar::regional_cloud_series(
+                steps, 1.0, 0.4, &mut rng,
+            )),
+            _ => None,
+        };
+        println!("\n-- {} scenario ({} days) --", scenario.name(), days);
+        println!("{:<14} {:>10} {:>12}  hourly profile (day 1)", "domain", "peak W", "kWh/day");
+        for site in &sites {
+            let trace = solar::generate(
+                site,
+                800.0,
+                scenario.start_day_of_year(),
+                steps,
+                1.0,
+                &mut rng,
+                regional.as_deref(),
+            );
+            let peak = stats::max(&trace);
+            let kwh_day =
+                trace.iter().sum::<f64>() / 60.0 / 1000.0 / days as f64;
+            // hourly sparkline of day 1
+            let mut h = Histogram::new(0.0, 24.0, 24);
+            for (i, &p) in trace[..1440.min(trace.len())].iter().enumerate() {
+                for _ in 0..(p / 40.0) as usize {
+                    h.push(i as f64 / 60.0);
+                }
+            }
+            println!(
+                "{:<14} {:>10.0} {:>12.2}  {}",
+                site.name,
+                peak,
+                kwh_day,
+                h.sparkline()
+            );
+        }
+    }
+    println!("\n(global: staggered availability around the clock; co-located: synchronized)");
+    Ok(())
+}
+
+// --- Table 2: client profiles ------------------------------------------------
+
+fn table2(_args: &Args) -> Result<()> {
+    println!("=== Table 2: client types (max energy, samples/minute) ===");
+    println!(
+        "{:<8} {:>10} {:>14} {:>16} {:>8} {:>8}",
+        "type", "max W", "DenseNet-121", "EfficientNet-B1", "LSTM", "KWT-1"
+    );
+    for device in DeviceType::ALL {
+        println!(
+            "{:<8} {:>10.0} {:>14.0} {:>16.0} {:>8.0} {:>8.0}",
+            device.name(),
+            device.max_power_w(),
+            device.samples_per_min(ModelKind::Vision),
+            device.samples_per_min(ModelKind::ImageNet),
+            device.samples_per_min(ModelKind::Seq),
+            device.samples_per_min(ModelKind::Speech),
+        );
+    }
+    println!("\nderived per-batch constants (batch=10, 1-min steps):");
+    println!("{:<8} {:>18} {:>16}", "type", "m_c (batches/min)", "δ_c (Wh/batch)");
+    for device in DeviceType::ALL {
+        let p = ClientProfile::new(device, ModelKind::Vision, 10, 1.0);
+        println!(
+            "{:<8} {:>18.1} {:>16.4}",
+            device.name(),
+            p.batches_per_step,
+            p.wh_per_batch
+        );
+    }
+    Ok(())
+}
+
+// --- Fig 5 / Table 3: main results -------------------------------------------
+
+fn strategies_for(args: &Args) -> Vec<StrategyKind> {
+    if args.flag("full") || args.flag("all-strategies") {
+        StrategyKind::ALL.to_vec()
+    } else {
+        // Upper bound is excluded by default: unconstrained, it executes
+        // 5-10x more training steps than every other strategy combined
+        // (it is an Appendix-A row in the paper, too). --full restores it.
+        vec![
+            StrategyKind::Random,
+            StrategyKind::RandomOver,
+            StrategyKind::OortOver,
+            StrategyKind::OortFc,
+            StrategyKind::FedZero,
+        ]
+    }
+}
+
+fn fig5_table3(args: &Args) -> Result<()> {
+    println!("=== Fig 5 + Table 3: training progress / time+energy-to-accuracy ===");
+    let scenarios = [Scenario::Global, Scenario::Colocated];
+    let strategies = strategies_for(args);
+    for scenario in scenarios {
+        println!("\n-- {} scenario, preset {} --", scenario.name(), args.get_str("preset", "tiny"));
+        let mut reports: Vec<RunReport> = Vec::new();
+        for strategy in &strategies {
+            let mut spec = spec_from_args(args);
+            spec.scenario = scenario;
+            spec.strategy = *strategy;
+            reports.push(run_and_summarize(&spec)?);
+        }
+        // Target accuracy: the paper uses the Random baseline's top
+        // accuracy. On our faster-saturating synthetic tasks every
+        // strategy lands within eval noise of the same plateau, so the
+        // comparable operating point is 95% of Random's best — reached
+        // during the convergence ramp, where the strategies actually
+        // differ (documented in EXPERIMENTS.md).
+        let target = reports
+            .iter()
+            .find(|r| r.strategy == StrategyKind::Random)
+            .map(|r| r.metrics.best_accuracy())
+            .unwrap_or(0.0)
+            * 0.95;
+        println!("\n  Table 3 rows (target accuracy {:.2}%):", target * 100.0);
+        println!(
+            "  {:<14} {:>10} {:>12} {:>14} {:>12}",
+            "approach", "best acc", "time-to-acc", "energy-to-acc", "mean round"
+        );
+        for r in &reports {
+            println!(
+                "  {:<14} {:>9.2}% {:>12} {:>14} {:>9.1} min",
+                r.strategy.name(),
+                r.metrics.best_accuracy() * 100.0,
+                fmt_opt_days(r.metrics.time_to_accuracy(target)),
+                fmt_opt_kwh(r.metrics.energy_to_accuracy(target)),
+                r.metrics.mean_round_duration_min(),
+            );
+        }
+        // Fig 5 series: accuracy over sim-days per strategy
+        println!("\n  Fig 5 series (accuracy % by sim-day):");
+        for r in &reports {
+            let pts: Vec<String> = r
+                .metrics
+                .evals
+                .iter()
+                .map(|e| {
+                    format!(
+                        "({:.2},{:.1})",
+                        e.step as f64 / 1440.0,
+                        e.accuracy * 100.0
+                    )
+                })
+                .collect();
+            println!("    {:<14} {}", r.strategy.name(), pts.join(" "));
+        }
+    }
+    Ok(())
+}
+
+// --- Fig 6 / Table 4: fairness -----------------------------------------------
+
+fn fig6_table4(args: &Args) -> Result<()> {
+    println!("=== Fig 6 + Table 4: fairness of participation ===");
+    let strategies = [
+        StrategyKind::Random,
+        StrategyKind::Oort,
+        StrategyKind::FedZero,
+    ];
+    for unlimited in [None, Some(0usize)] {
+        let label = match unlimited {
+            None => "(a) base scenario".to_string(),
+            Some(d) => format!("(b) domain {d} (Berlin) unlimited"),
+        };
+        println!("\n-- {label} --");
+        let mut rows = Vec::new();
+        for strategy in strategies {
+            let mut spec = spec_from_args(args);
+            spec.scenario = Scenario::Global;
+            spec.strategy = strategy;
+            spec.unlimited_domain = unlimited;
+            let report = run_and_summarize(&spec)?;
+            let (per_domain, between_std) = report
+                .metrics
+                .participation_by_domain(&report.client_domains, report.n_domains);
+            let shares: Vec<String> = per_domain
+                .iter()
+                .map(|(m, s)| format!("{:.1}±{:.1}", m * 100.0, s * 100.0))
+                .collect();
+            println!(
+                "    {:<10} between-domain std {:.2}%  per-domain %: {}",
+                strategy.name(),
+                between_std * 100.0,
+                shares.join(" ")
+            );
+            rows.push((strategy, report));
+        }
+        if unlimited.is_some() {
+            println!("\n  Table 4 (unlimited Berlin):");
+            println!(
+                "  {:<10} {:>10} {:>12} {:>14}",
+                "approach", "best acc", "time-to-acc", "energy-to-acc"
+            );
+            let target = rows
+                .iter()
+                .find(|(s, _)| *s == StrategyKind::Random)
+                .map(|(_, r)| r.metrics.best_accuracy())
+                .unwrap_or(0.0)
+                * 0.95;
+            for (s, r) in &rows {
+                println!(
+                    "  {:<10} {:>9.2}% {:>12} {:>14}",
+                    s.name(),
+                    r.metrics.best_accuracy() * 100.0,
+                    fmt_opt_days(r.metrics.time_to_accuracy(target)),
+                    fmt_opt_kwh(r.metrics.energy_to_accuracy(target)),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+// --- Fig 7: forecast error robustness ----------------------------------------
+
+fn fig7(args: &Args) -> Result<()> {
+    println!("=== Fig 7: robustness against forecasting errors ===");
+    let variants: [(&str, ErrorLevel, ErrorLevel); 3] = [
+        ("FedZero w/ error", ErrorLevel::Realistic, ErrorLevel::Realistic),
+        ("FedZero w/o error", ErrorLevel::Perfect, ErrorLevel::Perfect),
+        ("FedZero w/ error (no load fc)", ErrorLevel::Realistic, ErrorLevel::Unavailable),
+    ];
+    let mut reports = Vec::new();
+    for (name, energy_err, load_err) in variants {
+        let mut spec = spec_from_args(args);
+        spec.scenario = Scenario::Global;
+        spec.strategy = StrategyKind::FedZero;
+        spec.energy_error = energy_err;
+        spec.load_error = load_err;
+        let r = run_and_summarize(&spec)?;
+        reports.push((name, r));
+    }
+    // convergence + round duration distribution
+    let target = reports
+        .iter()
+        .map(|(_, r)| r.metrics.best_accuracy())
+        .fold(f64::INFINITY, f64::min)
+        * 0.95;
+    println!("\n  {:<30} {:>10} {:>12} {:>14} {:>12}", "variant", "best acc", "time-to-acc", "energy-to-acc", "mean round");
+    for (name, r) in &reports {
+        println!(
+            "  {:<30} {:>9.2}% {:>12} {:>14} {:>9.1} min",
+            name,
+            r.metrics.best_accuracy() * 100.0,
+            fmt_opt_days(r.metrics.time_to_accuracy(target)),
+            fmt_opt_kwh(r.metrics.energy_to_accuracy(target)),
+            r.metrics.mean_round_duration_min(),
+        );
+    }
+    println!("\n  round duration distributions (min):");
+    for (name, r) in &reports {
+        let durs = r.metrics.round_durations_min();
+        let mut h = Histogram::new(0.0, 60.0, 12);
+        for &d in &durs {
+            h.push(d);
+        }
+        println!(
+            "    {:<30} p50 {:>5.1}  p95 {:>5.1}  {}",
+            name,
+            stats::percentile(&durs, 50.0),
+            stats::percentile(&durs, 95.0),
+            h.sparkline()
+        );
+    }
+    Ok(())
+}
+
+// --- Fig 8: overhead & scalability -------------------------------------------
+
+/// Build a synthetic selection instance of the given scale.
+pub fn synth_instance(
+    n_clients: usize,
+    n_domains: usize,
+    horizon: usize,
+    n_select: usize,
+    seed: u64,
+) -> SelInstance {
+    let mut rng = Rng::new(seed);
+    let clients = (0..n_clients)
+        .map(|_| {
+            let m_min = rng.range_f64(5.0, 40.0);
+            SelClient {
+                domain: rng.below(n_domains),
+                sigma: rng.range_f64(0.1, 10.0),
+                delta: rng.range_f64(0.05, 0.5),
+                m_min,
+                m_max: m_min * 5.0,
+                spare: (0..horizon).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+            }
+        })
+        .collect();
+    let energy = (0..n_domains)
+        .map(|_| (0..horizon).map(|_| rng.range_f64(0.0, 14.0)).collect())
+        .collect();
+    SelInstance { n: n_select, clients, energy }
+}
+
+fn fig8(args: &Args) -> Result<()> {
+    println!("=== Fig 8: selection overhead & scalability ===");
+    let full = args.flag("full");
+    let seed = args.get_usize("seed", 0) as u64;
+
+    // (a) full Algorithm-1 style run over increasing client counts
+    println!("\n(a) selection runtime vs number of clients (greedy solver)");
+    println!("{:>10} {:>10} {:>10} {:>12}", "clients", "domains", "steps", "runtime");
+    let sizes: Vec<(usize, usize, usize)> = if full {
+        vec![
+            (100, 10, 60),
+            (1_000, 100, 60),
+            (10_000, 1_000, 60),
+            (100_000, 10_000, 60),
+            (100_000, 100_000, 1_440),
+        ]
+    } else {
+        vec![(100, 10, 60), (1_000, 100, 60), (10_000, 1_000, 60)]
+    };
+    for (c, p, t) in sizes {
+        let inst = synth_instance(c, p, t, 10, seed);
+        let t0 = Instant::now();
+        let sol = greedy(&inst, 1);
+        let dt = t0.elapsed();
+        println!(
+            "{:>10} {:>10} {:>10} {:>12}",
+            c,
+            p,
+            t,
+            format!("{:.3} s", dt.as_secs_f64())
+        );
+        assert!(sol.chosen.len() <= 10);
+    }
+
+    // (b) single solve for different domain counts
+    println!("\n(b) single-selection runtime vs #domains (10k clients)");
+    println!("{:>10} {:>12}", "domains", "runtime");
+    let domain_counts = if full {
+        vec![10, 100, 1_000, 10_000, 100_000]
+    } else {
+        vec![10, 100, 1_000]
+    };
+    for p in domain_counts {
+        let clients = if full { 100_000 } else { 10_000 };
+        let inst = synth_instance(clients, p.min(clients), 60, 10, seed + 1);
+        let t0 = Instant::now();
+        let _ = greedy(&inst, 1);
+        println!("{:>10} {:>12}", p, format!("{:.3} s", t0.elapsed().as_secs_f64()));
+    }
+
+    // Overhead at evaluation scale, matching the paper's "0.1 s at
+    // 100 clients / 10 domains / 60 steps".
+    let inst = synth_instance(100, 10, 60, 10, seed + 2);
+    let t0 = Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        let _ = greedy(&inst, 1);
+    }
+    println!(
+        "\nevaluation-scale selection (100 clients, 10 domains, 60 steps): {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    );
+    let _ = black_box_sink();
+    Ok(())
+}
+
+fn black_box_sink() -> usize {
+    std::hint::black_box(0)
+}
+
+// keep FedZero/Strategy imports used even in reduced builds
+#[allow(dead_code)]
+fn _typecheck_strategy_imports(
+    ctx: &SelectionContext,
+    states: &[ClientRoundState],
+    fc: &SeriesForecaster,
+) {
+    let mut fz = FedZero::new(SolverKind::Greedy);
+    let mut rng = Rng::new(0);
+    let _ = fz.select(ctx, &mut rng);
+    let _ = (states.len(), fc.len());
+}

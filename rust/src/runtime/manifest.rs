@@ -1,0 +1,190 @@
+//! Parse the AOT manifest emitted by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let pair = j.as_arr().ok_or_else(|| anyhow!("spec not an array"))?;
+        let dtype = DType::parse(
+            pair.first()
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let dims = pair
+            .get(1)
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| anyhow!("missing dims"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, dims })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The per-preset manifest: shapes + artifact filenames.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub param_count: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub agg_k: usize,
+    pub dir: PathBuf,
+    pub artifacts: std::collections::BTreeMap<String, String>,
+    pub entry_points: std::collections::BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    pub fn load(artifact_dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = artifact_dir.join(format!("{preset}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let get_usize = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+
+        let mut artifacts = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("artifacts") {
+            for (k, v) in map {
+                artifacts.insert(
+                    k.clone(),
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("bad artifact entry {k}"))?
+                        .to_string(),
+                );
+            }
+        }
+        let mut entry_points = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("entry_points") {
+            for (name, ep) in map {
+                let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                    ep.get(key)
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect()
+                };
+                entry_points.insert(
+                    name.clone(),
+                    EntryPoint {
+                        inputs: parse_list("inputs")?,
+                        outputs: parse_list("outputs")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            preset: j
+                .get("preset")
+                .and_then(|v| v.as_str())
+                .unwrap_or(preset)
+                .to_string(),
+            param_count: get_usize("param_count")?,
+            input_dim: get_usize("input_dim")?,
+            num_classes: get_usize("num_classes")?,
+            batch_size: get_usize("batch_size")?,
+            agg_k: get_usize("agg_k")?,
+            dir: artifact_dir.to_path_buf(),
+            artifacts,
+            entry_points,
+        })
+    }
+
+    pub fn artifact_path(&self, entry: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(entry)
+            .ok_or_else(|| anyhow!("no artifact for entry point {entry}"))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let text = r#"{
+          "preset": "unit", "param_count": 10, "input_dim": 4,
+          "num_classes": 2, "batch_size": 3, "agg_k": 5, "hidden": [8],
+          "artifacts": {"train_step": "unit_train_step.hlo.txt"},
+          "entry_points": {
+            "train_step": {
+              "inputs": [["f32", [10]], ["i32", [3]]],
+              "outputs": [["f32", [10]], ["f32", [1]]]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("unit_manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_types_check() {
+        let dir = std::env::temp_dir().join("fedzero_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir, "unit").unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.batch_size, 3);
+        let ep = &m.entry_points["train_step"];
+        assert_eq!(ep.inputs.len(), 2);
+        assert_eq!(ep.inputs[0].dtype, DType::F32);
+        assert_eq!(ep.inputs[1].dtype, DType::I32);
+        assert_eq!(ep.inputs[0].elements(), 10);
+        assert!(m
+            .artifact_path("train_step")
+            .unwrap()
+            .ends_with("unit_train_step.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent"), "x").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

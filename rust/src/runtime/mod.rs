@@ -1,0 +1,296 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path. Python never runs at request time.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Every entry point was lowered with
+//! `return_tuple=True`, so each execution yields a single tuple literal
+//! that we decompose.
+
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{DType, EntryPoint, Manifest, TensorSpec};
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: EntryPoint,
+    name: String,
+}
+
+impl Executable {
+    fn load(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        entry: &str,
+    ) -> Result<Executable> {
+        let path = manifest.artifact_path(entry)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            spec: manifest
+                .entry_points
+                .get(entry)
+                .cloned()
+                .ok_or_else(|| anyhow!("no entry point spec for {entry}"))?,
+            name: entry.to_string(),
+        })
+    }
+
+    /// Execute with f32/i32 host slices in manifest order; returns the
+    /// decomposed output tuple as raw literals.
+    fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, spec)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            let lit = input.to_literal(spec).with_context(|| {
+                format!("{}: input {i} shape mismatch", self.name)
+            })?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: transfer failed: {e:?}", self.name))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: output not a tuple: {e:?}", self.name))
+    }
+}
+
+/// Host-side input tensor (borrowed).
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        match (self, spec.dtype) {
+            (Input::F32(data), DType::F32) => {
+                if data.len() != spec.elements() {
+                    return Err(anyhow!(
+                        "want {} f32 elements, got {}",
+                        spec.elements(),
+                        data.len()
+                    ));
+                }
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+            (Input::I32(data), DType::I32) => {
+                if data.len() != spec.elements() {
+                    return Err(anyhow!(
+                        "want {} i32 elements, got {}",
+                        spec.elements(),
+                        data.len()
+                    ));
+                }
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+            _ => Err(anyhow!("dtype mismatch")),
+        }
+    }
+}
+
+/// Output of one local training step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub params: Vec<f32>,
+    pub loss: f32,
+    pub correct: i32,
+}
+
+/// The loaded model runtime: one compiled executable per entry point.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    train: Executable,
+    eval: Executable,
+    init: Executable,
+    aggregate: Executable,
+    /// cumulative number of train-step executions (perf accounting)
+    pub steps_executed: std::cell::Cell<u64>,
+}
+
+impl ModelRuntime {
+    /// Load + compile all four entry points for `preset`.
+    pub fn load(artifact_dir: &Path, preset: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifact_dir, preset)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let train = Executable::load(&client, &manifest, "train_step")?;
+        let eval = Executable::load(&client, &manifest, "eval_step")?;
+        let init = Executable::load(&client, &manifest, "init")?;
+        let aggregate = Executable::load(&client, &manifest, "aggregate")?;
+        Ok(ModelRuntime {
+            manifest,
+            train,
+            eval,
+            init,
+            aggregate,
+            steps_executed: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch_size
+    }
+
+    /// Initialise a fresh flat parameter vector from a seed.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self.init.run(&[Input::I32(&[seed])])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// One local FedProx-SGD minibatch step.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        global: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOutput> {
+        let out = self.train.run(&[
+            Input::F32(params),
+            Input::F32(global),
+            Input::F32(x),
+            Input::I32(y),
+            Input::F32(&[lr]),
+            Input::F32(&[mu]),
+        ])?;
+        self.steps_executed.set(self.steps_executed.get() + 1);
+        Ok(StepOutput {
+            params: out[0].to_vec::<f32>()?,
+            loss: out[1].to_vec::<f32>()?[0],
+            correct: out[2].to_vec::<i32>()?[0],
+        })
+    }
+
+    /// Summed loss + correct count over one eval batch.
+    pub fn eval_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, i32)> {
+        let out = self.eval.run(&[
+            Input::F32(params),
+            Input::F32(x),
+            Input::I32(y),
+        ])?;
+        Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<i32>()?[0]))
+    }
+
+    /// FedAvg over up to `agg_k` flat models; `updates` rows beyond
+    /// `weights.len()` are zero-padded.
+    pub fn aggregate(
+        &self,
+        updates: &[Vec<f32>],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        let k = self.manifest.agg_k;
+        let p = self.manifest.param_count;
+        if updates.len() != weights.len() {
+            return Err(anyhow!("updates/weights length mismatch"));
+        }
+        if updates.len() > k {
+            return Err(anyhow!(
+                "got {} updates but aggregation artifact is fixed at K={k}; \
+                 aggregate in chunks",
+                updates.len()
+            ));
+        }
+        let mut stacked = vec![0.0f32; k * p];
+        for (row, u) in updates.iter().enumerate() {
+            if u.len() != p {
+                return Err(anyhow!("update {row} has wrong param count"));
+            }
+            stacked[row * p..(row + 1) * p].copy_from_slice(u);
+        }
+        let mut w = vec![0.0f32; k];
+        w[..weights.len()].copy_from_slice(weights);
+        let out = self
+            .aggregate
+            .run(&[Input::F32(&stacked), Input::F32(&w)])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Evaluate accuracy + mean loss over a whole test set (batched; the
+    /// trailing partial batch is padded and masked out of the counts).
+    pub fn evaluate_dataset(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+    ) -> Result<(f64, f64)> {
+        let b = self.manifest.batch_size;
+        let d = self.manifest.input_dim;
+        let n = ys.len();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0i64;
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            if take == b {
+                let (l, c) = self.eval_step(
+                    params,
+                    &xs[i * d..(i + b) * d],
+                    &ys[i..i + b],
+                )?;
+                loss_sum += l as f64;
+                correct += c as i64;
+            } else {
+                // pad by repeating the first sample, then subtract its
+                // padded contribution statistically: evaluate pad-only too
+                let mut px = xs[i * d..(i + take) * d].to_vec();
+                let mut py = ys[i..i + take].to_vec();
+                while py.len() < b {
+                    px.extend_from_slice(&xs[i * d..i * d + d]);
+                    py.push(ys[i]);
+                }
+                let (l_full, c_full) = self.eval_step(params, &px, &py)?;
+                // pad contribution: evaluate the first sample repeated b×
+                let mut qx = Vec::with_capacity(b * d);
+                let mut qy = Vec::with_capacity(b);
+                for _ in 0..b {
+                    qx.extend_from_slice(&xs[i * d..i * d + d]);
+                    qy.push(ys[i]);
+                }
+                let (l_pad, c_pad) = self.eval_step(params, &qx, &qy)?;
+                let pad = (b - take) as f64;
+                loss_sum += l_full as f64 - l_pad as f64 * pad / b as f64;
+                correct += c_full as i64
+                    - ((c_pad as f64) * pad / b as f64).round() as i64;
+            }
+            i += take;
+        }
+        Ok((correct as f64 / n as f64, loss_sum / n as f64))
+    }
+}

@@ -1,0 +1,325 @@
+//! The paper's six baselines (§5.1) plus the unconstrained Upper Bound.
+//!
+//! * `Random` / `Oort` — select from clients that *currently* have excess
+//!   energy and spare capacity; no forecasts.
+//! * `Random 1.3n` / `Oort 1.3n` — over-select ⌈1.3·n⌉ clients; the round
+//!   ends once n of them responded (the standard straggler mitigation).
+//! * `Random fc` / `Oort fc` — select exactly n but use the forecasts to
+//!   filter out clients that cannot reach m_min within d_max.
+//! * `Upper bound` — random selection, no energy/capacity constraints at
+//!   runtime (also uses grid energy; reported separately in Appendix A).
+
+use super::{SelectionContext, SelectionDecision, Strategy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ranking {
+    Random,
+    /// rank by σ_c (statistical utility), with ε-greedy exploration
+    Oort,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Filter {
+    /// clients that have excess energy + spare capacity right now
+    AvailableNow,
+    /// additionally: forecasts say m_min is reachable within d_max ("fc")
+    ForecastReachable,
+}
+
+pub struct Baseline {
+    pub ranking: Ranking,
+    pub filter: Filter,
+    /// over-selection factor (1.0 or 1.3)
+    pub over_select: f64,
+    /// Oort's exploration fraction
+    pub epsilon: f64,
+    name: &'static str,
+}
+
+impl Baseline {
+    pub fn random() -> Self {
+        Baseline {
+            ranking: Ranking::Random,
+            filter: Filter::AvailableNow,
+            over_select: 1.0,
+            epsilon: 0.0,
+            name: "Random",
+        }
+    }
+
+    pub fn random_over() -> Self {
+        Baseline { over_select: 1.3, name: "Random 1.3n", ..Self::random() }
+    }
+
+    pub fn random_fc() -> Self {
+        Baseline {
+            filter: Filter::ForecastReachable,
+            name: "Random fc",
+            ..Self::random()
+        }
+    }
+
+    pub fn oort() -> Self {
+        Baseline {
+            ranking: Ranking::Oort,
+            filter: Filter::AvailableNow,
+            over_select: 1.0,
+            epsilon: 0.1,
+            name: "Oort",
+        }
+    }
+
+    pub fn oort_over() -> Self {
+        Baseline { over_select: 1.3, name: "Oort 1.3n", ..Self::oort() }
+    }
+
+    pub fn oort_fc() -> Self {
+        Baseline {
+            filter: Filter::ForecastReachable,
+            name: "Oort fc",
+            ..Self::oort()
+        }
+    }
+
+    fn candidates(&self, ctx: &SelectionContext) -> Vec<usize> {
+        let avail = ctx.available_now();
+        match self.filter {
+            Filter::AvailableNow => avail,
+            Filter::ForecastReachable => avail
+                .into_iter()
+                .filter(|&i| ctx.reachable_min(i, ctx.d_max))
+                .collect(),
+        }
+    }
+}
+
+impl Strategy for Baseline {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn needs_forecasts(&self) -> bool {
+        self.filter == Filter::ForecastReachable
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision {
+        let mut cands = self.candidates(ctx);
+        let want = ((ctx.n as f64 * self.over_select).ceil() as usize).max(ctx.n);
+        if cands.len() < ctx.n {
+            return SelectionDecision::wait();
+        }
+        let take = want.min(cands.len());
+        let chosen: Vec<usize> = match self.ranking {
+            Ranking::Random => {
+                let idx = rng.sample_indices(cands.len(), take);
+                idx.into_iter().map(|k| cands[k]).collect()
+            }
+            Ranking::Oort => {
+                // ε-greedy: (1-ε)·take by utility, rest random
+                cands.sort_by(|&a, &b| {
+                    ctx.states[b]
+                        .sigma
+                        .partial_cmp(&ctx.states[a].sigma)
+                        .unwrap()
+                });
+                let exploit =
+                    (((1.0 - self.epsilon) * take as f64).round() as usize).min(take);
+                let mut chosen: Vec<usize> = cands[..exploit].to_vec();
+                let rest: Vec<usize> = cands[exploit..].to_vec();
+                let explore = take - exploit;
+                if explore > 0 && !rest.is_empty() {
+                    let idx =
+                        rng.sample_indices(rest.len(), explore.min(rest.len()));
+                    chosen.extend(idx.into_iter().map(|k| rest[k]));
+                }
+                chosen
+            }
+        };
+        SelectionDecision {
+            n_required: ctx.n.min(chosen.len()),
+            clients: chosen,
+            expected_duration: ctx.d_max,
+            max_duration: ctx.d_max,
+            wait: false,
+            unconstrained: false,
+        }
+    }
+}
+
+/// Random selection with NO energy/capacity constraints (paper's Upper
+/// bound; uses grid energy, so it is excluded from the zero-carbon claim).
+pub struct UpperBound;
+
+impl Strategy for UpperBound {
+    fn name(&self) -> &'static str {
+        "Upper bound"
+    }
+
+    fn needs_forecasts(&self) -> bool {
+        false
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision {
+        let idx = rng.sample_indices(ctx.clients.len(), ctx.n.min(ctx.clients.len()));
+        SelectionDecision {
+            n_required: idx.len(),
+            clients: idx,
+            expected_duration: ctx.d_max,
+            max_duration: ctx.d_max,
+            wait: false,
+            unconstrained: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+    use crate::energy::PowerDomain;
+    use crate::selection::ClientRoundState;
+    use crate::trace::forecast::SeriesForecaster;
+
+    struct Fixture {
+        clients: Vec<ClientInfo>,
+        states: Vec<ClientRoundState>,
+        domains: Vec<PowerDomain>,
+        energy_fc: Vec<Vec<f64>>,
+        spare_fc: Vec<Vec<f64>>,
+        spare_now: Vec<f64>,
+    }
+
+    fn fixture(n_clients: usize, n_domains: usize, power_w: f64) -> Fixture {
+        let clients: Vec<ClientInfo> = (0..n_clients)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::Mid,
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % n_domains, p, (0..50).collect(), 10)
+            })
+            .collect();
+        let domains: Vec<PowerDomain> = (0..n_domains)
+            .map(|i| {
+                let series = vec![power_w; 120];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let energy_fc = domains
+            .iter()
+            .map(|d| d.forecast_window_wh(0, 60))
+            .collect();
+        let spare_fc = clients
+            .iter()
+            .map(|c| vec![c.capacity(); 60])
+            .collect();
+        let spare_now = clients.iter().map(|c| c.capacity()).collect();
+        Fixture {
+            states: vec![ClientRoundState::default(); n_clients],
+            clients,
+            domains,
+            energy_fc,
+            spare_fc,
+            spare_now,
+        }
+    }
+
+    fn ctx(f: &Fixture, n: usize) -> SelectionContext<'_> {
+        SelectionContext {
+            now: 0,
+            n,
+            d_max: 60,
+            clients: &f.clients,
+            states: &f.states,
+            domains: &f.domains,
+            energy_fc: &f.energy_fc,
+            spare_fc: &f.spare_fc,
+            spare_now: &f.spare_now,
+        }
+    }
+
+    #[test]
+    fn random_selects_n_distinct_available() {
+        let f = fixture(20, 4, 500.0);
+        let mut s = Baseline::random();
+        let mut rng = Rng::new(0);
+        let d = s.select(&ctx(&f, 5), &mut rng);
+        assert_eq!(d.clients.len(), 5);
+        assert_eq!(d.n_required, 5);
+        let mut u = d.clients.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 5);
+    }
+
+    #[test]
+    fn over_selection_takes_30_percent_more() {
+        let f = fixture(30, 5, 500.0);
+        let mut s = Baseline::oort_over();
+        let mut rng = Rng::new(1);
+        let d = s.select(&ctx(&f, 10), &mut rng);
+        assert_eq!(d.clients.len(), 13); // ceil(1.3 * 10)
+        assert_eq!(d.n_required, 10);
+    }
+
+    #[test]
+    fn waits_when_dark() {
+        let f = fixture(10, 2, 0.0);
+        for strat in [Baseline::random(), Baseline::oort(), Baseline::random_fc()] {
+            let mut s = strat;
+            let mut rng = Rng::new(2);
+            assert!(s.select(&ctx(&f, 3), &mut rng).wait, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn oort_prefers_high_sigma() {
+        let mut f = fixture(20, 4, 500.0);
+        for (i, st) in f.states.iter_mut().enumerate() {
+            st.sigma = if i < 5 { 100.0 } else { 1.0 };
+        }
+        let mut s = Baseline::oort();
+        let mut hits = 0;
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let d = s.select(&ctx(&f, 5), &mut rng);
+            hits += d.clients.iter().filter(|&&c| c < 5).count();
+        }
+        // ~90% exploitation should put most picks on the high-σ clients
+        assert!(hits > 150, "hits={hits}/250");
+    }
+
+    #[test]
+    fn fc_filter_drops_unreachable_clients() {
+        let mut f = fixture(10, 2, 500.0);
+        // client 0 has zero spare in the forecast -> unreachable
+        f.spare_fc[0] = vec![0.0; 60];
+        let mut s = Baseline::random_fc();
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let d = s.select(&ctx(&f, 4), &mut rng);
+            assert!(!d.clients.contains(&0));
+        }
+    }
+
+    #[test]
+    fn upper_bound_ignores_constraints() {
+        let f = fixture(10, 2, 0.0); // no energy at all
+        let mut s = UpperBound;
+        let mut rng = Rng::new(3);
+        let d = s.select(&ctx(&f, 4), &mut rng);
+        assert!(!d.wait);
+        assert_eq!(d.clients.len(), 4);
+        assert!(d.unconstrained);
+    }
+}

@@ -1,0 +1,139 @@
+//! Fair-participation blocklist (paper §4.4).
+//!
+//! After participating in a round a client is blocked (σ_c = 0, excluded
+//! from selection). At each round start, blocked clients are released with
+//!
+//!   P(c) = (p(c) − ω)^(−α)   if p(c) − ω > 0
+//!   P(c) = 1                 otherwise
+//!
+//! where p(c) is the client's participation count, α controls release
+//! speed (paper: α = 1) and ω is periodically set to mean participation so
+//! release probabilities do not decay over the training.
+
+use super::ClientRoundState;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Blocklist {
+    pub alpha: f64,
+    omega: f64,
+}
+
+impl Blocklist {
+    pub fn new(alpha: f64) -> Self {
+        Blocklist { alpha, omega: 0.0 }
+    }
+
+    /// release probability for participation count `p`
+    pub fn release_probability(&self, p: usize) -> f64 {
+        let excess = p as f64 - self.omega;
+        if excess > 0.0 {
+            excess.powf(-self.alpha).min(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Round start: refresh ω and probabilistically release.
+    pub fn begin_round(&mut self, states: &mut [ClientRoundState], rng: &mut Rng) {
+        if states.is_empty() {
+            return;
+        }
+        self.omega = states.iter().map(|s| s.participation as f64).sum::<f64>()
+            / states.len() as f64;
+        for s in states.iter_mut() {
+            if s.blocked && rng.bool(self.release_probability(s.participation)) {
+                s.blocked = false;
+            }
+        }
+    }
+
+    /// Round end: block everyone who participated.
+    pub fn block(&mut self, participants: &[usize], states: &mut [ClientRoundState]) {
+        for &c in participants {
+            states[c].blocked = true;
+        }
+    }
+
+    pub fn omega(&self) -> f64 {
+        self.omega
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn states(participations: &[usize]) -> Vec<ClientRoundState> {
+        participations
+            .iter()
+            .map(|&p| ClientRoundState {
+                participation: p,
+                sigma: 1.0,
+                blocked: true,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn release_probability_formula() {
+        let mut b = Blocklist::new(1.0);
+        let mut s = states(&[0, 2, 4, 6]);
+        let mut rng = Rng::new(0);
+        b.begin_round(&mut s, &mut rng); // omega = 3
+        assert!((b.omega() - 3.0).abs() < 1e-12);
+        // p=0,2 -> below/at omega -> release prob 1
+        assert_eq!(b.release_probability(0), 1.0);
+        assert_eq!(b.release_probability(2), 1.0);
+        // p=4 -> (4-3)^-1 = 1; p=6 -> (6-3)^-1 = 1/3
+        assert_eq!(b.release_probability(4), 1.0);
+        assert!((b.release_probability(6) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_alpha_blocks_longer() {
+        let mut b1 = Blocklist::new(1.0);
+        let mut b3 = Blocklist::new(3.0);
+        b1.omega = 2.0;
+        b3.omega = 2.0;
+        assert!(b3.release_probability(6) < b1.release_probability(6));
+    }
+
+    #[test]
+    fn under_participants_always_released() {
+        let mut b = Blocklist::new(1.0);
+        let mut s = states(&[0, 10, 10, 10]);
+        let mut rng = Rng::new(1);
+        b.begin_round(&mut s, &mut rng);
+        assert!(!s[0].blocked, "under-participant must always be released");
+    }
+
+    #[test]
+    fn over_participants_released_at_expected_rate() {
+        let mut b = Blocklist::new(1.0);
+        // omega will be 2.5; p=7 -> prob (4.5)^-1 ≈ 0.222
+        let mut released = 0;
+        let trials = 4000;
+        for seed in 0..trials {
+            let mut s = states(&[0, 0, 3, 7]);
+            let mut rng = Rng::new(seed);
+            b.begin_round(&mut s, &mut rng);
+            if !s[3].blocked {
+                released += 1;
+            }
+        }
+        let rate = released as f64 / trials as f64;
+        assert!((rate - 1.0 / 4.5).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn block_marks_participants() {
+        let mut b = Blocklist::new(1.0);
+        let mut s = states(&[0, 0, 0]);
+        for st in s.iter_mut() {
+            st.blocked = false;
+        }
+        b.block(&[1], &mut s);
+        assert!(!s[0].blocked && s[1].blocked && !s[2].blocked);
+    }
+}

@@ -1,0 +1,373 @@
+//! FedZero's client selection — Algorithm 1 of the paper.
+//!
+//! Binary search over the round duration d ∈ [1, d_max] (feasibility is
+//! monotone in d: a longer window only adds energy and spare capacity),
+//! with per-d pre-filters:
+//!   * power domains without any forecast excess energy in the window,
+//!   * clients on the blocklist (σ_c = 0),
+//!   * clients that cannot reach m_min within d even with the whole
+//!     domain budget to themselves (line 11).
+//! The surviving instance goes to the selection solver: the scalable
+//! greedy+local-search by default, exact branch-and-bound on request
+//! (`SolverKind::Exact`), both from [`crate::solver::mip`].
+
+use super::fairness::Blocklist;
+use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
+use crate::solver::mip::{self, SelClient, SelInstance};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// greedy + swap local search (scales to 100k clients; default)
+    Greedy,
+    /// exact branch-and-bound with a node budget (falls back to greedy
+    /// incumbent when exhausted)
+    Exact,
+}
+
+pub struct FedZero {
+    pub solver: SolverKind,
+    pub blocklist: Blocklist,
+    /// swap passes for the greedy solver
+    pub swap_passes: usize,
+    /// node budget for the exact solver
+    pub node_budget: usize,
+    /// statistics: (d searched, eligible clients) of the last selection
+    pub last_search: Option<(usize, usize)>,
+}
+
+impl FedZero {
+    pub fn new(solver: SolverKind) -> Self {
+        FedZero {
+            solver,
+            blocklist: Blocklist::new(1.0),
+            swap_passes: 1,
+            node_budget: 200_000,
+            last_search: None,
+        }
+    }
+
+    /// Build the solver instance for duration `d`; `None` if fewer than n
+    /// eligible clients survive the filters.
+    pub fn build_instance(&self, ctx: &SelectionContext, d: usize) -> Option<SelInstance> {
+        // Line 6: drop domains with no excess energy in the window.
+        let energy: Vec<Vec<f64>> = ctx
+            .energy_fc
+            .iter()
+            .map(|w| w[..d].to_vec())
+            .collect();
+        let domain_alive: Vec<bool> = energy
+            .iter()
+            .map(|w| w.iter().sum::<f64>() > 1e-9)
+            .collect();
+
+        let mut clients = Vec::new();
+        for (i, c) in ctx.clients.iter().enumerate() {
+            // Line 8: blocklist / zero utility.
+            if ctx.states[i].blocked || ctx.states[i].sigma <= 0.0 {
+                continue;
+            }
+            if !domain_alive[c.domain] {
+                continue;
+            }
+            // Line 11: must be able to reach m_min standalone within d.
+            if !ctx.reachable_min(i, d) {
+                continue;
+            }
+            let spare: Vec<f64> = (0..d)
+                .map(|t| ctx.spare_fc[i][t].min(c.capacity()))
+                .collect();
+            clients.push(SelClient {
+                domain: c.domain,
+                sigma: ctx.states[i].sigma,
+                delta: c.delta(),
+                m_min: c.m_min,
+                m_max: c.m_max,
+                spare,
+            });
+            // remember the original id through a parallel vec below
+        }
+        if clients.len() < ctx.n {
+            return None;
+        }
+        Some(SelInstance { n: ctx.n, clients, energy })
+    }
+
+    /// ids parallel to `build_instance`'s client list
+    fn eligible_ids(&self, ctx: &SelectionContext, d: usize) -> Vec<usize> {
+        let energy_alive: Vec<bool> = ctx
+            .energy_fc
+            .iter()
+            .map(|w| w[..d].iter().sum::<f64>() > 1e-9)
+            .collect();
+        ctx.clients
+            .iter()
+            .enumerate()
+            .filter(|(i, c)| {
+                !ctx.states[*i].blocked
+                    && ctx.states[*i].sigma > 0.0
+                    && energy_alive[c.domain]
+                    && ctx.reachable_min(*i, d)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn solve(&self, inst: &SelInstance) -> mip::SelSolution {
+        match self.solver {
+            SolverKind::Greedy => mip::greedy(inst, self.swap_passes),
+            SolverKind::Exact => mip::branch_and_bound(inst, self.node_budget),
+        }
+    }
+
+    /// Algorithm 1: smallest d with a full-size solution, via binary search.
+    fn search(&mut self, ctx: &SelectionContext) -> Option<(Vec<usize>, usize)> {
+        let mut lo = 1usize;
+        let mut hi = ctx.d_max;
+        let mut best: Option<(Vec<usize>, usize)> = None;
+        while lo <= hi {
+            let d = lo + (hi - lo) / 2;
+            let attempt = self.build_instance(ctx, d).and_then(|inst| {
+                let sol = self.solve(&inst);
+                if sol.chosen.len() == ctx.n {
+                    let ids = self.eligible_ids(ctx, d);
+                    Some(sol.chosen.iter().map(|&k| ids[k]).collect::<Vec<_>>())
+                } else {
+                    None
+                }
+            });
+            match attempt {
+                Some(ids) => {
+                    best = Some((ids, d));
+                    if d == 1 {
+                        break;
+                    }
+                    hi = d - 1;
+                }
+                None => {
+                    lo = d + 1;
+                }
+            }
+        }
+        best
+    }
+}
+
+impl Strategy for FedZero {
+    fn name(&self) -> &'static str {
+        match self.solver {
+            SolverKind::Greedy => "FedZero",
+            SolverKind::Exact => "FedZero(exact)",
+        }
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, _rng: &mut Rng) -> SelectionDecision {
+        // §Perf: cheap necessary condition before the binary search — if
+        // fewer than n clients are even standalone-eligible at d_max, no d
+        // can work; skip the O(log d · greedy) search during dark periods.
+        if self.eligible_ids(ctx, ctx.d_max).len() < ctx.n {
+            return SelectionDecision::wait();
+        }
+        match self.search(ctx) {
+            Some((clients, d)) => {
+                self.last_search = Some((d, clients.len()));
+                let n_required = clients.len();
+                SelectionDecision {
+                    clients,
+                    expected_duration: d,
+                    n_required,
+                    max_duration: ctx.d_max,
+                    wait: false,
+                    unconstrained: false,
+                }
+            }
+            None => SelectionDecision::wait(),
+        }
+    }
+
+    fn on_round_end(
+        &mut self,
+        participants: &[usize],
+        states: &mut [ClientRoundState],
+        rng: &mut Rng,
+    ) {
+        self.blocklist.block(participants, states);
+        self.blocklist.begin_round(states, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+    use crate::energy::PowerDomain;
+    use crate::trace::forecast::SeriesForecaster;
+
+    fn mk_clients(n: usize, domains: usize, samples: usize) -> Vec<ClientInfo> {
+        (0..n)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::ALL[i % 3],
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % domains, p, (0..samples).collect(), 10)
+            })
+            .collect()
+    }
+
+    fn mk_domains(n: usize, power_w: f64, steps: usize) -> Vec<PowerDomain> {
+        (0..n)
+            .map(|i| {
+                let series = vec![power_w; steps];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect()
+    }
+
+    fn mk_ctx<'a>(
+        clients: &'a [ClientInfo],
+        states: &'a [ClientRoundState],
+        domains: &'a [PowerDomain],
+        energy_fc: &'a [Vec<f64>],
+        spare_fc: &'a [Vec<f64>],
+        spare_now: &'a [f64],
+        n: usize,
+        d_max: usize,
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            now: 0,
+            n,
+            d_max,
+            clients,
+            states,
+            domains,
+            energy_fc,
+            spare_fc,
+            spare_now,
+        }
+    }
+
+    fn full_forecasts(
+        clients: &[ClientInfo],
+        domains: &[PowerDomain],
+        d_max: usize,
+    ) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<f64>) {
+        let energy_fc: Vec<Vec<f64>> = domains
+            .iter()
+            .map(|d| d.forecast_window_wh(0, d_max))
+            .collect();
+        let spare_fc: Vec<Vec<f64>> = clients
+            .iter()
+            .map(|c| vec![c.capacity(); d_max])
+            .collect();
+        let spare_now: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+        (energy_fc, spare_fc, spare_now)
+    }
+
+    #[test]
+    fn selects_n_and_short_duration_when_plentiful() {
+        let clients = mk_clients(12, 3, 50);
+        let states = vec![ClientRoundState::default(); 12];
+        let domains = mk_domains(3, 800.0, 120);
+        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 4, 60);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut rng = Rng::new(0);
+        let d = fz.select(&ctx, &mut rng);
+        assert!(!d.wait);
+        assert_eq!(d.clients.len(), 4);
+        // plenty of energy: each client needs m_min=5 batches at ~38
+        // batches/step capacity -> d=1 must suffice
+        assert_eq!(d.expected_duration, 1, "expected shortest duration");
+    }
+
+    #[test]
+    fn waits_when_no_energy() {
+        let clients = mk_clients(6, 2, 50);
+        let states = vec![ClientRoundState::default(); 6];
+        let domains = mk_domains(2, 0.0, 120);
+        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 2, 60);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut rng = Rng::new(0);
+        assert!(fz.select(&ctx, &mut rng).wait);
+    }
+
+    #[test]
+    fn blocked_clients_are_never_selected() {
+        let clients = mk_clients(8, 2, 50);
+        let mut states = vec![ClientRoundState::default(); 8];
+        for i in 0..4 {
+            states[i].blocked = true;
+            states[i].sigma = 0.0;
+        }
+        let domains = mk_domains(2, 800.0, 120);
+        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 3, 60);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut rng = Rng::new(0);
+        let d = fz.select(&ctx, &mut rng);
+        assert!(!d.wait);
+        assert!(d.clients.iter().all(|&c| c >= 4), "{:?}", d.clients);
+    }
+
+    #[test]
+    fn duration_grows_when_energy_is_scarce() {
+        // energy only supports a fraction of a batch per step -> need
+        // several steps to reach m_min
+        let clients = mk_clients(4, 1, 50); // m_min = 5 batches
+        let states = vec![ClientRoundState::default(); 4];
+        // small device: δ ≈ 70*(10/110)/60 ≈ 0.106 Wh/batch; give 13 Wh/h
+        let domains = mk_domains(1, 13.0, 240);
+        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 120);
+        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 2, 120);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut rng = Rng::new(0);
+        let d = fz.select(&ctx, &mut rng);
+        assert!(!d.wait);
+        assert!(d.expected_duration > 1, "d={}", d.expected_duration);
+        assert_eq!(d.clients.len(), 2);
+    }
+
+    #[test]
+    fn round_end_blocks_participants() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut states = vec![ClientRoundState::default(); 5];
+        states[1].participation = 1;
+        states[3].participation = 1;
+        let mut rng = Rng::new(0);
+        fz.on_round_end(&[1, 3], &mut states, &mut rng);
+        // 1 and 3 were just blocked; they may be instantly released (p <=
+        // omega), but sigma handling happens via the tracker. At minimum
+        // the blocklist mechanics ran without panicking and states are
+        // consistent booleans.
+        for s in &states {
+            let _ = s.blocked;
+        }
+    }
+
+    #[test]
+    fn exact_solver_agrees_with_greedy_on_easy_instance() {
+        let clients = mk_clients(9, 3, 50);
+        let states = vec![ClientRoundState::default(); 9];
+        let domains = mk_domains(3, 800.0, 120);
+        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 3, 60);
+        let mut rng = Rng::new(0);
+        let mut g = FedZero::new(SolverKind::Greedy);
+        let mut e = FedZero::new(SolverKind::Exact);
+        let dg = g.select(&ctx, &mut rng);
+        let de = e.select(&ctx, &mut rng);
+        assert_eq!(dg.expected_duration, de.expected_duration);
+        assert_eq!(dg.clients.len(), de.clients.len());
+    }
+}

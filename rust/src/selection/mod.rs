@@ -1,0 +1,145 @@
+//! Client selection — the paper's core contribution (§4.3, §4.4) and all
+//! six baselines from the evaluation (§5.1).
+//!
+//! * [`fedzero`] — Algorithm 1: binary search over the round duration `d`,
+//!   pre-filters, and the selection MILP solved by [`crate::solver::mip`].
+//! * [`oort`] — Oort-style statistical utility tracking (used both as
+//!   FedZero's σ_c and by the Oort baselines).
+//! * [`fairness`] — the participation blocklist with probabilistic release.
+//! * [`baselines`] — Random / Oort (±1.3n over-selection, ±forecast
+//!   filtering) and the unconstrained Upper Bound.
+
+pub mod baselines;
+pub mod fairness;
+pub mod fedzero;
+pub mod semisync;
+pub mod oort;
+
+use crate::client::ClientInfo;
+use crate::energy::PowerDomain;
+use crate::util::rng::Rng;
+
+/// Per-client mutable state the server tracks across rounds.
+#[derive(Clone, Debug)]
+pub struct ClientRoundState {
+    /// p(c): rounds this client has participated in (completed m_min)
+    pub participation: usize,
+    /// Oort-style statistical utility σ_c
+    pub sigma: f64,
+    /// on the fairness blocklist?
+    pub blocked: bool,
+}
+
+impl Default for ClientRoundState {
+    fn default() -> Self {
+        // paper: σ_c = 1 until the client first participates
+        ClientRoundState { participation: 0, sigma: 1.0, blocked: false }
+    }
+}
+
+/// Everything a strategy may look at when selecting.
+pub struct SelectionContext<'a> {
+    /// current timestep
+    pub now: usize,
+    /// clients to select per round (n)
+    pub n: usize,
+    /// max round duration in steps (d_max)
+    pub d_max: usize,
+    pub clients: &'a [ClientInfo],
+    pub states: &'a [ClientRoundState],
+    pub domains: &'a [PowerDomain],
+    /// forecast excess energy per domain for [now, now+d_max), Wh/step
+    pub energy_fc: &'a [Vec<f64>],
+    /// forecast spare capacity per client for [now, now+d_max), batches/step
+    pub spare_fc: &'a [Vec<f64>],
+    /// actual current spare capacity per client (what an energy-agnostic
+    /// baseline can observe "right now")
+    pub spare_now: &'a [f64],
+}
+
+impl<'a> SelectionContext<'a> {
+    /// clients that currently have access to excess energy AND spare
+    /// compute — the availability condition the paper imposes on the
+    /// Random/Oort baselines.
+    pub fn available_now(&self) -> Vec<usize> {
+        self.clients
+            .iter()
+            .enumerate()
+            .filter(|(i, c)| {
+                self.spare_now[*i] > 1e-9 && self.domains[c.domain].has_power(self.now)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// the paper's line-11 filter: can client `i` reach m_min within
+    /// `d` steps per the forecasts, assuming the whole domain budget?
+    pub fn reachable_min(&self, i: usize, d: usize) -> bool {
+        let c = &self.clients[i];
+        let delta = c.delta();
+        let mut batches = 0.0;
+        for t in 0..d.min(self.spare_fc[i].len()) {
+            batches += self.spare_fc[i][t]
+                .min(self.energy_fc[c.domain][t] / delta)
+                .min(c.capacity());
+            if batches >= c.m_min {
+                return true;
+            }
+        }
+        batches >= c.m_min
+    }
+}
+
+/// What a strategy decided for this round.
+#[derive(Clone, Debug)]
+pub struct SelectionDecision {
+    /// selected client ids (indices into `ctx.clients`)
+    pub clients: Vec<usize>,
+    /// expected round duration (FedZero's optimised d; d_max otherwise)
+    pub expected_duration: usize,
+    /// round ends as soon as this many clients complete m_min
+    /// (over-selection baselines set this to n < |clients|)
+    pub n_required: usize,
+    /// hard cap on this round's duration in steps (normally d_max; the
+    /// semi-synchronous extension sets its fixed deadline here)
+    pub max_duration: usize,
+    /// no feasible selection: skip this step and try again later
+    pub wait: bool,
+    /// ignore energy/capacity constraints at runtime (Upper Bound)
+    pub unconstrained: bool,
+}
+
+impl SelectionDecision {
+    pub fn wait() -> Self {
+        SelectionDecision {
+            clients: Vec::new(),
+            expected_duration: 0,
+            n_required: 0,
+            max_duration: 0,
+            wait: true,
+            unconstrained: false,
+        }
+    }
+}
+
+/// A pluggable selection strategy (one per paper baseline + FedZero).
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision;
+    /// Does this strategy read `energy_fc` / `spare_fc`? Strategies that
+    /// only look at current availability return false and the simulator
+    /// skips building forecast windows entirely (§Perf: forecast
+    /// construction dominated idle steps for the Random/Oort baselines).
+    fn needs_forecasts(&self) -> bool {
+        true
+    }
+    /// Hook after a round completes (participants = clients that reached
+    /// m_min). FedZero updates its blocklist here.
+    fn on_round_end(
+        &mut self,
+        _participants: &[usize],
+        _states: &mut [ClientRoundState],
+        _rng: &mut Rng,
+    ) {
+    }
+}

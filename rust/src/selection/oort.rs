@@ -1,0 +1,98 @@
+//! Oort-style statistical utility (Lai et al., OSDI '21), as adopted by
+//! the paper for FedZero's σ_c (§4.3):
+//!
+//!   σ_c = |B_c| · sqrt( (1/|B_c|) Σ_{k∈B_c} loss(k)² )   if p(c) ≥ 1
+//!   σ_c = 1                                              otherwise
+//!
+//! We track the per-sample squared loss through the mean training loss the
+//! client reports after each participation (the batch-mean loss is the
+//! observable in our protocol; using it as the per-sample estimate is the
+//! same approximation Oort's implementations make when only aggregate
+//! losses are shipped).
+
+use super::ClientRoundState;
+
+/// Running utility tracker; owned by the server/coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct UtilityTracker {
+    /// last observed mean loss per client (None before first participation)
+    last_loss: Vec<Option<f64>>,
+}
+
+impl UtilityTracker {
+    pub fn new(n_clients: usize) -> Self {
+        UtilityTracker { last_loss: vec![None; n_clients] }
+    }
+
+    /// Record a completed participation: `mean_loss` over the batches the
+    /// client trained this round, `n_samples` its local dataset size.
+    /// Returns the new σ_c.
+    pub fn update(&mut self, client: usize, mean_loss: f64, n_samples: usize) -> f64 {
+        self.last_loss[client] = Some(mean_loss);
+        n_samples as f64 * (mean_loss * mean_loss).sqrt()
+    }
+
+    /// σ_c per the paper's rule (1.0 until first participation).
+    pub fn sigma(&self, client: usize, n_samples: usize, participation: usize) -> f64 {
+        match (participation, self.last_loss[client]) {
+            (p, Some(loss)) if p >= 1 => {
+                n_samples as f64 * (loss * loss).sqrt()
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Refresh σ in the shared round state (respecting the blocklist,
+    /// which forces σ_c = 0).
+    pub fn refresh(
+        &self,
+        states: &mut [ClientRoundState],
+        samples: &[usize],
+    ) {
+        for (i, s) in states.iter_mut().enumerate() {
+            s.sigma = if s.blocked {
+                0.0
+            } else {
+                self.sigma(i, samples[i], s.participation)
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_is_one_before_first_participation() {
+        let t = UtilityTracker::new(3);
+        assert_eq!(t.sigma(0, 500, 0), 1.0);
+        assert_eq!(t.sigma(1, 10_000, 0), 1.0);
+    }
+
+    #[test]
+    fn sigma_scales_with_samples_and_loss() {
+        let mut t = UtilityTracker::new(2);
+        t.update(0, 2.0, 100);
+        t.update(1, 2.0, 400);
+        assert!((t.sigma(0, 100, 1) - 200.0).abs() < 1e-9);
+        assert!((t.sigma(1, 400, 1) - 800.0).abs() < 1e-9);
+        // lower loss -> lower utility
+        t.update(1, 0.5, 400);
+        assert!((t.sigma(1, 400, 2) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refresh_zeroes_blocked_clients() {
+        let mut t = UtilityTracker::new(2);
+        t.update(0, 1.5, 100);
+        t.update(1, 1.5, 100);
+        let mut states = vec![
+            ClientRoundState { participation: 1, sigma: 0.0, blocked: false },
+            ClientRoundState { participation: 1, sigma: 0.0, blocked: true },
+        ];
+        t.refresh(&mut states, &[100, 100]);
+        assert!((states[0].sigma - 150.0).abs() < 1e-9);
+        assert_eq!(states[1].sigma, 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Semi-synchronous round extension (paper §7 future work: integrating
+//! FedZero with semi-synchronous strategies such as REFL [1]).
+//!
+//! Instead of ending the round as soon as the selected clients complete
+//! their minimum participation, a semi-synchronous server aggregates at a
+//! FIXED deadline with whichever clients finished by then. This trades
+//! straggler tolerance for potentially discarded work. Implemented as a
+//! wrapper so it composes with any underlying selection policy (FedZero,
+//! Random, Oort).
+
+use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
+use crate::util::rng::Rng;
+
+pub struct SemiSync<S: Strategy> {
+    pub inner: S,
+    /// fixed aggregation deadline in timesteps
+    pub deadline: usize,
+}
+
+impl<S: Strategy> SemiSync<S> {
+    pub fn new(inner: S, deadline: usize) -> Self {
+        assert!(deadline >= 1);
+        SemiSync { inner, deadline }
+    }
+}
+
+impl<S: Strategy> Strategy for SemiSync<S> {
+    fn name(&self) -> &'static str {
+        "SemiSync"
+    }
+
+    fn needs_forecasts(&self) -> bool {
+        self.inner.needs_forecasts()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision {
+        let mut d = self.inner.select(ctx, rng);
+        if d.wait {
+            return d;
+        }
+        // rounds last exactly `deadline` steps (or until everyone is done)
+        d.max_duration = self.deadline.min(ctx.d_max);
+        d.n_required = d.clients.len();
+        d.expected_duration = d.max_duration;
+        d
+    }
+
+    fn on_round_end(
+        &mut self,
+        participants: &[usize],
+        states: &mut [ClientRoundState],
+        rng: &mut Rng,
+    ) {
+        self.inner.on_round_end(participants, states, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::baselines::Baseline;
+    use crate::selection::fedzero::{FedZero, SolverKind};
+    use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+    use crate::energy::PowerDomain;
+    use crate::trace::forecast::SeriesForecaster;
+
+    fn fixture() -> (
+        Vec<ClientInfo>,
+        Vec<ClientRoundState>,
+        Vec<PowerDomain>,
+        Vec<Vec<f64>>,
+        Vec<Vec<f64>>,
+        Vec<f64>,
+    ) {
+        let clients: Vec<ClientInfo> = (0..8)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::Mid,
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % 2, p, (0..50).collect(), 10)
+            })
+            .collect();
+        let domains: Vec<PowerDomain> = (0..2)
+            .map(|i| {
+                let series = vec![700.0; 120];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let states = vec![ClientRoundState::default(); 8];
+        let energy_fc =
+            domains.iter().map(|d| d.forecast_window_wh(0, 60)).collect();
+        let spare_fc =
+            clients.iter().map(|c| vec![c.capacity(); 60]).collect();
+        let spare_now = clients.iter().map(|c| c.capacity()).collect();
+        (clients, states, domains, energy_fc, spare_fc, spare_now)
+    }
+
+    #[test]
+    fn deadline_caps_round_duration() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let ctx = SelectionContext {
+            now: 0,
+            n: 3,
+            d_max: 60,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let mut rng = Rng::new(0);
+        let mut s = SemiSync::new(Baseline::random(), 15);
+        let d = s.select(&ctx, &mut rng);
+        assert!(!d.wait);
+        assert_eq!(d.max_duration, 15);
+        assert_eq!(d.n_required, d.clients.len());
+    }
+
+    #[test]
+    fn composes_with_fedzero() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let ctx = SelectionContext {
+            now: 0,
+            n: 2,
+            d_max: 60,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let mut rng = Rng::new(1);
+        let mut s = SemiSync::new(FedZero::new(SolverKind::Greedy), 10);
+        let d = s.select(&ctx, &mut rng);
+        assert!(!d.wait);
+        assert_eq!(d.clients.len(), 2);
+        assert!(d.max_duration <= 10);
+    }
+
+    #[test]
+    fn wait_passes_through() {
+        let (clients, states, _domains, _efc, sfc, snow) = fixture();
+        // dark domains
+        let domains: Vec<PowerDomain> = (0..2)
+            .map(|i| {
+                let series = vec![0.0; 120];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let efc: Vec<Vec<f64>> =
+            domains.iter().map(|d| d.forecast_window_wh(0, 60)).collect();
+        let ctx = SelectionContext {
+            now: 0,
+            n: 2,
+            d_max: 60,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let mut rng = Rng::new(2);
+        let mut s = SemiSync::new(FedZero::new(SolverKind::Greedy), 10);
+        assert!(s.select(&ctx, &mut rng).wait);
+    }
+}

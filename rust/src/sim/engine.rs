@@ -1,0 +1,578 @@
+//! The simulation engine.
+
+use anyhow::Result;
+
+use crate::client::ClientInfo;
+use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
+use crate::fl::{fedavg_weights, TrainBackend};
+use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
+use crate::selection::oort::UtilityTracker;
+use crate::selection::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
+use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub step_minutes: f64,
+    /// total simulated steps (paper: 7 days = 10080 one-minute steps)
+    pub horizon: usize,
+    /// clients selected per round (n)
+    pub n_per_round: usize,
+    /// max round duration in steps (d_max)
+    pub d_max: usize,
+    /// evaluate the global model every this many rounds
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            step_minutes: 1.0,
+            horizon: 7 * 24 * 60,
+            n_per_round: 10,
+            d_max: 60,
+            eval_every: 5,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of one executed round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub duration: usize,
+    /// clients that reached m_min (their updates were aggregated)
+    pub participants: Vec<usize>,
+    /// clients whose work was discarded (selected, did not reach m_min)
+    pub stragglers: Vec<usize>,
+    pub total_batches: f64,
+    pub energy_wh: f64,
+}
+
+/// Everything needed to simulate one experiment configuration.
+pub struct Simulation<'a, B: TrainBackend> {
+    pub cfg: SimConfig,
+    pub clients: Vec<ClientInfo>,
+    pub domains: Vec<PowerDomain>,
+    /// actual utilisation per client per step ([0,1]); spare capacity is
+    /// m_c · (1 − util)
+    pub load_actual: Vec<Vec<f64>>,
+    /// spare-capacity forecasters per client (over the spare series, in
+    /// batches/step); `ErrorLevel::Unavailable` means "assume full m_c"
+    pub load_fc: Vec<SeriesForecaster>,
+    pub load_fc_level: ErrorLevel,
+    pub backend: &'a mut B,
+    pub strategy: &'a mut dyn Strategy,
+    // --- state ---
+    pub states: Vec<ClientRoundState>,
+    pub utility: UtilityTracker,
+    pub meter: EnergyMeter,
+    pub metrics: MetricsLog,
+    pub rng: Rng,
+    /// wall-clock spent inside strategy.select (overhead accounting)
+    pub select_time: std::time::Duration,
+}
+
+impl<'a, B: TrainBackend> Simulation<'a, B> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: SimConfig,
+        clients: Vec<ClientInfo>,
+        domains: Vec<PowerDomain>,
+        load_actual: Vec<Vec<f64>>,
+        load_fc: Vec<SeriesForecaster>,
+        load_fc_level: ErrorLevel,
+        backend: &'a mut B,
+        strategy: &'a mut dyn Strategy,
+    ) -> Self {
+        let n_clients = clients.len();
+        let n_domains = domains.len();
+        let seed = cfg.seed;
+        let step_minutes = cfg.step_minutes;
+        Simulation {
+            cfg,
+            clients,
+            domains,
+            load_actual,
+            load_fc,
+            load_fc_level,
+            backend,
+            strategy,
+            states: vec![ClientRoundState::default(); n_clients],
+            utility: UtilityTracker::new(n_clients),
+            meter: EnergyMeter::new(n_clients, n_domains),
+            metrics: MetricsLog::new(step_minutes),
+            rng: Rng::new(seed ^ 0x51D),
+            select_time: std::time::Duration::ZERO,
+        }
+    }
+
+    /// actual spare capacity of client `i` at step `t` (batches/step)
+    fn spare_actual(&self, i: usize, t: usize) -> f64 {
+        let util = self
+            .load_actual
+            .get(i)
+            .and_then(|v| v.get(t))
+            .copied()
+            .unwrap_or(1.0);
+        self.clients[i].capacity() * (1.0 - util)
+    }
+
+    /// spare-capacity forecast window for client `i` issued at `t0`
+    fn spare_forecast_window(&self, i: usize, t0: usize, h: usize) -> Vec<f64> {
+        match self.load_fc_level {
+            ErrorLevel::Unavailable => {
+                vec![self.clients[i].capacity(); h]
+            }
+            _ => {
+                let cap = self.clients[i].capacity();
+                (t0..t0 + h)
+                    .map(|t| self.load_fc[i].forecast(t0, t).clamp(0.0, cap))
+                    .collect()
+            }
+        }
+    }
+
+    /// Run the full simulation: returns the metrics log (also stored).
+    pub fn run(&mut self) -> Result<()> {
+        let mut global = self.backend.init_params(self.cfg.seed as i32)?;
+        let mut t = 0usize;
+        let mut round = 0usize;
+        while t < self.cfg.horizon {
+            // refresh σ, assemble context, ask the strategy
+            let samples: Vec<usize> =
+                self.clients.iter().map(|c| c.num_samples()).collect();
+            self.utility.refresh(&mut self.states, &samples);
+
+            // §Perf: forecast windows are only materialised for strategies
+            // that read them (FedZero, *-fc); Random/Oort/UpperBound skip
+            // ~C·d_max hash-noise draws per selection attempt.
+            let wants_fc = self.strategy.needs_forecasts();
+            let energy_fc: Vec<Vec<f64>> = if wants_fc {
+                self.domains
+                    .iter()
+                    .map(|d| d.forecast_window_wh(t, self.cfg.d_max))
+                    .collect()
+            } else {
+                vec![Vec::new(); self.domains.len()]
+            };
+            let spare_fc: Vec<Vec<f64>> = if wants_fc {
+                (0..self.clients.len())
+                    .map(|i| self.spare_forecast_window(i, t, self.cfg.d_max))
+                    .collect()
+            } else {
+                vec![Vec::new(); self.clients.len()]
+            };
+            let spare_now: Vec<f64> = (0..self.clients.len())
+                .map(|i| self.spare_actual(i, t))
+                .collect();
+            let decision = {
+                let ctx = SelectionContext {
+                    now: t,
+                    n: self.cfg.n_per_round,
+                    d_max: self.cfg.d_max,
+                    clients: &self.clients,
+                    states: &self.states,
+                    domains: &self.domains,
+                    energy_fc: &energy_fc,
+                    spare_fc: &spare_fc,
+                    spare_now: &spare_now,
+                };
+                let t0 = std::time::Instant::now();
+                let d = self.strategy.select(&ctx, &mut self.rng);
+                self.select_time += t0.elapsed();
+                d
+            };
+            if decision.wait {
+                t += 1;
+                continue;
+            }
+
+            let outcome = self.execute_round(&decision, t, &global)?;
+
+            // aggregate participant updates (weights = sample counts)
+            let participants = outcome.0.participants.clone();
+            if !participants.is_empty() {
+                let weights = fedavg_weights(
+                    &participants
+                        .iter()
+                        .map(|&c| self.clients[c].num_samples())
+                        .collect::<Vec<_>>(),
+                );
+                global = self.backend.aggregate(&outcome.1, &weights)?;
+            }
+
+            // bookkeeping: utility, participation, blocklist
+            for (&c, &loss) in participants.iter().zip(&outcome.2) {
+                self.states[c].participation += 1;
+                self.utility.update(c, loss, self.clients[c].num_samples());
+            }
+            self.strategy.on_round_end(
+                &participants,
+                &mut self.states,
+                &mut self.rng,
+            );
+
+            let out = &outcome.0;
+            let mean_loss = if outcome.2.is_empty() {
+                0.0
+            } else {
+                outcome.2.iter().sum::<f64>() / outcome.2.len() as f64
+            };
+            self.metrics.rounds.push(RoundRecord {
+                round,
+                start_step: t,
+                duration_steps: out.duration,
+                selected: decision.clients.clone(),
+                participants: participants.clone(),
+                batches: out.total_batches,
+                energy_wh: out.energy_wh,
+                mean_loss,
+            });
+
+            t += out.duration.max(1);
+            round += 1;
+
+            if round % self.cfg.eval_every == 0 || t >= self.cfg.horizon {
+                let (acc, loss) = self.backend.evaluate(&global)?;
+                self.metrics.evals.push(EvalRecord {
+                    round,
+                    step: t,
+                    accuracy: acc,
+                    loss,
+                    cumulative_kwh: self.meter.total_kwh(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one round starting at `t0`. Returns (outcome, participant
+    /// updated params aligned with outcome.participants, participant mean
+    /// losses).
+    #[allow(clippy::type_complexity)]
+    fn execute_round(
+        &mut self,
+        decision: &SelectionDecision,
+        t0: usize,
+        global: &[f32],
+    ) -> Result<(RoundOutcome, Vec<Vec<f32>>, Vec<f64>)> {
+        self.meter.begin_round();
+        let sel = &decision.clients;
+        let k = sel.len();
+        let mut local: Vec<Vec<f32>> = vec![global.to_vec(); k];
+        let mut progress = vec![0.0f64; k]; // fractional batch credit
+        let mut executed = vec![0usize; k]; // whole batches run
+        let mut loss_acc = vec![0.0f64; k];
+        let mut loss_batches = vec![0usize; k];
+        let mut duration = 0usize;
+
+        // group selected clients by domain once
+        let mut by_domain: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (slot, &c) in sel.iter().enumerate() {
+            by_domain
+                .entry(self.clients[c].domain)
+                .or_default()
+                .push(slot);
+        }
+
+        let round_cap = decision.max_duration.max(1).min(self.cfg.d_max);
+        for step in 0..round_cap {
+            let tt = t0 + step;
+            if tt >= self.cfg.horizon {
+                break;
+            }
+            duration = step + 1;
+
+            for (&dom, slots) in &by_domain {
+                // demands of still-active clients in this domain
+                let mut active: Vec<usize> = slots
+                    .iter()
+                    .copied()
+                    .filter(|&s| {
+                        progress[s] < self.clients[sel[s]].m_max - 1e-9
+                    })
+                    .collect();
+                if active.is_empty() {
+                    continue;
+                }
+                let batch_steps: Vec<f64> = if decision.unconstrained {
+                    // Upper bound: full capacity, grid energy
+                    active
+                        .iter()
+                        .map(|&s| {
+                            let c = &self.clients[sel[s]];
+                            c.capacity().min(c.m_max - progress[s])
+                        })
+                        .collect()
+                } else {
+                    let reqs: Vec<PowerRequest> = active
+                        .iter()
+                        .map(|&s| {
+                            let c = &self.clients[sel[s]];
+                            let delta = c.delta();
+                            let spare = self.spare_actual(sel[s], tt);
+                            PowerRequest {
+                                need_min_wh: delta
+                                    * (c.m_min - progress[s]).max(0.0),
+                                need_max_wh: delta
+                                    * (c.m_max - progress[s]).max(0.0),
+                                usable_wh: delta
+                                    * spare.min(c.m_max - progress[s]).max(0.0),
+                            }
+                        })
+                        .collect();
+                    let available = self.domains[dom].energy_wh(tt);
+                    let alloc = if available.is_infinite() {
+                        // unlimited domain: everyone gets their cap
+                        reqs.iter()
+                            .map(|r| r.usable_wh.min(r.need_max_wh))
+                            .collect()
+                    } else {
+                        attribute_power(available, &reqs)
+                    };
+                    active
+                        .iter()
+                        .zip(&alloc)
+                        .map(|(&s, &wh)| wh / self.clients[sel[s]].delta())
+                        .collect()
+                };
+
+                for (idx, &s) in active.iter().enumerate() {
+                    let b = batch_steps[idx];
+                    if b <= 0.0 {
+                        continue;
+                    }
+                    progress[s] += b;
+                    let wh = b * self.clients[sel[s]].delta();
+                    self.meter.record(sel[s], dom, wh);
+                    // run the whole batches that became available
+                    let want = progress[s].floor() as usize;
+                    if want > executed[s] {
+                        let n_new = want - executed[s];
+                        let stats = self.backend.train_batches(
+                            sel[s],
+                            &mut local[s],
+                            global,
+                            n_new,
+                        )?;
+                        loss_acc[s] += stats.mean_loss * n_new as f64;
+                        loss_batches[s] += n_new;
+                        executed[s] = want;
+                    }
+                }
+                // placate borrowck lint: active consumed here
+                active.clear();
+            }
+
+            // end condition: n_required clients reached their minimum
+            let done = (0..k)
+                .filter(|&s| progress[s] >= self.clients[sel[s]].m_min - 1e-9)
+                .count();
+            if done >= decision.n_required {
+                break;
+            }
+        }
+
+        let mut participants = Vec::new();
+        let mut stragglers = Vec::new();
+        let mut updates = Vec::new();
+        let mut losses = Vec::new();
+        for s in 0..k {
+            if progress[s] >= self.clients[sel[s]].m_min - 1e-9
+                && executed[s] > 0
+            {
+                participants.push(sel[s]);
+                updates.push(std::mem::take(&mut local[s]));
+                losses.push(if loss_batches[s] > 0 {
+                    loss_acc[s] / loss_batches[s] as f64
+                } else {
+                    0.0
+                });
+            } else {
+                stragglers.push(sel[s]);
+            }
+        }
+        let total_batches: f64 = progress.iter().sum();
+        let energy_wh = self.meter.round_wh(self.meter.rounds() - 1);
+        Ok((
+            RoundOutcome {
+                duration,
+                participants,
+                stragglers,
+                total_batches,
+                energy_wh,
+            },
+            updates,
+            losses,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientProfile, DeviceType, ModelKind};
+    use crate::fl::MockBackend;
+    use crate::selection::baselines::{Baseline, UpperBound};
+    use crate::selection::fedzero::{FedZero, SolverKind};
+
+    fn build(
+        n_clients: usize,
+        n_domains: usize,
+        power_w: f64,
+        horizon: usize,
+    ) -> (Vec<ClientInfo>, Vec<PowerDomain>, Vec<Vec<f64>>, Vec<SeriesForecaster>)
+    {
+        let clients: Vec<ClientInfo> = (0..n_clients)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::ALL[i % 3],
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % n_domains, p, (0..60).collect(), 10)
+            })
+            .collect();
+        let domains: Vec<PowerDomain> = (0..n_domains)
+            .map(|i| {
+                let series = vec![power_w; horizon];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let load: Vec<Vec<f64>> =
+            (0..n_clients).map(|_| vec![0.0; horizon]).collect();
+        let load_fc: Vec<SeriesForecaster> = clients
+            .iter()
+            .map(|c| {
+                SeriesForecaster::perfect(vec![c.capacity(); horizon])
+            })
+            .collect();
+        (clients, domains, load, load_fc)
+    }
+
+    fn run_sim(
+        strategy: &mut dyn Strategy,
+        power_w: f64,
+    ) -> (MetricsLog, f64) {
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, power_w, horizon);
+        let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &mut backend,
+            strategy,
+        );
+        sim.run().unwrap();
+        let kwh = sim.meter.total_kwh();
+        (sim.metrics, kwh)
+    }
+
+    #[test]
+    fn fedzero_trains_and_converges_on_mock() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, kwh) = run_sim(&mut fz, 800.0);
+        assert!(m.rounds.len() > 5, "only {} rounds", m.rounds.len());
+        assert!(m.best_accuracy() > 0.5, "acc {}", m.best_accuracy());
+        assert!(kwh > 0.0);
+        // energy accounting consistent between meter and metrics
+        assert!((kwh - m.total_energy_kwh()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_baselines_run() {
+        for mut s in [
+            Baseline::random(),
+            Baseline::random_over(),
+            Baseline::random_fc(),
+            Baseline::oort(),
+            Baseline::oort_over(),
+            Baseline::oort_fc(),
+        ] {
+            let (m, _) = run_sim(&mut s, 800.0);
+            assert!(!m.rounds.is_empty(), "{} did no rounds", s.name());
+        }
+        let mut ub = UpperBound;
+        let (m, _) = run_sim(&mut ub, 0.0); // no excess energy needed
+        assert!(m.best_accuracy() > 0.5);
+    }
+
+    #[test]
+    fn no_power_means_no_rounds_except_upper_bound() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, kwh) = run_sim(&mut fz, 0.0);
+        assert!(m.rounds.is_empty());
+        assert_eq!(kwh, 0.0);
+    }
+
+    #[test]
+    fn energy_budget_is_respected_per_domain_step() {
+        // run with modest power and verify no round used more energy than
+        // domains could provide: total kWh <= power * time
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, kwh) = run_sim(&mut fz, 100.0);
+        let horizon_h = 600.0 / 60.0;
+        let max_possible_kwh = 3.0 * 100.0 * horizon_h / 1000.0;
+        assert!(kwh <= max_possible_kwh + 1e-9, "{kwh} > {max_possible_kwh}");
+        assert!(!m.rounds.is_empty());
+    }
+
+    #[test]
+    fn over_selection_discards_stragglers() {
+        // scarce energy -> with 1.3n over-selection some clients won't
+        // finish; participants <= selected
+        let mut s = Baseline::random_over();
+        let (m, _) = run_sim(&mut s, 60.0);
+        let mut saw_discard = false;
+        for r in &m.rounds {
+            assert!(r.participants.len() <= r.selected.len());
+            if r.participants.len() < r.selected.len() {
+                saw_discard = true;
+            }
+        }
+        assert!(saw_discard, "expected at least one straggler");
+    }
+
+    #[test]
+    fn fedzero_rounds_do_not_exceed_dmax() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, _) = run_sim(&mut fz, 300.0);
+        for r in &m.rounds {
+            assert!(r.duration_steps <= 30);
+        }
+    }
+
+    #[test]
+    fn participation_is_tracked() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, _) = run_sim(&mut fz, 800.0);
+        let counts = m.participation_counts(9);
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            m.rounds.iter().map(|r| r.participants.len()).sum::<usize>()
+        );
+    }
+}

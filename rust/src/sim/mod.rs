@@ -1,0 +1,16 @@
+//! Discrete-event FL simulation over energy/load time series — the
+//! reproduction of the paper's Flower extension + Vessim testbed (§5).
+//!
+//! Time advances in fixed steps (1 minute in the paper). Between rounds
+//! the engine skips idle time; inside a round it executes the per-step
+//! local control loop of §4.5: the domain controller attributes the
+//! actually-available excess energy to participating clients (two-step
+//! water-filling), clients compute as many whole batches as their energy
+//! share and actual spare capacity allow, and the server ends the round
+//! when `n_required` clients reached m_min or d_max elapsed. Stragglers'
+//! work is discarded (but their energy was still spent — the over-
+//! selection waste the paper measures).
+
+pub mod engine;
+
+pub use engine::{RoundOutcome, SimConfig, Simulation};

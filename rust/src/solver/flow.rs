@@ -1,0 +1,201 @@
+//! Min-cost max-flow with f64 capacities/costs.
+//!
+//! Successive shortest paths with SPFA (Bellman–Ford queue) path search —
+//! residual arcs carry negative costs, so Dijkstra-with-potentials would
+//! need a Bellman–Ford initialisation anyway and the allocation graphs are
+//! small (≤ a few thousand arcs). Starting from zero flow and always
+//! augmenting along a cheapest path maintains the classic invariant that
+//! the current flow is min-cost among flows of equal value, which is what
+//! [`super::alloc`] relies on.
+
+pub const EPS: f64 = 1e-9;
+
+#[derive(Clone, Debug)]
+struct Arc {
+    to: usize,
+    cap: f64,
+    cost: f64,
+    /// index of the reverse arc in `arcs`
+    rev: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FlowNetwork {
+    arcs: Vec<Arc>,
+    adj: Vec<Vec<usize>>,
+}
+
+impl FlowNetwork {
+    pub fn new(nodes: usize) -> Self {
+        FlowNetwork { arcs: Vec::new(), adj: vec![Vec::new(); nodes] }
+    }
+
+    pub fn add_node(&mut self) -> usize {
+        self.adj.push(Vec::new());
+        self.adj.len() - 1
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Add a directed arc; returns its id (for `flow_on`).
+    pub fn add_edge(&mut self, from: usize, to: usize, cap: f64, cost: f64) -> usize {
+        assert!(cap >= -EPS, "negative capacity {cap}");
+        let id = self.arcs.len();
+        self.arcs.push(Arc { to, cap: cap.max(0.0), cost, rev: id + 1 });
+        self.adj[from].push(id);
+        self.arcs.push(Arc { to: from, cap: 0.0, cost: -cost, rev: id });
+        self.adj[to].push(id + 1);
+        id
+    }
+
+    /// Flow currently on arc `id` (= residual capacity of its reverse arc).
+    pub fn flow_on(&self, id: usize) -> f64 {
+        self.arcs[self.arcs[id].rev].cap
+    }
+
+    /// Cheapest augmenting path via SPFA. Returns per-node predecessor arc.
+    fn spfa(&self, s: usize, t: usize) -> Option<Vec<usize>> {
+        let n = self.num_nodes();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut in_queue = vec![false; n];
+        let mut pred = vec![usize::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        dist[s] = 0.0;
+        queue.push_back(s);
+        in_queue[s] = true;
+        while let Some(u) = queue.pop_front() {
+            in_queue[u] = false;
+            for &aid in &self.adj[u] {
+                let arc = &self.arcs[aid];
+                if arc.cap > EPS && dist[u] + arc.cost < dist[arc.to] - EPS {
+                    dist[arc.to] = dist[u] + arc.cost;
+                    pred[arc.to] = aid;
+                    if !in_queue[arc.to] {
+                        queue.push_back(arc.to);
+                        in_queue[arc.to] = true;
+                    }
+                }
+            }
+        }
+        if dist[t].is_finite() {
+            Some(pred)
+        } else {
+            None
+        }
+    }
+
+    /// Min-cost max-flow from `s` to `t`, augmenting at most `limit` units.
+    /// Returns (flow, cost). Set `limit = f64::INFINITY` for full max-flow.
+    pub fn min_cost_max_flow(&mut self, s: usize, t: usize, limit: f64) -> (f64, f64) {
+        let mut flow = 0.0;
+        let mut cost = 0.0;
+        while flow < limit - EPS {
+            let Some(pred) = self.spfa(s, t) else { break };
+            // bottleneck along path
+            let mut push = limit - flow;
+            let mut v = t;
+            while v != s {
+                let aid = pred[v];
+                push = push.min(self.arcs[aid].cap);
+                v = self.arcs[self.arcs[aid].rev].to;
+            }
+            if push <= EPS {
+                break;
+            }
+            let mut v = t;
+            while v != s {
+                let aid = pred[v];
+                let rev = self.arcs[aid].rev;
+                self.arcs[aid].cap -= push;
+                self.arcs[rev].cap += push;
+                cost += push * self.arcs[aid].cost;
+                v = self.arcs[rev].to;
+            }
+            flow += push;
+        }
+        (flow, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_max_flow() {
+        // s -> a -> t and s -> b -> t, caps 3 and 2
+        let mut g = FlowNetwork::new(4);
+        let (s, a, b, t) = (0, 1, 2, 3);
+        g.add_edge(s, a, 3.0, 0.0);
+        g.add_edge(a, t, 3.0, 0.0);
+        g.add_edge(s, b, 2.0, 0.0);
+        g.add_edge(b, t, 2.0, 0.0);
+        let (flow, cost) = g.min_cost_max_flow(s, t, f64::INFINITY);
+        assert!((flow - 5.0).abs() < 1e-9);
+        assert!(cost.abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefers_cheap_path() {
+        // two parallel paths, expensive one only used after cheap saturates
+        let mut g = FlowNetwork::new(4);
+        let (s, a, b, t) = (0, 1, 2, 3);
+        let cheap = g.add_edge(s, a, 1.0, 1.0);
+        g.add_edge(a, t, 1.0, 0.0);
+        let dear = g.add_edge(s, b, 1.0, 5.0);
+        g.add_edge(b, t, 1.0, 0.0);
+        let (flow, cost) = g.min_cost_max_flow(s, t, 1.0);
+        assert!((flow - 1.0).abs() < 1e-9);
+        assert!((cost - 1.0).abs() < 1e-9);
+        assert!((g.flow_on(cheap) - 1.0).abs() < 1e-9);
+        assert!(g.flow_on(dear).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reroutes_through_residual_arcs() {
+        // Classic rerouting: the min-cost max-flow must push 2 units even
+        // though the greedy first path blocks the middle edge.
+        let mut g = FlowNetwork::new(4);
+        let (s, a, b, t) = (0, 1, 2, 3);
+        g.add_edge(s, a, 1.0, 0.0);
+        g.add_edge(s, b, 1.0, 2.0);
+        g.add_edge(a, b, 1.0, 0.0);
+        g.add_edge(a, t, 1.0, 3.0);
+        g.add_edge(b, t, 2.0, 0.0);
+        let (flow, cost) = g.min_cost_max_flow(s, t, f64::INFINITY);
+        assert!((flow - 2.0).abs() < 1e-9, "flow={flow}");
+        // cheapest 2-unit flow: s->a->b->t (0) + s->b->t (2) = 2
+        assert!((cost - 2.0).abs() < 1e-9, "cost={cost}");
+    }
+
+    #[test]
+    fn respects_flow_limit() {
+        let mut g = FlowNetwork::new(2);
+        g.add_edge(0, 1, 10.0, 1.0);
+        let (flow, cost) = g.min_cost_max_flow(0, 1, 2.5);
+        assert!((flow - 2.5).abs() < 1e-9);
+        assert!((cost - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disconnected_gives_zero() {
+        let mut g = FlowNetwork::new(3);
+        g.add_edge(0, 1, 1.0, 0.0);
+        let (flow, _) = g.min_cost_max_flow(0, 2, f64::INFINITY);
+        assert_eq!(flow, 0.0);
+    }
+
+    #[test]
+    fn handles_negative_costs_from_zero_flow() {
+        // negative-cost arc: SSP from zero flow stays optimal
+        let mut g = FlowNetwork::new(3);
+        g.add_edge(0, 1, 1.0, -5.0);
+        g.add_edge(1, 2, 1.0, 0.0);
+        g.add_edge(0, 2, 1.0, -1.0);
+        let (flow, cost) = g.min_cost_max_flow(0, 2, f64::INFINITY);
+        assert!((flow - 2.0).abs() < 1e-9);
+        assert!((cost + 6.0).abs() < 1e-9);
+    }
+}

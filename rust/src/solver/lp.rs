@@ -1,0 +1,417 @@
+//! Dense two-phase primal simplex (the general-purpose LP substrate).
+//!
+//! Supports `maximize c·x` over `x ≥ 0` with arbitrary ≤ / ≥ / = rows.
+//! Bland's rule everywhere, so cycling is impossible (at the cost of speed —
+//! this solver exists for correctness cross-checks of the flow allocator,
+//! for the exact-MIP relaxations in tests, and as a substrate; the hot
+//! selection path uses [`super::alloc`]).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Clone, Debug)]
+pub struct Lp {
+    /// number of structural variables
+    pub n: usize,
+    /// objective coefficients (maximization)
+    pub objective: Vec<f64>,
+    /// rows: (coefficients, comparator, rhs)
+    pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, value: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+impl Lp {
+    pub fn new(n: usize) -> Self {
+        Lp { n, objective: vec![0.0; n], rows: Vec::new() }
+    }
+
+    pub fn maximize(mut self, c: &[f64]) -> Self {
+        assert_eq!(c.len(), self.n);
+        self.objective = c.to_vec();
+        self
+    }
+
+    pub fn constrain(&mut self, coeffs: &[f64], cmp: Cmp, rhs: f64) {
+        assert_eq!(coeffs.len(), self.n);
+        self.rows.push((coeffs.to_vec(), cmp, rhs));
+    }
+
+    /// Convenience: `x[i] <= ub`.
+    pub fn upper_bound(&mut self, i: usize, ub: f64) {
+        let mut c = vec![0.0; self.n];
+        c[i] = 1.0;
+        self.constrain(&c, Cmp::Le, ub);
+    }
+
+    pub fn solve(&self) -> LpResult {
+        // Normalise to rhs >= 0 (flip rows), then add slack/surplus and
+        // artificial variables.
+        let m = self.rows.len();
+        let mut rows: Vec<(Vec<f64>, Cmp, f64)> = self.rows.clone();
+        for (coeffs, cmp, rhs) in rows.iter_mut() {
+            if *rhs < 0.0 {
+                for c in coeffs.iter_mut() {
+                    *c = -*c;
+                }
+                *rhs = -*rhs;
+                *cmp = match *cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+            }
+        }
+
+        // column layout: [structural | slack/surplus | artificial | rhs]
+        let mut n_slack = 0;
+        let mut n_art = 0;
+        for (_, cmp, _) in &rows {
+            match cmp {
+                Cmp::Le => n_slack += 1,
+                Cmp::Ge => {
+                    n_slack += 1;
+                    n_art += 1;
+                }
+                Cmp::Eq => n_art += 1,
+            }
+        }
+        let total = self.n + n_slack + n_art;
+        let rhs_col = total;
+        let mut t = vec![vec![0.0; total + 1]; m];
+        let mut basis = vec![0usize; m];
+        let mut art_cols = Vec::new();
+        let mut slack_i = self.n;
+        let mut art_i = self.n + n_slack;
+        for (r, (coeffs, cmp, rhs)) in rows.iter().enumerate() {
+            t[r][..self.n].copy_from_slice(coeffs);
+            t[r][rhs_col] = *rhs;
+            match cmp {
+                Cmp::Le => {
+                    t[r][slack_i] = 1.0;
+                    basis[r] = slack_i;
+                    slack_i += 1;
+                }
+                Cmp::Ge => {
+                    t[r][slack_i] = -1.0;
+                    slack_i += 1;
+                    t[r][art_i] = 1.0;
+                    basis[r] = art_i;
+                    art_cols.push(art_i);
+                    art_i += 1;
+                }
+                Cmp::Eq => {
+                    t[r][art_i] = 1.0;
+                    basis[r] = art_i;
+                    art_cols.push(art_i);
+                    art_i += 1;
+                }
+            }
+        }
+
+        // Phase 1: minimise sum of artificials (maximize -sum).
+        if n_art > 0 {
+            let mut obj = vec![0.0; total + 1];
+            for &c in &art_cols {
+                obj[c] = -1.0;
+            }
+            // price out the basic artificials
+            for r in 0..m {
+                if art_cols.contains(&basis[r]) {
+                    for c in 0..=total {
+                        obj[c] += t[r][c];
+                    }
+                }
+            }
+            if !simplex_iterate(&mut t, &mut obj, &mut basis, total, rhs_col) {
+                return LpResult::Unbounded; // cannot happen in phase 1
+            }
+            if obj[rhs_col] > 1e-7 {
+                return LpResult::Infeasible;
+            }
+            // Drive any artificial still in the basis out (degenerate rows).
+            for r in 0..m {
+                if art_cols.contains(&basis[r]) {
+                    let pivot_col = (0..self.n + n_slack)
+                        .find(|&c| t[r][c].abs() > EPS);
+                    if let Some(c) = pivot_col {
+                        pivot(&mut t, &mut basis, r, c, rhs_col);
+                    }
+                    // else: zero row, harmless
+                }
+            }
+        }
+
+        // Phase 2: original objective, artificial columns frozen at zero.
+        let mut obj = vec![0.0; total + 1];
+        obj[..self.n].copy_from_slice(&self.objective);
+        for &c in &art_cols {
+            obj[c] = f64::NEG_INFINITY; // never re-enter
+        }
+        // price out current basis
+        for r in 0..m {
+            let b = basis[r];
+            if obj[b].abs() > EPS && obj[b].is_finite() {
+                let coef = obj[b];
+                for c in 0..=total {
+                    if obj[c].is_finite() {
+                        obj[c] -= coef * t[r][c];
+                    }
+                }
+                obj[b] = 0.0;
+            }
+        }
+        if !simplex_iterate(&mut t, &mut obj, &mut basis, total, rhs_col) {
+            return LpResult::Unbounded;
+        }
+
+        let mut x = vec![0.0; self.n];
+        for r in 0..m {
+            if basis[r] < self.n {
+                x[basis[r]] = t[r][rhs_col];
+            }
+        }
+        let value: f64 = self
+            .objective
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum();
+        LpResult::Optimal { x, value }
+    }
+}
+
+/// Run primal simplex iterations in place. Returns false on unboundedness.
+/// `obj` holds reduced costs for a MAXIMIZATION: enter while any positive.
+fn simplex_iterate(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    total: usize,
+    rhs_col: usize,
+) -> bool {
+    let m = t.len();
+    loop {
+        // Bland: smallest-index column with positive reduced cost
+        let Some(col) = (0..total)
+            .find(|&c| obj[c].is_finite() && obj[c] > 1e-7)
+        else {
+            return true;
+        };
+        // ratio test, Bland tie-break on basis index
+        let mut best: Option<(f64, usize)> = None;
+        for r in 0..m {
+            if t[r][col] > EPS {
+                let ratio = t[r][rhs_col] / t[r][col];
+                match best {
+                    None => best = Some((ratio, r)),
+                    Some((br, brow)) => {
+                        if ratio < br - EPS
+                            || (ratio < br + EPS && basis[r] < basis[brow])
+                        {
+                            best = Some((ratio, r));
+                        }
+                    }
+                }
+            }
+        }
+        let Some((_, row)) = best else {
+            return false; // unbounded
+        };
+        pivot_with_obj(t, obj, basis, row, col, rhs_col);
+    }
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, rhs_col: usize) {
+    let m = t.len();
+    let p = t[row][col];
+    for c in 0..=rhs_col {
+        t[row][c] /= p;
+    }
+    for r in 0..m {
+        if r != row && t[r][col].abs() > EPS {
+            let f = t[r][col];
+            for c in 0..=rhs_col {
+                t[r][c] -= f * t[row][c];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_obj(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    rhs_col: usize,
+) {
+    pivot(t, basis, row, col, rhs_col);
+    if obj[col].abs() > 0.0 && obj[col].is_finite() {
+        let f = obj[col];
+        for c in 0..=rhs_col {
+            if obj[c].is_finite() {
+                obj[c] -= f * t[row][c];
+            }
+        }
+        obj[col] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve_x(lp: &Lp) -> (Vec<f64>, f64) {
+        match lp.solve() {
+            LpResult::Optimal { x, value } => (x, value),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_le_problem() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> (2, 6), 36
+        let mut lp = Lp::new(2).maximize(&[3.0, 5.0]);
+        lp.constrain(&[1.0, 0.0], Cmp::Le, 4.0);
+        lp.constrain(&[0.0, 2.0], Cmp::Le, 12.0);
+        lp.constrain(&[3.0, 2.0], Cmp::Le, 18.0);
+        let (x, v) = solve_x(&lp);
+        assert!((v - 36.0).abs() < 1e-6);
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_ge_rows() {
+        // max x + y s.t. x + y = 10, x >= 3, y <= 4 -> (6, 4) value 10
+        let mut lp = Lp::new(2).maximize(&[1.0, 1.0]);
+        lp.constrain(&[1.0, 1.0], Cmp::Eq, 10.0);
+        lp.constrain(&[1.0, 0.0], Cmp::Ge, 3.0);
+        lp.constrain(&[0.0, 1.0], Cmp::Le, 4.0);
+        let (x, v) = solve_x(&lp);
+        assert!((v - 10.0).abs() < 1e-6);
+        assert!(x[0] >= 3.0 - 1e-6 && x[1] <= 4.0 + 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut lp = Lp::new(1).maximize(&[1.0]);
+        lp.constrain(&[1.0], Cmp::Ge, 5.0);
+        lp.constrain(&[1.0], Cmp::Le, 3.0);
+        assert_eq!(lp.solve(), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut lp = Lp::new(2).maximize(&[1.0, 0.0]);
+        lp.constrain(&[0.0, 1.0], Cmp::Le, 1.0);
+        assert_eq!(lp.solve(), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalisation() {
+        // max -x s.t. -x <= -2  (i.e. x >= 2) -> x = 2
+        let mut lp = Lp::new(1).maximize(&[-1.0]);
+        lp.constrain(&[-1.0], Cmp::Le, -2.0);
+        let (x, v) = solve_x(&lp);
+        assert!((x[0] - 2.0).abs() < 1e-6);
+        assert!((v + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // classic degeneracy stressor
+        let mut lp = Lp::new(4).maximize(&[0.75, -150.0, 0.02, -6.0]);
+        lp.constrain(&[0.25, -60.0, -0.04, 9.0], Cmp::Le, 0.0);
+        lp.constrain(&[0.5, -90.0, -0.02, 3.0], Cmp::Le, 0.0);
+        lp.constrain(&[0.0, 0.0, 1.0, 0.0], Cmp::Le, 1.0);
+        let (_, v) = solve_x(&lp);
+        assert!((v - 0.05).abs() < 1e-6, "v={v}");
+    }
+
+    #[test]
+    fn matches_flow_allocator_on_random_instances() {
+        // Cross-validation: the flow allocator must equal the LP optimum of
+        // the same per-domain allocation problem.
+        use crate::solver::alloc::{AllocClient, AllocProblem};
+        use crate::util::rng::Rng;
+        for seed in 0..30u64 {
+            let mut rng = Rng::new(seed);
+            let c_n = rng.range(1, 4);
+            let t_n = rng.range(1, 5);
+            let clients: Vec<AllocClient> = (0..c_n)
+                .map(|_| {
+                    let max = rng.range_f64(1.0, 6.0);
+                    AllocClient {
+                        min_batches: rng.range_f64(0.0, 1.0),
+                        max_batches: max,
+                        delta: rng.range_f64(0.5, 3.0),
+                        weight: rng.range_f64(0.1, 5.0),
+                        spare: (0..t_n)
+                            .map(|_| rng.range_f64(0.0, 3.0))
+                            .collect(),
+                    }
+                })
+                .collect();
+            let energy: Vec<f64> =
+                (0..t_n).map(|_| rng.range_f64(0.0, 6.0)).collect();
+            let prob = AllocProblem { clients: clients.clone(), energy: energy.clone() };
+
+            // LP formulation over m_{c,t}
+            let nv = c_n * t_n;
+            let mut obj = vec![0.0; nv];
+            for i in 0..c_n {
+                for j in 0..t_n {
+                    obj[i * t_n + j] = clients[i].weight;
+                }
+            }
+            let mut lp = Lp::new(nv).maximize(&obj);
+            for i in 0..c_n {
+                let mut row = vec![0.0; nv];
+                for j in 0..t_n {
+                    row[i * t_n + j] = 1.0;
+                }
+                lp.constrain(&row, Cmp::Ge, clients[i].min_batches);
+                lp.constrain(&row, Cmp::Le, clients[i].max_batches);
+                for j in 0..t_n {
+                    lp.upper_bound(i * t_n + j, clients[i].spare[j]);
+                }
+            }
+            for j in 0..t_n {
+                let mut row = vec![0.0; nv];
+                for i in 0..c_n {
+                    row[i * t_n + j] = clients[i].delta;
+                }
+                lp.constrain(&row, Cmp::Le, energy[j]);
+            }
+
+            let flow_result = prob.solve();
+            match (lp.solve(), flow_result) {
+                (LpResult::Infeasible, None) => {}
+                (LpResult::Optimal { value, .. }, Some(a)) => {
+                    assert!(
+                        (value - a.objective).abs()
+                            < 1e-5 * (1.0 + value.abs()),
+                        "seed {seed}: lp={value} flow={}",
+                        a.objective
+                    );
+                }
+                (lp_r, flow_r) => panic!(
+                    "seed {seed}: feasibility disagreement lp={lp_r:?} flow={flow_r:?}"
+                ),
+            }
+        }
+    }
+}

@@ -1,0 +1,547 @@
+//! Solvers for the paper's per-round client-selection MILP (§4.3):
+//!
+//!   max  Σ_c b_c σ_c Σ_t m_{c,t}
+//!   s.t. b_c = 1 ⇒ m_min ≤ Σ_t m_{c,t} ≤ m_max,  m_{c,t} ≤ spare_{c,t}
+//!        Σ_{c∈p} δ_c m_{c,t} ≤ r_{p,t}   ∀ p, t
+//!        Σ_c b_c = n
+//!
+//! For fixed b the problem decomposes per power domain into the exact
+//! transportation flow of [`super::alloc`]. Three solvers over b:
+//!
+//! * [`greedy`] — the scalable default (standalone-score ordering +
+//!   feasibility-checked insertion + swap local search). O(C·T) filter
+//!   cost; reproduces the paper's Fig-8 scalability envelope.
+//! * [`branch_and_bound`] — exact on evaluation-scale instances, using the
+//!   admissible bound Σ σ_c·standalone_c and infeasibility pruning
+//!   (infeasible partial selections stay infeasible for supersets); falls
+//!   back to the greedy incumbent when the node budget runs out.
+//! * [`enumerate`] — brute force over all C-choose-n subsets; ground truth
+//!   for tests on tiny instances.
+
+use super::alloc::{AllocClient, AllocProblem};
+
+/// One eligible (pre-filtered) candidate client.
+#[derive(Clone, Debug)]
+pub struct SelClient {
+    /// power-domain index
+    pub domain: usize,
+    /// statistical utility σ_c
+    pub sigma: f64,
+    /// energy per batch, Wh
+    pub delta: f64,
+    pub m_min: f64,
+    pub m_max: f64,
+    /// forecast spare capacity per step (batches)
+    pub spare: Vec<f64>,
+}
+
+/// A selection instance for a fixed candidate round duration `d` (= the
+/// length of every `spare` / `energy` vector).
+#[derive(Clone, Debug)]
+pub struct SelInstance {
+    pub n: usize,
+    pub clients: Vec<SelClient>,
+    /// excess-energy forecast per domain per step, Wh
+    pub energy: Vec<Vec<f64>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SelSolution {
+    /// indices into `instance.clients`
+    pub chosen: Vec<usize>,
+    pub objective: f64,
+    /// expected total batches per chosen client (same order as `chosen`)
+    pub totals: Vec<f64>,
+    /// true iff produced by an exact method that ran to completion
+    pub optimal: bool,
+}
+
+impl SelClient {
+    fn as_alloc(&self) -> AllocClient {
+        AllocClient {
+            min_batches: self.m_min,
+            max_batches: self.m_max,
+            delta: self.delta,
+            weight: self.sigma,
+            spare: self.spare.clone(),
+        }
+    }
+
+    pub fn standalone_batches(&self, energy: &[f64]) -> f64 {
+        AllocProblem::standalone_batches(&self.as_alloc(), energy)
+    }
+}
+
+impl SelInstance {
+    /// Exact objective + per-client totals for a fixed selection, or `None`
+    /// if the joint m_min lower bounds are infeasible. Decomposes per
+    /// domain.
+    pub fn evaluate(&self, chosen: &[usize]) -> Option<(f64, Vec<f64>)> {
+        let mut by_domain: Vec<Vec<usize>> = vec![Vec::new(); self.energy.len()];
+        for &i in chosen {
+            by_domain[self.clients[i].domain].push(i);
+        }
+        let mut objective = 0.0;
+        let mut totals = vec![0.0; chosen.len()];
+        let pos: std::collections::HashMap<usize, usize> =
+            chosen.iter().enumerate().map(|(k, &i)| (i, k)).collect();
+        for (p, members) in by_domain.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let prob = AllocProblem {
+                clients: members
+                    .iter()
+                    .map(|&i| self.clients[i].as_alloc())
+                    .collect(),
+                energy: self.energy[p].clone(),
+            };
+            let a = prob.solve()?;
+            objective += a.objective;
+            for (k, &i) in members.iter().enumerate() {
+                totals[pos[&i]] = a.totals[k];
+            }
+        }
+        Some((objective, totals))
+    }
+
+    /// σ_c · standalone upper bound per candidate (admissible: a client can
+    /// never compute more jointly than alone).
+    pub fn standalone_scores(&self) -> Vec<f64> {
+        self.clients
+            .iter()
+            .map(|c| c.sigma * c.standalone_batches(&self.energy[c.domain]))
+            .collect()
+    }
+}
+
+/// Greedy + swap local search. Returns at most `n` clients; fewer means no
+/// feasible way to add more was found (Algorithm 1 then grows `d`).
+///
+/// Perf note (§Perf): the allocation problem decomposes per power domain,
+/// so both the insertion loop and the swap search re-solve ONLY the
+/// affected domain(s) and patch cached per-domain objectives — this turned
+/// selection from O(n·D) flow solves per insertion into O(1).
+pub fn greedy(inst: &SelInstance, swap_passes: usize) -> SelSolution {
+    let scores = inst.standalone_scores();
+    let mut order: Vec<usize> = (0..inst.clients.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let n_domains = inst.energy.len();
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_domains];
+    let mut dom_obj = vec![0.0f64; n_domains];
+    let mut chosen: Vec<usize> = Vec::with_capacity(inst.n);
+
+    // solve one domain's allocation for a member set
+    let eval_domain = |doms: usize, mem: &[usize]| -> Option<f64> {
+        if mem.is_empty() {
+            return Some(0.0);
+        }
+        let prob = crate::solver::alloc::AllocProblem {
+            clients: mem.iter().map(|&i| inst.clients[i].as_alloc()).collect(),
+            energy: inst.energy[doms].clone(),
+        };
+        prob.solve().map(|a| a.objective)
+    };
+
+    for &cand in &order {
+        if chosen.len() == inst.n {
+            break;
+        }
+        if scores[cand] <= 0.0 {
+            continue; // cannot contribute
+        }
+        let p = inst.clients[cand].domain;
+        members[p].push(cand);
+        match eval_domain(p, &members[p]) {
+            Some(obj) => {
+                dom_obj[p] = obj;
+                chosen.push(cand);
+            }
+            None => {
+                members[p].pop();
+            }
+        }
+    }
+
+    // Swap local search: replace a chosen client with an unchosen one when
+    // it improves the exact objective. Only the source/target domains are
+    // re-solved.
+    for _ in 0..swap_passes {
+        let mut improved = false;
+        for slot in 0..chosen.len() {
+            let original = chosen[slot];
+            let p1 = inst.clients[original].domain;
+            // domain p1 without `original` (computed once per slot)
+            let mem_minus: Vec<usize> = members[p1]
+                .iter()
+                .copied()
+                .filter(|&c| c != original)
+                .collect();
+            let Some(obj1_minus) = eval_domain(p1, &mem_minus) else {
+                continue; // removing should never be infeasible, but be safe
+            };
+            let mut best_swap: Option<(usize, f64)> = None; // (cand, delta)
+            for &cand in &order {
+                if scores[cand] <= 0.0 {
+                    continue;
+                }
+                if chosen.contains(&cand) {
+                    continue;
+                }
+                let p2 = inst.clients[cand].domain;
+                let delta = if p2 == p1 {
+                    let mut mem = mem_minus.clone();
+                    mem.push(cand);
+                    match eval_domain(p1, &mem) {
+                        Some(obj) => obj - dom_obj[p1],
+                        None => continue,
+                    }
+                } else {
+                    let mut mem2 = members[p2].clone();
+                    mem2.push(cand);
+                    match eval_domain(p2, &mem2) {
+                        Some(obj2) => {
+                            (obj1_minus - dom_obj[p1]) + (obj2 - dom_obj[p2])
+                        }
+                        None => continue,
+                    }
+                };
+                if delta > 1e-9
+                    && best_swap.map(|(_, b)| delta > b).unwrap_or(true)
+                {
+                    best_swap = Some((cand, delta));
+                }
+            }
+            if let Some((cand, _)) = best_swap {
+                // apply: remove original from p1, add cand to its domain
+                let p2 = inst.clients[cand].domain;
+                members[p1].retain(|&c| c != original);
+                members[p2].push(cand);
+                dom_obj[p1] = eval_domain(p1, &members[p1])
+                    .expect("removal made domain infeasible");
+                dom_obj[p2] = eval_domain(p2, &members[p2])
+                    .expect("accepted swap became infeasible");
+                chosen[slot] = cand;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    let (objective, totals) = inst
+        .evaluate(&chosen)
+        .expect("greedy kept an infeasible selection");
+    SelSolution { chosen, objective, totals, optimal: false }
+}
+
+/// Exact branch-and-bound. `node_budget` caps the search; on exhaustion the
+/// best incumbent (at least as good as greedy) is returned with
+/// `optimal = false`.
+pub fn branch_and_bound(inst: &SelInstance, node_budget: usize) -> SelSolution {
+    let scores = inst.standalone_scores();
+    let mut order: Vec<usize> = (0..inst.clients.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    // prefix sums of sorted scores for the completion bound
+    let sorted_scores: Vec<f64> = order.iter().map(|&i| scores[i]).collect();
+
+    let seed = greedy(inst, 1);
+    let mut best =
+        if seed.chosen.len() == inst.n { seed.clone() } else { seed.clone() };
+    let best_obj = if best.chosen.len() == inst.n {
+        best.objective
+    } else {
+        f64::NEG_INFINITY
+    };
+
+    struct Dfs<'a> {
+        inst: &'a SelInstance,
+        order: &'a [usize],
+        sorted_scores: &'a [f64],
+        nodes: usize,
+        budget: usize,
+        best_obj: f64,
+        best: Option<(Vec<usize>, f64, Vec<f64>)>,
+        complete: bool,
+    }
+
+    impl<'a> Dfs<'a> {
+        /// admissible upper bound: exact standalone sum of chosen + top
+        /// remaining standalone scores from position `idx`.
+        fn bound(&self, chosen_score: f64, idx: usize, need: usize) -> f64 {
+            let mut b = chosen_score;
+            let mut taken = 0;
+            let mut i = idx;
+            while taken < need && i < self.sorted_scores.len() {
+                if self.sorted_scores[i] > 0.0 {
+                    b += self.sorted_scores[i];
+                }
+                taken += 1;
+                i += 1;
+            }
+            b
+        }
+
+        fn run(&mut self, chosen: &mut Vec<usize>, chosen_score: f64, idx: usize) {
+            if self.nodes >= self.budget {
+                self.complete = false;
+                return;
+            }
+            self.nodes += 1;
+            let need = self.inst.n - chosen.len();
+            if need == 0 {
+                if let Some((obj, totals)) = self.inst.evaluate(chosen) {
+                    if obj > self.best_obj + 1e-12 {
+                        self.best_obj = obj;
+                        self.best = Some((chosen.clone(), obj, totals));
+                    }
+                }
+                return;
+            }
+            if idx >= self.order.len()
+                || self.order.len() - idx < need
+                || self.bound(chosen_score, idx, need) <= self.best_obj + 1e-12
+            {
+                return;
+            }
+            let cand = self.order[idx];
+            // Branch 1: include (prune infeasible partial selections — the
+            // joint lower bounds only tighten as the set grows).
+            chosen.push(cand);
+            if self.inst.evaluate(chosen).is_some() {
+                self.run(
+                    chosen,
+                    chosen_score + self.sorted_scores[idx],
+                    idx + 1,
+                );
+            }
+            chosen.pop();
+            // Branch 2: exclude
+            self.run(chosen, chosen_score, idx + 1);
+        }
+    }
+
+    let mut dfs = Dfs {
+        inst,
+        order: &order,
+        sorted_scores: &sorted_scores,
+        nodes: 0,
+        budget: node_budget,
+        best_obj,
+        best: None,
+        complete: true,
+    };
+    let mut chosen = Vec::new();
+    dfs.run(&mut chosen, 0.0, 0);
+
+    if let Some((chosen, objective, totals)) = dfs.best {
+        SelSolution { chosen, objective, totals, optimal: dfs.complete }
+    } else if best_obj > f64::NEG_INFINITY {
+        best.optimal = dfs.complete;
+        best
+    } else {
+        // No feasible size-n selection exists (or was found): return the
+        // (possibly shorter) greedy solution, marked exact if search
+        // completed.
+        best.optimal = dfs.complete;
+        best
+    }
+}
+
+/// Brute force over all subsets of size n (tests only; panics on big C).
+pub fn enumerate(inst: &SelInstance) -> Option<SelSolution> {
+    let c = inst.clients.len();
+    assert!(c <= 20, "enumerate() is for tiny instances");
+    let mut best: Option<SelSolution> = None;
+    let mut subset: Vec<usize> = Vec::new();
+
+    fn rec(
+        inst: &SelInstance,
+        start: usize,
+        subset: &mut Vec<usize>,
+        best: &mut Option<SelSolution>,
+    ) {
+        if subset.len() == inst.n {
+            if let Some((obj, totals)) = inst.evaluate(subset) {
+                let better = best
+                    .as_ref()
+                    .map(|b| obj > b.objective + 1e-12)
+                    .unwrap_or(true);
+                if better {
+                    *best = Some(SelSolution {
+                        chosen: subset.clone(),
+                        objective: obj,
+                        totals,
+                        optimal: true,
+                    });
+                }
+            }
+            return;
+        }
+        if inst.clients.len() - start < inst.n - subset.len() {
+            return;
+        }
+        for i in start..inst.clients.len() {
+            subset.push(i);
+            rec(inst, i + 1, subset, best);
+            subset.pop();
+        }
+    }
+
+    rec(inst, 0, &mut subset, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_instance(seed: u64, c_n: usize, p_n: usize, t_n: usize, n: usize) -> SelInstance {
+        let mut rng = Rng::new(seed);
+        let clients = (0..c_n)
+            .map(|_| {
+                let m_min = rng.range_f64(0.5, 2.0);
+                SelClient {
+                    domain: rng.below(p_n),
+                    sigma: rng.range_f64(0.1, 3.0),
+                    delta: rng.range_f64(0.5, 2.5),
+                    m_min,
+                    m_max: m_min + rng.range_f64(0.0, 6.0),
+                    spare: (0..t_n).map(|_| rng.range_f64(0.0, 2.0)).collect(),
+                }
+            })
+            .collect();
+        let energy = (0..p_n)
+            .map(|_| (0..t_n).map(|_| rng.range_f64(0.0, 5.0)).collect())
+            .collect();
+        SelInstance { n, clients, energy }
+    }
+
+    #[test]
+    fn bnb_matches_enumeration() {
+        let mut compared = 0;
+        for seed in 0..25u64 {
+            let inst = random_instance(seed, 7, 2, 4, 3);
+            let exact = enumerate(&inst);
+            let bnb = branch_and_bound(&inst, 1_000_000);
+            match exact {
+                Some(e) => {
+                    assert!(bnb.optimal, "seed {seed}: budget exhausted");
+                    assert_eq!(bnb.chosen.len(), inst.n, "seed {seed}");
+                    assert!(
+                        (e.objective - bnb.objective).abs()
+                            < 1e-6 * (1.0 + e.objective),
+                        "seed {seed}: enum={} bnb={}",
+                        e.objective,
+                        bnb.objective
+                    );
+                    compared += 1;
+                }
+                None => {
+                    assert!(
+                        bnb.chosen.len() < inst.n,
+                        "seed {seed}: bnb found selection but enum says infeasible"
+                    );
+                }
+            }
+        }
+        assert!(compared >= 10, "too few feasible instances: {compared}");
+    }
+
+    #[test]
+    fn greedy_is_feasible_and_near_optimal() {
+        let mut ratios = Vec::new();
+        for seed in 100..130u64 {
+            let inst = random_instance(seed, 8, 3, 4, 3);
+            let g = greedy(&inst, 2);
+            // whatever greedy chose must be feasible
+            assert!(inst.evaluate(&g.chosen).is_some());
+            if let Some(e) = enumerate(&inst) {
+                if g.chosen.len() == inst.n && e.objective > 1e-9 {
+                    ratios.push(g.objective / e.objective);
+                }
+            }
+        }
+        assert!(!ratios.is_empty());
+        let worst = ratios.iter().cloned().fold(1.0, f64::min);
+        let avg: f64 = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!(worst > 0.65, "worst greedy/opt ratio {worst}");
+        assert!(avg > 0.9, "avg greedy/opt ratio {avg}");
+    }
+
+    #[test]
+    fn greedy_respects_n() {
+        let inst = random_instance(7, 12, 3, 5, 4);
+        let g = greedy(&inst, 1);
+        assert!(g.chosen.len() <= 4);
+        let mut uniq = g.chosen.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), g.chosen.len(), "duplicate selection");
+    }
+
+    #[test]
+    fn infeasible_instance_yields_partial_selection() {
+        // no energy at all -> nobody can reach m_min
+        let inst = SelInstance {
+            n: 2,
+            clients: vec![
+                SelClient {
+                    domain: 0,
+                    sigma: 1.0,
+                    delta: 1.0,
+                    m_min: 1.0,
+                    m_max: 5.0,
+                    spare: vec![1.0; 3],
+                },
+                SelClient {
+                    domain: 0,
+                    sigma: 1.0,
+                    delta: 1.0,
+                    m_min: 1.0,
+                    m_max: 5.0,
+                    spare: vec![1.0; 3],
+                },
+            ],
+            energy: vec![vec![0.0; 3]],
+        };
+        let g = greedy(&inst, 1);
+        assert!(g.chosen.is_empty());
+        let b = branch_and_bound(&inst, 10_000);
+        assert!(b.chosen.is_empty());
+    }
+
+    #[test]
+    fn shared_domain_competition_prefers_split() {
+        // Two domains, each with energy for ~1 client; three candidates,
+        // two of them in domain 0. Optimal picks one from each domain.
+        let mk = |domain: usize, sigma: f64| SelClient {
+            domain,
+            sigma,
+            delta: 1.0,
+            m_min: 2.0,
+            m_max: 4.0,
+            spare: vec![2.0; 2],
+        };
+        let inst = SelInstance {
+            n: 2,
+            clients: vec![mk(0, 1.0), mk(0, 1.0), mk(1, 0.9)],
+            energy: vec![vec![2.0; 2], vec![2.0; 2]],
+        };
+        let e = enumerate(&inst).unwrap();
+        let domains: Vec<usize> =
+            e.chosen.iter().map(|&i| inst.clients[i].domain).collect();
+        assert!(domains.contains(&0) && domains.contains(&1), "{domains:?}");
+        let g = greedy(&inst, 2);
+        assert_eq!(g.chosen.len(), 2);
+        assert!(
+            (g.objective - e.objective).abs() < 1e-6,
+            "greedy {} vs opt {}",
+            g.objective,
+            e.objective
+        );
+    }
+}

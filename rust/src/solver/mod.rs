@@ -1,0 +1,21 @@
+//! Optimization substrate (the reproduction's stand-in for Gurobi).
+//!
+//! The paper solves its per-round client-selection MIP with Gurobi; we
+//! build the machinery from scratch:
+//!
+//! * [`flow`] — min-cost max-flow (successive shortest paths, f64
+//!   capacities, lower-bound transformation).
+//! * [`alloc`] — the per-power-domain energy/batch allocation problem for a
+//!   *fixed* set of clients, solved exactly as a transportation flow after
+//!   the `x = m·δ` change of variable (see DESIGN.md §2).
+//! * [`lp`] — dense two-phase primal simplex, used to cross-validate the
+//!   flow allocator and as a general substrate.
+//! * [`mip`] — exact solvers for the selection MILP: subset enumeration
+//!   (tiny instances) and branch-and-bound with admissible standalone
+//!   bounds (evaluation-scale instances), with a node budget that falls
+//!   back to the greedy incumbent.
+
+pub mod alloc;
+pub mod flow;
+pub mod lp;
+pub mod mip;

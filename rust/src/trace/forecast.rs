@@ -1,0 +1,178 @@
+//! Horizon-dependent forecast error model.
+//!
+//! The paper uses Solcast's real forecasts, whose error grows with lead
+//! time; Fig 7 compares FedZero with realistic errors, perfect forecasts,
+//! and missing load forecasts. We reproduce that axis with a deterministic
+//! error field: for issue time `t0` and target step `t`, the forecast is
+//!
+//!   f(t0, t) = max(0, actual[t] · (1 + bias + σ(h)·ε(t0, t)))
+//!
+//! where h = t − t0, σ(h) = σ0·sqrt(h/h0) saturating at σ_max, and ε is a
+//! unit-variance hash-noise — deterministic in (seed, t0, t) so repeated
+//! queries are consistent within a round.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorLevel {
+    /// perfect foresight (Fig 7 "w/o error")
+    Perfect,
+    /// realistic, horizon-growing error (default)
+    Realistic,
+    /// no forecast available at all — callers substitute a static
+    /// assumption (Fig 7 "no load forecast": spare = full capacity)
+    Unavailable,
+}
+
+#[derive(Clone, Debug)]
+pub struct SeriesForecaster {
+    pub actual: Vec<f64>,
+    pub level: ErrorLevel,
+    /// relative error std at 1 h lead
+    pub sigma0: f64,
+    /// saturation of the relative error
+    pub sigma_max: f64,
+    /// multiplicative bias (systematic over/under-forecasting)
+    pub bias: f64,
+    pub seed: u64,
+    /// steps per hour (error growth is calibrated in hours)
+    pub steps_per_hour: f64,
+}
+
+impl SeriesForecaster {
+    pub fn realistic(actual: Vec<f64>, seed: u64, steps_per_hour: f64) -> Self {
+        SeriesForecaster {
+            actual,
+            level: ErrorLevel::Realistic,
+            sigma0: 0.10,
+            sigma_max: 0.35,
+            bias: 0.02,
+            seed,
+            steps_per_hour,
+        }
+    }
+
+    pub fn perfect(actual: Vec<f64>) -> Self {
+        SeriesForecaster {
+            actual,
+            level: ErrorLevel::Perfect,
+            sigma0: 0.0,
+            sigma_max: 0.0,
+            bias: 0.0,
+            seed: 0,
+            steps_per_hour: 60.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.actual.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actual.is_empty()
+    }
+
+    pub fn actual_at(&self, t: usize) -> f64 {
+        self.actual.get(t).copied().unwrap_or(0.0)
+    }
+
+    /// Forecast issued at `t0` for absolute step `t >= t0`.
+    pub fn forecast(&self, t0: usize, t: usize) -> f64 {
+        debug_assert!(t >= t0);
+        let a = self.actual_at(t);
+        match self.level {
+            ErrorLevel::Perfect => a,
+            ErrorLevel::Unavailable => 0.0,
+            ErrorLevel::Realistic => {
+                let h_hours = (t - t0) as f64 / self.steps_per_hour;
+                let sigma =
+                    (self.sigma0 * h_hours.sqrt()).min(self.sigma_max);
+                let eps = hash_normal(self.seed, t0 as u64, t as u64);
+                (a * (1.0 + self.bias + sigma * eps)).max(0.0)
+            }
+        }
+    }
+
+    /// Forecast the whole window [t0, t0+horizon).
+    pub fn forecast_window(&self, t0: usize, horizon: usize) -> Vec<f64> {
+        (t0..t0 + horizon).map(|t| self.forecast(t0, t)).collect()
+    }
+}
+
+/// Deterministic standard-normal noise from a (seed, a, b) triple.
+fn hash_normal(seed: u64, a: u64, b: u64) -> f64 {
+    let mixed = seed
+        ^ a.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ b.wrapping_mul(0xC2B2AE3D27D4EB4F);
+    Rng::new(mixed).normal()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f64> {
+        (0..n).map(|i| 100.0 + i as f64).collect()
+    }
+
+    #[test]
+    fn perfect_is_exact() {
+        let f = SeriesForecaster::perfect(ramp(100));
+        for t0 in [0usize, 10, 50] {
+            for h in [0usize, 1, 30] {
+                assert_eq!(f.forecast(t0, t0 + h), 100.0 + (t0 + h) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn realistic_error_grows_with_horizon() {
+        let n = 2000;
+        let f = SeriesForecaster::realistic(vec![100.0; n], 7, 60.0);
+        let rel_err = |h: usize| -> f64 {
+            let mut s = 0.0;
+            let mut cnt = 0;
+            for t0 in (0..n - h).step_by(13) {
+                s += (f.forecast(t0, t0 + h) - 100.0).abs() / 100.0;
+                cnt += 1;
+            }
+            s / cnt as f64
+        };
+        let short = rel_err(5);
+        let long = rel_err(600);
+        assert!(long > short * 1.5, "short={short} long={long}");
+    }
+
+    #[test]
+    fn forecast_is_deterministic_per_issue_time() {
+        let f = SeriesForecaster::realistic(ramp(100), 9, 60.0);
+        assert_eq!(f.forecast(3, 40), f.forecast(3, 40));
+        // different issue times give different errors
+        let a = f.forecast(3, 40);
+        let b = f.forecast(4, 40);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn never_negative() {
+        let f = SeriesForecaster::realistic(vec![0.5; 500], 11, 60.0);
+        for t0 in 0..400 {
+            assert!(f.forecast(t0, t0 + 60) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn window_matches_pointwise() {
+        let f = SeriesForecaster::realistic(ramp(50), 13, 60.0);
+        let w = f.forecast_window(5, 10);
+        for (k, &v) in w.iter().enumerate() {
+            assert_eq!(v, f.forecast(5, 5 + k));
+        }
+    }
+
+    #[test]
+    fn out_of_range_is_zero() {
+        let f = SeriesForecaster::perfect(ramp(10));
+        assert_eq!(f.forecast(5, 50), 0.0);
+    }
+}

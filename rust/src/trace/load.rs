@@ -1,0 +1,156 @@
+//! Synthetic per-client utilisation traces (Alibaba `gpu_wrk_util`
+//! substitute) and the coarse `gpu_plan`-style plan forecast.
+//!
+//! Structure preserved from the real trace family: a diurnal baseline
+//! (clusters are busier in working hours), Markov-modulated job bursts
+//! that saturate the device for tens of minutes to hours, and idle floors.
+//! Spare capacity for FL is `m_c · (1 − util)`.
+
+use crate::util::rng::Rng;
+
+/// Parameters of one client's load process.
+#[derive(Clone, Debug)]
+pub struct LoadModel {
+    /// mean baseline utilisation in off-hours, [0,1]
+    pub base_util: f64,
+    /// extra diurnal utilisation amplitude (peaks mid-day), [0,1]
+    pub diurnal_amp: f64,
+    /// probability per step of a burst starting
+    pub burst_start_p: f64,
+    /// probability per step of an active burst ending
+    pub burst_end_p: f64,
+    /// utilisation during a burst
+    pub burst_util: f64,
+    /// local-time offset in hours (aligns diurnal pattern with the site)
+    pub utc_offset_h: f64,
+}
+
+impl LoadModel {
+    /// Randomised heterogeneous model (mirrors the spread of the 100
+    /// machines sampled from the Alibaba trace in the paper).
+    pub fn sample(rng: &mut Rng, utc_offset_h: f64) -> LoadModel {
+        LoadModel {
+            base_util: rng.range_f64(0.05, 0.4),
+            diurnal_amp: rng.range_f64(0.1, 0.45),
+            // bursts last ~30-240 min, start a few times a day
+            burst_start_p: rng.range_f64(0.001, 0.006),
+            burst_end_p: rng.range_f64(0.008, 0.03),
+            burst_util: rng.range_f64(0.7, 1.0),
+            utc_offset_h,
+        }
+    }
+
+    /// Generate `steps` utilisation samples at `step_minutes` resolution.
+    pub fn generate(&self, steps: usize, step_minutes: f64, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(steps);
+        let mut bursting = rng.bool(0.1);
+        for i in 0..steps {
+            let local_h =
+                (i as f64 * step_minutes / 60.0 + self.utc_offset_h).rem_euclid(24.0);
+            // diurnal hump centred on 14:00 local
+            let diurnal = self.diurnal_amp
+                * (std::f64::consts::PI * ((local_h - 8.0) / 12.0))
+                    .sin()
+                    .max(0.0);
+            if bursting {
+                if rng.bool(self.burst_end_p * step_minutes) {
+                    bursting = false;
+                }
+            } else if rng.bool(self.burst_start_p * step_minutes) {
+                bursting = true;
+            }
+            let mut util = self.base_util + diurnal + 0.03 * rng.normal();
+            if bursting {
+                util = util.max(self.burst_util + 0.05 * rng.normal());
+            }
+            out.push(util.clamp(0.0, 1.0));
+        }
+        out
+    }
+}
+
+/// `gpu_plan`-style forecast: hourly-quantised smoothed utilisation. This
+/// is what the paper's load forecasts look like — coarse but unbiased.
+pub fn plan_forecast(actual: &[f64], step_minutes: f64) -> Vec<f64> {
+    let per_hour = ((60.0 / step_minutes).round() as usize).max(1);
+    let mut out = vec![0.0; actual.len()];
+    let mut i = 0;
+    while i < actual.len() {
+        let end = (i + per_hour).min(actual.len());
+        let mean: f64 =
+            actual[i..end].iter().sum::<f64>() / (end - i) as f64;
+        for o in out[i..end].iter_mut() {
+            *o = mean;
+        }
+        i = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilisation_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        let m = LoadModel::sample(&mut rng, 0.0);
+        let trace = m.generate(10_000, 1.0, &mut rng);
+        assert_eq!(trace.len(), 10_000);
+        assert!(trace.iter().all(|&u| (0.0..=1.0).contains(&u)));
+    }
+
+    #[test]
+    fn bursts_occur_and_end() {
+        let mut rng = Rng::new(2);
+        let m = LoadModel {
+            base_util: 0.1,
+            diurnal_amp: 0.0,
+            burst_start_p: 0.01,
+            burst_end_p: 0.02,
+            burst_util: 0.95,
+            utc_offset_h: 0.0,
+        };
+        let trace = m.generate(20_000, 1.0, &mut rng);
+        let high = trace.iter().filter(|&&u| u > 0.85).count();
+        assert!(high > 500, "no bursts? high={high}");
+        assert!(high < 18_000, "never idle? high={high}");
+    }
+
+    #[test]
+    fn diurnal_pattern_visible() {
+        let mut rng = Rng::new(3);
+        let m = LoadModel {
+            base_util: 0.1,
+            diurnal_amp: 0.4,
+            burst_start_p: 0.0,
+            burst_end_p: 1.0,
+            burst_util: 0.0,
+            utc_offset_h: 0.0,
+        };
+        // average over 10 days per minute-of-day
+        let days = 10;
+        let trace = m.generate(days * 1440, 1.0, &mut rng);
+        let minute_mean = |min: usize| -> f64 {
+            (0..days).map(|d| trace[d * 1440 + min]).sum::<f64>() / days as f64
+        };
+        assert!(minute_mean(14 * 60) > minute_mean(3 * 60) + 0.2);
+    }
+
+    #[test]
+    fn plan_forecast_is_hourly_constant_and_unbiased() {
+        let mut rng = Rng::new(4);
+        let m = LoadModel::sample(&mut rng, 0.0);
+        let trace = m.generate(1440, 1.0, &mut rng);
+        let plan = plan_forecast(&trace, 1.0);
+        // constant within each hour
+        for h in 0..24 {
+            let w = &plan[h * 60..(h + 1) * 60];
+            assert!(w.iter().all(|&x| (x - w[0]).abs() < 1e-12));
+        }
+        // unbiased overall
+        let ma: f64 = trace.iter().sum::<f64>() / trace.len() as f64;
+        let mp: f64 = plan.iter().sum::<f64>() / plan.len() as f64;
+        assert!((ma - mp).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Trace substrate: synthetic stand-ins for the paper's external data
+//! sources (documented in DESIGN.md §2).
+//!
+//! * [`solar`] — Solcast solar actuals → clear-sky irradiance model ×
+//!   AR(1) cloud process per site (global + co-located city presets).
+//! * [`load`] — Alibaba GPU-cluster utilisation (`gpu_wrk_util`) →
+//!   diurnal baseline + Markov-modulated bursts per client, plus the
+//!   coarse `gpu_plan`-style forecast.
+//! * [`forecast`] — horizon-dependent error model layered over any actual
+//!   series (solar forecasts in the paper come from Solcast with realistic
+//!   error; Fig 7 sweeps error off/on).
+//! * [`curtailment`] — CAISO-style quarterly curtailment series (Fig 1).
+
+pub mod curtailment;
+pub mod forecast;
+pub mod load;
+pub mod solar;

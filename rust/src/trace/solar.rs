@@ -1,0 +1,227 @@
+//! Synthetic solar power traces with the structure that matters to the
+//! scheduler: diurnal clear-sky shape (latitude + day-of-year), time-zone
+//! phase offsets between sites, and an AR(1) cloud process that is shared
+//! regionally in the co-located scenario and independent in the global
+//! scenario (Fig 2/4 of the paper).
+
+use crate::util::rng::Rng;
+
+/// A solar site (one power domain's generation).
+#[derive(Clone, Debug)]
+pub struct Site {
+    pub name: &'static str,
+    /// latitude in degrees (drives day length + peak elevation)
+    pub latitude: f64,
+    /// offset of local solar noon from simulation time, in hours
+    pub utc_offset_h: f64,
+    /// cloudiness in [0, 1]: expected depth of cloud attenuation
+    pub cloudiness: f64,
+}
+
+/// Ten globally distributed cities (paper: global scenario, June 8–15).
+pub fn global_sites() -> Vec<Site> {
+    vec![
+        Site { name: "Berlin", latitude: 52.5, utc_offset_h: 2.0, cloudiness: 0.35 },
+        Site { name: "Lagos", latitude: 6.5, utc_offset_h: 1.0, cloudiness: 0.45 },
+        Site { name: "Mumbai", latitude: 19.1, utc_offset_h: 5.5, cloudiness: 0.5 },
+        Site { name: "Tokyo", latitude: 35.7, utc_offset_h: 9.0, cloudiness: 0.4 },
+        Site { name: "Sydney", latitude: -33.9, utc_offset_h: 10.0, cloudiness: 0.3 },
+        Site { name: "SaoPaulo", latitude: -23.6, utc_offset_h: -3.0, cloudiness: 0.35 },
+        Site { name: "MexicoCity", latitude: 19.4, utc_offset_h: -6.0, cloudiness: 0.3 },
+        Site { name: "SanFrancisco", latitude: 37.8, utc_offset_h: -7.0, cloudiness: 0.2 },
+        Site { name: "NewYork", latitude: 40.7, utc_offset_h: -4.0, cloudiness: 0.35 },
+        Site { name: "CapeTown", latitude: -33.9, utc_offset_h: 2.0, cloudiness: 0.25 },
+    ]
+}
+
+/// Ten largest German cities (paper: co-located scenario, July 15–22).
+pub fn colocated_sites() -> Vec<Site> {
+    let cities: [(&'static str, f64); 10] = [
+        ("Berlin", 52.5),
+        ("Hamburg", 53.6),
+        ("Munich", 48.1),
+        ("Cologne", 50.9),
+        ("Frankfurt", 50.1),
+        ("Stuttgart", 48.8),
+        ("Duesseldorf", 51.2),
+        ("Leipzig", 51.3),
+        ("Dortmund", 51.5),
+        ("Essen", 51.5),
+    ];
+    cities
+        .iter()
+        .map(|&(name, latitude)| Site {
+            name,
+            latitude,
+            utc_offset_h: 2.0,
+            cloudiness: 0.4,
+        })
+        .collect()
+}
+
+/// Fraction of daylight-hours elevation for a given local solar hour.
+/// Returns 0 at night; a sine hump between sunrise and sunset whose width
+/// follows the standard solar-declination day-length model.
+pub fn clear_sky_factor(latitude: f64, day_of_year: u32, local_hour: f64) -> f64 {
+    let phi = latitude.to_radians();
+    // solar declination (Cooper's formula)
+    let decl = (23.44f64).to_radians()
+        * (2.0 * std::f64::consts::PI * (284.0 + day_of_year as f64) / 365.0)
+            .sin();
+    // sunset hour angle; clamp handles polar day/night
+    let cos_omega = (-phi.tan() * decl.tan()).clamp(-1.0, 1.0);
+    let omega0 = cos_omega.acos(); // radians
+    let day_len_h = 2.0 * omega0 * 12.0 / std::f64::consts::PI;
+    if day_len_h <= 0.0 {
+        return 0.0;
+    }
+    let sunrise = 12.0 - day_len_h / 2.0;
+    let sunset = 12.0 + day_len_h / 2.0;
+    let h = local_hour.rem_euclid(24.0);
+    if h < sunrise || h > sunset {
+        return 0.0;
+    }
+    // peak elevation factor: higher-latitude summer noon sun is lower
+    let noon_elev = (phi - decl).cos().max(0.0);
+    let shape = (std::f64::consts::PI * (h - sunrise) / day_len_h).sin();
+    (noon_elev * shape).max(0.0)
+}
+
+/// Generate a power trace (W) for one site.
+///
+/// `regional_clouds`: optional shared cloud series (same length) for the
+/// co-located scenario; the site mixes it with local AR(1) noise.
+pub fn generate(
+    site: &Site,
+    capacity_w: f64,
+    start_day_of_year: u32,
+    steps: usize,
+    step_minutes: f64,
+    rng: &mut Rng,
+    regional_clouds: Option<&[f64]>,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(steps);
+    let mut cloud = rng.f64() * site.cloudiness;
+    // AR(1) with ~3 h correlation time at 1-min steps
+    let alpha = (-step_minutes / 180.0f64).exp();
+    let noise_std = site.cloudiness * (1.0 - alpha * alpha).sqrt();
+    for i in 0..steps {
+        let sim_hour = i as f64 * step_minutes / 60.0;
+        let local_hour = sim_hour + site.utc_offset_h;
+        let day = start_day_of_year + (local_hour / 24.0).floor() as u32;
+        let cs = clear_sky_factor(site.latitude, day, local_hour);
+        cloud = alpha * cloud
+            + (1.0 - alpha) * site.cloudiness * 0.8
+            + noise_std * rng.normal() * 0.5;
+        cloud = cloud.clamp(0.0, 1.0);
+        let effective_cloud = match regional_clouds {
+            Some(reg) => (0.7 * reg[i] + 0.3 * cloud).clamp(0.0, 1.0),
+            None => cloud,
+        };
+        out.push(capacity_w * cs * (1.0 - effective_cloud));
+    }
+    out
+}
+
+/// Shared regional cloud series for co-located sites.
+pub fn regional_cloud_series(
+    steps: usize,
+    step_minutes: f64,
+    cloudiness: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let alpha = (-step_minutes / 240.0f64).exp();
+    let noise_std = cloudiness * (1.0 - alpha * alpha).sqrt();
+    let mut cloud = rng.f64() * cloudiness;
+    (0..steps)
+        .map(|_| {
+            cloud = alpha * cloud
+                + (1.0 - alpha) * cloudiness
+                + noise_std * rng.normal() * 0.6;
+            cloud = cloud.clamp(0.0, 1.0);
+            cloud
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn night_is_dark() {
+        // local midnight
+        assert_eq!(clear_sky_factor(52.5, 170, 0.0), 0.0);
+        assert_eq!(clear_sky_factor(52.5, 170, 23.0), 0.0);
+    }
+
+    #[test]
+    fn noon_is_bright_and_peak() {
+        let noon = clear_sky_factor(52.5, 170, 12.0);
+        assert!(noon > 0.5, "noon={noon}");
+        assert!(noon >= clear_sky_factor(52.5, 170, 9.0));
+        assert!(noon >= clear_sky_factor(52.5, 170, 15.0));
+    }
+
+    #[test]
+    fn southern_hemisphere_winter_days_are_short() {
+        // June (day 170): Sydney winter vs Berlin summer
+        let count_daylight = |lat: f64| {
+            (0..24 * 60)
+                .filter(|&m| clear_sky_factor(lat, 170, m as f64 / 60.0) > 0.0)
+                .count()
+        };
+        assert!(count_daylight(-33.9) < count_daylight(52.5));
+    }
+
+    #[test]
+    fn trace_is_nonnegative_and_bounded() {
+        let mut rng = Rng::new(1);
+        let site = &global_sites()[0];
+        let trace = generate(site, 800.0, 160, 7 * 24 * 60, 1.0, &mut rng, None);
+        assert_eq!(trace.len(), 7 * 24 * 60);
+        assert!(trace.iter().all(|&p| (0.0..=800.0).contains(&p)));
+        // some sun must appear over a week
+        assert!(trace.iter().cloned().fold(0.0, f64::max) > 100.0);
+    }
+
+    #[test]
+    fn global_sites_are_phase_shifted() {
+        // Tokyo and San Francisco peaks should be far apart in sim time
+        let mut rng = Rng::new(2);
+        let sites = global_sites();
+        let tokyo = sites.iter().find(|s| s.name == "Tokyo").unwrap();
+        let sf = sites.iter().find(|s| s.name == "SanFrancisco").unwrap();
+        let day = 24 * 60;
+        let t1 = generate(tokyo, 800.0, 160, day, 1.0, &mut rng, None);
+        let t2 = generate(sf, 800.0, 160, day, 1.0, &mut rng, None);
+        // centre of mass of production is robust to cloud noise
+        let com = |v: &[f64]| {
+            let total: f64 = v.iter().sum();
+            v.iter().enumerate().map(|(i, &p)| i as f64 * p).sum::<f64>() / total
+        };
+        let gap_h = (com(&t1) - com(&t2)).abs() / 60.0;
+        let gap_h = gap_h.min(24.0 - gap_h);
+        assert!(gap_h > 5.0, "gap {gap_h} h");
+    }
+
+    #[test]
+    fn colocated_sites_are_synchronized() {
+        let mut rng = Rng::new(3);
+        let sites = colocated_sites();
+        let day = 24 * 60;
+        let reg = regional_cloud_series(day, 1.0, 0.4, &mut rng);
+        let traces: Vec<Vec<f64>> = sites
+            .iter()
+            .map(|s| generate(s, 800.0, 196, day, 1.0, &mut rng, Some(&reg)))
+            .collect();
+        // every pair of sites should have daylight at the same steps
+        let sunny = |v: &[f64]| -> Vec<bool> { v.iter().map(|&p| p > 1.0).collect() };
+        let a = sunny(&traces[0]);
+        for t in &traces[1..] {
+            let b = sunny(t);
+            let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+            assert!(agree as f64 / a.len() as f64 > 0.9);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Auto-calibrates iteration counts to a target measurement window, runs
+//! warmup + multiple samples, and reports mean / median / p95 with a
+//! machine-readable one-line summary (the bench binaries under
+//! `rust/benches/` are `harness = false` and drive this directly).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} mean {:>12}  median {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark configuration; defaults match a ~1 s budget per benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: Duration::from_millis(150),
+            sample_time: Duration::from_millis(60),
+            samples: 12,
+        }
+    }
+}
+
+/// Fast config for expensive end-to-end benches.
+pub fn quick() -> Config {
+    Config {
+        warmup: Duration::from_millis(20),
+        sample_time: Duration::from_millis(120),
+        samples: 4,
+    }
+}
+
+/// Run `f` under the harness and print + return the result. The closure's
+/// output is passed through `black_box` so the optimiser cannot elide it.
+pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: Config, mut f: F) -> BenchResult {
+    // Warmup + calibration: find iters such that one sample ~ sample_time.
+    let warm_start = Instant::now();
+    let mut iters_done = 0u64;
+    while warm_start.elapsed() < cfg.warmup || iters_done == 0 {
+        black_box(f());
+        iters_done += 1;
+        if iters_done > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter =
+        warm_start.elapsed().as_nanos() as f64 / iters_done as f64;
+    let iters = ((cfg.sample_time.as_nanos() as f64 / per_iter).ceil() as u64)
+        .clamp(1, 10_000_000);
+
+    let mut samples_ns = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters_per_sample: iters,
+        samples_ns,
+    };
+    println!("{}", result.report());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_spin() {
+        let r = bench(
+            "spin_1k",
+            Config {
+                warmup: Duration::from_millis(5),
+                sample_time: Duration::from_millis(5),
+                samples: 4,
+            },
+            || {
+                let mut acc = 0u64;
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            },
+        );
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.samples_ns.len() == 4);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

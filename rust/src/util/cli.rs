@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (offline substitute for `clap`).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`; unknown keys are
+//! collected so callers can reject them with a helpful message.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (unit-testable) — the first token
+    /// that doesn't start with `--` becomes the subcommand.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("repro table3 --seed 7 --scenario=global --full");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("scenario"), Some("global"));
+        assert!(a.flag("full"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = parse("train --rounds 25 --lr 0.05");
+        assert_eq!(a.get_usize("rounds", 100), 25);
+        assert_eq!(a.get_usize("clients", 100), 100);
+        assert!((a.get_f64("lr", 0.1) - 0.05).abs() < 1e-12);
+        assert_eq!(a.get_str("preset", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten_as_value() {
+        let a = parse("x --verbose --n 5");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate (and
+//! `anyhow`) vendored, so everything a framework normally pulls from
+//! crates.io — PRNG + distributions, JSON, descriptive statistics, CLI
+//! parsing, a micro-benchmark harness and a property-testing harness — is
+//! implemented here from scratch and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

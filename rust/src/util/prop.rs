@@ -1,0 +1,71 @@
+//! Property-testing harness (offline substitute for proptest).
+//!
+//! `forall(cases, |rng| ...)` runs a closure over many seeded RNGs; a
+//! failing case panics with the seed so it can be replayed exactly with
+//! `replay(seed, f)`. No shrinking — generators here draw small sizes to
+//! keep counterexamples readable.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds (0..cases), panicking with the
+/// seed of the first failing case.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, f: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xF00D ^ seed.wrapping_mul(0x9E3779B9));
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case seed={seed}: {msg}");
+        }
+    }
+}
+
+/// Replay one case by seed (use after a `forall` failure).
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(0xF00D ^ seed.wrapping_mul(0x9E3779B9));
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(50, |rng| {
+                // fails for some case eventually
+                assert!(rng.f64() < 0.9, "drew a large value");
+            });
+        });
+        let err = caught.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("case seed="), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        replay(7, |rng| first = Some(rng.next_u64()));
+        let mut second = None;
+        replay(7, |rng| second = Some(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration: the AOT artifacts round-trip through PJRT with correct
+//! numerics — the Rust-side counterpart of python/tests (which validate
+//! the same functions against pure-jnp oracles before lowering).
+//!
+//! Requires `make artifacts` (tests no-op with a notice if missing).
+
+use std::path::Path;
+
+use fedzero::runtime::ModelRuntime;
+use fedzero::util::rng::Rng;
+
+fn runtime() -> Option<ModelRuntime> {
+    match ModelRuntime::load(Path::new("artifacts"), "tiny") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: tiny artifacts unavailable ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn batch(rt: &ModelRuntime, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let b = rt.batch_size();
+    let d = rt.manifest.input_dim;
+    let x = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let y = (0..b)
+        .map(|_| rng.below(rt.manifest.num_classes) as i32)
+        .collect();
+    (x, y)
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params(5).unwrap();
+    let b = rt.init_params(5).unwrap();
+    let c = rt.init_params(6).unwrap();
+    assert_eq!(a.len(), rt.param_count());
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let global = rt.init_params(1).unwrap();
+    let (x, y) = batch(&rt, 2);
+    let mut params = global.clone();
+    let first = rt.train_step(&params, &global, &x, &y, 0.05, 0.01).unwrap();
+    params = first.params.clone();
+    let mut last = first.loss;
+    for _ in 0..15 {
+        let o = rt.train_step(&params, &global, &x, &y, 0.05, 0.01).unwrap();
+        params = o.params;
+        last = o.loss;
+    }
+    assert!(
+        last < first.loss * 0.7,
+        "loss did not decrease: {} -> {last}",
+        first.loss
+    );
+}
+
+#[test]
+fn fedprox_mu_pulls_toward_global() {
+    let Some(rt) = runtime() else { return };
+    let global = rt.init_params(3).unwrap();
+    let (x, y) = batch(&rt, 4);
+    // big mu keeps params closer to global than mu=0
+    let step = |mu: f32| {
+        let mut p = global.clone();
+        for _ in 0..10 {
+            p = rt.train_step(&p, &global, &x, &y, 0.05, mu).unwrap().params;
+        }
+        p.iter()
+            .zip(&global)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let drift_free = step(0.0);
+    let drift_prox = step(0.5);
+    assert!(
+        drift_prox < drift_free,
+        "proximal term did not bound drift: {drift_prox} >= {drift_free}"
+    );
+}
+
+#[test]
+fn eval_counts_are_bounded_and_consistent() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params(7).unwrap();
+    let (x, y) = batch(&rt, 8);
+    let (loss_sum, correct) = rt.eval_step(&params, &x, &y).unwrap();
+    assert!(loss_sum > 0.0);
+    assert!((0..=rt.batch_size() as i32).contains(&correct));
+    // repeated eval is deterministic
+    let again = rt.eval_step(&params, &x, &y).unwrap();
+    assert_eq!(again.0, loss_sum);
+    assert_eq!(again.1, correct);
+}
+
+#[test]
+fn aggregate_matches_host_weighted_mean() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params(10).unwrap();
+    let b = rt.init_params(11).unwrap();
+    let out = rt.aggregate(&[a.clone(), b.clone()], &[3.0, 1.0]).unwrap();
+    for i in 0..a.len() {
+        let expect = (3.0 * a[i] + b[i]) / 4.0;
+        assert!(
+            (out[i] - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+            "index {i}: {} vs {expect}",
+            out[i]
+        );
+    }
+    // zero-padding invariance (fixed-K artifact)
+    let padded = rt.aggregate(&[a.clone(), b], &[3.0, 1.0]).unwrap();
+    assert_eq!(out, padded);
+}
+
+#[test]
+fn evaluate_dataset_handles_partial_batches() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params(12).unwrap();
+    let d = rt.manifest.input_dim;
+    let b = rt.batch_size();
+    let n = b + b / 2; // forces a trailing partial batch
+    let mut rng = Rng::new(13);
+    let xs: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let ys: Vec<i32> = (0..n)
+        .map(|_| rng.below(rt.manifest.num_classes) as i32)
+        .collect();
+    let (acc, loss) = rt.evaluate_dataset(&params, &xs, &ys).unwrap();
+    assert!((0.0..=1.0).contains(&acc), "acc={acc}");
+    assert!(loss > 0.0 && loss.is_finite());
+}

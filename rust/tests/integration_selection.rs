@@ -1,0 +1,208 @@
+//! Integration-level property tests of the selection stack on randomized
+//! scenarios (mock backend — no artifacts needed): the invariants the
+//! paper's MIP formulation guarantees must survive the full pipeline.
+
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+use fedzero::energy::PowerDomain;
+use fedzero::selection::baselines::Baseline;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
+use fedzero::trace::forecast::SeriesForecaster;
+use fedzero::util::prop::forall;
+use fedzero::util::rng::Rng;
+
+struct Scenario {
+    clients: Vec<ClientInfo>,
+    states: Vec<ClientRoundState>,
+    domains: Vec<PowerDomain>,
+    energy_fc: Vec<Vec<f64>>,
+    spare_fc: Vec<Vec<f64>>,
+    spare_now: Vec<f64>,
+}
+
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    let n_domains = rng.range(1, 5);
+    let n_clients = rng.range(4, 25);
+    let horizon = 90usize;
+    let d_max = 60usize;
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let profile = ClientProfile::new(
+                DeviceType::ALL[rng.below(3)],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            let shard = rng.range(10, 120);
+            ClientInfo::new(i, rng.below(n_domains), profile, (0..shard).collect(), 10)
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            let base = rng.range_f64(0.0, 800.0);
+            let series: Vec<f64> = (0..horizon)
+                .map(|t| {
+                    (base * (0.5 + 0.5 * ((t as f64 / 20.0).sin()))).max(0.0)
+                })
+                .collect();
+            PowerDomain::new(
+                i,
+                "d",
+                800.0,
+                series.clone(),
+                SeriesForecaster::perfect(series),
+                1.0,
+            )
+        })
+        .collect();
+    let mut states = vec![ClientRoundState::default(); n_clients];
+    for s in states.iter_mut() {
+        s.participation = rng.below(6);
+        s.sigma = rng.range_f64(0.0, 20.0);
+        s.blocked = rng.bool(0.2);
+        if s.blocked {
+            s.sigma = 0.0;
+        }
+    }
+    let energy_fc = domains
+        .iter()
+        .map(|d| d.forecast_window_wh(0, d_max))
+        .collect();
+    let spare_fc: Vec<Vec<f64>> = clients
+        .iter()
+        .map(|c| {
+            let cap = c.capacity();
+            (0..d_max).map(|_| cap * rng.range_f64(0.2, 1.0)).collect()
+        })
+        .collect();
+    let spare_now = clients.iter().map(|c| c.capacity() * 0.8).collect();
+    Scenario { clients, states, domains, energy_fc, spare_fc, spare_now }
+}
+
+fn ctx<'a>(s: &'a Scenario, n: usize) -> SelectionContext<'a> {
+    SelectionContext {
+        now: 0,
+        n,
+        d_max: 60,
+        clients: &s.clients,
+        states: &s.states,
+        domains: &s.domains,
+        energy_fc: &s.energy_fc,
+        spare_fc: &s.spare_fc,
+        spare_now: &s.spare_now,
+    }
+}
+
+#[test]
+fn fedzero_selection_invariants() {
+    forall(60, |rng| {
+        let s = random_scenario(rng);
+        let n = rng.range(1, 8);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut srng = Rng::new(42);
+        let d = fz.select(&ctx(&s, n), &mut srng);
+        if d.wait {
+            return;
+        }
+        // exactly n distinct clients
+        assert_eq!(d.clients.len(), n, "selected {} != n {n}", d.clients.len());
+        let mut u = d.clients.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), n, "duplicate selections");
+        // never blocked / zero-sigma clients
+        for &c in &d.clients {
+            assert!(!s.states[c].blocked, "blocked client {c} selected");
+            assert!(s.states[c].sigma > 0.0);
+        }
+        // every selected client passes the reachability filter at d
+        let c0 = ctx(&s, n);
+        for &c in &d.clients {
+            assert!(
+                c0.reachable_min(c, d.expected_duration),
+                "client {c} cannot reach m_min within d={}",
+                d.expected_duration
+            );
+        }
+        assert!(d.expected_duration >= 1 && d.expected_duration <= 60);
+    });
+}
+
+#[test]
+fn fedzero_duration_is_minimal_among_feasible() {
+    // the binary search must return a d such that d-1 has no full
+    // solution (checked via a fresh search constrained to d-1)
+    forall(30, |rng| {
+        let s = random_scenario(rng);
+        let n = rng.range(1, 5);
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let mut srng = Rng::new(7);
+        let d = fz.select(&ctx(&s, n), &mut srng);
+        if d.wait || d.expected_duration == 1 {
+            return;
+        }
+        // instance at d-1 must be missing candidates or unsolvable
+        let inst = fz.build_instance(&ctx(&s, n), d.expected_duration - 1);
+        if let Some(inst) = inst {
+            let sol = fedzero::solver::mip::greedy(&inst, 1);
+            // greedy is not exact, so we only assert it did not find MORE
+            // than n (structural sanity), and usually finds < n.
+            assert!(sol.chosen.len() <= n);
+        }
+    });
+}
+
+#[test]
+fn baselines_select_only_available_clients() {
+    forall(60, |rng| {
+        let s = random_scenario(rng);
+        let n = rng.range(1, 6);
+        for mut b in [
+            Baseline::random(),
+            Baseline::random_over(),
+            Baseline::random_fc(),
+            Baseline::oort(),
+            Baseline::oort_over(),
+            Baseline::oort_fc(),
+        ] {
+            let mut srng = Rng::new(11);
+            let d = b.select(&ctx(&s, n), &mut srng);
+            if d.wait {
+                continue;
+            }
+            assert!(d.clients.len() >= n, "{}", b.name());
+            let avail = ctx(&s, n).available_now();
+            for &c in &d.clients {
+                assert!(
+                    avail.contains(&c),
+                    "{} selected unavailable client {c}",
+                    b.name()
+                );
+            }
+            assert_eq!(d.n_required, n.min(d.clients.len()));
+        }
+    });
+}
+
+#[test]
+fn blocklist_cycle_releases_under_participants() {
+    forall(40, |rng| {
+        let s = random_scenario(rng);
+        let mut states = s.states.clone();
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let participants: Vec<usize> =
+            (0..states.len()).filter(|_| rng.bool(0.3)).collect();
+        let mut srng = Rng::new(13);
+        fz.on_round_end(&participants, &mut states, &mut srng);
+        // release probability is 1 for anyone at or below mean
+        // participation (p − ω ≤ 1 ⇒ P(release) = 1), so they must all be
+        // unblocked after the cycle — participants included.
+        let mean = states.iter().map(|st| st.participation as f64).sum::<f64>()
+            / states.len() as f64;
+        for (i, st) in states.iter().enumerate() {
+            if (st.participation as f64) <= mean {
+                assert!(!st.blocked, "under-participant {i} stayed blocked");
+            }
+        }
+    });
+}

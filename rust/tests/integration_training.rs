@@ -1,0 +1,116 @@
+//! Integration: full simulated FL training through the PJRT backend —
+//! the three layers composing (Pallas kernels inside the HLO, executed by
+//! the Rust coordinator under energy constraints).
+
+use fedzero::config::Scenario;
+use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
+
+fn base_spec() -> ExperimentSpec {
+    ExperimentSpec {
+        preset: "tiny".into(),
+        scenario: Scenario::Global,
+        strategy: StrategyKind::FedZero,
+        days: 1,
+        n_clients: 20,
+        n_per_round: 4,
+        d_max: 60,
+        dataset_scale: 0.1,
+        eval_every: 10,
+        eval_subset: 200,
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/tiny_manifest.json").exists()
+}
+
+#[test]
+fn fedzero_training_learns_above_chance() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let report = run_experiment(&base_spec()).unwrap();
+    assert!(report.metrics.rounds.len() > 10);
+    // tiny preset: 8 classes -> chance 12.5%
+    assert!(
+        report.metrics.best_accuracy() > 0.25,
+        "acc {} not above chance",
+        report.metrics.best_accuracy()
+    );
+    assert!(report.steps_executed > 100);
+    assert!(report.metrics.total_energy_kwh() > 0.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let a = run_experiment(&base_spec()).unwrap();
+    let b = run_experiment(&base_spec()).unwrap();
+    assert_eq!(a.metrics.rounds.len(), b.metrics.rounds.len());
+    assert_eq!(a.steps_executed, b.steps_executed);
+    let acc_a: Vec<f64> = a.metrics.evals.iter().map(|e| e.accuracy).collect();
+    let acc_b: Vec<f64> = b.metrics.evals.iter().map(|e| e.accuracy).collect();
+    assert_eq!(acc_a, acc_b);
+}
+
+#[test]
+fn energy_never_exceeds_generation() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let report = run_experiment(&base_spec()).unwrap();
+    // 10 domains x 800 W x 24 h is a loose upper bound on harvestable energy
+    let bound_kwh = 10.0 * 800.0 * 24.0 / 1000.0;
+    assert!(report.metrics.total_energy_kwh() < bound_kwh);
+    // per-round energy must be positive when batches were computed
+    for r in &report.metrics.rounds {
+        if r.batches > 0.5 {
+            assert!(r.energy_wh > 0.0, "round {} free-rode", r.round);
+        }
+        assert!(r.duration_steps <= 60);
+    }
+}
+
+#[test]
+fn upper_bound_beats_constrained_in_time() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let fz = run_experiment(&base_spec()).unwrap();
+    let ub = run_experiment(&ExperimentSpec {
+        strategy: StrategyKind::UpperBound,
+        ..base_spec()
+    })
+    .unwrap();
+    // the unconstrained baseline must do at least as many rounds
+    assert!(
+        ub.metrics.rounds.len() >= fz.metrics.rounds.len(),
+        "upper bound {} rounds < fedzero {}",
+        ub.metrics.rounds.len(),
+        fz.metrics.rounds.len()
+    );
+}
+
+#[test]
+fn seq_preset_with_imbalanced_partition_runs() {
+    if !std::path::Path::new("artifacts/seq_manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let spec = ExperimentSpec {
+        preset: "seq".into(),
+        dataset_scale: 0.05,
+        ..base_spec()
+    };
+    let report = run_experiment(&spec).unwrap();
+    assert!(!report.metrics.rounds.is_empty());
+    assert!(report.metrics.best_accuracy() > 0.05); // 32 classes, chance ~3%
+}
