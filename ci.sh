@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI entry point: build, test, and a perf smoke so selection-pipeline
+# regressions fail loudly.
+#
+#   ./ci.sh          tier-1 (build + tests) + quick bench smoke
+#   ./ci.sh --bench  also run the unabridged selection bench
+#
+# The bench writes rust/BENCH_selection.json (median ns per Fig-8 point
+# plus speedup vs the retained reference greedy) and exits non-zero if
+# the arena-based solver's chosen sets diverge from the reference.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== selection bench smoke (--quick) =="
+cargo bench --bench selection -- --quick
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== selection bench (default points) =="
+    cargo bench --bench selection
+fi
+
+echo "CI OK"

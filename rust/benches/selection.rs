@@ -4,13 +4,26 @@
 //! (b) runtime vs number of domains at fixed clients
 //! plus the paper's headline points: 100 clients/10 domains/60 steps
 //! (paper: ~0.1 s with Gurobi) and 100k/100k/1440 (paper: < 2 min).
-//! Pass --full to include the 100k-scale points.
+//!
+//! Every measured point also runs `reference_greedy` (the retained
+//! pre-arena implementation) where affordable, asserts the two solvers
+//! return identical `chosen` sets and objectives (within 1e-9), and the
+//! whole run is written to BENCH_selection.json so the perf trajectory
+//! is tracked across PRs (fields: median_ns / ref_median_ns /
+//! speedup_vs_reference per point).
+//!
+//! Flags: --quick  CI smoke (small points only, few samples)
+//!        --full   add the 100k-scale paper-envelope points
 
+use std::collections::BTreeMap;
+use std::hint::black_box;
 use std::time::Instant;
 
-use fedzero::solver::mip::{greedy, SelClient, SelInstance};
-use fedzero::util::bench::{bench, fmt_ns, Config};
+use fedzero::solver::mip::{greedy, reference_greedy, SelClient, SelInstance, SelSolution};
+use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
+use fedzero::util::stats;
+use fedzero::util::bench::fmt_ns;
 
 fn instance(c: usize, p: usize, t: usize, seed: u64) -> SelInstance {
     let mut rng = Rng::new(seed);
@@ -35,53 +48,233 @@ fn instance(c: usize, p: usize, t: usize, seed: u64) -> SelInstance {
     }
 }
 
-fn main() {
-    let full = std::env::args().any(|a| a == "--full");
-    println!("== selection scaling (Fig 8) ==");
-
-    // (a) clients sweep — evaluation scale measured precisely
-    let eval_scale = instance(100, 10, 60, 1);
-    let r = bench("fig8a/100c_10p_60t", Config::default(), || {
-        greedy(&eval_scale, 1)
-    });
-    println!(
-        "   paper reports ~0.1 s at this scale (Gurobi); ours: {}",
-        fmt_ns(r.median_ns())
-    );
-
-    for c in [1_000usize, 10_000] {
-        let inst = instance(c, c / 10, 60, 2);
+/// Median wall-clock ns of `runs` invocations of `f`.
+fn time_runs<T, F: FnMut() -> T>(runs: usize, mut f: F) -> Vec<f64> {
+    let mut ns = Vec::with_capacity(runs);
+    for _ in 0..runs {
         let t0 = Instant::now();
-        let _ = greedy(&inst, 1);
-        println!(
-            "fig8a/{c}c: single run {:.3} s",
-            t0.elapsed().as_secs_f64()
-        );
+        black_box(f());
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    ns
+}
+
+struct Point {
+    name: String,
+    clients: usize,
+    domains: usize,
+    steps: usize,
+    n_select: usize,
+    samples_ns: Vec<f64>,
+    ref_samples_ns: Option<Vec<f64>>,
+    chosen_matches_reference: Option<bool>,
+}
+
+impl Point {
+    fn median(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
     }
 
-    // (b) domains sweep at fixed clients
-    for p in [10usize, 100, 1_000] {
-        let inst = instance(10_000, p, 60, 3);
-        let t0 = Instant::now();
-        let _ = greedy(&inst, 1);
-        println!(
-            "fig8b/10kc_{p}p: single run {:.3} s",
-            t0.elapsed().as_secs_f64()
+    fn ref_median(&self) -> Option<f64> {
+        self.ref_samples_ns
+            .as_ref()
+            .map(|s| stats::percentile(s, 50.0))
+    }
+
+    fn speedup(&self) -> Option<f64> {
+        self.ref_median().map(|r| r / self.median())
+    }
+
+    fn report(&self) {
+        match (self.ref_median(), self.speedup()) {
+            (Some(r), Some(s)) => println!(
+                "{:<24} median {:>12}  (reference {:>12}, speedup {:.1}x, chosen match: {})",
+                self.name,
+                fmt_ns(self.median()),
+                fmt_ns(r),
+                s,
+                self.chosen_matches_reference
+                    .map(|b| if b { "yes" } else { "NO" })
+                    .unwrap_or("-"),
+            ),
+            _ => println!(
+                "{:<24} median {:>12}  (reference not run at this scale)",
+                self.name,
+                fmt_ns(self.median()),
+            ),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("clients".into(), Json::Num(self.clients as f64));
+        m.insert("domains".into(), Json::Num(self.domains as f64));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("n_select".into(), Json::Num(self.n_select as f64));
+        m.insert(
+            "samples".into(),
+            Json::Num(self.samples_ns.len() as f64),
         );
+        m.insert("median_ns".into(), Json::Num(self.median()));
+        m.insert("mean_ns".into(), Json::Num(stats::mean(&self.samples_ns)));
+        m.insert(
+            "p95_ns".into(),
+            Json::Num(stats::percentile(&self.samples_ns, 95.0)),
+        );
+        m.insert(
+            "ref_median_ns".into(),
+            self.ref_median().map(Json::Num).unwrap_or(Json::Null),
+        );
+        m.insert(
+            "speedup_vs_reference".into(),
+            self.speedup().map(Json::Num).unwrap_or(Json::Null),
+        );
+        m.insert(
+            "chosen_matches_reference".into(),
+            self.chosen_matches_reference
+                .map(Json::Bool)
+                .unwrap_or(Json::Null),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Equivalent = identical chosen set, or an exact tie (objective within
+/// 1e-12 relative) that flipped on a last-ulp difference between the
+/// singleton closed form and the flow solve. Anything beyond 1e-9
+/// relative objective difference is a hard failure.
+fn assert_equivalent(name: &str, fast: &SelSolution, slow: &SelSolution) -> bool {
+    let chosen_ok = fast.chosen == slow.chosen;
+    let obj_diff = (fast.objective - slow.objective).abs();
+    let scale = 1.0 + slow.objective.abs();
+    let tie_flip = !chosen_ok && obj_diff < 1e-12 * scale;
+    if tie_flip {
+        eprintln!(
+            "note: {name}: chosen sets differ on an exact tie \
+             (objective {} vs {}) — accepted",
+            fast.objective, slow.objective
+        );
+    }
+    let ok = (chosen_ok || tie_flip) && obj_diff < 1e-9 * scale;
+    if !ok {
+        eprintln!(
+            "EQUIVALENCE FAILURE at {name}: chosen match={chosen_ok} \
+             objective {} vs reference {}",
+            fast.objective, slow.objective
+        );
+    }
+    ok
+}
+
+/// Measure one point; `runs`/`ref_runs` control the sample count, and
+/// `ref_runs == 0` skips the reference implementation (too slow at the
+/// largest scales).
+fn point(
+    name: &str,
+    c: usize,
+    p: usize,
+    t: usize,
+    seed: u64,
+    runs: usize,
+    ref_runs: usize,
+) -> Point {
+    let inst = instance(c, p, t, seed);
+    // warmup + solutions for the equivalence check
+    let fast_sol = greedy(&inst, 1);
+    let samples_ns = time_runs(runs, || greedy(&inst, 1));
+    let (ref_samples_ns, chosen_matches_reference) = if ref_runs > 0 {
+        let slow_sol = reference_greedy(&inst, 1);
+        let ok = assert_equivalent(name, &fast_sol, &slow_sol);
+        let ns = time_runs(ref_runs, || reference_greedy(&inst, 1));
+        (Some(ns), Some(ok))
+    } else {
+        (None, None)
+    };
+    let pt = Point {
+        name: name.to_string(),
+        clients: c,
+        domains: p,
+        steps: t,
+        n_select: inst.n,
+        samples_ns,
+        ref_samples_ns,
+        chosen_matches_reference,
+    };
+    pt.report();
+    pt
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let mode = if full {
+        "full"
+    } else if quick {
+        "quick"
+    } else {
+        "default"
+    };
+    println!("== selection scaling (Fig 8) [{mode}] ==");
+
+    let mut points: Vec<Point> = Vec::new();
+
+    // (a) clients sweep — evaluation scale measured precisely
+    points.push(point("fig8a/100c_10p_60t", 100, 10, 60, 1, 30, 10));
+    println!("   paper reports ~0.1 s at this scale (Gurobi)");
+    points.push(point("fig8a/1kc_100p_60t", 1_000, 100, 60, 2, 15, 5));
+
+    if !quick {
+        points.push(point("fig8a/10kc_1kp_60t", 10_000, 1_000, 60, 2, 7, 3));
+
+        // (b) domains sweep at fixed clients
+        for p in [10usize, 100, 1_000] {
+            let name = format!("fig8b/10kc_{p}p_60t");
+            points.push(point(&name, 10_000, p, 60, 3, 5, 3));
+        }
     }
 
     if full {
-        for (c, p, t) in [(100_000usize, 10_000usize, 60usize), (100_000, 100_000, 1_440)] {
-            let inst = instance(c, p, t, 4);
-            let t0 = Instant::now();
-            let _ = greedy(&inst, 1);
+        for (c, p, t) in
+            [(100_000usize, 10_000usize, 60usize), (100_000, 100_000, 1_440)]
+        {
+            let name = format!("fig8/{c}c_{p}p_{t}t");
+            // reference is far too slow here; paper envelope is 120 s
+            let pt = point(&name, c, p, t, 4, 3, 0);
             println!(
-                "fig8/{c}c_{p}p_{t}t: single run {:.2} s (paper envelope: 120 s)",
-                t0.elapsed().as_secs_f64()
+                "   (paper envelope at this scale: 120 s; ours: {})",
+                fmt_ns(pt.median())
             );
+            points.push(pt);
         }
-    } else {
-        println!("(pass --full for the 100k-client paper-scale points)");
+    }
+
+    // all reference-checked points must have matched
+    let mismatches: Vec<&str> = points
+        .iter()
+        .filter(|p| p.chosen_matches_reference == Some(false))
+        .map(|p| p.name.as_str())
+        .collect();
+
+    // machine-readable trajectory for cross-PR tracking
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("selection".into()));
+    root.insert("mode".into(), Json::Str(mode.into()));
+    root.insert("swap_passes".into(), Json::Num(1.0));
+    root.insert(
+        "points".into(),
+        Json::Arr(points.iter().map(|p| p.to_json()).collect()),
+    );
+    let out = Json::Obj(root).to_string_pretty();
+    let path = "BENCH_selection.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if !mismatches.is_empty() {
+        eprintln!("solver equivalence FAILED at: {mismatches:?}");
+        std::process::exit(1);
     }
     println!("== done ==");
 }

@@ -60,9 +60,17 @@ impl PowerDomain {
 
     /// forecast window [t0, t0+h) in Wh per step
     pub fn forecast_window_wh(&self, t0: usize, horizon: usize) -> Vec<f64> {
-        (t0..t0 + horizon)
-            .map(|t| self.forecast_energy_wh(t0, t))
-            .collect()
+        let mut out = Vec::new();
+        self.forecast_window_wh_into(t0, horizon, &mut out);
+        out
+    }
+
+    /// [`Self::forecast_window_wh`] into a reused buffer (§Perf: the
+    /// simulator refreshes every domain's window each selection attempt;
+    /// writing in place keeps the steady state allocation-free).
+    pub fn forecast_window_wh_into(&self, t0: usize, horizon: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((t0..t0 + horizon).map(|t| self.forecast_energy_wh(t0, t)));
     }
 
     /// does the domain currently produce any excess power?

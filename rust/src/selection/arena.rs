@@ -1,0 +1,468 @@
+//! The flat forecast arena behind FedZero's binary search (Fig-8 path).
+//!
+//! Algorithm 1 probes O(log d_max) candidate round durations `d`, and the
+//! historical pipeline re-materialised every forecast per probe: energy
+//! windows were `w[..d].to_vec()`'d per domain, spare windows rebuilt per
+//! eligible client, and the line-6/line-11 pre-filters re-scanned O(C·d)
+//! forecast entries — twice, because `build_instance` and `eligible_ids`
+//! maintained the same filter independently.
+//!
+//! [`SelArena`] replaces all of that with one flat, prefix-summed copy of
+//! the forecasts built per `select()` call:
+//!
+//! * `energy` / `spare` — row-major [domains × d_max] and
+//!   [clients × d_max] matrices; a probe at duration `d` borrows
+//!   `row[..d]` slice views, so narrowing the window is pointer
+//!   arithmetic, not a copy (monotone feasibility means every probe can
+//!   share the d_max arena and just narrow its view);
+//! * `energy_prefix` — running sums per domain, making the paper's
+//!   line-6 "domain has excess energy within d" filter O(1) per probe;
+//! * `d_reach` — the smallest feasible duration per client under the
+//!   line-11 standalone filter (monotone in d), folding in the blocklist
+//!   and σ_c > 0 checks, making per-probe client eligibility a single
+//!   integer compare.
+//!
+//! The O(C·d_max) construction passes fan out across threads at scale
+//! (`util::par`; identical results to the serial fill). One
+//! [`ProbeScratch`] is reused across all probes of a search, so the
+//! steady-state per-probe cost is filling three flat `Vec`s of POD
+//! entries — no per-probe forecast allocation at all.
+
+use super::SelectionContext;
+use crate::solver::mip::{ClientView, InstanceView};
+use crate::util::par;
+
+/// Row counts below which arena construction stays single-threaded.
+const PAR_MIN_ROWS: usize = 2048;
+
+/// Flat per-`select()` forecast arena; see the module docs.
+pub struct SelArena {
+    /// clients required per round (ctx.n)
+    pub n: usize,
+    pub d_max: usize,
+    n_clients: usize,
+    n_domains: usize,
+    /// [n_domains × d_max] excess-energy forecast, Wh/step
+    energy: Vec<f64>,
+    /// prefix[p·(d_max+1) + d] = Σ energy[p][0..d] (left fold, same float
+    /// semantics as the historical `w[..d].iter().sum()`)
+    energy_prefix: Vec<f64>,
+    /// [n_clients × d_max] spare capacity, batches/step, pre-clamped to
+    /// the client's total capacity
+    spare: Vec<f64>,
+    /// smallest d (1-based) at which client i passes the line-11
+    /// reachability filter, with blocklist/σ folded in; usize::MAX = never
+    d_reach: Vec<usize>,
+    // per-client scalars copied once so probe filling never touches the
+    // original context
+    domain: Vec<usize>,
+    sigma: Vec<f64>,
+    delta: Vec<f64>,
+    m_min: Vec<f64>,
+    m_max: Vec<f64>,
+}
+
+/// Reusable per-probe buffers of borrowed views into a [`SelArena`].
+/// Cleared and refilled by [`SelArena::fill_probe`]; holds POD entries
+/// only, so refills never allocate once capacity has grown.
+#[derive(Default)]
+pub struct ProbeScratch<'a> {
+    n: usize,
+    clients: Vec<ClientView<'a>>,
+    energy: Vec<&'a [f64]>,
+    /// original context client ids, parallel to `clients` — the id map
+    /// that used to live in the duplicated `eligible_ids` filter
+    pub ids: Vec<usize>,
+}
+
+impl<'a> ProbeScratch<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The solver view of the last filled probe.
+    pub fn instance(&self) -> InstanceView<'_> {
+        InstanceView { n: self.n, clients: &self.clients, energy: &self.energy }
+    }
+}
+
+impl SelArena {
+    /// The d_max eligibility count straight off the context, WITHOUT
+    /// materialising the arena — the dark-period early exit. Applies the
+    /// same line-6/8/11 filters as [`Self::fill_probe`]; `reachable_min`
+    /// early-breaks and dead domains short-circuit it entirely, so idle
+    /// (night) steps cost one forecast scan and zero allocations beyond
+    /// the domain bitmap.
+    ///
+    /// KEEP IN SYNC with the filter in [`Self::build`]/[`Self::eligible`]:
+    /// any new eligibility condition must land in both places, or select()
+    /// will wait on rounds the arena considers feasible. Agreement is
+    /// property-tested in `tests::quick_count_agrees_with_arena`.
+    pub fn quick_eligible_count(ctx: &SelectionContext) -> usize {
+        let d = ctx.d_max;
+        let domain_alive: Vec<bool> = ctx
+            .energy_fc
+            .iter()
+            .map(|w| w[..d.min(w.len())].iter().sum::<f64>() > 1e-9)
+            .collect();
+        (0..ctx.clients.len())
+            .filter(|&i| {
+                !ctx.states[i].blocked
+                    && ctx.states[i].sigma > 0.0
+                    && domain_alive[ctx.clients[i].domain]
+                    && ctx.reachable_min(i, d)
+            })
+            .count()
+    }
+
+    /// Copy the context's forecasts into flat storage and precompute the
+    /// prefix sums and per-client reachability curve.
+    pub fn build(ctx: &SelectionContext) -> SelArena {
+        let n_clients = ctx.clients.len();
+        let n_domains = ctx.energy_fc.len();
+        let d_max = ctx.d_max;
+
+        // per-client scalars (also used by the parallel passes below, so
+        // the closures only capture plain slices)
+        let mut domain = Vec::with_capacity(n_clients);
+        let mut sigma = Vec::with_capacity(n_clients);
+        let mut delta = Vec::with_capacity(n_clients);
+        let mut m_min = Vec::with_capacity(n_clients);
+        let mut m_max = Vec::with_capacity(n_clients);
+        let mut capacity = Vec::with_capacity(n_clients);
+        let mut live = Vec::with_capacity(n_clients); // !blocked && σ > 0
+        for (i, c) in ctx.clients.iter().enumerate() {
+            domain.push(c.domain);
+            sigma.push(ctx.states[i].sigma);
+            delta.push(c.delta());
+            m_min.push(c.m_min);
+            m_max.push(c.m_max);
+            capacity.push(c.capacity());
+            live.push(!ctx.states[i].blocked && ctx.states[i].sigma > 0.0);
+        }
+
+        // the parallel passes below capture plain forecast slices only
+        // (not the whole context, whose domain/client structs need not be
+        // Sync)
+        let energy_fc: &[Vec<f64>] = ctx.energy_fc;
+        let spare_fc: &[Vec<f64>] = ctx.spare_fc;
+
+        // energy rows (short forecast rows are zero-padded)
+        let mut energy = vec![0.0f64; n_domains * d_max];
+        if d_max > 0 {
+            for (p, row) in energy.chunks_mut(d_max).enumerate() {
+                let src = &energy_fc[p];
+                let take = src.len().min(d_max);
+                row[..take].copy_from_slice(&src[..take]);
+            }
+        }
+        let mut energy_prefix = vec![0.0f64; n_domains * (d_max + 1)];
+        par::par_fill_rows(&mut energy_prefix, d_max + 1, PAR_MIN_ROWS, |p, row| {
+            let src = &energy[p * d_max..(p + 1) * d_max];
+            let mut acc = 0.0;
+            row[0] = 0.0;
+            for (t, &e) in src.iter().enumerate() {
+                acc += e;
+                row[t + 1] = acc;
+            }
+        });
+
+        // spare rows, clamped to capacity (the historical per-probe
+        // `spare_fc[i][t].min(c.capacity())`)
+        let mut spare = vec![0.0f64; n_clients * d_max];
+        par::par_fill_rows(&mut spare, d_max, PAR_MIN_ROWS, |i, row| {
+            let src = &spare_fc[i];
+            let cap = capacity[i];
+            let take = src.len().min(d_max);
+            for t in 0..take {
+                row[t] = src[t].min(cap);
+            }
+        });
+
+        // line-11 reachability: smallest d where the cumulative standalone
+        // batch curve crosses m_min (min(spare, r/δ) is evaluated exactly
+        // as the historical `reachable_min`: min is exact in floats, so
+        // clamping spare first is equivalent)
+        let mut d_reach = vec![usize::MAX; n_clients];
+        par::par_fill_rows(&mut d_reach, 1, PAR_MIN_ROWS, |i, out| {
+            if !live[i] {
+                return; // stays usize::MAX
+            }
+            let erow = &energy[domain[i] * d_max..(domain[i] + 1) * d_max];
+            let srow = &spare[i * d_max..(i + 1) * d_max];
+            let dl = delta[i];
+            let need = m_min[i];
+            let mut cum = 0.0;
+            for t in 0..d_max {
+                cum += srow[t].min(erow[t] / dl);
+                if cum >= need {
+                    out[0] = t + 1;
+                    return;
+                }
+            }
+        });
+
+        SelArena {
+            n: ctx.n,
+            d_max,
+            n_clients,
+            n_domains,
+            energy,
+            energy_prefix,
+            spare,
+            d_reach,
+            domain,
+            sigma,
+            delta,
+            m_min,
+            m_max,
+        }
+    }
+
+    /// Σ energy of domain `p` over the first `d` steps (O(1)).
+    #[inline]
+    fn energy_sum(&self, p: usize, d: usize) -> f64 {
+        self.energy_prefix[p * (self.d_max + 1) + d]
+    }
+
+    /// Is client `i` eligible at duration `d`? (line-6 + line-8 + line-11
+    /// pre-filters, all O(1) per query)
+    #[inline]
+    fn eligible(&self, i: usize, d: usize) -> bool {
+        self.d_reach[i] <= d && self.energy_sum(self.domain[i], d) > 1e-9
+    }
+
+    /// Number of eligible clients at duration `d` — the cheap necessary
+    /// condition checked before the binary search.
+    pub fn eligible_count(&self, d: usize) -> usize {
+        (0..self.n_clients).filter(|&i| self.eligible(i, d)).count()
+    }
+
+    /// Fill `scratch` with the probe instance for duration `d`: slice
+    /// views into the arena for every eligible client plus the parallel
+    /// id map. Returns false when fewer than `n` clients survive the
+    /// filters (the probe is infeasible without solving).
+    pub fn fill_probe<'a>(&'a self, scratch: &mut ProbeScratch<'a>, d: usize) -> bool {
+        assert!(d >= 1 && d <= self.d_max, "probe duration {d} out of range");
+        scratch.n = self.n;
+        scratch.energy.clear();
+        for p in 0..self.n_domains {
+            scratch.energy.push(&self.energy[p * self.d_max..p * self.d_max + d]);
+        }
+        scratch.clients.clear();
+        scratch.ids.clear();
+        for i in 0..self.n_clients {
+            if !self.eligible(i, d) {
+                continue;
+            }
+            scratch.clients.push(ClientView {
+                domain: self.domain[i],
+                sigma: self.sigma[i],
+                delta: self.delta[i],
+                m_min: self.m_min[i],
+                m_max: self.m_max[i],
+                spare: &self.spare[i * self.d_max..i * self.d_max + d],
+            });
+            scratch.ids.push(i);
+        }
+        scratch.clients.len() >= self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+    use crate::energy::PowerDomain;
+    use crate::selection::ClientRoundState;
+    use crate::trace::forecast::SeriesForecaster;
+
+    fn scenario(
+        n_clients: usize,
+        n_domains: usize,
+        power_w: f64,
+        d_max: usize,
+    ) -> (
+        Vec<ClientInfo>,
+        Vec<ClientRoundState>,
+        Vec<PowerDomain>,
+        Vec<Vec<f64>>,
+        Vec<Vec<f64>>,
+        Vec<f64>,
+    ) {
+        let clients: Vec<ClientInfo> = (0..n_clients)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::ALL[i % 3],
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % n_domains, p, (0..50).collect(), 10)
+            })
+            .collect();
+        let states = vec![ClientRoundState::default(); n_clients];
+        let domains: Vec<PowerDomain> = (0..n_domains)
+            .map(|i| {
+                let series = vec![power_w; d_max * 2];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let energy_fc: Vec<Vec<f64>> =
+            domains.iter().map(|d| d.forecast_window_wh(0, d_max)).collect();
+        let spare_fc: Vec<Vec<f64>> = clients
+            .iter()
+            .map(|c| vec![c.capacity(); d_max])
+            .collect();
+        let spare_now: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+        (clients, states, domains, energy_fc, spare_fc, spare_now)
+    }
+
+    #[test]
+    fn probe_matches_manual_filter() {
+        let (clients, mut states, domains, efc, sfc, snow) =
+            scenario(12, 3, 800.0, 30);
+        states[2].blocked = true;
+        states[2].sigma = 0.0;
+        states[7].sigma = 0.0;
+        let ctx = SelectionContext {
+            now: 0,
+            n: 3,
+            d_max: 30,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let arena = SelArena::build(&ctx);
+        let mut scratch = ProbeScratch::new();
+        for d in [1usize, 7, 30] {
+            let ok = arena.fill_probe(&mut scratch, d);
+            // manual filter via the context's own reachable_min
+            let expect: Vec<usize> = (0..clients.len())
+                .filter(|&i| {
+                    !states[i].blocked
+                        && states[i].sigma > 0.0
+                        && efc[clients[i].domain][..d].iter().sum::<f64>() > 1e-9
+                        && ctx.reachable_min(i, d)
+                })
+                .collect();
+            assert_eq!(scratch.ids, expect, "d={d}");
+            assert_eq!(ok, expect.len() >= 3, "d={d}");
+            let inst = scratch.instance();
+            assert_eq!(inst.clients.len(), expect.len());
+            for (k, &i) in scratch.ids.iter().enumerate() {
+                assert_eq!(inst.clients[k].domain, clients[i].domain);
+                assert_eq!(inst.clients[k].spare.len(), d);
+            }
+            for row in inst.energy {
+                assert_eq!(row.len(), d);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_domains_remove_their_clients() {
+        let (clients, states, mut domains, mut efc, sfc, snow) =
+            scenario(9, 3, 800.0, 20);
+        // kill domain 1's forecast
+        efc[1] = vec![0.0; 20];
+        domains[1] = PowerDomain::new(
+            1,
+            "d",
+            800.0,
+            vec![0.0; 40],
+            SeriesForecaster::perfect(vec![0.0; 40]),
+            1.0,
+        );
+        let ctx = SelectionContext {
+            now: 0,
+            n: 2,
+            d_max: 20,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let arena = SelArena::build(&ctx);
+        let mut scratch = ProbeScratch::new();
+        assert!(arena.fill_probe(&mut scratch, 20));
+        for &i in &scratch.ids {
+            assert_ne!(clients[i].domain, 1, "client {i} from a dead domain");
+        }
+        assert_eq!(arena.eligible_count(20), scratch.ids.len());
+        // the allocation-free precheck must agree with the arena filter
+        assert_eq!(SelArena::quick_eligible_count(&ctx), scratch.ids.len());
+    }
+
+    #[test]
+    fn quick_count_agrees_with_arena() {
+        // randomized blocked/σ patterns and power levels: the
+        // allocation-free precheck and the arena filter must agree at
+        // d_max in every scenario (guards the duplicated-filter drift
+        // this module's docs warn about)
+        crate::util::prop::forall(25, |rng| {
+            let n_clients = rng.range(3, 20);
+            let n_domains = rng.range(1, 5);
+            let d_max = rng.range(5, 40);
+            let power = rng.range_f64(0.0, 200.0);
+            let (clients, mut states, domains, efc, sfc, snow) =
+                scenario(n_clients, n_domains, power, d_max);
+            for s in states.iter_mut() {
+                s.blocked = rng.bool(0.3);
+                s.sigma = if s.blocked { 0.0 } else { rng.range_f64(0.0, 5.0) };
+            }
+            let ctx = SelectionContext {
+                now: 0,
+                n: 1,
+                d_max,
+                clients: &clients,
+                states: &states,
+                domains: &domains,
+                energy_fc: &efc,
+                spare_fc: &sfc,
+                spare_now: &snow,
+            };
+            let arena = SelArena::build(&ctx);
+            assert_eq!(
+                SelArena::quick_eligible_count(&ctx),
+                arena.eligible_count(d_max),
+                "precheck disagrees with arena filter"
+            );
+        });
+    }
+
+    #[test]
+    fn eligibility_is_monotone_in_d() {
+        let (clients, states, domains, efc, sfc, snow) = scenario(10, 2, 40.0, 25);
+        let ctx = SelectionContext {
+            now: 0,
+            n: 2,
+            d_max: 25,
+            clients: &clients,
+            states: &states,
+            domains: &domains,
+            energy_fc: &efc,
+            spare_fc: &sfc,
+            spare_now: &snow,
+        };
+        let arena = SelArena::build(&ctx);
+        let mut prev = 0;
+        for d in 1..=25 {
+            let count = arena.eligible_count(d);
+            assert!(count >= prev, "eligibility shrank at d={d}");
+            prev = count;
+        }
+    }
+}

@@ -10,10 +10,20 @@
 //! The surviving instance goes to the selection solver: the scalable
 //! greedy+local-search by default, exact branch-and-bound on request
 //! (`SolverKind::Exact`), both from [`crate::solver::mip`].
+//!
+//! §Perf: one [`SelArena`] is built per `select()` call; every probe of
+//! the binary search borrows slice views into it through a reused
+//! [`ProbeScratch`] (see `selection::arena` and the §Perf notes in
+//! `solver::mip`). The pre-filters — formerly duplicated between
+//! `build_instance` and `eligible_ids`, which could silently diverge —
+//! now live once in `SelArena::fill_probe`, which yields the solver
+//! instance together with its parallel id map.
 
+use super::arena::{ProbeScratch, SelArena};
 use super::fairness::Blocklist;
 use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
-use crate::solver::mip::{self, SelClient, SelInstance};
+use crate::solver::alloc::AllocWorkspace;
+use crate::solver::mip::{self, InstanceView};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,95 +57,34 @@ impl FedZero {
         }
     }
 
-    /// Build the solver instance for duration `d`; `None` if fewer than n
-    /// eligible clients survive the filters.
-    pub fn build_instance(&self, ctx: &SelectionContext, d: usize) -> Option<SelInstance> {
-        // Line 6: drop domains with no excess energy in the window.
-        let energy: Vec<Vec<f64>> = ctx
-            .energy_fc
-            .iter()
-            .map(|w| w[..d].to_vec())
-            .collect();
-        let domain_alive: Vec<bool> = energy
-            .iter()
-            .map(|w| w.iter().sum::<f64>() > 1e-9)
-            .collect();
-
-        let mut clients = Vec::new();
-        for (i, c) in ctx.clients.iter().enumerate() {
-            // Line 8: blocklist / zero utility.
-            if ctx.states[i].blocked || ctx.states[i].sigma <= 0.0 {
-                continue;
-            }
-            if !domain_alive[c.domain] {
-                continue;
-            }
-            // Line 11: must be able to reach m_min standalone within d.
-            if !ctx.reachable_min(i, d) {
-                continue;
-            }
-            let spare: Vec<f64> = (0..d)
-                .map(|t| ctx.spare_fc[i][t].min(c.capacity()))
-                .collect();
-            clients.push(SelClient {
-                domain: c.domain,
-                sigma: ctx.states[i].sigma,
-                delta: c.delta(),
-                m_min: c.m_min,
-                m_max: c.m_max,
-                spare,
-            });
-            // remember the original id through a parallel vec below
-        }
-        if clients.len() < ctx.n {
-            return None;
-        }
-        Some(SelInstance { n: ctx.n, clients, energy })
-    }
-
-    /// ids parallel to `build_instance`'s client list
-    fn eligible_ids(&self, ctx: &SelectionContext, d: usize) -> Vec<usize> {
-        let energy_alive: Vec<bool> = ctx
-            .energy_fc
-            .iter()
-            .map(|w| w[..d].iter().sum::<f64>() > 1e-9)
-            .collect();
-        ctx.clients
-            .iter()
-            .enumerate()
-            .filter(|(i, c)| {
-                !ctx.states[*i].blocked
-                    && ctx.states[*i].sigma > 0.0
-                    && energy_alive[c.domain]
-                    && ctx.reachable_min(*i, d)
-            })
-            .map(|(i, _)| i)
-            .collect()
-    }
-
-    fn solve(&self, inst: &SelInstance) -> mip::SelSolution {
+    fn solve_view(&self, inst: InstanceView<'_>, ws: &mut AllocWorkspace) -> mip::SelSolution {
         match self.solver {
-            SolverKind::Greedy => mip::greedy(inst, self.swap_passes),
-            SolverKind::Exact => mip::branch_and_bound(inst, self.node_budget),
+            SolverKind::Greedy => mip::greedy_view(inst, self.swap_passes, ws),
+            SolverKind::Exact => mip::branch_and_bound_view(inst, self.node_budget, ws),
         }
     }
 
-    /// Algorithm 1: smallest d with a full-size solution, via binary search.
-    fn search(&mut self, ctx: &SelectionContext) -> Option<(Vec<usize>, usize)> {
+    /// Algorithm 1: smallest d with a full-size solution, via binary
+    /// search over probe views into `arena`. All probes share one scratch
+    /// and one solver workspace.
+    fn search(&mut self, arena: &SelArena, n: usize, d_max: usize) -> Option<(Vec<usize>, usize)> {
+        let mut scratch = ProbeScratch::new();
+        let mut ws = AllocWorkspace::default();
         let mut lo = 1usize;
-        let mut hi = ctx.d_max;
+        let mut hi = d_max;
         let mut best: Option<(Vec<usize>, usize)> = None;
         while lo <= hi {
             let d = lo + (hi - lo) / 2;
-            let attempt = self.build_instance(ctx, d).and_then(|inst| {
-                let sol = self.solve(&inst);
-                if sol.chosen.len() == ctx.n {
-                    let ids = self.eligible_ids(ctx, d);
-                    Some(sol.chosen.iter().map(|&k| ids[k]).collect::<Vec<_>>())
+            let attempt = if arena.fill_probe(&mut scratch, d) {
+                let sol = self.solve_view(scratch.instance(), &mut ws);
+                if sol.chosen.len() == n {
+                    Some(sol.chosen.iter().map(|&k| scratch.ids[k]).collect::<Vec<_>>())
                 } else {
                     None
                 }
-            });
+            } else {
+                None
+            };
             match attempt {
                 Some(ids) => {
                     best = Some((ids, d));
@@ -162,13 +111,17 @@ impl Strategy for FedZero {
     }
 
     fn select(&mut self, ctx: &SelectionContext, _rng: &mut Rng) -> SelectionDecision {
-        // §Perf: cheap necessary condition before the binary search — if
+        // §Perf: cheap necessary condition before any arena work — if
         // fewer than n clients are even standalone-eligible at d_max, no d
-        // can work; skip the O(log d · greedy) search during dark periods.
-        if self.eligible_ids(ctx, ctx.d_max).len() < ctx.n {
+        // can work; skip both the arena build and the O(log d · greedy)
+        // search during dark periods (idle steps stay allocation-light).
+        if SelArena::quick_eligible_count(ctx) < ctx.n {
             return SelectionDecision::wait();
         }
-        match self.search(ctx) {
+        // one flat forecast arena per select(); every probe below borrows
+        // slice views into it
+        let arena = SelArena::build(ctx);
+        match self.search(&arena, ctx.n, ctx.d_max) {
             Some((clients, d)) => {
                 self.last_search = Some((d, clients.len()));
                 let n_required = clients.len();

@@ -119,17 +119,19 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         self.clients[i].capacity() * (1.0 - util)
     }
 
-    /// spare-capacity forecast window for client `i` issued at `t0`
-    fn spare_forecast_window(&self, i: usize, t0: usize, h: usize) -> Vec<f64> {
+    /// spare-capacity forecast window for client `i` issued at `t0`,
+    /// written into a reused buffer
+    fn spare_forecast_window_into(&self, i: usize, t0: usize, h: usize, out: &mut Vec<f64>) {
+        out.clear();
         match self.load_fc_level {
             ErrorLevel::Unavailable => {
-                vec![self.clients[i].capacity(); h]
+                out.resize(h, self.clients[i].capacity());
             }
             _ => {
                 let cap = self.clients[i].capacity();
-                (t0..t0 + h)
-                    .map(|t| self.load_fc[i].forecast(t0, t).clamp(0.0, cap))
-                    .collect()
+                out.extend(
+                    (t0..t0 + h).map(|t| self.load_fc[i].forecast(t0, t).clamp(0.0, cap)),
+                );
             }
         }
     }
@@ -139,34 +141,33 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut global = self.backend.init_params(self.cfg.seed as i32)?;
         let mut t = 0usize;
         let mut round = 0usize;
+        // §Perf: forecast/state buffers are hoisted out of the step loop
+        // and refilled in place — selection attempts during idle (dark)
+        // periods no longer allocate 2·C + D vectors per step.
+        let mut samples: Vec<usize> = Vec::with_capacity(self.clients.len());
+        let mut energy_fc: Vec<Vec<f64>> = vec![Vec::new(); self.domains.len()];
+        let mut spare_fc: Vec<Vec<f64>> = vec![Vec::new(); self.clients.len()];
+        let mut spare_now: Vec<f64> = Vec::with_capacity(self.clients.len());
         while t < self.cfg.horizon {
             // refresh σ, assemble context, ask the strategy
-            let samples: Vec<usize> =
-                self.clients.iter().map(|c| c.num_samples()).collect();
+            samples.clear();
+            samples.extend(self.clients.iter().map(|c| c.num_samples()));
             self.utility.refresh(&mut self.states, &samples);
 
             // §Perf: forecast windows are only materialised for strategies
             // that read them (FedZero, *-fc); Random/Oort/UpperBound skip
             // ~C·d_max hash-noise draws per selection attempt.
             let wants_fc = self.strategy.needs_forecasts();
-            let energy_fc: Vec<Vec<f64>> = if wants_fc {
-                self.domains
-                    .iter()
-                    .map(|d| d.forecast_window_wh(t, self.cfg.d_max))
-                    .collect()
-            } else {
-                vec![Vec::new(); self.domains.len()]
-            };
-            let spare_fc: Vec<Vec<f64>> = if wants_fc {
-                (0..self.clients.len())
-                    .map(|i| self.spare_forecast_window(i, t, self.cfg.d_max))
-                    .collect()
-            } else {
-                vec![Vec::new(); self.clients.len()]
-            };
-            let spare_now: Vec<f64> = (0..self.clients.len())
-                .map(|i| self.spare_actual(i, t))
-                .collect();
+            if wants_fc {
+                for (p, buf) in energy_fc.iter_mut().enumerate() {
+                    self.domains[p].forecast_window_wh_into(t, self.cfg.d_max, buf);
+                }
+                for (i, buf) in spare_fc.iter_mut().enumerate() {
+                    self.spare_forecast_window_into(i, t, self.cfg.d_max, buf);
+                }
+            }
+            spare_now.clear();
+            spare_now.extend((0..self.clients.len()).map(|i| self.spare_actual(i, t)));
             let decision = {
                 let ctx = SelectionContext {
                     now: t,

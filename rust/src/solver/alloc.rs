@@ -17,6 +17,13 @@
 //! min-cost max-flow return exactly the profit-optimal allocation. Lower
 //! bounds are handled with the standard super-source/sink transformation.
 //! Optimality is cross-validated against the dense simplex in tests.
+//!
+//! §Perf: the solver operates on borrowed slices ([`AllocClientView`])
+//! so the selection hot path never clones a spare-capacity or energy
+//! vector, and on a reusable [`AllocWorkspace`] so steady-state solves
+//! perform no heap allocation. The owned [`AllocProblem`] /
+//! [`AllocClient`] types remain as builders for tests and benches and
+//! delegate to the same view-based solver.
 
 use super::flow::{FlowNetwork, EPS};
 
@@ -33,6 +40,29 @@ pub struct AllocClient {
     pub weight: f64,
     /// forecast spare capacity per step, batches (m^spare_{c,t})
     pub spare: Vec<f64>,
+}
+
+/// Borrowed view of one client: identical semantics to [`AllocClient`]
+/// with the spare-capacity forecast as a slice into shared storage.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocClientView<'a> {
+    pub min_batches: f64,
+    pub max_batches: f64,
+    pub delta: f64,
+    pub weight: f64,
+    pub spare: &'a [f64],
+}
+
+impl AllocClient {
+    pub fn view(&self) -> AllocClientView<'_> {
+        AllocClientView {
+            min_batches: self.min_batches,
+            max_batches: self.max_batches,
+            delta: self.delta,
+            weight: self.weight,
+            spare: &self.spare,
+        }
+    }
 }
 
 /// The allocation instance for one power domain over `T` timesteps.
@@ -53,102 +83,183 @@ pub struct Allocation {
     pub objective: f64,
 }
 
+/// Reusable scratch for the flow solver: the network (with its internal
+/// SPFA buffers) plus the schedule-arc id table. One workspace serves an
+/// arbitrary sequence of solves of any shape.
+#[derive(Debug, Default)]
+pub struct AllocWorkspace {
+    net: FlowNetwork,
+    /// c→t arc ids, flattened [c_n × t_n]
+    sched_arcs: Vec<usize>,
+}
+
+/// Build the transportation network for `clients`/`energy` into `ws` and
+/// run both flow phases. Returns `false` iff the joint m_min lower bounds
+/// are infeasible. Arc construction order is identical to the historical
+/// owned solver, so results are bit-for-bit reproducible.
+fn build_and_run(
+    clients: &[AllocClientView<'_>],
+    energy: &[f64],
+    ws: &mut AllocWorkspace,
+) -> bool {
+    let c_n = clients.len();
+    let t_n = energy.len();
+    for c in clients {
+        assert!(c.delta > 0.0, "delta must be positive");
+        assert!(c.spare.len() == t_n, "spare horizon mismatch");
+        assert!(c.max_batches >= c.min_batches - EPS);
+    }
+
+    // profit per unit energy; shift so all arc costs are >= 0
+    let rho_max = clients
+        .iter()
+        .map(|c| c.weight / c.delta)
+        .fold(0.0, f64::max);
+
+    // node layout
+    let s = 0;
+    let t = 1;
+    let ss = 2;
+    let tt = 3;
+    let client_node = |i: usize| 4 + i;
+    let time_node = |j: usize| 4 + c_n + j;
+    ws.net.reset(4 + c_n + t_n);
+    ws.sched_arcs.clear();
+
+    let total_energy: f64 = energy.iter().sum();
+    let mut lb_total = 0.0;
+    for (i, c) in clients.iter().enumerate() {
+        let lb = c.delta * c.min_batches;
+        let ub = c.delta * c.max_batches;
+        lb_total += lb;
+        // optional energy above the minimum, profit-bearing
+        ws.net
+            .add_edge(s, client_node(i), ub - lb, rho_max - c.weight / c.delta);
+        // mandatory minimum via the super-source
+        ws.net.add_edge(ss, client_node(i), lb, 0.0);
+        for j in 0..t_n {
+            let cap = c.delta * c.spare[j];
+            let id = ws.net.add_edge(client_node(i), time_node(j), cap, 0.0);
+            ws.sched_arcs.push(id);
+        }
+    }
+    for (j, &r) in energy.iter().enumerate() {
+        ws.net.add_edge(time_node(j), t, r, 0.0);
+    }
+    // circulation return + deficit sink for the lower-bound transform
+    ws.net.add_edge(t, s, total_energy + lb_total + 1.0, 0.0);
+    ws.net.add_edge(s, tt, lb_total, 0.0);
+
+    // Phase 1: route every mandatory minimum. Saturation == feasible.
+    let (feas_flow, _) = ws.net.min_cost_max_flow(ss, tt, f64::INFINITY);
+    if feas_flow + 1e-6 < lb_total {
+        return false;
+    }
+    // Phase 2: profit-optimal augmentation of the optional energy.
+    let _ = ws.net.min_cost_max_flow(s, t, f64::INFINITY);
+    true
+}
+
+/// Exact solve returning only the objective Σ_c σ_c·totals_c; `None` iff
+/// infeasible. Allocation-free at steady state — this is the call the
+/// greedy insertion/swap loops make thousands of times per selection.
+pub fn solve_objective(
+    clients: &[AllocClientView<'_>],
+    energy: &[f64],
+    ws: &mut AllocWorkspace,
+) -> Option<f64> {
+    if clients.is_empty() {
+        return Some(0.0);
+    }
+    if !build_and_run(clients, energy, ws) {
+        return None;
+    }
+    let t_n = energy.len();
+    let mut objective = 0.0;
+    for (i, c) in clients.iter().enumerate() {
+        let mut total = 0.0;
+        for j in 0..t_n {
+            total += ws.net.flow_on(ws.sched_arcs[i * t_n + j]) / c.delta;
+        }
+        objective += c.weight * total;
+    }
+    Some(objective)
+}
+
+/// Exact solve with the full per-step schedule; `None` iff the m_min
+/// lower bounds are jointly infeasible under the energy/spare caps.
+pub fn solve_full(
+    clients: &[AllocClientView<'_>],
+    energy: &[f64],
+    ws: &mut AllocWorkspace,
+) -> Option<Allocation> {
+    if clients.is_empty() {
+        return Some(Allocation {
+            batches: Vec::new(),
+            totals: Vec::new(),
+            objective: 0.0,
+        });
+    }
+    if !build_and_run(clients, energy, ws) {
+        return None;
+    }
+    let c_n = clients.len();
+    let t_n = energy.len();
+    let mut batches = vec![vec![0.0; t_n]; c_n];
+    let mut totals = vec![0.0; c_n];
+    for (i, c) in clients.iter().enumerate() {
+        for j in 0..t_n {
+            let b = ws.net.flow_on(ws.sched_arcs[i * t_n + j]) / c.delta;
+            batches[i][j] = b;
+            totals[i] += b;
+        }
+    }
+    let objective = clients
+        .iter()
+        .zip(&totals)
+        .map(|(c, &tot)| c.weight * tot)
+        .sum();
+    Some(Allocation { batches, totals, objective })
+}
+
+/// Max batches a SINGLE client could compute if it had the domain's
+/// entire energy to itself (the paper's Algorithm-1 line-11 filter, the
+/// admissible bound used by branch-and-bound, and — because a singleton
+/// domain's exact optimum IS its standalone value — the closed form the
+/// greedy solver uses to skip flow solves on one-member domains).
+pub fn standalone_batches_view(
+    spare: &[f64],
+    delta: f64,
+    max_batches: f64,
+    energy: &[f64],
+) -> f64 {
+    let raw: f64 = spare
+        .iter()
+        .zip(energy)
+        .map(|(&sp, &r)| sp.min(r / delta))
+        .sum();
+    raw.min(max_batches)
+}
+
 impl AllocProblem {
     /// Exact solve; `None` iff the m_min lower bounds are jointly
     /// infeasible under the energy/spare caps.
     pub fn solve(&self) -> Option<Allocation> {
-        let c_n = self.clients.len();
-        let t_n = self.energy.len();
-        if c_n == 0 {
-            return Some(Allocation {
-                batches: Vec::new(),
-                totals: Vec::new(),
-                objective: 0.0,
-            });
-        }
-        for c in &self.clients {
-            assert!(c.delta > 0.0, "delta must be positive");
-            assert!(c.spare.len() == t_n, "spare horizon mismatch");
-            assert!(c.max_batches >= c.min_batches - EPS);
-        }
-
-        // profit per unit energy; shift so all arc costs are >= 0
-        let rho: Vec<f64> =
-            self.clients.iter().map(|c| c.weight / c.delta).collect();
-        let rho_max = rho.iter().cloned().fold(0.0, f64::max);
-
-        // node layout
-        let s = 0;
-        let t = 1;
-        let ss = 2;
-        let tt = 3;
-        let client_node = |i: usize| 4 + i;
-        let time_node = |j: usize| 4 + c_n + j;
-        let mut g = FlowNetwork::new(4 + c_n + t_n);
-
-        let total_energy: f64 = self.energy.iter().sum();
-        let mut lb_total = 0.0;
-        let mut opt_arcs = Vec::with_capacity(c_n); // S->c (optional part)
-        let mut sched_arcs = vec![Vec::with_capacity(t_n); c_n]; // c->t
-
-        for (i, c) in self.clients.iter().enumerate() {
-            let lb = c.delta * c.min_batches;
-            let ub = c.delta * c.max_batches;
-            lb_total += lb;
-            // optional energy above the minimum, profit-bearing
-            opt_arcs.push(g.add_edge(s, client_node(i), ub - lb, rho_max - rho[i]));
-            // mandatory minimum via the super-source
-            g.add_edge(ss, client_node(i), lb, 0.0);
-            for j in 0..t_n {
-                let cap = c.delta * c.spare[j];
-                sched_arcs[i].push(g.add_edge(client_node(i), time_node(j), cap, 0.0));
-            }
-        }
-        for j in 0..t_n {
-            g.add_edge(time_node(j), t, self.energy[j], 0.0);
-        }
-        // circulation return + deficit sink for the lower-bound transform
-        g.add_edge(t, s, total_energy + lb_total + 1.0, 0.0);
-        g.add_edge(s, tt, lb_total, 0.0);
-
-        // Phase 1: route every mandatory minimum. Saturation == feasible.
-        let (feas_flow, _) = g.min_cost_max_flow(ss, tt, f64::INFINITY);
-        if feas_flow + 1e-6 < lb_total {
-            return None;
-        }
-        // Phase 2: profit-optimal augmentation of the optional energy.
-        let _ = g.min_cost_max_flow(s, t, f64::INFINITY);
-
-        // Extract the schedule from the c->t arc flows.
-        let mut batches = vec![vec![0.0; t_n]; c_n];
-        let mut totals = vec![0.0; c_n];
-        for (i, c) in self.clients.iter().enumerate() {
-            for j in 0..t_n {
-                let b = g.flow_on(sched_arcs[i][j]) / c.delta;
-                batches[i][j] = b;
-                totals[i] += b;
-            }
-        }
-        let objective = self
-            .clients
-            .iter()
-            .zip(&totals)
-            .map(|(c, &tot)| c.weight * tot)
-            .sum();
-        Some(Allocation { batches, totals, objective })
+        let views: Vec<AllocClientView<'_>> =
+            self.clients.iter().map(|c| c.view()).collect();
+        let mut ws = AllocWorkspace::default();
+        solve_full(&views, &self.energy, &mut ws)
     }
 
-    /// Max batches a SINGLE client could compute if it had the domain's
-    /// entire energy to itself (the paper's Algorithm-1 line-11 filter and
-    /// the admissible bound used by branch-and-bound).
+    /// Max batches a SINGLE client could compute with the whole domain
+    /// budget (see [`standalone_batches_view`]).
     pub fn standalone_batches(client: &AllocClient, energy: &[f64]) -> f64 {
-        let raw: f64 = client
-            .spare
-            .iter()
-            .zip(energy)
-            .map(|(&sp, &r)| sp.min(r / client.delta))
-            .sum();
-        raw.min(client.max_batches)
+        standalone_batches_view(
+            &client.spare,
+            client.delta,
+            client.max_batches,
+            energy,
+        )
     }
 }
 
@@ -297,5 +408,65 @@ mod tests {
         // cap at max_batches
         let b2 = AllocProblem::standalone_batches(&c, &[100.0, 100.0, 100.0]);
         assert!((b2 - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh_solves() {
+        // the same workspace drives differently-shaped problems in
+        // sequence; every answer must equal a fresh-workspace solve
+        let probs = vec![
+            AllocProblem {
+                clients: vec![
+                    client(1.0, 10.0, 1.0, 1.0, &[5.0, 5.0]),
+                    client(1.0, 10.0, 1.0, 3.0, &[5.0, 5.0]),
+                ],
+                energy: vec![6.0, 6.0],
+            },
+            AllocProblem {
+                clients: vec![client(2.0, 10.0, 1.0, 1.0, &[4.0, 4.0, 4.0])],
+                energy: vec![100.0, 100.0, 100.0],
+            },
+            AllocProblem {
+                clients: vec![client(5.0, 10.0, 1.0, 1.0, &[1.0, 1.0])],
+                energy: vec![100.0, 100.0],
+            },
+        ];
+        let mut ws = AllocWorkspace::default();
+        for p in &probs {
+            let views: Vec<AllocClientView<'_>> =
+                p.clients.iter().map(|c| c.view()).collect();
+            let shared = solve_full(&views, &p.energy, &mut ws);
+            let fresh = p.solve();
+            match (shared, fresh) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.totals, b.totals);
+                    assert_eq!(a.objective, b.objective);
+                }
+                (None, None) => {}
+                (a, b) => panic!(
+                    "feasibility mismatch: shared={} fresh={}",
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn objective_only_matches_full_solve() {
+        let p = AllocProblem {
+            clients: vec![
+                client(1.0, 10.0, 1.0, 1.0, &[5.0, 5.0]),
+                client(1.0, 10.0, 1.0, 3.0, &[5.0, 5.0]),
+                client(0.5, 4.0, 2.0, 0.7, &[2.0, 2.0]),
+            ],
+            energy: vec![6.0, 6.0],
+        };
+        let views: Vec<AllocClientView<'_>> =
+            p.clients.iter().map(|c| c.view()).collect();
+        let mut ws = AllocWorkspace::default();
+        let obj = solve_objective(&views, &p.energy, &mut ws).unwrap();
+        let full = p.solve().unwrap();
+        assert_eq!(obj, full.objective);
     }
 }

@@ -23,11 +23,39 @@ struct Arc {
 pub struct FlowNetwork {
     arcs: Vec<Arc>,
     adj: Vec<Vec<usize>>,
+    // SPFA scratch, reused across augmentations and across `reset()` cycles
+    // so steady-state solves allocate nothing (§Perf: the selection hot
+    // path runs thousands of small flow solves per round).
+    dist: Vec<f64>,
+    in_queue: Vec<bool>,
+    pred: Vec<usize>,
+    queue: std::collections::VecDeque<usize>,
 }
 
 impl FlowNetwork {
     pub fn new(nodes: usize) -> Self {
-        FlowNetwork { arcs: Vec::new(), adj: vec![Vec::new(); nodes] }
+        FlowNetwork {
+            arcs: Vec::new(),
+            adj: vec![Vec::new(); nodes],
+            dist: Vec::new(),
+            in_queue: Vec::new(),
+            pred: Vec::new(),
+            queue: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Clear the graph for reuse with `nodes` nodes, keeping every buffer's
+    /// capacity. Equivalent to `*self = FlowNetwork::new(nodes)` without
+    /// the allocations.
+    pub fn reset(&mut self, nodes: usize) {
+        self.arcs.clear();
+        self.adj.truncate(nodes);
+        for a in &mut self.adj {
+            a.clear();
+        }
+        while self.adj.len() < nodes {
+            self.adj.push(Vec::new());
+        }
     }
 
     pub fn add_node(&mut self) -> usize {
@@ -55,35 +83,35 @@ impl FlowNetwork {
         self.arcs[self.arcs[id].rev].cap
     }
 
-    /// Cheapest augmenting path via SPFA. Returns per-node predecessor arc.
-    fn spfa(&self, s: usize, t: usize) -> Option<Vec<usize>> {
+    /// Cheapest augmenting path via SPFA into the internal `pred` scratch;
+    /// returns whether `t` is reachable.
+    fn spfa(&mut self, s: usize, t: usize) -> bool {
         let n = self.num_nodes();
-        let mut dist = vec![f64::INFINITY; n];
-        let mut in_queue = vec![false; n];
-        let mut pred = vec![usize::MAX; n];
-        let mut queue = std::collections::VecDeque::new();
-        dist[s] = 0.0;
-        queue.push_back(s);
-        in_queue[s] = true;
-        while let Some(u) = queue.pop_front() {
-            in_queue[u] = false;
+        self.dist.clear();
+        self.dist.resize(n, f64::INFINITY);
+        self.in_queue.clear();
+        self.in_queue.resize(n, false);
+        self.pred.clear();
+        self.pred.resize(n, usize::MAX);
+        self.queue.clear();
+        self.dist[s] = 0.0;
+        self.queue.push_back(s);
+        self.in_queue[s] = true;
+        while let Some(u) = self.queue.pop_front() {
+            self.in_queue[u] = false;
             for &aid in &self.adj[u] {
                 let arc = &self.arcs[aid];
-                if arc.cap > EPS && dist[u] + arc.cost < dist[arc.to] - EPS {
-                    dist[arc.to] = dist[u] + arc.cost;
-                    pred[arc.to] = aid;
-                    if !in_queue[arc.to] {
-                        queue.push_back(arc.to);
-                        in_queue[arc.to] = true;
+                if arc.cap > EPS && self.dist[u] + arc.cost < self.dist[arc.to] - EPS {
+                    self.dist[arc.to] = self.dist[u] + arc.cost;
+                    self.pred[arc.to] = aid;
+                    if !self.in_queue[arc.to] {
+                        self.queue.push_back(arc.to);
+                        self.in_queue[arc.to] = true;
                     }
                 }
             }
         }
-        if dist[t].is_finite() {
-            Some(pred)
-        } else {
-            None
-        }
+        self.dist[t].is_finite()
     }
 
     /// Min-cost max-flow from `s` to `t`, augmenting at most `limit` units.
@@ -92,12 +120,14 @@ impl FlowNetwork {
         let mut flow = 0.0;
         let mut cost = 0.0;
         while flow < limit - EPS {
-            let Some(pred) = self.spfa(s, t) else { break };
+            if !self.spfa(s, t) {
+                break;
+            }
             // bottleneck along path
             let mut push = limit - flow;
             let mut v = t;
             while v != s {
-                let aid = pred[v];
+                let aid = self.pred[v];
                 push = push.min(self.arcs[aid].cap);
                 v = self.arcs[self.arcs[aid].rev].to;
             }
@@ -106,7 +136,7 @@ impl FlowNetwork {
             }
             let mut v = t;
             while v != s {
-                let aid = pred[v];
+                let aid = self.pred[v];
                 let rev = self.arcs[aid].rev;
                 self.arcs[aid].cap -= push;
                 self.arcs[rev].cap += push;
@@ -177,6 +207,31 @@ mod tests {
         let (flow, cost) = g.min_cost_max_flow(0, 1, 2.5);
         assert!((flow - 2.5).abs() < 1e-9);
         assert!((cost - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_reuses_network_with_identical_results() {
+        let mut g = FlowNetwork::new(4);
+        let (s, a, b, t) = (0, 1, 2, 3);
+        g.add_edge(s, a, 3.0, 0.0);
+        g.add_edge(a, t, 3.0, 0.0);
+        g.add_edge(s, b, 2.0, 0.0);
+        g.add_edge(b, t, 2.0, 0.0);
+        let (f1, c1) = g.min_cost_max_flow(s, t, f64::INFINITY);
+        // rebuild the same graph in the same network and re-solve
+        g.reset(4);
+        g.add_edge(s, a, 3.0, 0.0);
+        g.add_edge(a, t, 3.0, 0.0);
+        g.add_edge(s, b, 2.0, 0.0);
+        g.add_edge(b, t, 2.0, 0.0);
+        let (f2, c2) = g.min_cost_max_flow(s, t, f64::INFINITY);
+        assert_eq!(f1, f2);
+        assert_eq!(c1, c2);
+        // shrink then grow node count
+        g.reset(2);
+        g.add_edge(0, 1, 1.5, 0.0);
+        let (f3, _) = g.min_cost_max_flow(0, 1, f64::INFINITY);
+        assert!((f3 - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Minimal fork-join parallelism on `std::thread::scope`.
+//!
+//! The offline vendor set has no `rayon`, so the selection pipeline's
+//! data-parallel stages (arena construction, standalone scoring, swap
+//! candidate scanning) use this instead: deterministic chunked fan-out
+//! with results merged in index order, so parallel and sequential
+//! execution produce bit-identical output. Every entry point takes a
+//! `min_serial` threshold below which it runs inline — the unit-test and
+//! evaluation-scale instances never pay thread-spawn overhead.
+
+use std::thread;
+
+/// Number of worker threads to fan out to (>= 1).
+pub fn threads() -> usize {
+    thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// `(0..n).map(f)` collected in order, chunked across threads when
+/// `n >= min_serial` and more than one core is available. `f` must be
+/// index-deterministic: the output is identical to the serial map.
+pub fn par_map<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads();
+    if n == 0 || n < min_serial || workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let workers = workers.min(n);
+    let chunk = (n + workers - 1) / workers;
+    // ceil(n/chunk) chunks, so every chunk is non-empty even when
+    // workers*chunk overshoots n (many-core hosts, small n)
+    let n_chunks = (n + chunk - 1) / chunk;
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let parts: Vec<Vec<T>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..n_chunks)
+            .map(|k| {
+                let f = &f;
+                s.spawn(move || {
+                    let start = k * chunk;
+                    let end = ((k + 1) * chunk).min(n);
+                    (start..end).map(f).collect::<Vec<T>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    for part in parts {
+        out.extend(part);
+    }
+    out
+}
+
+/// Split `0..n` into contiguous ranges, run `f(start, end)` on each (in
+/// parallel when `n >= min_serial`), and return the per-range results in
+/// range order. Lets callers keep per-thread scratch state inside `f`.
+pub fn par_ranges<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let workers = threads();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n < min_serial || workers <= 1 {
+        return vec![f(0, n)];
+    }
+    let workers = workers.min(n);
+    let chunk = (n + workers - 1) / workers;
+    let n_chunks = (n + chunk - 1) / chunk;
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..n_chunks)
+            .map(|k| {
+                let f = &f;
+                s.spawn(move || {
+                    let start = k * chunk;
+                    let end = ((k + 1) * chunk).min(n);
+                    f(start, end)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_ranges worker panicked"))
+            .collect()
+    })
+}
+
+/// Fill `out` (length = rows × `row_len`) row by row via
+/// `f(row_index, row_slice)`, fanning contiguous row blocks out across
+/// threads when there are at least `min_serial_rows` rows. Rows are
+/// disjoint, so parallel and serial fills write identical bytes.
+pub fn par_fill_rows<T, F>(out: &mut [T], row_len: usize, min_serial_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(out.len() % row_len, 0, "out is not a whole number of rows");
+    let n_rows = out.len() / row_len;
+    let workers = threads();
+    if n_rows < min_serial_rows || workers <= 1 {
+        for (r, row) in out.chunks_mut(row_len).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let workers = workers.min(n_rows);
+    let rows_per = (n_rows + workers - 1) / workers;
+    thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::new();
+        let mut rest: &mut [T] = out;
+        let mut r0 = 0usize;
+        while r0 < n_rows {
+            let take = rows_per.min(n_rows - r0);
+            let tmp = std::mem::take(&mut rest);
+            let (head, tail) = tmp.split_at_mut(take * row_len);
+            rest = tail;
+            let start = r0;
+            handles.push(s.spawn(move || {
+                for (k, row) in head.chunks_mut(row_len).enumerate() {
+                    f(start + k, row);
+                }
+            }));
+            r0 += take;
+        }
+        for h in handles {
+            h.join().expect("par_fill_rows worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_map() {
+        let serial: Vec<u64> = (0..10_000).map(|i| (i as u64).wrapping_mul(0x9E37)).collect();
+        // force the parallel path with min_serial = 0
+        let parallel = par_map(10_000, 0, |i| (i as u64).wrapping_mul(0x9E37));
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_below_threshold_runs_inline() {
+        let out = par_map(5, 1_000, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<usize> = par_map(0, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn par_fill_rows_matches_serial_fill() {
+        let rows = 513usize;
+        let row_len = 7usize;
+        let fill = |r: usize, row: &mut [u64]| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (r as u64) * 1_000 + j as u64;
+            }
+        };
+        let mut serial = vec![0u64; rows * row_len];
+        for (r, row) in serial.chunks_mut(row_len).enumerate() {
+            fill(r, row);
+        }
+        let mut parallel = vec![0u64; rows * row_len];
+        par_fill_rows(&mut parallel, row_len, 0, fill);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_ranges_covers_everything_once() {
+        let ranges = par_ranges(10_001, 0, |a, b| (a, b));
+        let mut expect = 0usize;
+        for (a, b) in ranges {
+            assert_eq!(a, expect, "gap or overlap at {a}");
+            assert!(b >= a);
+            expect = b;
+        }
+        assert_eq!(expect, 10_001);
+    }
+
+    #[test]
+    fn par_ranges_reduces_deterministically() {
+        // best-index reduction as used by the swap scan: max value, ties
+        // to the lowest index — identical regardless of chunking
+        let vals: Vec<f64> = (0..5_000).map(|i| ((i * 37) % 1000) as f64).collect();
+        let pick = |parts: Vec<Option<(f64, usize)>>| -> Option<(f64, usize)> {
+            let mut best: Option<(f64, usize)> = None;
+            for p in parts.into_iter().flatten() {
+                if best.map(|(b, _)| p.0 > b).unwrap_or(true) {
+                    best = Some(p);
+                }
+            }
+            best
+        };
+        let scan = |a: usize, b: usize| -> Option<(f64, usize)> {
+            let mut best: Option<(f64, usize)> = None;
+            for i in a..b {
+                if best.map(|(b, _)| vals[i] > b).unwrap_or(true) {
+                    best = Some((vals[i], i));
+                }
+            }
+            best
+        };
+        let serial = pick(vec![scan(0, vals.len())]);
+        let parallel = pick(par_ranges(vals.len(), 0, scan));
+        assert_eq!(serial, parallel);
+    }
+}

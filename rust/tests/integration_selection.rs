@@ -142,9 +142,13 @@ fn fedzero_duration_is_minimal_among_feasible() {
             return;
         }
         // instance at d-1 must be missing candidates or unsolvable
-        let inst = fz.build_instance(&ctx(&s, n), d.expected_duration - 1);
-        if let Some(inst) = inst {
-            let sol = fedzero::solver::mip::greedy(&inst, 1);
+        let c1 = ctx(&s, n);
+        let arena = fedzero::selection::arena::SelArena::build(&c1);
+        let mut scratch = fedzero::selection::arena::ProbeScratch::new();
+        if arena.fill_probe(&mut scratch, d.expected_duration - 1) {
+            let mut ws = fedzero::solver::alloc::AllocWorkspace::default();
+            let sol =
+                fedzero::solver::mip::greedy_view(scratch.instance(), 1, &mut ws);
             // greedy is not exact, so we only assert it did not find MORE
             // than n (structural sanity), and usually finds < n.
             assert!(sol.chosen.len() <= n);
