@@ -2,12 +2,15 @@
 # CI entry point: build, test, and a perf smoke so selection-pipeline
 # regressions fail loudly.
 #
-#   ./ci.sh          tier-1 (build + tests) + quick bench smoke
+#   ./ci.sh          tier-1 (build + tests) + quick bench smokes
 #   ./ci.sh --bench  also run the unabridged selection bench
 #
-# The bench writes rust/BENCH_selection.json (median ns per Fig-8 point
-# plus speedup vs the retained reference greedy) and exits non-zero if
-# the arena-based solver's chosen sets diverge from the reference.
+# The selection bench writes rust/BENCH_selection.json (median ns per
+# Fig-8 point plus speedup vs the retained reference greedy) and exits
+# non-zero if the arena-based solver's chosen sets diverge from the
+# reference. The endtoend bench writes rust/BENCH_endtoend.json (ns per
+# idle/round sim step, ring footprint) and exits non-zero if the
+# incrementally-advanced forecast ring diverges from fresh-built windows.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -19,6 +22,9 @@ cargo test -q
 
 echo "== selection bench smoke (--quick) =="
 cargo bench --bench selection -- --quick
+
+echo "== endtoend bench smoke (--quick, ring divergence gate) =="
+cargo bench --bench endtoend -- --quick
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== selection bench (default points) =="

@@ -131,12 +131,16 @@ fn main() {
                     delta: rng.range_f64(0.05, 0.5),
                     m_min,
                     m_max: m_min * 5.0,
-                    spare: (0..60).map(|_| rng.range_f64(0.0, 30.0)).collect(),
+                    spare: (0..60)
+                        .map(|_| rng.range_f64(0.0, 30.0) as f32)
+                        .collect(),
                 }
             })
             .collect(),
         energy: (0..5)
-            .map(|_| (0..60).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .map(|_| {
+                (0..60).map(|_| rng.range_f64(0.0, 14.0) as f32).collect()
+            })
             .collect(),
     };
     let t0 = Instant::now();

@@ -1,11 +1,35 @@
-//! End-to-end throughput benches: simulated rounds per wallclock second —
-//! the cost of regenerating Table 3 / Fig 5 — for the mock backend (pure
-//! L3 cost) and the PJRT backend (L3 + real compute).
+//! End-to-end simulation benches, two layers:
+//!
+//! 1. classic throughput — simulated rounds per wallclock second (the
+//!    cost of regenerating Table 3 / Fig 5) for the mock backend and,
+//!    outside `--quick`, the PJRT backend;
+//! 2. **sim-step microbenches** for the ring-arena loop: median ns per
+//!    *idle* (dark-period) step across d_max values — with the
+//!    incremental ring advance this must be independent of d_max — plus
+//!    ns per round-bearing step, the ring-vs-fresh divergence gate
+//!    (exits non-zero on any mismatch, mirroring the selection bench's
+//!    solver gate), and the f32-ring vs historical-f64 window footprint.
+//!
+//! Results go to rust/BENCH_endtoend.json for cross-PR tracking.
+//!
+//! Flags: --quick  CI smoke (small points, mock only)
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
 use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
+use fedzero::energy::PowerDomain;
+use fedzero::fl::MockBackend;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::ring::{FcBuffers, ForecastRing, SeriesSource};
+use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
+use fedzero::sim::{SimConfig, Simulation};
+use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
+use fedzero::util::bench::fmt_ns;
+use fedzero::util::json::Json;
+use fedzero::util::rng::Rng;
 
 fn spec(mock: bool, strategy: StrategyKind) -> ExperimentSpec {
     ExperimentSpec {
@@ -24,7 +48,7 @@ fn spec(mock: bool, strategy: StrategyKind) -> ExperimentSpec {
     }
 }
 
-fn run(label: &str, s: &ExperimentSpec) {
+fn run_e2e(label: &str, s: &ExperimentSpec, out: &mut Vec<Json>) {
     let t0 = Instant::now();
     match run_experiment(s) {
         Ok(report) => {
@@ -36,16 +60,309 @@ fn run(label: &str, s: &ExperimentSpec) {
                 report.steps_executed,
                 report.select_time_ms,
             );
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(label.into()));
+            m.insert("rounds".into(), Json::Num(rounds as f64));
+            m.insert("rounds_per_s".into(), Json::Num(rounds as f64 / dt));
+            m.insert(
+                "select_time_ms".into(),
+                Json::Num(report.select_time_ms),
+            );
+            out.push(Json::Obj(m));
         }
         Err(e) => eprintln!("skipping {label}: {e:#}"),
     }
 }
 
+/// Build a mock-backed simulation fixture: `power_w` per domain (0.0 =
+/// permanently dark → every step is an idle poll).
+fn sim_parts(
+    n_clients: usize,
+    n_domains: usize,
+    power_w: f64,
+    horizon: usize,
+    realistic_fc: bool,
+) -> (Vec<ClientInfo>, Vec<PowerDomain>, Vec<Vec<f64>>, Vec<SeriesForecaster>) {
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[i % 3],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, i % n_domains, p, (0..60).collect(), 10)
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            let series = vec![power_w; horizon];
+            let fc = if realistic_fc {
+                SeriesForecaster::realistic(series.clone(), i as u64, 60.0)
+            } else {
+                SeriesForecaster::perfect(series.clone())
+            };
+            PowerDomain::new(i, "d", 800.0, series, fc, 1.0)
+        })
+        .collect();
+    let load: Vec<Vec<f64>> = (0..n_clients).map(|_| vec![0.0; horizon]).collect();
+    let load_fc: Vec<SeriesForecaster> = clients
+        .iter()
+        .map(|c| {
+            let series = vec![c.capacity(); horizon];
+            if realistic_fc {
+                SeriesForecaster::realistic(series, 7, 60.0)
+            } else {
+                SeriesForecaster::perfect(series)
+            }
+        })
+        .collect();
+    (clients, domains, load, load_fc)
+}
+
+/// ns per simulated step for a FedZero run over the fixture; returns
+/// (ns_per_step, rounds).
+fn step_cost(
+    n_clients: usize,
+    n_domains: usize,
+    power_w: f64,
+    horizon: usize,
+    d_max: usize,
+) -> (f64, usize) {
+    let (clients, domains, load, load_fc) =
+        sim_parts(n_clients, n_domains, power_w, horizon, true);
+    let mut backend = MockBackend::new(n_clients, 8, 0.2, 7);
+    let mut fz = FedZero::new(SolverKind::Greedy);
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 5.min(n_clients),
+        d_max,
+        eval_every: 50,
+        seed: 3,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &mut backend,
+        &mut fz,
+    );
+    let t0 = Instant::now();
+    sim.run().unwrap();
+    let ns = t0.elapsed().as_nanos() as f64 / horizon as f64;
+    (ns, sim.metrics.rounds.len())
+}
+
+/// Ring-vs-fresh divergence gate: drive FedZero over N consecutive
+/// ring-advanced windows and assert each decision equals the fresh-build
+/// reference. Returns the number of mismatches (0 = green).
+fn divergence_gate(seed: u64, steps: usize) -> usize {
+    let mut rng = Rng::new(seed);
+    let n_domains = 4;
+    let n_clients = 24;
+    let d_max = 40;
+    let horizon = d_max + steps + 2;
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[i % 3],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, i % n_domains, p, (0..50).collect(), 10)
+        })
+        .collect();
+    let mut states = vec![ClientRoundState::default(); n_clients];
+    for s in states.iter_mut() {
+        s.sigma = rng.range_f64(0.1, 10.0);
+    }
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            let series = vec![200.0; horizon];
+            PowerDomain::new(
+                i,
+                "d",
+                800.0,
+                series.clone(),
+                SeriesForecaster::perfect(series),
+                1.0,
+            )
+        })
+        .collect();
+    let caps: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+    // sine power with dark stretches + realistic forecast error — the
+    // adversarial case for incremental advance
+    let src = SeriesSource {
+        energy: (0..n_domains)
+            .map(|p| {
+                let base = rng.range_f64(2.0, 12.0);
+                let series: Vec<f64> = (0..horizon)
+                    .map(|t| (base * ((t as f64 / 13.0).sin())).max(0.0))
+                    .collect();
+                SeriesForecaster::realistic(series, seed ^ p as u64, 60.0)
+            })
+            .collect(),
+        spare: caps
+            .iter()
+            .enumerate()
+            .map(|(i, &cap)| {
+                let series: Vec<f64> =
+                    (0..horizon).map(|_| cap * rng.range_f64(0.3, 1.1)).collect();
+                SeriesForecaster::realistic(series, seed ^ (100 + i as u64), 60.0)
+            })
+            .collect(),
+        caps,
+    };
+    let spare_now: Vec<f64> =
+        clients.iter().map(|c| c.capacity() * 0.8).collect();
+    let mut ring = ForecastRing::new();
+    ring.rebuild(&src, 0, d_max);
+    let mut mismatches = 0usize;
+    for step in 0..steps {
+        if step > 0 {
+            ring.advance(&src);
+        }
+        let fresh = FcBuffers::from_source(&src, 0, step, d_max);
+        let select = |fc: fedzero::selection::ring::FcView<'_>| {
+            let ctx = SelectionContext {
+                now: step,
+                n: 5,
+                d_max,
+                clients: &clients,
+                states: &states,
+                domains: &domains,
+                fc,
+                spare_now: &spare_now,
+            };
+            let mut srng = Rng::new(42);
+            FedZero::new(SolverKind::Greedy).select(&ctx, &mut srng)
+        };
+        let d_ring = select(ring.view());
+        let d_fresh = select(fresh.view());
+        if d_ring != d_fresh {
+            eprintln!(
+                "RING DIVERGENCE at step {step}: ring {:?} vs fresh {:?}",
+                d_ring.clients, d_fresh.clients
+            );
+            mismatches += 1;
+        }
+    }
+    mismatches
+}
+
+/// Mirrored f32 ring bytes vs the historical peak (f64 window buffers in
+/// the engine PLUS the per-select f64 arena copy).
+fn window_footprint(clients: usize, domains: usize, d_max: usize) -> (u64, u64) {
+    let rows = (clients + domains) as u64;
+    let ring_f32 = rows * 2 * d_max as u64 * 4;
+    let historical_f64 = rows * d_max as u64 * 8 * 2;
+    (ring_f32, historical_f64)
+}
+
 fn main() {
-    println!("== end-to-end benches (1 simulated day, 30 clients) ==");
-    run("mock_fedzero", &spec(true, StrategyKind::FedZero));
-    run("mock_random", &spec(true, StrategyKind::Random));
-    run("xla_fedzero", &spec(false, StrategyKind::FedZero));
-    run("xla_random_1.3n", &spec(false, StrategyKind::RandomOver));
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mode = if quick { "quick" } else { "default" };
+    println!("== end-to-end benches [{mode}] ==");
+
+    let mut e2e = Vec::new();
+    run_e2e("mock_fedzero", &spec(true, StrategyKind::FedZero), &mut e2e);
+    run_e2e("mock_random", &spec(true, StrategyKind::Random), &mut e2e);
+    if !quick {
+        run_e2e("xla_fedzero", &spec(false, StrategyKind::FedZero), &mut e2e);
+        run_e2e(
+            "xla_random_1.3n",
+            &spec(false, StrategyKind::RandomOver),
+            &mut e2e,
+        );
+    }
+
+    // --- idle (dark-period) step cost vs d_max: the ring advance makes
+    // this flat in d_max (historically it scaled with C·d_max) ---
+    println!("\n== idle-step cost (all-dark horizon, FedZero polling) ==");
+    let (idle_clients, idle_horizon) = if quick { (300, 800) } else { (1_000, 2_000) };
+    let d_maxes: &[usize] = if quick { &[60, 240] } else { &[60, 240, 960] };
+    let mut idle_points = Vec::new();
+    for &d_max in d_maxes {
+        let (ns, rounds) = step_cost(idle_clients, 10, 0.0, idle_horizon, d_max);
+        assert_eq!(rounds, 0, "dark sim executed rounds?");
+        println!(
+            "idle_step/{idle_clients}c_10p_dmax{d_max:<4} {:>12} per step",
+            fmt_ns(ns)
+        );
+        let mut m = BTreeMap::new();
+        m.insert("clients".into(), Json::Num(idle_clients as f64));
+        m.insert("domains".into(), Json::Num(10.0));
+        m.insert("d_max".into(), Json::Num(d_max as f64));
+        m.insert("ns_per_idle_step".into(), Json::Num(ns));
+        idle_points.push(Json::Obj(m));
+    }
+
+    // --- round-bearing step cost (powered horizon) ---
+    println!("\n== round-step cost (powered horizon) ==");
+    let (ns_round, rounds) = step_cost(60, 6, 300.0, if quick { 600 } else { 1_500 }, 60);
+    println!(
+        "round_step/60c_6p_dmax60    {:>12} per step ({rounds} rounds)",
+        fmt_ns(ns_round)
+    );
+
+    // --- ring-vs-fresh divergence gate ---
+    println!("\n== ring-vs-fresh divergence gate ==");
+    let gate_steps = if quick { 120 } else { 400 };
+    let mismatches = divergence_gate(11, gate_steps);
+    println!(
+        "ring gate: {gate_steps} steps, {mismatches} mismatches {}",
+        if mismatches == 0 { "(ok)" } else { "(FAIL)" }
+    );
+
+    // --- window footprint: mirrored f32 ring vs historical f64 peak ---
+    let (ring_b, hist_b) = window_footprint(100_000, 100_000, 1_440);
+    println!(
+        "\nwindow footprint @100k clients/100k domains/1440 steps: ring f32 {:.2} GB vs historical f64 peak {:.2} GB",
+        ring_b as f64 / 1e9,
+        hist_b as f64 / 1e9
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("endtoend".into()));
+    root.insert("mode".into(), Json::Str(mode.into()));
+    root.insert("e2e".into(), Json::Arr(e2e));
+    root.insert("idle_steps".into(), Json::Arr(idle_points));
+    {
+        let mut m = BTreeMap::new();
+        m.insert("clients".into(), Json::Num(60.0));
+        m.insert("domains".into(), Json::Num(6.0));
+        m.insert("ns_per_step".into(), Json::Num(ns_round));
+        m.insert("rounds".into(), Json::Num(rounds as f64));
+        root.insert("round_steps".into(), Json::Obj(m));
+    }
+    {
+        let mut m = BTreeMap::new();
+        m.insert("clients".into(), Json::Num(100_000.0));
+        m.insert("domains".into(), Json::Num(100_000.0));
+        m.insert("d_max".into(), Json::Num(1_440.0));
+        m.insert("ring_f32_bytes".into(), Json::Num(ring_b as f64));
+        m.insert("historical_f64_bytes".into(), Json::Num(hist_b as f64));
+        root.insert("arena_bytes".into(), Json::Obj(m));
+    }
+    root.insert(
+        "ring_divergence_mismatches".into(),
+        Json::Num(mismatches as f64),
+    );
+    let out = Json::Obj(root).to_string_pretty();
+    let path = "BENCH_endtoend.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if mismatches > 0 {
+        eprintln!("ring-vs-fresh equivalence FAILED ({mismatches} mismatches)");
+        std::process::exit(1);
+    }
     println!("== done ==");
 }

@@ -38,12 +38,16 @@ fn instance(c: usize, p: usize, t: usize, seed: u64) -> SelInstance {
                     delta: rng.range_f64(0.05, 0.5),
                     m_min,
                     m_max: m_min * 5.0,
-                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                    spare: (0..t)
+                        .map(|_| rng.range_f64(0.0, 40.0) as f32)
+                        .collect(),
                 }
             })
             .collect(),
         energy: (0..p)
-            .map(|_| (0..t).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .map(|_| {
+                (0..t).map(|_| rng.range_f64(0.0, 14.0) as f32).collect()
+            })
             .collect(),
     }
 }

@@ -19,11 +19,13 @@ fn alloc_problem(c: usize, t: usize, seed: u64) -> AllocProblem {
                     max_batches: min * 5.0,
                     delta: rng.range_f64(0.05, 0.5),
                     weight: rng.range_f64(0.1, 10.0),
-                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                    spare: (0..t)
+                        .map(|_| rng.range_f64(0.0, 40.0) as f32)
+                        .collect(),
                 }
             })
             .collect(),
-        energy: (0..t).map(|_| rng.range_f64(1.0, 14.0)).collect(),
+        energy: (0..t).map(|_| rng.range_f64(1.0, 14.0) as f32).collect(),
     }
 }
 
@@ -40,12 +42,16 @@ fn sel_instance(c: usize, p: usize, t: usize, n: usize, seed: u64) -> SelInstanc
                     delta: rng.range_f64(0.05, 0.5),
                     m_min,
                     m_max: m_min * 5.0,
-                    spare: (0..t).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                    spare: (0..t)
+                        .map(|_| rng.range_f64(0.0, 40.0) as f32)
+                        .collect(),
                 }
             })
             .collect(),
         energy: (0..p)
-            .map(|_| (0..t).map(|_| rng.range_f64(0.0, 14.0)).collect())
+            .map(|_| {
+                (0..t).map(|_| rng.range_f64(0.0, 14.0) as f32).collect()
+            })
             .collect(),
     }
 }
@@ -84,7 +90,7 @@ fn main() {
                 lp.constrain(&row, Cmp::Ge, p.clients[i].min_batches);
                 lp.constrain(&row, Cmp::Le, p.clients[i].max_batches);
                 for j in 0..t_n {
-                    lp.upper_bound(i * t_n + j, p.clients[i].spare[j]);
+                    lp.upper_bound(i * t_n + j, p.clients[i].spare[j] as f64);
                 }
             }
             for j in 0..t_n {
@@ -92,7 +98,7 @@ fn main() {
                 for i in 0..c_n {
                     row[i * t_n + j] = p.clients[i].delta;
                 }
-                lp.constrain(&row, Cmp::Le, p.energy[j]);
+                lp.constrain(&row, Cmp::Le, p.energy[j] as f64);
             }
             lp.solve()
         });

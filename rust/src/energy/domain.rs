@@ -48,7 +48,11 @@ impl PowerDomain {
         self.power_w.get(t).copied().unwrap_or(0.0) * self.step_minutes / 60.0
     }
 
-    /// forecast excess energy for step `t` issued at `t0`, Wh
+    /// forecast excess energy for step `t` issued at `t0`, Wh — the
+    /// per-column fetch behind the simulator's forecast ring
+    /// (`selection::ring`): one call per domain per idle step when the
+    /// window advances, a full window's worth on re-anchoring
+    #[inline]
     pub fn forecast_energy_wh(&self, t0: usize, t: usize) -> f64 {
         if self.unlimited {
             // forecasting infinite energy confuses the MIP scaling; expose

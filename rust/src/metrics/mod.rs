@@ -8,7 +8,7 @@
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::stats;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     pub start_step: usize,
@@ -20,7 +20,7 @@ pub struct RoundRecord {
     pub mean_loss: f64,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EvalRecord {
     pub round: usize,
     pub step: usize,
@@ -30,7 +30,7 @@ pub struct EvalRecord {
     pub cumulative_kwh: f64,
 }
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsLog {
     pub rounds: Vec<RoundRecord>,
     pub evals: Vec<EvalRecord>,

@@ -493,12 +493,16 @@ pub fn synth_instance(
                 delta: rng.range_f64(0.05, 0.5),
                 m_min,
                 m_max: m_min * 5.0,
-                spare: (0..horizon).map(|_| rng.range_f64(0.0, 40.0)).collect(),
+                spare: (0..horizon)
+                    .map(|_| rng.range_f64(0.0, 40.0) as f32)
+                    .collect(),
             }
         })
         .collect();
     let energy = (0..n_domains)
-        .map(|_| (0..horizon).map(|_| rng.range_f64(0.0, 14.0)).collect())
+        .map(|_| {
+            (0..horizon).map(|_| rng.range_f64(0.0, 14.0) as f32).collect()
+        })
         .collect();
     SelInstance { n: n_select, clients, energy }
 }

@@ -1,32 +1,43 @@
-//! The flat forecast arena behind FedZero's binary search (Fig-8 path).
+//! The forecast arena behind FedZero's binary search (Fig-8 path).
 //!
-//! Algorithm 1 probes O(log d_max) candidate round durations `d`, and the
-//! historical pipeline re-materialised every forecast per probe: energy
-//! windows were `w[..d].to_vec()`'d per domain, spare windows rebuilt per
-//! eligible client, and the line-6/line-11 pre-filters re-scanned O(C·d)
-//! forecast entries — twice, because `build_instance` and `eligible_ids`
-//! maintained the same filter independently.
+//! Algorithm 1 probes O(log d_max) candidate round durations `d`; every
+//! probe needs, per eligible client, a spare-capacity row of length `d`
+//! and, per domain, an energy row of length `d`, plus the paper's
+//! line-6/line-11 pre-filters. The historical pipeline re-materialised
+//! those forecasts per probe; the previous arena copied them into flat
+//! per-`select()` f64 storage.
 //!
-//! [`SelArena`] replaces all of that with one flat, prefix-summed copy of
-//! the forecasts built per `select()` call:
+//! [`SelArena`] now **borrows** its forecast storage from the
+//! [`super::ring::FcView`] handed in through the [`SelectionContext`] —
+//! the persistent f32 ring-arena the simulation advances incrementally
+//! (see `selection::ring`). Building an arena therefore copies **no
+//! forecast rows at all**; per `select()` it computes only:
 //!
-//! * `energy` / `spare` — row-major [domains × d_max] and
-//!   [clients × d_max] matrices; a probe at duration `d` borrows
-//!   `row[..d]` slice views, so narrowing the window is pointer
-//!   arithmetic, not a copy (monotone feasibility means every probe can
-//!   share the d_max arena and just narrow its view);
-//! * `energy_prefix` — running sums per domain, making the paper's
-//!   line-6 "domain has excess energy within d" filter O(1) per probe;
+//! * `energy_prefix` — f64 running sums per domain over the f32 rows,
+//!   making the line-6 "domain has excess energy within d" filter O(1)
+//!   per probe (threshold `> 0`, which on non-negative rows is exactly
+//!   "some column `> 0`" — consistent with the ring's integer liveness
+//!   counters, see `FcView::domain_alive`);
 //! * `d_reach` — the smallest feasible duration per client under the
 //!   line-11 standalone filter (monotone in d), folding in the blocklist
 //!   and σ_c > 0 checks, making per-probe client eligibility a single
-//!   integer compare.
+//!   integer compare. The fold is term-for-term identical to
+//!   [`SelectionContext::reachable_min`];
+//! * one O(C) pass of per-client scalars (σ, δ, m_min, m_max, domain).
 //!
-//! The O(C·d_max) construction passes fan out across threads at scale
-//! (`util::par`; identical results to the serial fill). One
-//! [`ProbeScratch`] is reused across all probes of a search, so the
-//! steady-state per-probe cost is filling three flat `Vec`s of POD
-//! entries — no per-probe forecast allocation at all.
+//! Probes then borrow `row[..d]` slice views straight out of the ring
+//! (monotone feasibility means every probe shares the d_max window and
+//! just narrows its view); one [`ProbeScratch`] is reused across all
+//! probes of a search, so the steady-state per-probe cost is filling
+//! three flat `Vec`s of POD entries — no forecast copy anywhere in the
+//! pipeline. Construction passes fan out across threads at scale
+//! (`util::par`; identical results to the serial fill).
+//!
+//! Forecast values are f32 end to end (ring → arena → solver views) and
+//! widened to f64 wherever arithmetic happens — every layer reads the
+//! same quantised bits, which is what makes the ring-advance, fresh-build
+//! and quick-gate paths agree exactly (property-tested below and in
+//! `tests/integration_ring.rs`).
 
 use super::SelectionContext;
 use crate::solver::mip::{ClientView, InstanceView};
@@ -35,21 +46,19 @@ use crate::util::par;
 /// Row counts below which arena construction stays single-threaded.
 const PAR_MIN_ROWS: usize = 2048;
 
-/// Flat per-`select()` forecast arena; see the module docs.
-pub struct SelArena {
+/// Per-`select()` arena: borrowed forecast rows plus the precomputed
+/// filter structures; see the module docs.
+pub struct SelArena<'a> {
     /// clients required per round (ctx.n)
     pub n: usize,
     pub d_max: usize,
     n_clients: usize,
     n_domains: usize,
-    /// [n_domains × d_max] excess-energy forecast, Wh/step
-    energy: Vec<f64>,
-    /// prefix[p·(d_max+1) + d] = Σ energy[p][0..d] (left fold, same float
-    /// semantics as the historical `w[..d].iter().sum()`)
+    /// borrowed forecast window (ring or fresh buffers)
+    fc: super::ring::FcView<'a>,
+    /// prefix[p·(d_max+1) + d] = Σ energy_row(p)[0..d] (f64 left fold
+    /// over the f32 row)
     energy_prefix: Vec<f64>,
-    /// [n_clients × d_max] spare capacity, batches/step, pre-clamped to
-    /// the client's total capacity
-    spare: Vec<f64>,
     /// smallest d (1-based) at which client i passes the line-11
     /// reachability filter, with blocklist/σ folded in; usize::MAX = never
     d_reach: Vec<usize>,
@@ -62,14 +71,15 @@ pub struct SelArena {
     m_max: Vec<f64>,
 }
 
-/// Reusable per-probe buffers of borrowed views into a [`SelArena`].
-/// Cleared and refilled by [`SelArena::fill_probe`]; holds POD entries
-/// only, so refills never allocate once capacity has grown.
+/// Reusable per-probe buffers of borrowed views into a [`SelArena`]'s
+/// forecast window. Cleared and refilled by [`SelArena::fill_probe`];
+/// holds POD entries only, so refills never allocate once capacity has
+/// grown.
 #[derive(Default)]
 pub struct ProbeScratch<'a> {
     n: usize,
     clients: Vec<ClientView<'a>>,
-    energy: Vec<&'a [f64]>,
+    energy: Vec<&'a [f32]>,
     /// original context client ids, parallel to `clients` — the id map
     /// that used to live in the duplicated `eligible_ids` filter
     pub ids: Vec<usize>,
@@ -86,13 +96,13 @@ impl<'a> ProbeScratch<'a> {
     }
 }
 
-impl SelArena {
+impl<'a> SelArena<'a> {
     /// The d_max eligibility count straight off the context, WITHOUT
-    /// materialising the arena — the dark-period early exit. Applies the
-    /// same line-6/8/11 filters as [`Self::fill_probe`]; `reachable_min`
-    /// early-breaks and dead domains short-circuit it entirely, so idle
-    /// (night) steps cost one forecast scan and zero allocations beyond
-    /// the domain bitmap.
+    /// building the arena — the dark-period early exit. Applies the same
+    /// line-6/8/11 filters as [`Self::build`]/[`Self::eligible`]; the
+    /// ring's O(1) liveness counters short-circuit dead domains and
+    /// `reachable_min` early-breaks, so idle (night) steps cost one
+    /// domain-counter check per client and zero allocations.
     ///
     /// KEEP IN SYNC with the filter in [`Self::build`]/[`Self::eligible`]:
     /// any new eligibility condition must land in both places, or select()
@@ -100,36 +110,32 @@ impl SelArena {
     /// property-tested in `tests::quick_count_agrees_with_arena`.
     pub fn quick_eligible_count(ctx: &SelectionContext) -> usize {
         let d = ctx.d_max;
-        let domain_alive: Vec<bool> = ctx
-            .energy_fc
-            .iter()
-            .map(|w| w[..d.min(w.len())].iter().sum::<f64>() > 1e-9)
-            .collect();
         (0..ctx.clients.len())
             .filter(|&i| {
                 !ctx.states[i].blocked
                     && ctx.states[i].sigma > 0.0
-                    && domain_alive[ctx.clients[i].domain]
+                    && ctx.fc.domain_alive(ctx.clients[i].domain)
                     && ctx.reachable_min(i, d)
             })
             .count()
     }
 
-    /// Copy the context's forecasts into flat storage and precompute the
-    /// prefix sums and per-client reachability curve.
-    pub fn build(ctx: &SelectionContext) -> SelArena {
+    /// Precompute the prefix sums and per-client reachability curve over
+    /// the context's borrowed forecast window.
+    pub fn build(ctx: &SelectionContext<'a>) -> SelArena<'a> {
         let n_clients = ctx.clients.len();
-        let n_domains = ctx.energy_fc.len();
+        let n_domains = ctx.fc.n_domains();
         let d_max = ctx.d_max;
+        let fc = ctx.fc;
+        debug_assert_eq!(fc.d_max(), d_max, "context window shorter than d_max");
 
         // per-client scalars (also used by the parallel passes below, so
-        // the closures only capture plain slices)
+        // the closures only capture plain slices and the Copy view)
         let mut domain = Vec::with_capacity(n_clients);
         let mut sigma = Vec::with_capacity(n_clients);
         let mut delta = Vec::with_capacity(n_clients);
         let mut m_min = Vec::with_capacity(n_clients);
         let mut m_max = Vec::with_capacity(n_clients);
-        let mut capacity = Vec::with_capacity(n_clients);
         let mut live = Vec::with_capacity(n_clients); // !blocked && σ > 0
         for (i, c) in ctx.clients.iter().enumerate() {
             domain.push(c.domain);
@@ -137,79 +143,56 @@ impl SelArena {
             delta.push(c.delta());
             m_min.push(c.m_min);
             m_max.push(c.m_max);
-            capacity.push(c.capacity());
             live.push(!ctx.states[i].blocked && ctx.states[i].sigma > 0.0);
         }
 
-        // the parallel passes below capture plain forecast slices only
-        // (not the whole context, whose domain/client structs need not be
-        // Sync)
-        let energy_fc: &[Vec<f64>] = ctx.energy_fc;
-        let spare_fc: &[Vec<f64>] = ctx.spare_fc;
-
-        // energy rows (short forecast rows are zero-padded)
-        let mut energy = vec![0.0f64; n_domains * d_max];
-        if d_max > 0 {
-            for (p, row) in energy.chunks_mut(d_max).enumerate() {
-                let src = &energy_fc[p];
-                let take = src.len().min(d_max);
-                row[..take].copy_from_slice(&src[..take]);
-            }
-        }
         let mut energy_prefix = vec![0.0f64; n_domains * (d_max + 1)];
         par::par_fill_rows(&mut energy_prefix, d_max + 1, PAR_MIN_ROWS, |p, row| {
-            let src = &energy[p * d_max..(p + 1) * d_max];
-            let mut acc = 0.0;
+            let src = fc.energy_row(p);
+            let mut acc = 0.0f64;
             row[0] = 0.0;
             for (t, &e) in src.iter().enumerate() {
-                acc += e;
+                acc += e as f64;
                 row[t + 1] = acc;
             }
         });
 
-        // spare rows, clamped to capacity (the historical per-probe
-        // `spare_fc[i][t].min(c.capacity())`)
-        let mut spare = vec![0.0f64; n_clients * d_max];
-        par::par_fill_rows(&mut spare, d_max, PAR_MIN_ROWS, |i, row| {
-            let src = &spare_fc[i];
-            let cap = capacity[i];
-            let take = src.len().min(d_max);
-            for t in 0..take {
-                row[t] = src[t].min(cap);
-            }
-        });
-
         // line-11 reachability: smallest d where the cumulative standalone
-        // batch curve crosses m_min (min(spare, r/δ) is evaluated exactly
-        // as the historical `reachable_min`: min is exact in floats, so
-        // clamping spare first is equivalent)
+        // batch curve crosses m_min. Term-for-term identical to
+        // SelectionContext::reachable_min (spare rows are pre-clamped to
+        // capacity at the forecast source).
         let mut d_reach = vec![usize::MAX; n_clients];
-        par::par_fill_rows(&mut d_reach, 1, PAR_MIN_ROWS, |i, out| {
-            if !live[i] {
-                return; // stays usize::MAX
-            }
-            let erow = &energy[domain[i] * d_max..(domain[i] + 1) * d_max];
-            let srow = &spare[i * d_max..(i + 1) * d_max];
-            let dl = delta[i];
-            let need = m_min[i];
-            let mut cum = 0.0;
-            for t in 0..d_max {
-                cum += srow[t].min(erow[t] / dl);
-                if cum >= need {
-                    out[0] = t + 1;
-                    return;
+        {
+            let domain = &domain;
+            let delta = &delta;
+            let m_min = &m_min;
+            let live = &live;
+            par::par_fill_rows(&mut d_reach, 1, PAR_MIN_ROWS, |i, out| {
+                if !live[i] {
+                    return; // stays usize::MAX
                 }
-            }
-        });
+                let erow = fc.energy_row(domain[i]);
+                let srow = fc.spare_row(i);
+                let dl = delta[i];
+                let need = m_min[i];
+                let mut cum = 0.0f64;
+                for t in 0..d_max {
+                    cum += (srow[t] as f64).min(erow[t] as f64 / dl);
+                    if cum >= need {
+                        out[0] = t + 1;
+                        return;
+                    }
+                }
+            });
+        }
 
         SelArena {
             n: ctx.n,
             d_max,
             n_clients,
             n_domains,
-            energy,
+            fc,
             energy_prefix,
-            spare,
             d_reach,
             domain,
             sigma,
@@ -226,10 +209,12 @@ impl SelArena {
     }
 
     /// Is client `i` eligible at duration `d`? (line-6 + line-8 + line-11
-    /// pre-filters, all O(1) per query)
+    /// pre-filters, all O(1) per query). The `> 0` threshold on the f64
+    /// prefix of non-negative f32 terms is exactly "some column > 0",
+    /// matching the ring's integer liveness counters at d = d_max.
     #[inline]
     fn eligible(&self, i: usize, d: usize) -> bool {
-        self.d_reach[i] <= d && self.energy_sum(self.domain[i], d) > 1e-9
+        self.d_reach[i] <= d && self.energy_sum(self.domain[i], d) > 0.0
     }
 
     /// Number of eligible clients at duration `d` — the cheap necessary
@@ -239,15 +224,16 @@ impl SelArena {
     }
 
     /// Fill `scratch` with the probe instance for duration `d`: slice
-    /// views into the arena for every eligible client plus the parallel
-    /// id map. Returns false when fewer than `n` clients survive the
-    /// filters (the probe is infeasible without solving).
-    pub fn fill_probe<'a>(&'a self, scratch: &mut ProbeScratch<'a>, d: usize) -> bool {
+    /// views into the borrowed forecast window for every eligible client
+    /// plus the parallel id map. Returns false when fewer than `n`
+    /// clients survive the filters (the probe is infeasible without
+    /// solving).
+    pub fn fill_probe(&self, scratch: &mut ProbeScratch<'a>, d: usize) -> bool {
         assert!(d >= 1 && d <= self.d_max, "probe duration {d} out of range");
         scratch.n = self.n;
         scratch.energy.clear();
         for p in 0..self.n_domains {
-            scratch.energy.push(&self.energy[p * self.d_max..p * self.d_max + d]);
+            scratch.energy.push(&self.fc.energy_row(p)[..d]);
         }
         scratch.clients.clear();
         scratch.ids.clear();
@@ -261,7 +247,7 @@ impl SelArena {
                 delta: self.delta[i],
                 m_min: self.m_min[i],
                 m_max: self.m_max[i],
-                spare: &self.spare[i * self.d_max..i * self.d_max + d],
+                spare: &self.fc.spare_row(i)[..d],
             });
             scratch.ids.push(i);
         }
@@ -274,6 +260,7 @@ mod tests {
     use super::*;
     use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
     use crate::energy::PowerDomain;
+    use crate::selection::ring::FcBuffers;
     use crate::selection::ClientRoundState;
     use crate::trace::forecast::SeriesForecaster;
 
@@ -332,6 +319,7 @@ mod tests {
         states[2].blocked = true;
         states[2].sigma = 0.0;
         states[7].sigma = 0.0;
+        let fc = FcBuffers::from_rows(&efc, &sfc, 30);
         let ctx = SelectionContext {
             now: 0,
             n: 3,
@@ -339,20 +327,23 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fc.view(),
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);
         let mut scratch = ProbeScratch::new();
         for d in [1usize, 7, 30] {
             let ok = arena.fill_probe(&mut scratch, d);
-            // manual filter via the context's own reachable_min
+            // manual filter via the context's own reachable_min; the
+            // domain-energy condition mirrors the arena's "> 0" prefix
             let expect: Vec<usize> = (0..clients.len())
                 .filter(|&i| {
                     !states[i].blocked
                         && states[i].sigma > 0.0
-                        && efc[clients[i].domain][..d].iter().sum::<f64>() > 1e-9
+                        && fc.view().energy_row(clients[i].domain)[..d]
+                            .iter()
+                            .fold(0.0f64, |a, &e| a + e as f64)
+                            > 0.0
                         && ctx.reachable_min(i, d)
                 })
                 .collect();
@@ -384,6 +375,7 @@ mod tests {
             SeriesForecaster::perfect(vec![0.0; 40]),
             1.0,
         );
+        let fc = FcBuffers::from_rows(&efc, &sfc, 20);
         let ctx = SelectionContext {
             now: 0,
             n: 2,
@@ -391,8 +383,7 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fc.view(),
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);
@@ -423,6 +414,7 @@ mod tests {
                 s.blocked = rng.bool(0.3);
                 s.sigma = if s.blocked { 0.0 } else { rng.range_f64(0.0, 5.0) };
             }
+            let fc = FcBuffers::from_rows(&efc, &sfc, d_max);
             let ctx = SelectionContext {
                 now: 0,
                 n: 1,
@@ -430,8 +422,7 @@ mod tests {
                 clients: &clients,
                 states: &states,
                 domains: &domains,
-                energy_fc: &efc,
-                spare_fc: &sfc,
+                fc: fc.view(),
                 spare_now: &snow,
             };
             let arena = SelArena::build(&ctx);
@@ -446,6 +437,7 @@ mod tests {
     #[test]
     fn eligibility_is_monotone_in_d() {
         let (clients, states, domains, efc, sfc, snow) = scenario(10, 2, 40.0, 25);
+        let fc = FcBuffers::from_rows(&efc, &sfc, 25);
         let ctx = SelectionContext {
             now: 0,
             n: 2,
@@ -453,8 +445,7 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fc.view(),
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);
@@ -464,5 +455,39 @@ mod tests {
             assert!(count >= prev, "eligibility shrank at d={d}");
             prev = count;
         }
+    }
+
+    #[test]
+    fn arena_over_ring_matches_arena_over_fresh_buffers() {
+        // same filters whether the window is backed by the mirrored ring
+        // (arbitrary head) or flat fresh buffers
+        let (clients, states, _domains, efc, sfc, _snow) =
+            scenario(8, 2, 120.0, 12);
+        let src = crate::selection::ring::SeriesSource {
+            energy: efc
+                .iter()
+                .map(|row| SeriesForecaster::perfect(row.clone()))
+                .collect(),
+            spare: sfc
+                .iter()
+                .map(|row| SeriesForecaster::perfect(row.clone()))
+                .collect(),
+            caps: clients.iter().map(|c| c.capacity()).collect(),
+        };
+        let mut ring = crate::selection::ring::ForecastRing::new();
+        ring.rebuild(&src, 0, 6);
+        for step in 1..=5 {
+            ring.advance(&src);
+            let fresh = FcBuffers::from_source(&src, 0, step, 6);
+            let rv = ring.view();
+            let fv = fresh.view();
+            for p in 0..rv.n_domains() {
+                assert_eq!(rv.energy_row(p), fv.energy_row(p), "step {step}");
+            }
+            for i in 0..rv.n_clients() {
+                assert_eq!(rv.spare_row(i), fv.spare_row(i), "step {step}");
+            }
+        }
+        let _ = states;
     }
 }

@@ -190,6 +190,16 @@ mod tests {
         spare_now: Vec<f64>,
     }
 
+    impl Fixture {
+        fn bufs(&self) -> crate::selection::ring::FcBuffers {
+            crate::selection::ring::FcBuffers::from_rows(
+                &self.energy_fc,
+                &self.spare_fc,
+                60,
+            )
+        }
+    }
+
     fn fixture(n_clients: usize, n_domains: usize, power_w: f64) -> Fixture {
         let clients: Vec<ClientInfo> = (0..n_clients)
             .map(|i| {
@@ -234,7 +244,11 @@ mod tests {
         }
     }
 
-    fn ctx(f: &Fixture, n: usize) -> SelectionContext<'_> {
+    fn ctx<'a>(
+        f: &'a Fixture,
+        bufs: &'a crate::selection::ring::FcBuffers,
+        n: usize,
+    ) -> SelectionContext<'a> {
         SelectionContext {
             now: 0,
             n,
@@ -242,8 +256,7 @@ mod tests {
             clients: &f.clients,
             states: &f.states,
             domains: &f.domains,
-            energy_fc: &f.energy_fc,
-            spare_fc: &f.spare_fc,
+            fc: bufs.view(),
             spare_now: &f.spare_now,
         }
     }
@@ -253,7 +266,8 @@ mod tests {
         let f = fixture(20, 4, 500.0);
         let mut s = Baseline::random();
         let mut rng = Rng::new(0);
-        let d = s.select(&ctx(&f, 5), &mut rng);
+        let b = f.bufs();
+        let d = s.select(&ctx(&f, &b, 5), &mut rng);
         assert_eq!(d.clients.len(), 5);
         assert_eq!(d.n_required, 5);
         let mut u = d.clients.clone();
@@ -267,7 +281,8 @@ mod tests {
         let f = fixture(30, 5, 500.0);
         let mut s = Baseline::oort_over();
         let mut rng = Rng::new(1);
-        let d = s.select(&ctx(&f, 10), &mut rng);
+        let b = f.bufs();
+        let d = s.select(&ctx(&f, &b, 10), &mut rng);
         assert_eq!(d.clients.len(), 13); // ceil(1.3 * 10)
         assert_eq!(d.n_required, 10);
     }
@@ -275,10 +290,11 @@ mod tests {
     #[test]
     fn waits_when_dark() {
         let f = fixture(10, 2, 0.0);
+        let b = f.bufs();
         for strat in [Baseline::random(), Baseline::oort(), Baseline::random_fc()] {
             let mut s = strat;
             let mut rng = Rng::new(2);
-            assert!(s.select(&ctx(&f, 3), &mut rng).wait, "{}", s.name());
+            assert!(s.select(&ctx(&f, &b, 3), &mut rng).wait, "{}", s.name());
         }
     }
 
@@ -289,10 +305,11 @@ mod tests {
             st.sigma = if i < 5 { 100.0 } else { 1.0 };
         }
         let mut s = Baseline::oort();
+        let b = f.bufs();
         let mut hits = 0;
         for seed in 0..50 {
             let mut rng = Rng::new(seed);
-            let d = s.select(&ctx(&f, 5), &mut rng);
+            let d = s.select(&ctx(&f, &b, 5), &mut rng);
             hits += d.clients.iter().filter(|&&c| c < 5).count();
         }
         // ~90% exploitation should put most picks on the high-σ clients
@@ -305,9 +322,10 @@ mod tests {
         // client 0 has zero spare in the forecast -> unreachable
         f.spare_fc[0] = vec![0.0; 60];
         let mut s = Baseline::random_fc();
+        let b = f.bufs();
         for seed in 0..20 {
             let mut rng = Rng::new(seed);
-            let d = s.select(&ctx(&f, 4), &mut rng);
+            let d = s.select(&ctx(&f, &b, 4), &mut rng);
             assert!(!d.clients.contains(&0));
         }
     }
@@ -316,8 +334,9 @@ mod tests {
     fn upper_bound_ignores_constraints() {
         let f = fixture(10, 2, 0.0); // no energy at all
         let mut s = UpperBound;
+        let b = f.bufs();
         let mut rng = Rng::new(3);
-        let d = s.select(&ctx(&f, 4), &mut rng);
+        let d = s.select(&ctx(&f, &b, 4), &mut rng);
         assert!(!d.wait);
         assert_eq!(d.clients.len(), 4);
         assert!(d.unconstrained);

@@ -67,7 +67,7 @@ impl FedZero {
     /// Algorithm 1: smallest d with a full-size solution, via binary
     /// search over probe views into `arena`. All probes share one scratch
     /// and one solver workspace.
-    fn search(&mut self, arena: &SelArena, n: usize, d_max: usize) -> Option<(Vec<usize>, usize)> {
+    fn search(&mut self, arena: &SelArena<'_>, n: usize, d_max: usize) -> Option<(Vec<usize>, usize)> {
         let mut scratch = ProbeScratch::new();
         let mut ws = AllocWorkspace::default();
         let mut lo = 1usize;
@@ -114,12 +114,16 @@ impl Strategy for FedZero {
         // §Perf: cheap necessary condition before any arena work — if
         // fewer than n clients are even standalone-eligible at d_max, no d
         // can work; skip both the arena build and the O(log d · greedy)
-        // search during dark periods (idle steps stay allocation-light).
+        // search during dark periods. With the persistent ring-arena the
+        // simulator advances incrementally (selection::ring), this gate is
+        // allocation-free and dead domains short-circuit via O(1)
+        // liveness counters, so idle (night) polling never touches a
+        // forecast row.
         if SelArena::quick_eligible_count(ctx) < ctx.n {
             return SelectionDecision::wait();
         }
-        // one flat forecast arena per select(); every probe below borrows
-        // slice views into it
+        // the arena borrows the context's forecast window (no row copies);
+        // every probe below borrows slice views into it
         let arena = SelArena::build(ctx);
         match self.search(&arena, ctx.n, ctx.d_max) {
             Some((clients, d)) => {
@@ -190,8 +194,7 @@ mod tests {
         clients: &'a [ClientInfo],
         states: &'a [ClientRoundState],
         domains: &'a [PowerDomain],
-        energy_fc: &'a [Vec<f64>],
-        spare_fc: &'a [Vec<f64>],
+        fc: crate::selection::ring::FcView<'a>,
         spare_now: &'a [f64],
         n: usize,
         d_max: usize,
@@ -203,8 +206,7 @@ mod tests {
             clients,
             states,
             domains,
-            energy_fc,
-            spare_fc,
+            fc,
             spare_now,
         }
     }
@@ -213,7 +215,7 @@ mod tests {
         clients: &[ClientInfo],
         domains: &[PowerDomain],
         d_max: usize,
-    ) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<f64>) {
+    ) -> (crate::selection::ring::FcBuffers, Vec<f64>) {
         let energy_fc: Vec<Vec<f64>> = domains
             .iter()
             .map(|d| d.forecast_window_wh(0, d_max))
@@ -223,7 +225,10 @@ mod tests {
             .map(|c| vec![c.capacity(); d_max])
             .collect();
         let spare_now: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
-        (energy_fc, spare_fc, spare_now)
+        (
+            crate::selection::ring::FcBuffers::from_rows(&energy_fc, &spare_fc, d_max),
+            spare_now,
+        )
     }
 
     #[test]
@@ -231,8 +236,8 @@ mod tests {
         let clients = mk_clients(12, 3, 50);
         let states = vec![ClientRoundState::default(); 12];
         let domains = mk_domains(3, 800.0, 120);
-        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
-        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 4, 60);
+        let (fcb, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, fcb.view(), &snow, 4, 60);
         let mut fz = FedZero::new(SolverKind::Greedy);
         let mut rng = Rng::new(0);
         let d = fz.select(&ctx, &mut rng);
@@ -248,8 +253,8 @@ mod tests {
         let clients = mk_clients(6, 2, 50);
         let states = vec![ClientRoundState::default(); 6];
         let domains = mk_domains(2, 0.0, 120);
-        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
-        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 2, 60);
+        let (fcb, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, fcb.view(), &snow, 2, 60);
         let mut fz = FedZero::new(SolverKind::Greedy);
         let mut rng = Rng::new(0);
         assert!(fz.select(&ctx, &mut rng).wait);
@@ -264,8 +269,8 @@ mod tests {
             states[i].sigma = 0.0;
         }
         let domains = mk_domains(2, 800.0, 120);
-        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
-        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 3, 60);
+        let (fcb, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, fcb.view(), &snow, 3, 60);
         let mut fz = FedZero::new(SolverKind::Greedy);
         let mut rng = Rng::new(0);
         let d = fz.select(&ctx, &mut rng);
@@ -281,8 +286,8 @@ mod tests {
         let states = vec![ClientRoundState::default(); 4];
         // small device: δ ≈ 70*(10/110)/60 ≈ 0.106 Wh/batch; give 13 Wh/h
         let domains = mk_domains(1, 13.0, 240);
-        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 120);
-        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 2, 120);
+        let (fcb, snow) = full_forecasts(&clients, &domains, 120);
+        let ctx = mk_ctx(&clients, &states, &domains, fcb.view(), &snow, 2, 120);
         let mut fz = FedZero::new(SolverKind::Greedy);
         let mut rng = Rng::new(0);
         let d = fz.select(&ctx, &mut rng);
@@ -313,8 +318,8 @@ mod tests {
         let clients = mk_clients(9, 3, 50);
         let states = vec![ClientRoundState::default(); 9];
         let domains = mk_domains(3, 800.0, 120);
-        let (efc, sfc, snow) = full_forecasts(&clients, &domains, 60);
-        let ctx = mk_ctx(&clients, &states, &domains, &efc, &sfc, &snow, 3, 60);
+        let (fcb, snow) = full_forecasts(&clients, &domains, 60);
+        let ctx = mk_ctx(&clients, &states, &domains, fcb.view(), &snow, 3, 60);
         let mut rng = Rng::new(0);
         let mut g = FedZero::new(SolverKind::Greedy);
         let mut e = FedZero::new(SolverKind::Exact);

@@ -13,12 +13,15 @@ pub mod arena;
 pub mod baselines;
 pub mod fairness;
 pub mod fedzero;
+pub mod ring;
 pub mod semisync;
 pub mod oort;
 
 use crate::client::ClientInfo;
 use crate::energy::PowerDomain;
 use crate::util::rng::Rng;
+
+pub use ring::{FcBuffers, FcSource, FcView, ForecastRing};
 
 /// Per-client mutable state the server tracks across rounds.
 #[derive(Clone, Debug)]
@@ -39,6 +42,13 @@ impl Default for ClientRoundState {
 }
 
 /// Everything a strategy may look at when selecting.
+///
+/// §Perf: forecasts arrive as a borrowed [`FcView`] — contiguous `f32`
+/// rows out of the persistent [`ring::ForecastRing`] (or an owned
+/// [`FcBuffers`] in tests) — instead of the historical `&[Vec<f64>]`
+/// matrices. Strategies and the arena slice these rows directly; nothing
+/// is copied per `select()`, and values are widened to f64 only where the
+/// solvers do arithmetic.
 pub struct SelectionContext<'a> {
     /// current timestep
     pub now: usize,
@@ -49,10 +59,11 @@ pub struct SelectionContext<'a> {
     pub clients: &'a [ClientInfo],
     pub states: &'a [ClientRoundState],
     pub domains: &'a [PowerDomain],
-    /// forecast excess energy per domain for [now, now+d_max), Wh/step
-    pub energy_fc: &'a [Vec<f64>],
-    /// forecast spare capacity per client for [now, now+d_max), batches/step
-    pub spare_fc: &'a [Vec<f64>],
+    /// forecast window [now, now+d_max): per-domain excess energy
+    /// (Wh/step) and per-client spare capacity (batches/step, pre-clamped
+    /// to capacity at the source). [`FcView::empty`] for strategies whose
+    /// `needs_forecasts()` is false — those must not read it.
+    pub fc: FcView<'a>,
     /// actual current spare capacity per client (what an energy-agnostic
     /// baseline can observe "right now")
     pub spare_now: &'a [f64],
@@ -75,14 +86,19 @@ impl<'a> SelectionContext<'a> {
 
     /// the paper's line-11 filter: can client `i` reach m_min within
     /// `d` steps per the forecasts, assuming the whole domain budget?
+    ///
+    /// Spare rows are pre-clamped to capacity at the forecast source (see
+    /// `ring`), so no clamp happens here — this fold must stay
+    /// term-for-term identical to the arena's `d_reach` computation or
+    /// the dark-period gate and the probe filter will disagree.
     pub fn reachable_min(&self, i: usize, d: usize) -> bool {
         let c = &self.clients[i];
         let delta = c.delta();
+        let srow = self.fc.spare_row(i);
+        let erow = self.fc.energy_row(c.domain);
         let mut batches = 0.0;
-        for t in 0..d.min(self.spare_fc[i].len()) {
-            batches += self.spare_fc[i][t]
-                .min(self.energy_fc[c.domain][t] / delta)
-                .min(c.capacity());
+        for t in 0..d.min(self.fc.d_max()) {
+            batches += (srow[t] as f64).min(erow[t] as f64 / delta);
             if batches >= c.m_min {
                 return true;
             }
@@ -91,8 +107,10 @@ impl<'a> SelectionContext<'a> {
     }
 }
 
-/// What a strategy decided for this round.
-#[derive(Clone, Debug)]
+/// What a strategy decided for this round. `PartialEq` so the ring-vs-
+/// fresh and parallel-vs-serial equivalence tests can assert decisions
+/// are identical field for field.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SelectionDecision {
     /// selected client ids (indices into `ctx.clients`)
     pub clients: Vec<usize>,
@@ -127,10 +145,11 @@ impl SelectionDecision {
 pub trait Strategy {
     fn name(&self) -> &'static str;
     fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision;
-    /// Does this strategy read `energy_fc` / `spare_fc`? Strategies that
-    /// only look at current availability return false and the simulator
-    /// skips building forecast windows entirely (§Perf: forecast
-    /// construction dominated idle steps for the Random/Oort baselines).
+    /// Does this strategy read the forecast window `ctx.fc`? Strategies
+    /// that only look at current availability return false and the
+    /// simulator never builds or advances the forecast ring for them
+    /// (§Perf: forecast construction dominated idle steps for the
+    /// Random/Oort baselines; they receive `FcView::empty()`).
     fn needs_forecasts(&self) -> bool {
         true
     }

@@ -108,6 +108,7 @@ mod tests {
     #[test]
     fn deadline_caps_round_duration() {
         let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
         let ctx = SelectionContext {
             now: 0,
             n: 3,
@@ -115,8 +116,7 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fcb.view(),
             spare_now: &snow,
         };
         let mut rng = Rng::new(0);
@@ -130,6 +130,7 @@ mod tests {
     #[test]
     fn composes_with_fedzero() {
         let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
         let ctx = SelectionContext {
             now: 0,
             n: 2,
@@ -137,8 +138,7 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fcb.view(),
             spare_now: &snow,
         };
         let mut rng = Rng::new(1);
@@ -168,6 +168,7 @@ mod tests {
             .collect();
         let efc: Vec<Vec<f64>> =
             domains.iter().map(|d| d.forecast_window_wh(0, 60)).collect();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
         let ctx = SelectionContext {
             now: 0,
             n: 2,
@@ -175,8 +176,7 @@ mod tests {
             clients: &clients,
             states: &states,
             domains: &domains,
-            energy_fc: &efc,
-            spare_fc: &sfc,
+            fc: fcb.view(),
             spare_now: &snow,
         };
         let mut rng = Rng::new(2);

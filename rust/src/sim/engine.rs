@@ -1,4 +1,35 @@
 //! The simulation engine.
+//!
+//! §Perf — the two hot structures of the simulation loop:
+//!
+//! * **Persistent forecast ring-arena** ([`crate::selection::ring`]): the
+//!   engine owns one [`ForecastRing`] across the whole run. After every
+//!   executed round it re-anchors the ring (forecasts re-issued at round
+//!   start, as the paper's server does); during consecutive idle (wait)
+//!   polls it *advances* the ring by one slot — evict column t, append
+//!   column t+d_max at the same issue anchor, patch the integer liveness
+//!   counters — so a dark-period poll costs O(C + D) instead of the
+//!   historical O((C + D)·d_max) window re-materialisation. Strategies
+//!   see the window as a borrowed [`FcView`] in the [`SelectionContext`];
+//!   nothing is copied per select(). Under `ErrorLevel::Perfect` the
+//!   anchoring is unobservable (forecast = actual regardless of issue
+//!   time); under `Realistic` it means idle-period re-polls reuse the
+//!   forecast issued at the start of the idle stretch rather than
+//!   re-issuing every simulated minute — which matches how forecast
+//!   vendors actually behave and is what makes the incremental advance
+//!   byte-identical to a fresh build (see the ring docs).
+//! * **Parallel round execution**: within one step, power attribution is
+//!   independent across domains (a selected client belongs to exactly one
+//!   domain), so `execute_round` computes every domain's water-filling
+//!   grants in a fork-join (`util::par`, reused per-worker scratch) and
+//!   then applies them — progress, energy metering, training — serially
+//!   in ascending (domain, slot) order. The apply order and all f64
+//!   arithmetic are identical to the serial path, so metrics and model
+//!   state are bit-identical whether or not the fan-out engages
+//!   (`par_domains_min` + `par_slots_min` gate it on domain count AND
+//!   work; tests force both paths and compare). The per-step
+//!   `active`/`reqs`/grant buffers are hoisted out of the step loop and
+//!   refilled in place on both paths.
 
 use anyhow::Result;
 
@@ -7,8 +38,10 @@ use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
 use crate::fl::{fedavg_weights, TrainBackend};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
 use crate::selection::oort::UtilityTracker;
+use crate::selection::ring::{FcSource, FcView, ForecastRing};
 use crate::selection::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
 use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
+use crate::util::par;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -64,6 +97,16 @@ pub struct Simulation<'a, B: TrainBackend> {
     pub load_fc_level: ErrorLevel,
     pub backend: &'a mut B,
     pub strategy: &'a mut dyn Strategy,
+    /// fan the per-domain round-execution loop out across threads once a
+    /// round spans at least this many domains AND selects at least
+    /// `par_slots_min` clients — both gates, because thread spawn/join
+    /// costs more than water-filling a handful of slots (identical
+    /// results either way; tests pin these to 1 / usize::MAX to force
+    /// both paths)
+    pub par_domains_min: usize,
+    /// minimum selected-client count before the per-domain fan-out
+    /// engages (see `par_domains_min`)
+    pub par_slots_min: usize,
     // --- state ---
     pub states: Vec<ClientRoundState>,
     pub utility: UtilityTracker,
@@ -72,6 +115,123 @@ pub struct Simulation<'a, B: TrainBackend> {
     pub rng: Rng,
     /// wall-clock spent inside strategy.select (overhead accounting)
     pub select_time: std::time::Duration,
+}
+
+/// Actual spare capacity of client `i` at step `t` (batches/step) — free
+/// function so the parallel round-execution closures can capture plain
+/// slices instead of the whole (non-Sync) simulation.
+fn spare_actual_raw(
+    clients: &[ClientInfo],
+    load_actual: &[Vec<f64>],
+    i: usize,
+    t: usize,
+) -> f64 {
+    let util = load_actual
+        .get(i)
+        .and_then(|v| v.get(t))
+        .copied()
+        .unwrap_or(1.0);
+    clients[i].capacity() * (1.0 - util)
+}
+
+/// The engine's forecast source for the ring: domain energy through each
+/// domain's forecaster, client spare through the load forecasters,
+/// pre-clamped to capacity (`ErrorLevel::Unavailable` = assume full m_c).
+struct EngineFcSource<'a> {
+    domains: &'a [PowerDomain],
+    clients: &'a [ClientInfo],
+    load_fc: &'a [SeriesForecaster],
+    level: ErrorLevel,
+}
+
+impl FcSource for EngineFcSource<'_> {
+    fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn energy_at(&self, t0: usize, t: usize, p: usize) -> f64 {
+        self.domains[p].forecast_energy_wh(t0, t)
+    }
+
+    fn spare_at(&self, t0: usize, t: usize, i: usize) -> f64 {
+        let cap = self.clients[i].capacity();
+        match self.level {
+            ErrorLevel::Unavailable => cap,
+            _ => self.load_fc[i].forecast(t0, t).clamp(0.0, cap),
+        }
+    }
+}
+
+/// One step of one domain's round execution, compute phase only (pure):
+/// filter the still-active slots, build their power requests from the
+/// *pre-step* progress snapshot, water-fill the domain's actual energy,
+/// and emit `(slot, batch_steps)` grants. Domains never share slots, so
+/// the snapshot equals the live value and parallel == serial, bit for
+/// bit. The caller applies grants (progress/meter/training) serially.
+#[allow(clippy::too_many_arguments)]
+fn compute_domain_grants(
+    clients: &[ClientInfo],
+    domains: &[PowerDomain],
+    load_actual: &[Vec<f64>],
+    sel: &[usize],
+    progress: &[f64],
+    unconstrained: bool,
+    dom: usize,
+    slots: &[usize],
+    tt: usize,
+    active: &mut Vec<usize>,
+    reqs: &mut Vec<PowerRequest>,
+    out: &mut Vec<(usize, f64)>,
+) {
+    out.clear();
+    active.clear();
+    active.extend(
+        slots
+            .iter()
+            .copied()
+            .filter(|&s| progress[s] < clients[sel[s]].m_max - 1e-9),
+    );
+    if active.is_empty() {
+        return;
+    }
+    if unconstrained {
+        // Upper bound: full capacity, grid energy
+        for &s in active.iter() {
+            let c = &clients[sel[s]];
+            out.push((s, c.capacity().min(c.m_max - progress[s])));
+        }
+        return;
+    }
+    reqs.clear();
+    reqs.extend(active.iter().map(|&s| {
+        let c = &clients[sel[s]];
+        let delta = c.delta();
+        let spare = spare_actual_raw(clients, load_actual, sel[s], tt);
+        PowerRequest {
+            need_min_wh: delta * (c.m_min - progress[s]).max(0.0),
+            need_max_wh: delta * (c.m_max - progress[s]).max(0.0),
+            usable_wh: delta * spare.min(c.m_max - progress[s]).max(0.0),
+        }
+    }));
+    let available = domains[dom].energy_wh(tt);
+    if available.is_infinite() {
+        // unlimited domain: everyone gets their cap
+        for (&s, r) in active.iter().zip(reqs.iter()) {
+            out.push((s, r.usable_wh.min(r.need_max_wh) / clients[sel[s]].delta()));
+        }
+    } else {
+        let alloc = attribute_power(available, reqs);
+        out.extend(
+            active
+                .iter()
+                .zip(&alloc)
+                .map(|(&s, &wh)| (s, wh / clients[sel[s]].delta())),
+        );
+    }
 }
 
 impl<'a, B: TrainBackend> Simulation<'a, B> {
@@ -99,6 +259,8 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             load_fc_level,
             backend,
             strategy,
+            par_domains_min: 8,
+            par_slots_min: 256,
             states: vec![ClientRoundState::default(); n_clients],
             utility: UtilityTracker::new(n_clients),
             meter: EnergyMeter::new(n_clients, n_domains),
@@ -110,30 +272,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
 
     /// actual spare capacity of client `i` at step `t` (batches/step)
     fn spare_actual(&self, i: usize, t: usize) -> f64 {
-        let util = self
-            .load_actual
-            .get(i)
-            .and_then(|v| v.get(t))
-            .copied()
-            .unwrap_or(1.0);
-        self.clients[i].capacity() * (1.0 - util)
-    }
-
-    /// spare-capacity forecast window for client `i` issued at `t0`,
-    /// written into a reused buffer
-    fn spare_forecast_window_into(&self, i: usize, t0: usize, h: usize, out: &mut Vec<f64>) {
-        out.clear();
-        match self.load_fc_level {
-            ErrorLevel::Unavailable => {
-                out.resize(h, self.clients[i].capacity());
-            }
-            _ => {
-                let cap = self.clients[i].capacity();
-                out.extend(
-                    (t0..t0 + h).map(|t| self.load_fc[i].forecast(t0, t).clamp(0.0, cap)),
-                );
-            }
-        }
+        spare_actual_raw(&self.clients, &self.load_actual, i, t)
     }
 
     /// Run the full simulation: returns the metrics log (also stored).
@@ -141,12 +280,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut global = self.backend.init_params(self.cfg.seed as i32)?;
         let mut t = 0usize;
         let mut round = 0usize;
-        // §Perf: forecast/state buffers are hoisted out of the step loop
-        // and refilled in place — selection attempts during idle (dark)
-        // periods no longer allocate 2·C + D vectors per step.
+        // §Perf: the forecast ring-arena persists across the whole run —
+        // see the module docs. `last_was_wait` decides advance (same
+        // anchor, O(C+D)) vs rebuild (re-issue at t, O((C+D)·d_max)).
+        let mut ring = ForecastRing::new();
+        let mut last_was_wait = false;
         let mut samples: Vec<usize> = Vec::with_capacity(self.clients.len());
-        let mut energy_fc: Vec<Vec<f64>> = vec![Vec::new(); self.domains.len()];
-        let mut spare_fc: Vec<Vec<f64>> = vec![Vec::new(); self.clients.len()];
         let mut spare_now: Vec<f64> = Vec::with_capacity(self.clients.len());
         while t < self.cfg.horizon {
             // refresh σ, assemble context, ask the strategy
@@ -154,16 +293,21 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             samples.extend(self.clients.iter().map(|c| c.num_samples()));
             self.utility.refresh(&mut self.states, &samples);
 
-            // §Perf: forecast windows are only materialised for strategies
-            // that read them (FedZero, *-fc); Random/Oort/UpperBound skip
-            // ~C·d_max hash-noise draws per selection attempt.
+            // §Perf: the window is only maintained for strategies that
+            // read forecasts (FedZero, *-fc); Random/Oort/UpperBound
+            // never pay for it.
             let wants_fc = self.strategy.needs_forecasts();
             if wants_fc {
-                for (p, buf) in energy_fc.iter_mut().enumerate() {
-                    self.domains[p].forecast_window_wh_into(t, self.cfg.d_max, buf);
-                }
-                for (i, buf) in spare_fc.iter_mut().enumerate() {
-                    self.spare_forecast_window_into(i, t, self.cfg.d_max, buf);
+                let src = EngineFcSource {
+                    domains: &self.domains,
+                    clients: &self.clients,
+                    load_fc: &self.load_fc,
+                    level: self.load_fc_level,
+                };
+                if ring.is_built() && last_was_wait && t == ring.window_start() + 1 {
+                    ring.advance(&src);
+                } else if !ring.is_built() || ring.window_start() != t {
+                    ring.rebuild(&src, t, self.cfg.d_max);
                 }
             }
             spare_now.clear();
@@ -176,8 +320,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     clients: &self.clients,
                     states: &self.states,
                     domains: &self.domains,
-                    energy_fc: &energy_fc,
-                    spare_fc: &spare_fc,
+                    fc: if wants_fc { ring.view() } else { FcView::empty() },
                     spare_now: &spare_now,
                 };
                 let t0 = std::time::Instant::now();
@@ -186,9 +329,11 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 d
             };
             if decision.wait {
+                last_was_wait = true;
                 t += 1;
                 continue;
             }
+            last_was_wait = false;
 
             let outcome = self.execute_round(&decision, t, &global)?;
 
@@ -269,7 +414,8 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut loss_batches = vec![0usize; k];
         let mut duration = 0usize;
 
-        // group selected clients by domain once
+        // group selected clients by domain once per round (ascending
+        // domain order — the serial apply order)
         let mut by_domain: std::collections::BTreeMap<usize, Vec<usize>> =
             std::collections::BTreeMap::new();
         for (slot, &c) in sel.iter().enumerate() {
@@ -278,6 +424,14 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 .or_default()
                 .push(slot);
         }
+        let groups: Vec<(usize, Vec<usize>)> = by_domain.into_iter().collect();
+
+        // §Perf: all per-step buffers hoisted out of the step loop —
+        // serial steps are allocation-free in steady state (the historical
+        // code rebuilt `active`/`reqs`/`batch_steps` per domain per step)
+        let mut grants: Vec<Vec<(usize, f64)>> = vec![Vec::new(); groups.len()];
+        let mut active: Vec<usize> = Vec::new();
+        let mut reqs: Vec<PowerRequest> = Vec::new();
 
         let round_cap = decision.max_duration.max(1).min(self.cfg.d_max);
         for step in 0..round_cap {
@@ -287,68 +441,61 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             }
             duration = step + 1;
 
-            for (&dom, slots) in &by_domain {
-                // demands of still-active clients in this domain
-                let mut active: Vec<usize> = slots
-                    .iter()
-                    .copied()
-                    .filter(|&s| {
-                        progress[s] < self.clients[sel[s]].m_max - 1e-9
-                    })
-                    .collect();
-                if active.is_empty() {
-                    continue;
-                }
-                let batch_steps: Vec<f64> = if decision.unconstrained {
-                    // Upper bound: full capacity, grid energy
-                    active
-                        .iter()
-                        .map(|&s| {
-                            let c = &self.clients[sel[s]];
-                            c.capacity().min(c.m_max - progress[s])
-                        })
-                        .collect()
+            // compute phase: per-domain water-filling, parallel at scale.
+            // The fan-out gates on BOTH domain count and selected-slot
+            // count (thread spawn/join dwarfs a few slots' float work).
+            // Both paths refill the hoisted `grants` rows in place, so
+            // steady-state steps allocate nothing either way. Closures
+            // capture plain slices only (the backend/strategy fields are
+            // not Sync) and read the pre-step `progress` snapshot.
+            {
+                let clients = &self.clients;
+                let domains = &self.domains;
+                let load_actual = &self.load_actual;
+                let progress_ro: &[f64] = &progress;
+                let unconstrained = decision.unconstrained;
+                let use_par = groups.len() >= self.par_domains_min
+                    && k >= self.par_slots_min
+                    && par::threads() > 1;
+                if use_par {
+                    let groups = &groups;
+                    par::par_fill_rows_scratch(
+                        &mut grants,
+                        1,
+                        0,
+                        || (Vec::new(), Vec::new()),
+                        |g,
+                         row: &mut [Vec<(usize, f64)>],
+                         (active, reqs): &mut (Vec<usize>, Vec<PowerRequest>)| {
+                            compute_domain_grants(
+                                clients, domains, load_actual, sel, progress_ro,
+                                unconstrained, groups[g].0, &groups[g].1, tt,
+                                active, reqs, &mut row[0],
+                            );
+                        },
+                    );
                 } else {
-                    let reqs: Vec<PowerRequest> = active
-                        .iter()
-                        .map(|&s| {
-                            let c = &self.clients[sel[s]];
-                            let delta = c.delta();
-                            let spare = self.spare_actual(sel[s], tt);
-                            PowerRequest {
-                                need_min_wh: delta
-                                    * (c.m_min - progress[s]).max(0.0),
-                                need_max_wh: delta
-                                    * (c.m_max - progress[s]).max(0.0),
-                                usable_wh: delta
-                                    * spare.min(c.m_max - progress[s]).max(0.0),
-                            }
-                        })
-                        .collect();
-                    let available = self.domains[dom].energy_wh(tt);
-                    let alloc = if available.is_infinite() {
-                        // unlimited domain: everyone gets their cap
-                        reqs.iter()
-                            .map(|r| r.usable_wh.min(r.need_max_wh))
-                            .collect()
-                    } else {
-                        attribute_power(available, &reqs)
-                    };
-                    active
-                        .iter()
-                        .zip(&alloc)
-                        .map(|(&s, &wh)| wh / self.clients[sel[s]].delta())
-                        .collect()
-                };
+                    for (g, (dom, slots)) in groups.iter().enumerate() {
+                        compute_domain_grants(
+                            clients, domains, load_actual, sel, progress_ro,
+                            unconstrained, *dom, slots, tt,
+                            &mut active, &mut reqs, &mut grants[g],
+                        );
+                    }
+                }
+            }
 
-                for (idx, &s) in active.iter().enumerate() {
-                    let b = batch_steps[idx];
+            // apply phase: serial, ascending (domain, slot) order — the
+            // exact historical sequence, so metering and backend calls
+            // are identical to the sequential execution
+            for (g, (dom, _slots)) in groups.iter().enumerate() {
+                for &(s, b) in &grants[g] {
                     if b <= 0.0 {
                         continue;
                     }
                     progress[s] += b;
                     let wh = b * self.clients[sel[s]].delta();
-                    self.meter.record(sel[s], dom, wh);
+                    self.meter.record(sel[s], *dom, wh);
                     // run the whole batches that became available
                     let want = progress[s].floor() as usize;
                     if want > executed[s] {
@@ -364,8 +511,6 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                         executed[s] = want;
                     }
                 }
-                // placate borrowck lint: active consumed here
-                active.clear();
             }
 
             // end condition: n_required clients reached their minimum
@@ -466,6 +611,14 @@ mod tests {
         strategy: &mut dyn Strategy,
         power_w: f64,
     ) -> (MetricsLog, f64) {
+        run_sim_par(strategy, power_w, 8)
+    }
+
+    fn run_sim_par(
+        strategy: &mut dyn Strategy,
+        power_w: f64,
+        par_domains_min: usize,
+    ) -> (MetricsLog, f64) {
         let horizon = 600;
         let (clients, domains, load, load_fc) = build(9, 3, power_w, horizon);
         let mut backend = MockBackend::new(9, 8, 0.2, 7);
@@ -487,6 +640,8 @@ mod tests {
             &mut backend,
             strategy,
         );
+        sim.par_domains_min = par_domains_min;
+        sim.par_slots_min = par_domains_min; // force both gates together
         sim.run().unwrap();
         let kwh = sim.meter.total_kwh();
         (sim.metrics, kwh)
@@ -575,5 +730,27 @@ mod tests {
             counts.iter().sum::<usize>(),
             m.rounds.iter().map(|r| r.participants.len()).sum::<usize>()
         );
+    }
+
+    #[test]
+    fn parallel_round_execution_matches_serial_bitwise() {
+        // same sim, forced-parallel vs forced-serial domain execution:
+        // every metric (incl. f64 energy/loss values) must be identical.
+        // On single-core hosts both runs take the serial path and the
+        // assertion is trivially true.
+        for power in [800.0, 100.0, 60.0] {
+            let mut fz_par = FedZero::new(SolverKind::Greedy);
+            let (m_par, kwh_par) = run_sim_par(&mut fz_par, power, 1);
+            let mut fz_ser = FedZero::new(SolverKind::Greedy);
+            let (m_ser, kwh_ser) = run_sim_par(&mut fz_ser, power, usize::MAX);
+            assert_eq!(m_par, m_ser, "metrics diverged at power {power}");
+            assert_eq!(kwh_par, kwh_ser, "energy diverged at power {power}");
+        }
+        // over-selection exercises straggler paths under contention
+        let mut b_par = Baseline::random_over();
+        let (m_par, _) = run_sim_par(&mut b_par, 60.0, 1);
+        let mut b_ser = Baseline::random_over();
+        let (m_ser, _) = run_sim_par(&mut b_ser, 60.0, usize::MAX);
+        assert_eq!(m_par, m_ser);
     }
 }

@@ -24,6 +24,14 @@
 //! perform no heap allocation. The owned [`AllocProblem`] /
 //! [`AllocClient`] types remain as builders for tests and benches and
 //! delegate to the same view-based solver.
+//!
+//! Forecast rows (`spare`, `energy`) are stored as `f32` — the element
+//! type of the persistent forecast ring-arena (`selection::ring`), which
+//! halves the 100k-client window footprint; forecasts carry far less
+//! than 24 bits of real information, see the ring docs. This is the
+//! solver boundary: every value is widened to f64 exactly once, where
+//! arithmetic happens, so all solver layers (flow, closed forms, LP
+//! cross-checks) run on identically-quantised f64 inputs.
 
 use super::flow::{FlowNetwork, EPS};
 
@@ -39,7 +47,7 @@ pub struct AllocClient {
     /// statistical utility weight (σ_c)
     pub weight: f64,
     /// forecast spare capacity per step, batches (m^spare_{c,t})
-    pub spare: Vec<f64>,
+    pub spare: Vec<f32>,
 }
 
 /// Borrowed view of one client: identical semantics to [`AllocClient`]
@@ -50,7 +58,7 @@ pub struct AllocClientView<'a> {
     pub max_batches: f64,
     pub delta: f64,
     pub weight: f64,
-    pub spare: &'a [f64],
+    pub spare: &'a [f32],
 }
 
 impl AllocClient {
@@ -70,7 +78,7 @@ impl AllocClient {
 pub struct AllocProblem {
     pub clients: Vec<AllocClient>,
     /// excess energy forecast per step, Wh (r_{p,t})
-    pub energy: Vec<f64>,
+    pub energy: Vec<f32>,
 }
 
 /// Optimal allocation (batches per client per step).
@@ -99,7 +107,7 @@ pub struct AllocWorkspace {
 /// owned solver, so results are bit-for-bit reproducible.
 fn build_and_run(
     clients: &[AllocClientView<'_>],
-    energy: &[f64],
+    energy: &[f32],
     ws: &mut AllocWorkspace,
 ) -> bool {
     let c_n = clients.len();
@@ -126,7 +134,7 @@ fn build_and_run(
     ws.net.reset(4 + c_n + t_n);
     ws.sched_arcs.clear();
 
-    let total_energy: f64 = energy.iter().sum();
+    let total_energy: f64 = energy.iter().map(|&e| e as f64).sum();
     let mut lb_total = 0.0;
     for (i, c) in clients.iter().enumerate() {
         let lb = c.delta * c.min_batches;
@@ -138,13 +146,13 @@ fn build_and_run(
         // mandatory minimum via the super-source
         ws.net.add_edge(ss, client_node(i), lb, 0.0);
         for j in 0..t_n {
-            let cap = c.delta * c.spare[j];
+            let cap = c.delta * c.spare[j] as f64;
             let id = ws.net.add_edge(client_node(i), time_node(j), cap, 0.0);
             ws.sched_arcs.push(id);
         }
     }
     for (j, &r) in energy.iter().enumerate() {
-        ws.net.add_edge(time_node(j), t, r, 0.0);
+        ws.net.add_edge(time_node(j), t, r as f64, 0.0);
     }
     // circulation return + deficit sink for the lower-bound transform
     ws.net.add_edge(t, s, total_energy + lb_total + 1.0, 0.0);
@@ -165,7 +173,7 @@ fn build_and_run(
 /// greedy insertion/swap loops make thousands of times per selection.
 pub fn solve_objective(
     clients: &[AllocClientView<'_>],
-    energy: &[f64],
+    energy: &[f32],
     ws: &mut AllocWorkspace,
 ) -> Option<f64> {
     if clients.is_empty() {
@@ -190,7 +198,7 @@ pub fn solve_objective(
 /// lower bounds are jointly infeasible under the energy/spare caps.
 pub fn solve_full(
     clients: &[AllocClientView<'_>],
-    energy: &[f64],
+    energy: &[f32],
     ws: &mut AllocWorkspace,
 ) -> Option<Allocation> {
     if clients.is_empty() {
@@ -228,15 +236,15 @@ pub fn solve_full(
 /// domain's exact optimum IS its standalone value — the closed form the
 /// greedy solver uses to skip flow solves on one-member domains).
 pub fn standalone_batches_view(
-    spare: &[f64],
+    spare: &[f32],
     delta: f64,
     max_batches: f64,
-    energy: &[f64],
+    energy: &[f32],
 ) -> f64 {
     let raw: f64 = spare
         .iter()
         .zip(energy)
-        .map(|(&sp, &r)| sp.min(r / delta))
+        .map(|(&sp, &r)| (sp as f64).min(r as f64 / delta))
         .sum();
     raw.min(max_batches)
 }
@@ -253,7 +261,7 @@ impl AllocProblem {
 
     /// Max batches a SINGLE client could compute with the whole domain
     /// budget (see [`standalone_batches_view`]).
-    pub fn standalone_batches(client: &AllocClient, energy: &[f64]) -> f64 {
+    pub fn standalone_batches(client: &AllocClient, energy: &[f32]) -> f64 {
         standalone_batches_view(
             &client.spare,
             client.delta,
@@ -267,7 +275,7 @@ impl AllocProblem {
 mod tests {
     use super::*;
 
-    fn client(min: f64, max: f64, delta: f64, w: f64, spare: &[f64]) -> AllocClient {
+    fn client(min: f64, max: f64, delta: f64, w: f64, spare: &[f32]) -> AllocClient {
         AllocClient {
             min_batches: min,
             max_batches: max,
@@ -288,7 +296,7 @@ mod tests {
             assert!(a.totals[i] <= c.max_batches + 1e-6);
             for (j, &b) in a.batches[i].iter().enumerate() {
                 assert!(b >= -1e-9);
-                assert!(b <= c.spare[j] + 1e-6, "spare violated");
+                assert!(b <= c.spare[j] as f64 + 1e-6, "spare violated");
             }
         }
         for j in 0..p.energy.len() {
@@ -298,7 +306,10 @@ mod tests {
                 .enumerate()
                 .map(|(i, c)| a.batches[i][j] * c.delta)
                 .sum();
-            assert!(used <= p.energy[j] + 1e-6, "energy budget violated at {j}");
+            assert!(
+                used <= p.energy[j] as f64 + 1e-6,
+                "energy budget violated at {j}"
+            );
         }
     }
 

@@ -360,13 +360,15 @@ mod tests {
                         delta: rng.range_f64(0.5, 3.0),
                         weight: rng.range_f64(0.1, 5.0),
                         spare: (0..t_n)
-                            .map(|_| rng.range_f64(0.0, 3.0))
+                            .map(|_| rng.range_f64(0.0, 3.0) as f32)
                             .collect(),
                     }
                 })
                 .collect();
-            let energy: Vec<f64> =
-                (0..t_n).map(|_| rng.range_f64(0.0, 6.0)).collect();
+            // f32 like the forecast arena; the LP below reads the same
+            // quantised values so both solvers see identical instances
+            let energy: Vec<f32> =
+                (0..t_n).map(|_| rng.range_f64(0.0, 6.0) as f32).collect();
             let prob = AllocProblem { clients: clients.clone(), energy: energy.clone() };
 
             // LP formulation over m_{c,t}
@@ -386,7 +388,7 @@ mod tests {
                 lp.constrain(&row, Cmp::Ge, clients[i].min_batches);
                 lp.constrain(&row, Cmp::Le, clients[i].max_batches);
                 for j in 0..t_n {
-                    lp.upper_bound(i * t_n + j, clients[i].spare[j]);
+                    lp.upper_bound(i * t_n + j, clients[i].spare[j] as f64);
                 }
             }
             for j in 0..t_n {
@@ -394,7 +396,7 @@ mod tests {
                 for i in 0..c_n {
                     row[i * t_n + j] = clients[i].delta;
                 }
-                lp.constrain(&row, Cmp::Le, energy[j]);
+                lp.constrain(&row, Cmp::Le, energy[j] as f64);
             }
 
             let flow_result = prob.solve();

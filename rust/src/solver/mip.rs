@@ -11,19 +11,24 @@
 //! * [`greedy`] — the scalable default (standalone-score ordering +
 //!   feasibility-checked insertion + swap local search). O(C·T) filter
 //!   cost; reproduces the paper's Fig-8 scalability envelope.
-//! * [`branch_and_bound`] — exact on evaluation-scale instances, using the
-//!   admissible bound Σ σ_c·standalone_c and infeasibility pruning
-//!   (infeasible partial selections stay infeasible for supersets); falls
-//!   back to the greedy incumbent when the node budget runs out.
+//! * [`branch_and_bound`] — exact on evaluation-scale instances, using two
+//!   stacked admissible bounds — Σ σ_c·standalone_c over the top remaining
+//!   candidates, and the per-domain energy-capacity cap ρ_p^max·E_p (a
+//!   domain cannot serve the sum of its members' standalone values; see
+//!   [`branch_and_bound_view`]) — plus infeasibility pruning (infeasible
+//!   partial selections stay infeasible for supersets); falls back to the
+//!   greedy incumbent when the node budget runs out.
 //! * [`enumerate`] — brute force over all C-choose-n subsets; ground truth
 //!   for tests on tiny instances.
 //!
 //! §Perf — the Fig-8 scale path. The solvers run on borrowed views
 //! ([`InstanceView`] / [`ClientView`]) whose `spare`/`energy` rows are
-//! slices into a flat forecast arena built once per `select()` call
-//! (see `selection::arena`), so a binary-search probe over the round
-//! duration `d` re-slices the `d_max` arena instead of re-materialising
-//! every forecast, and no solver layer clones a spare or energy vector
+//! `f32` slices straight into the persistent forecast ring-arena the
+//! simulator advances incrementally (see `selection::ring` and
+//! `selection::arena`; f64 widening happens here, at the arithmetic), so
+//! a binary-search probe over the round duration `d` re-slices the
+//! `d_max` window instead of re-materialising every forecast, and no
+//! solver layer clones a spare or energy vector
 //! (the historical `SelClient::as_alloc` spare clone, `eval_domain`
 //! energy clone, and per-probe `w[..d].to_vec()` are all gone). On top:
 //!
@@ -73,8 +78,9 @@ pub struct SelClient {
     pub delta: f64,
     pub m_min: f64,
     pub m_max: f64,
-    /// forecast spare capacity per step (batches)
-    pub spare: Vec<f64>,
+    /// forecast spare capacity per step (batches; f32 — the forecast
+    /// arena element type, widened to f64 at solver arithmetic)
+    pub spare: Vec<f32>,
 }
 
 /// A selection instance for a fixed candidate round duration `d` (= the
@@ -84,8 +90,8 @@ pub struct SelClient {
 pub struct SelInstance {
     pub n: usize,
     pub clients: Vec<SelClient>,
-    /// excess-energy forecast per domain per step, Wh
-    pub energy: Vec<Vec<f64>>,
+    /// excess-energy forecast per domain per step, Wh (f32, see `spare`)
+    pub energy: Vec<Vec<f32>>,
 }
 
 /// Borrowed, `Copy` view of one candidate: scalars plus a slice into the
@@ -97,7 +103,7 @@ pub struct ClientView<'a> {
     pub delta: f64,
     pub m_min: f64,
     pub m_max: f64,
-    pub spare: &'a [f64],
+    pub spare: &'a [f32],
 }
 
 impl<'a> ClientView<'a> {
@@ -118,14 +124,14 @@ impl<'a> ClientView<'a> {
 pub struct InstanceView<'a> {
     pub n: usize,
     pub clients: &'a [ClientView<'a>],
-    pub energy: &'a [&'a [f64]],
+    pub energy: &'a [&'a [f32]],
 }
 
 /// Backing storage adapting an owned [`SelInstance`] to views.
 pub struct ViewStorage<'a> {
     pub n: usize,
     clients: Vec<ClientView<'a>>,
-    energy: Vec<&'a [f64]>,
+    energy: Vec<&'a [f32]>,
 }
 
 impl<'a> ViewStorage<'a> {
@@ -146,7 +152,7 @@ pub struct SelSolution {
 }
 
 impl SelClient {
-    pub fn standalone_batches(&self, energy: &[f64]) -> f64 {
+    pub fn standalone_batches(&self, energy: &[f32]) -> f64 {
         alloc::standalone_batches_view(&self.spare, self.delta, self.m_max, energy)
     }
 }
@@ -676,6 +682,21 @@ pub fn reference_greedy(inst: &SelInstance, swap_passes: usize) -> SelSolution {
 /// Exact branch-and-bound on borrowed views. `node_budget` caps the
 /// search; on exhaustion the best incumbent (at least as good as greedy)
 /// is returned with `optimal = false`.
+///
+/// §Perf — two stacked admissible completion bounds:
+///
+/// 1. the classic Σ of the top `need` remaining standalone scores;
+/// 2. when that fails to prune, a **per-domain energy-capacity cap**: a
+///    domain cannot serve the sum of its members' standalone values —
+///    whatever subset of remaining candidates is picked, domain p's
+///    contribution is at most `min(Σ remaining scores in p,
+///    ρ_p^max · E_p)` where `E_p = Σ_t r_{p,t}` is the window's total
+///    energy and `ρ_p^max = max σ_c/δ_c` over p's candidates (value per
+///    Wh). Both factors upper-bound any feasible per-domain allocation,
+///    so the bound stays admissible; on evaluation-scale instances with
+///    contended domains it prunes far deeper than bound 1 alone.
+///    `rem_score_sum` is maintained by exact save/restore along the DFS
+///    path (no float drift across siblings).
 pub fn branch_and_bound_view(
     inst: InstanceView<'_>,
     node_budget: usize,
@@ -686,6 +707,25 @@ pub fn branch_and_bound_view(
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
     // sorted scores for the completion bound
     let sorted_scores: Vec<f64> = order.iter().map(|&i| scores[i]).collect();
+
+    // per-domain energy-capacity caps (bound 2): dom_cap[p] = ρ_p^max·E_p,
+    // rem_score_sum[p] = Σ positive standalone scores of undecided
+    // candidates in p (all of them at the root)
+    let n_domains = inst.energy.len();
+    let mut dom_cap = vec![0.0f64; n_domains];
+    let mut rem_score_sum = vec![0.0f64; n_domains];
+    for (p, row) in inst.energy.iter().enumerate() {
+        let e_total: f64 = row.iter().map(|&e| e as f64).sum();
+        dom_cap[p] = e_total; // scaled by ρ_p^max below
+    }
+    let mut rho_max = vec![0.0f64; n_domains];
+    for (i, c) in inst.clients.iter().enumerate() {
+        rem_score_sum[c.domain] += scores[i].max(0.0);
+        rho_max[c.domain] = rho_max[c.domain].max(c.sigma / c.delta);
+    }
+    for (cap, rho) in dom_cap.iter_mut().zip(&rho_max) {
+        *cap *= rho;
+    }
 
     let seed = greedy_view(inst, 1, ws);
     let mut best = seed;
@@ -699,6 +739,11 @@ pub fn branch_and_bound_view(
         inst: &'b InstanceView<'a>,
         order: &'b [usize],
         sorted_scores: &'b [f64],
+        /// Σ positive standalone scores of the undecided (suffix)
+        /// candidates per domain — save/restore maintained along the path
+        rem_score_sum: Vec<f64>,
+        /// ρ_p^max · E_p per domain (fixed)
+        dom_cap: &'b [f64],
         ws: &'b mut AllocWorkspace,
         nodes: usize,
         budget: usize,
@@ -708,7 +753,7 @@ pub fn branch_and_bound_view(
     }
 
     impl<'a, 'b> Dfs<'a, 'b> {
-        /// admissible upper bound: exact standalone sum of chosen + top
+        /// admissible upper bound 1: exact standalone sum of chosen + top
         /// remaining standalone scores from position `idx`.
         fn bound(&self, chosen_score: f64, idx: usize, need: usize) -> f64 {
             let mut b = chosen_score;
@@ -720,6 +765,17 @@ pub fn branch_and_bound_view(
                 }
                 taken += 1;
                 i += 1;
+            }
+            b
+        }
+
+        /// admissible upper bound 2: per-domain energy-capacity cap over
+        /// the undecided candidates (see the function docs). Computed only
+        /// when bound 1 fails to prune.
+        fn domain_bound(&self, chosen_score: f64) -> f64 {
+            let mut b = chosen_score;
+            for (rem, cap) in self.rem_score_sum.iter().zip(self.dom_cap) {
+                b += rem.min(*cap);
             }
             b
         }
@@ -744,10 +800,17 @@ pub fn branch_and_bound_view(
             if idx >= self.order.len()
                 || self.order.len() - idx < need
                 || self.bound(chosen_score, idx, need) <= self.best_obj + 1e-12
+                || self.domain_bound(chosen_score) <= self.best_obj + 1e-12
             {
                 return;
             }
             let cand = self.order[idx];
+            // order[idx] leaves the undecided set for both branches: its
+            // value is either exact (in chosen_score) or excluded. Exact
+            // save/restore so sibling subtrees see identical sums.
+            let p = self.inst.clients[cand].domain;
+            let saved_rem = self.rem_score_sum[p];
+            self.rem_score_sum[p] = saved_rem - self.sorted_scores[idx].max(0.0);
             // Branch 1: include (prune infeasible partial selections — the
             // joint lower bounds only tighten as the set grows).
             chosen.push(cand);
@@ -761,6 +824,7 @@ pub fn branch_and_bound_view(
             chosen.pop();
             // Branch 2: exclude
             self.run(chosen, chosen_score, idx + 1);
+            self.rem_score_sum[p] = saved_rem;
         }
     }
 
@@ -768,6 +832,8 @@ pub fn branch_and_bound_view(
         inst: &inst,
         order: &order,
         sorted_scores: &sorted_scores,
+        rem_score_sum,
+        dom_cap: &dom_cap,
         ws,
         nodes: 0,
         budget: node_budget,
@@ -862,12 +928,16 @@ mod tests {
                     delta: rng.range_f64(0.5, 2.5),
                     m_min,
                     m_max: m_min + rng.range_f64(0.0, 6.0),
-                    spare: (0..t_n).map(|_| rng.range_f64(0.0, 2.0)).collect(),
+                    spare: (0..t_n)
+                        .map(|_| rng.range_f64(0.0, 2.0) as f32)
+                        .collect(),
                 }
             })
             .collect();
         let energy = (0..p_n)
-            .map(|_| (0..t_n).map(|_| rng.range_f64(0.0, 5.0)).collect())
+            .map(|_| {
+                (0..t_n).map(|_| rng.range_f64(0.0, 5.0) as f32).collect()
+            })
             .collect();
         SelInstance { n, clients, energy }
     }

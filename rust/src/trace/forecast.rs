@@ -10,6 +10,14 @@
 //! where h = t − t0, σ(h) = σ0·sqrt(h/h0) saturating at σ_max, and ε is a
 //! unit-variance hash-noise — deterministic in (seed, t0, t) so repeated
 //! queries are consistent within a round.
+//!
+//! Because the error depends on the issue time `t0`, consumers that cache
+//! forecast windows must fix an **anchor**: the persistent ring-arena
+//! (`selection::ring`) keeps the `t0` it was built with across
+//! incremental advances and re-anchors (re-issues) at round boundaries —
+//! the simulated server queries forecasts at round start, not every
+//! polled minute. `forecast(t0, t)` must stay pure in `(t0, t)` for that
+//! caching to be sound (guarded by `forecast_is_deterministic_per_issue_time`).
 
 use crate::util::rng::Rng;
 

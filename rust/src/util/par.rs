@@ -2,11 +2,17 @@
 //!
 //! The offline vendor set has no `rayon`, so the selection pipeline's
 //! data-parallel stages (arena construction, standalone scoring, swap
-//! candidate scanning) use this instead: deterministic chunked fan-out
-//! with results merged in index order, so parallel and sequential
-//! execution produce bit-identical output. Every entry point takes a
-//! `min_serial` threshold below which it runs inline — the unit-test and
-//! evaluation-scale instances never pay thread-spawn overhead.
+//! candidate scanning, per-domain round execution) use this instead:
+//! deterministic chunked fan-out with results merged in index order, so
+//! parallel and sequential execution produce bit-identical output. Every
+//! entry point takes a `min_serial` threshold below which it runs inline
+//! — the unit-test and evaluation-scale instances never pay thread-spawn
+//! overhead.
+//!
+//! Two primitives own the chunking policy ([`par_ranges`] for
+//! collect-style maps, [`par_fill_rows_scratch`] for in-place disjoint
+//! row fills); everything else is a thin wrapper, so a change to the
+//! worker/chunk computation cannot silently diverge between callers.
 
 use std::thread;
 
@@ -15,64 +21,32 @@ pub fn threads() -> usize {
     thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
 }
 
-/// `(0..n).map(f)` collected in order, chunked across threads when
-/// `n >= min_serial` and more than one core is available. `f` must be
-/// index-deterministic: the output is identical to the serial map.
-pub fn par_map<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let workers = threads();
-    if n == 0 || n < min_serial || workers <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let workers = workers.min(n);
+/// The shared chunking policy: ceil-split `n` items over the available
+/// workers so every chunk is non-empty (many-core hosts, small n).
+/// Returns (chunk_size, n_chunks).
+fn chunking(n: usize) -> (usize, usize) {
+    let workers = threads().min(n).max(1);
     let chunk = (n + workers - 1) / workers;
-    // ceil(n/chunk) chunks, so every chunk is non-empty even when
-    // workers*chunk overshoots n (many-core hosts, small n)
     let n_chunks = (n + chunk - 1) / chunk;
-    let mut out: Vec<T> = Vec::with_capacity(n);
-    let parts: Vec<Vec<T>> = thread::scope(|s| {
-        let handles: Vec<_> = (0..n_chunks)
-            .map(|k| {
-                let f = &f;
-                s.spawn(move || {
-                    let start = k * chunk;
-                    let end = ((k + 1) * chunk).min(n);
-                    (start..end).map(f).collect::<Vec<T>>()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("par_map worker panicked"))
-            .collect()
-    });
-    for part in parts {
-        out.extend(part);
-    }
-    out
+    (chunk, n_chunks)
 }
 
 /// Split `0..n` into contiguous ranges, run `f(start, end)` on each (in
 /// parallel when `n >= min_serial`), and return the per-range results in
 /// range order. Lets callers keep per-thread scratch state inside `f`.
+/// This is the core primitive every map-style wrapper builds on.
 pub fn par_ranges<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, usize) -> T + Sync,
 {
-    let workers = threads();
     if n == 0 {
         return Vec::new();
     }
-    if n < min_serial || workers <= 1 {
+    if n < min_serial || threads() <= 1 {
         return vec![f(0, n)];
     }
-    let workers = workers.min(n);
-    let chunk = (n + workers - 1) / workers;
-    let n_chunks = (n + chunk - 1) / chunk;
+    let (chunk, n_chunks) = chunking(n);
     thread::scope(|s| {
         let handles: Vec<_> = (0..n_chunks)
             .map(|k| {
@@ -91,31 +65,74 @@ where
     })
 }
 
-/// Fill `out` (length = rows × `row_len`) row by row via
-/// `f(row_index, row_slice)`, fanning contiguous row blocks out across
-/// threads when there are at least `min_serial_rows` rows. Rows are
-/// disjoint, so parallel and serial fills write identical bytes.
-pub fn par_fill_rows<T, F>(out: &mut [T], row_len: usize, min_serial_rows: usize, f: F)
+/// [`par_map`] with per-worker scratch state: `init()` builds one scratch
+/// per worker (or one total on the serial path), and `f(i, scratch)` may
+/// mutate it freely between calls. `f` must be index-deterministic given
+/// *any* scratch state (scratch is reuse-only — buffers, workspaces), so
+/// the output is identical to the serial map.
+pub fn par_map_scratch<T, S, I, F>(n: usize, min_serial: usize, init: I, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(usize, &mut [T]) + Sync,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let parts = par_ranges(n, min_serial, |start, end| {
+        let mut scratch = init();
+        (start..end).map(|i| f(i, &mut scratch)).collect::<Vec<T>>()
+    });
+    let mut out = Vec::with_capacity(n);
+    for part in parts {
+        out.extend(part);
+    }
+    out
+}
+
+/// `(0..n).map(f)` collected in order, chunked across threads when
+/// `n >= min_serial` and more than one core is available. `f` must be
+/// index-deterministic: the output is identical to the serial map.
+pub fn par_map<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    par_map_scratch(n, min_serial, || (), |i, _| f(i))
+}
+
+/// [`par_fill_rows`] with per-worker scratch state (same contract as
+/// [`par_map_scratch`]): fill `out` (length = rows × `row_len`) row by
+/// row via `f(row_index, row_slice, scratch)`, fanning contiguous row
+/// blocks out across threads when there are at least `min_serial_rows`
+/// rows. Rows are disjoint, so parallel and serial fills write identical
+/// bytes. Used by the simulation engine to recompute per-domain grant
+/// rows in place — the row buffers keep their capacity across steps and
+/// the request/active scratch is reused within each worker.
+pub fn par_fill_rows_scratch<T, S, I, F>(
+    out: &mut [T],
+    row_len: usize,
+    min_serial_rows: usize,
+    init: I,
+    f: F,
+) where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
 {
     if row_len == 0 || out.is_empty() {
         return;
     }
     debug_assert_eq!(out.len() % row_len, 0, "out is not a whole number of rows");
     let n_rows = out.len() / row_len;
-    let workers = threads();
-    if n_rows < min_serial_rows || workers <= 1 {
+    if n_rows < min_serial_rows || threads() <= 1 {
+        let mut scratch = init();
         for (r, row) in out.chunks_mut(row_len).enumerate() {
-            f(r, row);
+            f(r, row, &mut scratch);
         }
         return;
     }
-    let workers = workers.min(n_rows);
-    let rows_per = (n_rows + workers - 1) / workers;
+    let (rows_per, _) = chunking(n_rows);
     thread::scope(|s| {
         let f = &f;
+        let init = &init;
         let mut handles = Vec::new();
         let mut rest: &mut [T] = out;
         let mut r0 = 0usize;
@@ -126,8 +143,9 @@ where
             rest = tail;
             let start = r0;
             handles.push(s.spawn(move || {
+                let mut scratch = init();
                 for (k, row) in head.chunks_mut(row_len).enumerate() {
-                    f(start + k, row);
+                    f(start + k, row, &mut scratch);
                 }
             }));
             r0 += take;
@@ -136,6 +154,18 @@ where
             h.join().expect("par_fill_rows worker panicked");
         }
     });
+}
+
+/// Fill `out` (length = rows × `row_len`) row by row via
+/// `f(row_index, row_slice)`, fanning contiguous row blocks out across
+/// threads when there are at least `min_serial_rows` rows. Rows are
+/// disjoint, so parallel and serial fills write identical bytes.
+pub fn par_fill_rows<T, F>(out: &mut [T], row_len: usize, min_serial_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_fill_rows_scratch(out, row_len, min_serial_rows, || (), |r, row, _| f(r, row));
 }
 
 #[cfg(test)]
@@ -163,6 +193,25 @@ mod tests {
     }
 
     #[test]
+    fn par_map_scratch_matches_serial_and_reuses_buffers() {
+        // scratch is a reusable buffer; output must equal the plain map
+        // regardless of chunking
+        let compute = |i: usize, buf: &mut Vec<u64>| -> u64 {
+            buf.clear();
+            buf.extend((0..=i as u64 % 7).map(|k| k * 3));
+            buf.iter().sum::<u64>() + i as u64
+        };
+        let serial: Vec<u64> = {
+            let mut buf = Vec::new();
+            (0..5_000).map(|i| compute(i, &mut buf)).collect()
+        };
+        let parallel = par_map_scratch(5_000, 0, Vec::new, compute);
+        assert_eq!(serial, parallel);
+        let inline = par_map_scratch(5_000, 1_000_000, Vec::new, compute);
+        assert_eq!(serial, inline);
+    }
+
+    #[test]
     fn par_fill_rows_matches_serial_fill() {
         let rows = 513usize;
         let row_len = 7usize;
@@ -177,6 +226,30 @@ mod tests {
         }
         let mut parallel = vec![0u64; rows * row_len];
         par_fill_rows(&mut parallel, row_len, 0, fill);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_fill_rows_scratch_reuses_row_capacity_in_place() {
+        // rows are owned Vecs refilled in place (the engine's grant
+        // pattern): contents must match the serial fill and survive
+        // arbitrary chunking
+        let n = 257usize;
+        let fill = |r: usize, row: &mut [Vec<usize>], buf: &mut Vec<usize>| {
+            buf.clear();
+            buf.extend(0..r % 5);
+            row[0].clear();
+            row[0].extend(buf.iter().map(|&x| x + r));
+        };
+        let mut serial: Vec<Vec<usize>> = vec![Vec::new(); n];
+        {
+            let mut buf = Vec::new();
+            for r in 0..n {
+                fill(r, &mut serial[r..r + 1], &mut buf);
+            }
+        }
+        let mut parallel: Vec<Vec<usize>> = vec![Vec::new(); n];
+        par_fill_rows_scratch(&mut parallel, 1, 0, Vec::new, fill);
         assert_eq!(serial, parallel);
     }
 

@@ -1,0 +1,193 @@
+//! Ring-arena equivalence at the full selection level: N consecutive
+//! ring-advanced windows must drive FedZero to byte-identical
+//! `SelectionDecision`s as fresh-built windows at the same forecast
+//! anchor — across forecast-error models, dark periods, and blocklist
+//! patterns. (The row-level byte identity is property-tested inside
+//! `selection::ring`; this exercises the whole arena → probe → solver
+//! pipeline on top.)
+
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+use fedzero::energy::PowerDomain;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::ring::{FcBuffers, ForecastRing, SeriesSource};
+use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
+use fedzero::trace::forecast::SeriesForecaster;
+use fedzero::util::prop::forall;
+use fedzero::util::rng::Rng;
+
+struct Scenario {
+    clients: Vec<ClientInfo>,
+    states: Vec<ClientRoundState>,
+    domains: Vec<PowerDomain>,
+    spare_now: Vec<f64>,
+    src: SeriesSource,
+    d_max: usize,
+}
+
+/// Random scenario with sine-shaped power (dark stretches included);
+/// `realistic` toggles the horizon-growing forecast error, `dark` forces
+/// an all-zero energy horizon.
+fn random_scenario(rng: &mut Rng, realistic: bool, dark: bool) -> Scenario {
+    let n_domains = rng.range(1, 4);
+    let n_clients = rng.range(4, 16);
+    let d_max = rng.range(5, 30);
+    let horizon = d_max + 80;
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[rng.below(3)],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, rng.below(n_domains), p, (0..50).collect(), 10)
+        })
+        .collect();
+    let mut states = vec![ClientRoundState::default(); n_clients];
+    for s in states.iter_mut() {
+        s.blocked = rng.bool(0.2);
+        s.sigma = if s.blocked { 0.0 } else { rng.range_f64(0.0, 10.0) };
+    }
+    let power_series: Vec<Vec<f64>> = (0..n_domains)
+        .map(|_| {
+            if dark {
+                vec![0.0; horizon]
+            } else {
+                let base = rng.range_f64(50.0, 800.0);
+                (0..horizon)
+                    .map(|t| (base * ((t as f64 / 15.0).sin())).max(0.0))
+                    .collect()
+            }
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = power_series
+        .iter()
+        .enumerate()
+        .map(|(i, series)| {
+            PowerDomain::new(
+                i,
+                "d",
+                800.0,
+                series.clone(),
+                SeriesForecaster::perfect(series.clone()),
+                1.0,
+            )
+        })
+        .collect();
+    let mk = |rng: &mut Rng, series: Vec<f64>| {
+        if realistic {
+            SeriesForecaster::realistic(series, rng.next_u64(), 60.0)
+        } else {
+            SeriesForecaster::perfect(series)
+        }
+    };
+    // the source converts power (W) forecasts to Wh/step itself via the
+    // domain; here we feed Wh/step series directly (step = 1 min)
+    let energy_fc = power_series
+        .iter()
+        .map(|s| mk(rng, s.iter().map(|w| w / 60.0).collect()))
+        .collect();
+    let caps: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+    let spare_fc = caps
+        .iter()
+        .map(|&cap| {
+            let series: Vec<f64> = (0..horizon)
+                .map(|_| cap * rng.range_f64(0.2, 1.2))
+                .collect();
+            mk(rng, series)
+        })
+        .collect();
+    let spare_now = caps.iter().map(|&c| c * 0.8).collect();
+    Scenario {
+        clients,
+        states,
+        domains,
+        spare_now,
+        src: SeriesSource { energy: energy_fc, spare: spare_fc, caps },
+        d_max,
+    }
+}
+
+fn select_with<'a>(
+    s: &'a Scenario,
+    fc: fedzero::selection::ring::FcView<'a>,
+    now: usize,
+    n: usize,
+    fz: &mut FedZero,
+) -> fedzero::selection::SelectionDecision {
+    let ctx = SelectionContext {
+        now,
+        n,
+        d_max: s.d_max,
+        clients: &s.clients,
+        states: &s.states,
+        domains: &s.domains,
+        fc,
+        spare_now: &s.spare_now,
+    };
+    let mut rng = Rng::new(42);
+    fz.select(&ctx, &mut rng)
+}
+
+fn check_scenario(rng: &mut Rng, realistic: bool, dark: bool) {
+    let s = random_scenario(rng, realistic, dark);
+    let n = rng.range(1, 5);
+    let steps = rng.range(5, 25);
+    let mut ring = ForecastRing::new();
+    ring.rebuild(&s.src, 0, s.d_max);
+    for step in 0..steps {
+        if step > 0 {
+            ring.advance(&s.src);
+        }
+        let fresh = FcBuffers::from_source(&s.src, 0, step, s.d_max);
+        let mut fz_ring = FedZero::new(SolverKind::Greedy);
+        let mut fz_fresh = FedZero::new(SolverKind::Greedy);
+        let d_ring = select_with(&s, ring.view(), step, n, &mut fz_ring);
+        let d_fresh = select_with(&s, fresh.view(), step, n, &mut fz_fresh);
+        assert_eq!(
+            d_ring, d_fresh,
+            "decision diverged at step {step} (realistic={realistic} dark={dark})"
+        );
+        if dark {
+            assert!(d_ring.wait, "selected a round with zero energy");
+        }
+    }
+}
+
+#[test]
+fn ring_selections_match_fresh_builds_perfect_forecasts() {
+    forall(15, |rng| check_scenario(rng, false, false));
+}
+
+#[test]
+fn ring_selections_match_fresh_builds_with_forecast_error() {
+    forall(15, |rng| check_scenario(rng, true, false));
+}
+
+#[test]
+fn ring_selections_match_fresh_builds_in_dark_periods() {
+    forall(10, |rng| check_scenario(rng, true, true));
+}
+
+#[test]
+fn exact_solver_agrees_over_ring_and_fresh_windows() {
+    // the branch-and-bound path (with the per-domain energy-capacity
+    // bound) must also be insensitive to the window backing
+    forall(8, |rng| {
+        let s = random_scenario(rng, true, false);
+        let n = rng.range(1, 4);
+        let mut ring = ForecastRing::new();
+        ring.rebuild(&s.src, 0, s.d_max);
+        for step in 0..6 {
+            if step > 0 {
+                ring.advance(&s.src);
+            }
+            let fresh = FcBuffers::from_source(&s.src, 0, step, s.d_max);
+            let mut fz_ring = FedZero::new(SolverKind::Exact);
+            let mut fz_fresh = FedZero::new(SolverKind::Exact);
+            let d_ring = select_with(&s, ring.view(), step, n, &mut fz_ring);
+            let d_fresh = select_with(&s, fresh.view(), step, n, &mut fz_fresh);
+            assert_eq!(d_ring, d_fresh, "exact-solver divergence at {step}");
+        }
+    });
+}

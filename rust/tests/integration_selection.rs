@@ -6,6 +6,7 @@ use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
 use fedzero::energy::PowerDomain;
 use fedzero::selection::baselines::Baseline;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::ring::FcBuffers;
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
 use fedzero::trace::forecast::SeriesForecaster;
 use fedzero::util::prop::forall;
@@ -15,8 +16,7 @@ struct Scenario {
     clients: Vec<ClientInfo>,
     states: Vec<ClientRoundState>,
     domains: Vec<PowerDomain>,
-    energy_fc: Vec<Vec<f64>>,
-    spare_fc: Vec<Vec<f64>>,
+    fc: FcBuffers,
     spare_now: Vec<f64>,
 }
 
@@ -64,7 +64,7 @@ fn random_scenario(rng: &mut Rng) -> Scenario {
             s.sigma = 0.0;
         }
     }
-    let energy_fc = domains
+    let energy_fc: Vec<Vec<f64>> = domains
         .iter()
         .map(|d| d.forecast_window_wh(0, d_max))
         .collect();
@@ -75,8 +75,9 @@ fn random_scenario(rng: &mut Rng) -> Scenario {
             (0..d_max).map(|_| cap * rng.range_f64(0.2, 1.0)).collect()
         })
         .collect();
+    let fc = FcBuffers::from_rows(&energy_fc, &spare_fc, d_max);
     let spare_now = clients.iter().map(|c| c.capacity() * 0.8).collect();
-    Scenario { clients, states, domains, energy_fc, spare_fc, spare_now }
+    Scenario { clients, states, domains, fc, spare_now }
 }
 
 fn ctx<'a>(s: &'a Scenario, n: usize) -> SelectionContext<'a> {
@@ -87,8 +88,7 @@ fn ctx<'a>(s: &'a Scenario, n: usize) -> SelectionContext<'a> {
         clients: &s.clients,
         states: &s.states,
         domains: &s.domains,
-        energy_fc: &s.energy_fc,
-        spare_fc: &s.spare_fc,
+        fc: s.fc.view(),
         spare_now: &s.spare_now,
     }
 }
