@@ -9,10 +9,100 @@
 # Fig-8 point plus speedup vs the retained reference greedy) and exits
 # non-zero if the arena-based solver's chosen sets diverge from the
 # reference. The endtoend bench writes rust/BENCH_endtoend.json (ns per
-# idle/round sim step, ring footprint) and exits non-zero if the
-# incrementally-advanced forecast ring diverges from fresh-built windows.
+# idle/round sim step, train-phase ns/round serial vs sharded, ring
+# footprint) and exits non-zero if the incrementally-advanced forecast
+# ring diverges from fresh-built windows OR sharded training diverges
+# from serial.
+#
+# When a committed baseline (BENCH_<name>.baseline.json) exists next to a
+# freshly written BENCH_<name>.json, the two are compared metric by
+# metric: regressions >10% warn, >50% fail the run. To (re)ratchet a
+# baseline after an intentional change:
+#   cp rust/BENCH_endtoend.json rust/BENCH_endtoend.baseline.json
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+# Compare a fresh bench JSON against a committed baseline, printing
+# per-metric deltas. Direction is inferred from the metric name: ns/ms/
+# bytes/mismatch metrics are lower-better, per_s/speedup higher-better;
+# anything else is informational and skipped. Comparison is skipped (not
+# failed) when the baseline is absent, python3 is missing, or the two
+# files were produced in different bench modes (--quick vs default).
+compare_bench() {
+    local fresh="$1" base="$2"
+    if [[ ! -f "$base" ]]; then
+        echo "  (no baseline $base — skipping bench comparison)"
+        return 0
+    fi
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "  (python3 unavailable — skipping bench comparison)"
+        return 0
+    fi
+    echo "== bench delta: $fresh vs $base (warn >10%, fail >50% regression) =="
+    python3 - "$fresh" "$base" <<'PY'
+import json, sys
+
+fresh_path, base_path = sys.argv[1], sys.argv[2]
+with open(fresh_path) as f:
+    fresh = json.load(f)
+with open(base_path) as f:
+    base = json.load(f)
+
+if fresh.get("mode") != base.get("mode"):
+    print(f"  (bench mode {fresh.get('mode')!r} != baseline mode "
+          f"{base.get('mode')!r} — skipping comparison)")
+    sys.exit(0)
+
+def flatten(prefix, node, out):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            flatten(f"{prefix}.{k}" if prefix else k, v, out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            # index arrays by a stable key when one exists so points
+            # still match after reordering
+            key = str(i)
+            if isinstance(v, dict):
+                if "name" in v:
+                    key = str(v["name"])
+                elif "d_max" in v:
+                    key = f"dmax{int(v['d_max'])}"
+            flatten(f"{prefix}[{key}]", v, out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+
+LOWER = ("ns_", "_ns", "_ms", "bytes", "mismatch", "divergence")
+HIGHER = ("per_s", "speedup")
+
+fa, ba = {}, {}
+flatten("", fresh, fa)
+flatten("", base, ba)
+fails = warns = compared = 0
+for k in sorted(fa):
+    if k not in ba:
+        continue
+    new, old = fa[k], ba[k]
+    leaf = k.rsplit(".", 1)[-1]
+    if any(t in leaf for t in LOWER):
+        reg = (new - old) / old if old else (1.0 if new > old else 0.0)
+    elif any(t in leaf for t in HIGHER):
+        reg = (old - new) / old if old else 0.0
+    else:
+        continue
+    compared += 1
+    mark = ""
+    if reg > 0.50:
+        mark, fails = "FAIL", fails + 1
+    elif reg > 0.10:
+        mark, warns = "WARN", warns + 1
+    if mark or abs(reg) > 0.02:
+        print(f"  {k:<58} {old:>14.1f} -> {new:>14.1f} "
+              f"{reg * 100.0:>+8.1f}% {mark}")
+print(f"  bench comparison: {compared} metrics, {warns} warnings, "
+      f"{fails} failures")
+sys.exit(1 if fails else 0)
+PY
+}
 
 echo "== cargo build --release =="
 cargo build --release
@@ -22,13 +112,16 @@ cargo test -q
 
 echo "== selection bench smoke (--quick) =="
 cargo bench --bench selection -- --quick
+compare_bench BENCH_selection.json BENCH_selection.baseline.json
 
-echo "== endtoend bench smoke (--quick, ring divergence gate) =="
+echo "== endtoend bench smoke (--quick, ring + train divergence gates) =="
 cargo bench --bench endtoend -- --quick
+compare_bench BENCH_endtoend.json BENCH_endtoend.baseline.json
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== selection bench (default points) =="
     cargo bench --bench selection
+    compare_bench BENCH_selection.json BENCH_selection.baseline.json
 fi
 
 echo "CI OK"

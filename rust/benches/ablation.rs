@@ -48,7 +48,7 @@ fn run_mock(strategy: &mut dyn Strategy, seed: u64) -> (usize, f64, f64, Vec<usi
         ..Default::default()
     };
     let built = build(&scfg, ModelKind::Vision, 10, &partition);
-    let mut backend = MockBackend::new(spec.n_clients, 16, 0.3, seed);
+    let backend = MockBackend::new(spec.n_clients, 16, 0.3, seed);
     let sim_cfg = SimConfig {
         horizon: built.horizon,
         n_per_round: spec.n_per_round,
@@ -65,7 +65,7 @@ fn run_mock(strategy: &mut dyn Strategy, seed: u64) -> (usize, f64, f64, Vec<usi
         built.load_actual,
         built.load_fc,
         ErrorLevel::Realistic,
-        &mut backend,
+        &backend,
         strategy,
     );
     sim.run().unwrap();

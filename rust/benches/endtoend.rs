@@ -22,6 +22,7 @@ use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
 use fedzero::energy::PowerDomain;
 use fedzero::fl::MockBackend;
+use fedzero::selection::baselines::Baseline;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
 use fedzero::selection::ring::{FcBuffers, ForecastRing, SeriesSource};
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
@@ -131,7 +132,7 @@ fn step_cost(
 ) -> (f64, usize) {
     let (clients, domains, load, load_fc) =
         sim_parts(n_clients, n_domains, power_w, horizon, true);
-    let mut backend = MockBackend::new(n_clients, 8, 0.2, 7);
+    let backend = MockBackend::new(n_clients, 8, 0.2, 7);
     let mut fz = FedZero::new(SolverKind::Greedy);
     let cfg = SimConfig {
         horizon,
@@ -148,13 +149,59 @@ fn step_cost(
         load,
         load_fc,
         ErrorLevel::Realistic,
-        &mut backend,
+        &backend,
         &mut fz,
     );
     let t0 = Instant::now();
     sim.run().unwrap();
     let ns = t0.elapsed().as_nanos() as f64 / horizon as f64;
     (ns, sim.metrics.rounds.len())
+}
+
+/// Train-phase cost: one powered fixture where local training dominates
+/// the step (large mock model, many selected clients per round), run
+/// with the backend shard fan-out forced on or off. Returns (ns per
+/// executed round, rounds, total train steps, metrics, final global
+/// model) so the caller can both report the speedup and gate on the
+/// serial/sharded paths being bit-identical.
+fn train_phase_cost(
+    parallel: bool,
+    quick: bool,
+) -> (f64, usize, u64, fedzero::metrics::MetricsLog, Vec<f32>) {
+    let n_clients = 48;
+    let n_domains = 12;
+    let horizon = if quick { 240 } else { 480 };
+    let dim = if quick { 4_096 } else { 32_768 };
+    let (clients, domains, load, load_fc) =
+        sim_parts(n_clients, n_domains, 800.0, horizon, false);
+    let mut backend = MockBackend::new(n_clients, dim, 0.2, 7);
+    backend.par_min_jobs = if parallel { 1 } else { usize::MAX };
+    let mut strat = Baseline::random();
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 24,
+        d_max: 30,
+        eval_every: 50,
+        seed: 3,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &backend,
+        &mut strat,
+    );
+    let t0 = Instant::now();
+    sim.run().unwrap();
+    let dt = t0.elapsed().as_nanos() as f64;
+    let rounds = sim.metrics.rounds.len();
+    let steps = sim.steps_executed();
+    let global = std::mem::take(&mut sim.final_global);
+    (dt / rounds.max(1) as f64, rounds, steps, sim.metrics, global)
 }
 
 /// Ring-vs-fresh divergence gate: drive FedZero over N consecutive
@@ -310,6 +357,31 @@ fn main() {
         fmt_ns(ns_round)
     );
 
+    // --- train-phase cost: serial vs sharded local training ---
+    // (the serial/sharded runs must be bit-identical — gated below like
+    // the ring divergence)
+    println!("\n== train-phase cost (48c/12p, 24 per round, big mock model) ==");
+    let (ns_train_ser, tr_rounds, tr_steps, m_ser, g_ser) =
+        train_phase_cost(false, quick);
+    let (ns_train_par, _, tr_steps_par, m_par, g_par) =
+        train_phase_cost(true, quick);
+    let train_speedup = ns_train_ser / ns_train_par.max(1.0);
+    println!(
+        "train_phase/serial          {:>12} per round ({tr_rounds} rounds, {tr_steps} steps)",
+        fmt_ns(ns_train_ser)
+    );
+    println!(
+        "train_phase/sharded         {:>12} per round (speedup {train_speedup:.2}x)",
+        fmt_ns(ns_train_par)
+    );
+    let train_diverged = m_ser != m_par
+        || tr_steps != tr_steps_par
+        || g_ser.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            != g_par.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    if train_diverged {
+        eprintln!("TRAIN DIVERGENCE: sharded training != serial training");
+    }
+
     // --- ring-vs-fresh divergence gate ---
     println!("\n== ring-vs-fresh divergence gate ==");
     let gate_steps = if quick { 120 } else { 400 };
@@ -349,6 +421,21 @@ fn main() {
         m.insert("historical_f64_bytes".into(), Json::Num(hist_b as f64));
         root.insert("arena_bytes".into(), Json::Obj(m));
     }
+    {
+        let mut m = BTreeMap::new();
+        m.insert("clients".into(), Json::Num(48.0));
+        m.insert("n_per_round".into(), Json::Num(24.0));
+        m.insert("rounds".into(), Json::Num(tr_rounds as f64));
+        m.insert("train_steps".into(), Json::Num(tr_steps as f64));
+        m.insert("ns_per_round_serial".into(), Json::Num(ns_train_ser));
+        m.insert("ns_per_round_sharded".into(), Json::Num(ns_train_par));
+        m.insert("speedup".into(), Json::Num(train_speedup));
+        root.insert("train_phase".into(), Json::Obj(m));
+    }
+    root.insert(
+        "train_divergence".into(),
+        Json::Num(if train_diverged { 1.0 } else { 0.0 }),
+    );
     root.insert(
         "ring_divergence_mismatches".into(),
         Json::Num(mismatches as f64),
@@ -362,6 +449,10 @@ fn main() {
 
     if mismatches > 0 {
         eprintln!("ring-vs-fresh equivalence FAILED ({mismatches} mismatches)");
+        std::process::exit(1);
+    }
+    if train_diverged {
+        eprintln!("serial-vs-sharded training equivalence FAILED");
         std::process::exit(1);
     }
     println!("== done ==");

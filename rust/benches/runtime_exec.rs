@@ -32,9 +32,10 @@ fn bench_preset(preset: &str) -> anyhow::Result<()> {
         rt.eval_step(&params, &x, &y).unwrap()
     });
     let updates: Vec<Vec<f32>> = (0..k.min(10)).map(|_| params.clone()).collect();
+    let update_refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
     let weights = vec![1.0f32; updates.len()];
     bench(&format!("aggregate/{preset}_k{}", updates.len()), quick(), || {
-        rt.aggregate(&updates, &weights).unwrap()
+        rt.aggregate(&update_refs, &weights).unwrap()
     });
     bench(&format!("init/{preset}"), quick(), || rt.init_params(3).unwrap());
     Ok(())

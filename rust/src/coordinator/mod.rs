@@ -237,7 +237,7 @@ fn scenario_cfg(spec: &ExperimentSpec) -> ScenarioConfig {
 fn run_with_backend<B: TrainBackend>(
     spec: &ExperimentSpec,
     built: BuiltScenario,
-    backend: &mut B,
+    backend: &B,
 ) -> Result<RunReport> {
     let mut strategy = spec.strategy.build();
     let sim_cfg = SimConfig {
@@ -258,12 +258,15 @@ fn run_with_backend<B: TrainBackend>(
         built.load_actual,
         built.load_fc,
         spec.load_error,
-        &mut *backend,
+        backend,
         strategy.as_mut(),
     );
     sim.run()?;
     let wallclock_s = t0.elapsed().as_secs_f64();
     let select_time_ms = sim.select_time.as_secs_f64() * 1e3;
+    // deterministic per-client reduction over the engine-owned train
+    // states (there is no backend-side counter any more)
+    let steps_executed = sim.steps_executed();
     let metrics = std::mem::take(&mut sim.metrics);
     drop(sim);
     Ok(RunReport {
@@ -278,7 +281,7 @@ fn run_with_backend<B: TrainBackend>(
         client_domains,
         n_domains,
         select_time_ms,
-        steps_executed: backend.steps_executed(),
+        steps_executed,
         wallclock_s,
     })
 }
@@ -289,9 +292,8 @@ pub fn run_experiment(spec: &ExperimentSpec) -> Result<RunReport> {
     if spec.use_mock {
         let (_, partition) = build_dataset(spec, 16);
         let built = build(&scenario_cfg(spec), model, 10, &partition);
-        let mut backend =
-            MockBackend::new(spec.n_clients, 16, 0.3, spec.seed);
-        run_with_backend(spec, built, &mut backend)
+        let backend = MockBackend::new(spec.n_clients, 16, 0.3, spec.seed);
+        run_with_backend(spec, built, &backend)
     } else {
         let runtime = ModelRuntime::load(&spec.artifact_dir, &spec.preset)?;
         let (ds, partition) =
@@ -307,7 +309,7 @@ pub fn run_experiment(spec: &ExperimentSpec) -> Result<RunReport> {
             spec.seed,
         )?;
         backend.eval_subset = spec.eval_subset;
-        run_with_backend(spec, built, &mut backend)
+        run_with_backend(spec, built, &backend)
     }
 }
 

@@ -1,28 +1,47 @@
 //! PJRT-backed training backend: the production path that executes the
 //! AOT-compiled HLO artifacts on real (synthetic-task) data.
+//!
+//! Fits the shard/`Sync` split (module docs) as a read-mostly core: the
+//! runtime, dataset and hyper-parameters are immutable after
+//! construction, and the per-client epoch cursor lives in the
+//! caller-owned [`ClientTrainState`] as [`XlaCursor`]. `train_shard`
+//! keeps the serial default for now: the PJRT wrapper types are not
+//! known to be `Sync` (the underlying client is reference-counted in the
+//! bindings), so fanning `&self` across threads is not provably sound —
+//! the simulator still gets bit-identical results either way, and the
+//! mock backend exercises the parallel path.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::{BatchStats, TrainBackend};
+use super::{BatchStats, ClientTrainState, TrainBackend};
 use crate::data::{Partition, SynthDataset};
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 
-/// Per-client epoch cursor: shuffled order over the client's shard,
-/// re-shuffled at each epoch boundary so local training visits data the
-/// way a real FL client does.
-struct Cursor {
-    order: Vec<usize>,
+/// Per-client epoch cursor: a shuffled index permutation over the
+/// client's shard, re-shuffled at each epoch boundary so local training
+/// visits data the way a real FL client does. The sample ids themselves
+/// are shared with the backend (`Arc`), so the only per-cursor storage
+/// is the u32 permutation — at 100k-client scale the shard ids are not
+/// duplicated. Shuffling the permutation consumes the same RNG draws and
+/// yields the same id sequence as shuffling the ids directly. Owned by
+/// the caller via [`ClientTrainState`]; `Send` so shards can move across
+/// workers.
+pub struct XlaCursor {
+    ids: Arc<[usize]>,
+    order: Vec<u32>,
     pos: usize,
     rng: Rng,
 }
 
-impl Cursor {
-    fn new(samples: &[usize], seed: u64) -> Cursor {
+impl XlaCursor {
+    fn new(ids: Arc<[usize]>, seed: u64) -> XlaCursor {
         let mut rng = Rng::new(seed);
-        let mut order = samples.to_vec();
+        let mut order: Vec<u32> = (0..ids.len() as u32).collect();
         rng.shuffle(&mut order);
-        Cursor { order, pos: 0, rng }
+        XlaCursor { ids, order, pos: 0, rng }
     }
 
     fn next_batch(&mut self, batch: usize) -> Vec<usize> {
@@ -32,7 +51,7 @@ impl Cursor {
                 self.rng.shuffle(&mut self.order);
                 self.pos = 0;
             }
-            out.push(self.order[self.pos]);
+            out.push(self.ids[self.order[self.pos] as usize]);
             self.pos += 1;
         }
         out
@@ -42,7 +61,9 @@ impl Cursor {
 pub struct XlaBackend {
     pub runtime: ModelRuntime,
     pub dataset: SynthDataset,
-    cursors: Vec<Cursor>,
+    /// per-client sample-id shards, shared with the cursors
+    shards: Vec<Arc<[usize]>>,
+    seed: u64,
     pub lr: f32,
     pub mu: f32,
     /// cap on eval set size (speeds up frequent evals; 0 = all)
@@ -65,16 +86,15 @@ impl XlaBackend {
                 runtime.manifest.input_dim
             ));
         }
-        let cursors = partition
-            .clients
-            .iter()
-            .enumerate()
-            .map(|(i, samples)| Cursor::new(samples, seed ^ (i as u64) << 17))
-            .collect();
         Ok(XlaBackend {
             runtime,
             dataset,
-            cursors,
+            shards: partition
+                .clients
+                .iter()
+                .map(|samples| Arc::from(samples.as_slice()))
+                .collect(),
+            seed,
             lr,
             mu,
             eval_subset: 0,
@@ -94,18 +114,27 @@ impl XlaBackend {
 }
 
 impl TrainBackend for XlaBackend {
+    type Cursor = XlaCursor;
+
     fn param_count(&self) -> usize {
         self.runtime.param_count()
     }
 
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         self.runtime.init_params(seed)
     }
 
+    fn make_cursor(&self, client: usize) -> XlaCursor {
+        XlaCursor::new(
+            self.shards[client].clone(),
+            self.seed ^ (client as u64) << 17,
+        )
+    }
+
     fn train_batches(
-        &mut self,
+        &self,
         client: usize,
-        params: &mut Vec<f32>,
+        state: &mut ClientTrainState<XlaCursor>,
         global: &[f32],
         n_batches: usize,
     ) -> Result<BatchStats> {
@@ -113,11 +142,17 @@ impl TrainBackend for XlaBackend {
         let mut loss_sum = 0.0f64;
         let mut correct = 0i64;
         for _ in 0..n_batches {
-            let ids = self.cursors[client].next_batch(b);
+            let ids = state.cursor.next_batch(b);
             let (x, y) = self.gather_batch(&ids);
-            let out =
-                self.runtime.train_step(params, global, &x, &y, self.lr, self.mu)?;
-            *params = out.params;
+            let out = self.runtime.train_step(
+                &state.params,
+                global,
+                &x,
+                &y,
+                self.lr,
+                self.mu,
+            )?;
+            state.params = out.params;
             loss_sum += out.loss as f64;
             correct += out.correct as i64;
         }
@@ -136,7 +171,7 @@ impl TrainBackend for XlaBackend {
         })
     }
 
-    fn aggregate(&mut self, updates: &[Vec<f32>], weights: &[f32]) -> Result<Vec<f32>> {
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
         let k = self.runtime.manifest.agg_k;
         if updates.len() <= k {
             return self.runtime.aggregate(updates, weights);
@@ -145,16 +180,15 @@ impl TrainBackend for XlaBackend {
         // weighted means with their weight masses
         let mut partials: Vec<Vec<f32>> = Vec::new();
         let mut masses: Vec<f32> = Vec::new();
-        for (chunk_u, chunk_w) in
-            updates.chunks(k).zip(weights.chunks(k))
-        {
+        for (chunk_u, chunk_w) in updates.chunks(k).zip(weights.chunks(k)) {
             partials.push(self.runtime.aggregate(chunk_u, chunk_w)?);
             masses.push(chunk_w.iter().sum());
         }
-        self.runtime.aggregate(&partials, &masses)
+        let refs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+        self.runtime.aggregate(&refs, &masses)
     }
 
-    fn evaluate(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+    fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)> {
         let n = if self.eval_subset > 0 {
             self.eval_subset.min(self.dataset.test_len())
         } else {
@@ -166,9 +200,5 @@ impl TrainBackend for XlaBackend {
             &self.dataset.test_x[..n * d],
             &self.dataset.test_y[..n],
         )
-    }
-
-    fn steps_executed(&self) -> u64 {
-        self.runtime.steps_executed.get()
     }
 }

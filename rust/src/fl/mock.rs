@@ -7,10 +7,20 @@
 //! distance of the global model to the mean optimum — so convergence,
 //! heterogeneity bias, and aggregation behave qualitatively like real FL
 //! while being closed-form checkable.
+//!
+//! The core is immutable after construction (`optima`/`target`/`lr`), so
+//! the backend is `Sync` and opts into the shard fan-out: `train_shard`
+//! delegates to [`train_shard_parallel`] once a shard has at least
+//! `par_min_jobs` jobs, and `aggregate` chunks the parameter vector
+//! across workers once the model has at least `par_agg_min` coordinates
+//! — both bit-identical to their serial paths (each client state /
+//! output coordinate is touched by exactly one worker running the same
+//! serial expression).
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::{BatchStats, TrainBackend};
+use super::{train_shard_parallel, BatchStats, ClientTrainState, TrainBackend, TrainJob};
+use crate::util::par;
 use crate::util::rng::Rng;
 
 pub struct MockBackend {
@@ -20,7 +30,14 @@ pub struct MockBackend {
     /// mean optimum (the "true" model)
     pub target: Vec<f32>,
     pub lr: f32,
-    pub steps: u64,
+    /// fan `train_shard` out across workers once a shard has at least
+    /// this many jobs (mock batches are cheap; the default keeps
+    /// evaluation-scale rounds serial — tests/benches pin 1 / usize::MAX
+    /// to force both paths)
+    pub par_min_jobs: usize,
+    /// chunk `aggregate` across workers once the model has at least this
+    /// many coordinates (same force-both-paths convention)
+    pub par_agg_min: usize,
 }
 
 impl MockBackend {
@@ -40,7 +57,14 @@ impl MockBackend {
                 *t += v / n_clients as f32;
             }
         }
-        MockBackend { dim, optima, target, lr: 0.2, steps: 0 }
+        MockBackend {
+            dim,
+            optima,
+            target,
+            lr: 0.2,
+            par_min_jobs: 16,
+            par_agg_min: 1 << 16,
+        }
     }
 
     fn dist(a: &[f32], b: &[f32]) -> f64 {
@@ -53,28 +77,31 @@ impl MockBackend {
 }
 
 impl TrainBackend for MockBackend {
+    type Cursor = ();
+
     fn param_count(&self) -> usize {
         self.dim
     }
 
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         let mut rng = Rng::new(seed as u64 ^ 0xABCD);
         Ok((0..self.dim).map(|_| 3.0 + rng.normal() as f32).collect())
     }
 
+    fn make_cursor(&self, _client: usize) -> Self::Cursor {}
+
     fn train_batches(
-        &mut self,
+        &self,
         client: usize,
-        params: &mut Vec<f32>,
+        state: &mut ClientTrainState<()>,
         _global: &[f32],
         n_batches: usize,
     ) -> Result<BatchStats> {
         let opt = &self.optima[client];
         let mut loss_sum = 0.0;
         for _ in 0..n_batches {
-            self.steps += 1;
-            loss_sum += Self::dist(params, opt);
-            for (p, &o) in params.iter_mut().zip(opt) {
+            loss_sum += Self::dist(&state.params, opt);
+            for (p, &o) in state.params.iter_mut().zip(opt) {
                 *p += self.lr * (o - *p);
             }
         }
@@ -89,69 +116,229 @@ impl TrainBackend for MockBackend {
         })
     }
 
-    fn aggregate(&mut self, updates: &[Vec<f32>], weights: &[f32]) -> Result<Vec<f32>> {
-        let total: f32 = weights.iter().sum();
-        let mut out = vec![0.0f32; self.dim];
-        for (u, &w) in updates.iter().zip(weights) {
-            for (o, &v) in out.iter_mut().zip(u) {
-                *o += v * w / total.max(1e-12);
+    fn train_shard(
+        &self,
+        global: &[f32],
+        jobs: &mut [TrainJob<'_, ()>],
+    ) -> Result<()> {
+        train_shard_parallel(self, global, jobs, self.par_min_jobs)
+    }
+
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        if updates.len() != weights.len() {
+            return Err(anyhow!(
+                "aggregate: {} updates vs {} weights",
+                updates.len(),
+                weights.len()
+            ));
+        }
+        if updates.is_empty() {
+            return Err(anyhow!("aggregate called with no updates"));
+        }
+        for (i, u) in updates.iter().enumerate() {
+            if u.len() != self.dim {
+                return Err(anyhow!(
+                    "update {i} has {} params, model dim is {}",
+                    u.len(),
+                    self.dim
+                ));
             }
         }
+        let total: f32 = weights.iter().sum();
+        // zero total mass (all-zero sample counts) historically fell into
+        // a silent `max(1e-12)` division that returned near-zero params,
+        // destroying the model; fall back to the unweighted mean instead
+        let n = updates.len() as f32;
+        let scale_of =
+            move |w: f32| if total > 0.0 { w / total } else { 1.0 / n };
+        let mut out = vec![0.0f32; self.dim];
+        // chunked parallel FedAvg: every output coordinate is computed by
+        // exactly one worker, with the per-update `scale` hoisted out of
+        // the coordinate loop and the same update-order accumulation as
+        // the serial loop ⇒ byte-equal to the serial result
+        par::par_fill_slice(&mut out, self.par_agg_min, |start, seg: &mut [f32]| {
+            for (u, &w) in updates.iter().zip(weights) {
+                let scale = scale_of(w);
+                for (o, &v) in seg.iter_mut().zip(&u[start..start + seg.len()]) {
+                    *o += v * scale;
+                }
+            }
+        });
         Ok(out)
     }
 
-    fn evaluate(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+    fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)> {
         let d = Self::dist(params, &self.target);
         // map distance to a pseudo-accuracy in (0, 1)
         Ok(((-d).exp().clamp(0.0, 1.0), d))
-    }
-
-    fn steps_executed(&self) -> u64 {
-        self.steps
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::forall;
+
+    fn fresh_state(b: &MockBackend, client: usize, global: &[f32]) -> ClientTrainState<()> {
+        let mut st = ClientTrainState::new(b.make_cursor(client));
+        st.reset_params(global);
+        st
+    }
 
     #[test]
-    fn training_reduces_loss_and_converges() {
-        let mut b = MockBackend::new(4, 8, 0.1, 1);
-        let mut p = b.init_params(0).unwrap();
-        let global = p.clone();
-        let s1 = b.train_batches(0, &mut p, &global, 5).unwrap();
-        let s2 = b.train_batches(0, &mut p, &global, 5).unwrap();
+    fn training_reduces_loss_and_counts_steps() {
+        let b = MockBackend::new(4, 8, 0.1, 1);
+        let global = b.init_params(0).unwrap();
+        let mut st = fresh_state(&b, 0, &global);
+        let (s1, s2);
+        {
+            let mut jobs = [TrainJob::new(0, 5, &mut st)];
+            b.train_shard(&global, &mut jobs).unwrap();
+            s1 = jobs[0].stats;
+        }
+        {
+            let mut jobs = [TrainJob::new(0, 5, &mut st)];
+            b.train_shard(&global, &mut jobs).unwrap();
+            s2 = jobs[0].stats;
+        }
         assert!(s2.mean_loss < s1.mean_loss);
-        assert_eq!(b.steps_executed(), 10);
+        assert_eq!(st.steps, 10);
     }
 
     #[test]
     fn aggregation_is_weighted_mean() {
-        let mut b = MockBackend::new(2, 2, 0.0, 2);
+        let b = MockBackend::new(2, 2, 0.0, 2);
         let out = b
-            .aggregate(&[vec![0.0, 0.0], vec![2.0, 4.0]], &[1.0, 3.0])
+            .aggregate(&[&[0.0, 0.0], &[2.0, 4.0]], &[1.0, 3.0])
             .unwrap();
         assert!((out[0] - 1.5).abs() < 1e-6);
         assert!((out[1] - 3.0).abs() < 1e-6);
     }
 
     #[test]
+    fn aggregate_rejects_empty_and_survives_zero_total() {
+        let b = MockBackend::new(2, 2, 0.0, 2);
+        assert!(b.aggregate(&[], &[]).is_err());
+        assert!(b.aggregate(&[&[1.0, 2.0]], &[1.0, 2.0]).is_err());
+        // all-zero weights: unweighted mean, not a ~zero model
+        let out = b
+            .aggregate(&[&[2.0, 0.0], &[4.0, 2.0]], &[0.0, 0.0])
+            .unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-6);
+        assert!((out[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chunked_parallel_aggregate_is_byte_equal() {
+        forall(20, |rng| {
+            let dim = 1 + rng.below(600);
+            let k = 1 + rng.below(7);
+            let mut ser = MockBackend::new(2, dim, 0.3, 5);
+            ser.par_agg_min = usize::MAX;
+            let mut par_b = MockBackend::new(2, dim, 0.3, 5);
+            par_b.par_agg_min = 1;
+            let updates: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+            let weights: Vec<f32> =
+                (0..k).map(|_| rng.range_f64(0.0, 9.0) as f32).collect();
+            let a = ser.aggregate(&refs, &weights).unwrap();
+            let b = par_b.aggregate(&refs, &weights).unwrap();
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "chunked aggregate diverged at dim {dim}");
+        });
+    }
+
+    /// Satellite: sharded train of N clients equals the serial loop for
+    /// seeded random schedules — params (bitwise), stats, and step
+    /// counters all agree between the forced fan-out and the forced
+    /// serial path, across multiple consecutive shards.
+    #[test]
+    fn sharded_train_equals_serial_loop_property() {
+        forall(25, |rng| {
+            let n_clients = 2 + rng.below(8);
+            let dim = 2 + rng.below(24);
+            let seed = rng.below(1_000) as u64;
+            let mut ser = MockBackend::new(n_clients, dim, 0.3, seed);
+            ser.par_min_jobs = usize::MAX; // serial shard path
+            let mut par_b = MockBackend::new(n_clients, dim, 0.3, seed);
+            par_b.par_min_jobs = 1; // forced fan-out
+            let global = ser.init_params(seed as i32).unwrap();
+            let mut st_ser: Vec<ClientTrainState<()>> =
+                (0..n_clients).map(|c| fresh_state(&ser, c, &global)).collect();
+            let mut st_par: Vec<ClientTrainState<()>> =
+                (0..n_clients).map(|c| fresh_state(&par_b, c, &global)).collect();
+            for _shard in 0..3 {
+                // random schedule: a random subset of clients, each with
+                // a random batch count (same schedule on both paths)
+                let mut schedule: Vec<(usize, usize)> = Vec::new();
+                for c in 0..n_clients {
+                    if rng.f64() < 0.7 {
+                        schedule.push((c, 1 + rng.below(5)));
+                    }
+                }
+                let run = |b: &MockBackend,
+                           states: &mut [ClientTrainState<()>]|
+                 -> Vec<BatchStats> {
+                    let mut jobs: Vec<TrainJob<'_, ()>> = Vec::new();
+                    let mut iter = states.iter_mut().enumerate();
+                    for &(c, n) in &schedule {
+                        let st = loop {
+                            let (i, st) = iter.next().expect("schedule sorted");
+                            if i == c {
+                                break st;
+                            }
+                        };
+                        jobs.push(TrainJob::new(c, n, st));
+                    }
+                    b.train_shard(&global, &mut jobs).unwrap();
+                    jobs.iter().map(|j| j.stats).collect()
+                };
+                let stats_ser = run(&ser, &mut st_ser);
+                let stats_par = run(&par_b, &mut st_par);
+                for (a, b) in stats_ser.iter().zip(&stats_par) {
+                    assert_eq!(a.batches, b.batches);
+                    assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits());
+                }
+            }
+            for (a, b) in st_ser.iter().zip(&st_par) {
+                assert_eq!(a.steps, b.steps);
+                let ab: Vec<u32> = a.params.iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u32> = b.params.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, bb, "params diverged");
+            }
+        });
+    }
+
+    #[test]
     fn federated_loop_improves_eval() {
-        let mut b = MockBackend::new(6, 8, 0.2, 3);
+        let b = MockBackend::new(6, 8, 0.2, 3);
         let mut global = b.init_params(1).unwrap();
+        let mut states: Vec<ClientTrainState<()>> =
+            (0..6).map(|c| ClientTrainState::new(b.make_cursor(c))).collect();
         let (acc0, _) = b.evaluate(&global).unwrap();
         for _round in 0..10 {
-            let mut updates = Vec::new();
-            for c in 0..6 {
-                let mut p = global.clone();
-                b.train_batches(c, &mut p, &global, 3).unwrap();
-                updates.push(p);
+            for st in states.iter_mut() {
+                st.reset_params(&global);
             }
+            let mut jobs: Vec<TrainJob<'_, ()>> = states
+                .iter_mut()
+                .enumerate()
+                .map(|(c, st)| TrainJob::new(c, 3, st))
+                .collect();
+            b.train_shard(&global, &mut jobs).unwrap();
+            drop(jobs);
+            let updates: Vec<&[f32]> =
+                states.iter().map(|st| st.params.as_slice()).collect();
             global = b.aggregate(&updates, &[1.0; 6]).unwrap();
         }
         let (acc1, _) = b.evaluate(&global).unwrap();
         assert!(acc1 > acc0, "{acc0} -> {acc1}");
         assert!(acc1 > 0.5, "acc1={acc1}");
+        // step accounting: 6 clients × 10 rounds × 3 batches
+        let total: u64 = states.iter().map(|s| s.steps).sum();
+        assert_eq!(total, 180);
     }
 }

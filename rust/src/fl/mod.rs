@@ -1,14 +1,45 @@
 //! Federated-learning server substrate: the training backend abstraction
 //! (PJRT-backed in production, deterministic mock for simulator tests),
-//! local client training state, and FedAvg aggregation plumbing.
+//! per-client local training state, and FedAvg aggregation plumbing.
+//!
+//! §Design — the shard/`Sync` split. [`TrainBackend`] is a *read-mostly
+//! core*: model layout, datasets, per-client optima, hyper-parameters —
+//! everything shared across clients — accessed through `&self` only. All
+//! per-client mutable state (local params, data cursor, step counter)
+//! lives in a caller-owned [`ClientTrainState`], handed back to
+//! [`TrainBackend::train_batches`] by `&mut`. Because the core is never
+//! mutably borrowed by training, a `Sync` backend can train whole power
+//! domains concurrently: the simulator fans a step's train jobs out over
+//! `util::par` workers via [`TrainBackend::train_shard`], each worker
+//! driving a disjoint block of [`TrainJob`]s.
+//!
+//! §Determinism invariant — the shard fan-out must be unobservable:
+//! `train_batches` may depend only on `(client, state, global, n)`, and
+//! each job owns its client's state exclusively, so any schedule of jobs
+//! across workers produces bit-identical params and [`BatchStats`] per
+//! job. The simulator keeps everything order-sensitive — energy metering,
+//! progress, loss accounting, aggregation — *serial* in the historical
+//! (domain, slot) order, so parallel and serial training yield
+//! bit-identical `MetricsLog`s and global models (enforced by engine
+//! tests and the endtoend bench gate).
+//!
+//! §Step accounting — there is no shared step counter (the historical
+//! `steps_executed() -> 0` trait default silently under-reported for
+//! backends that forgot to override it, and a shared `&mut`/`Cell`
+//! counter cannot cross the fan-out). Instead the shard layer bumps
+//! `ClientTrainState::steps` once per job, and totals are a
+//! deterministic reduction over the per-client counters in client-index
+//! order (`Simulation::steps_executed`).
 
 pub mod backend;
 pub mod mock;
 
-pub use backend::XlaBackend;
+pub use backend::{XlaBackend, XlaCursor};
 pub use mock::MockBackend;
 
 use anyhow::Result;
+
+use crate::util::par;
 
 /// Stats reported by a client after a chunk of local batches.
 #[derive(Clone, Copy, Debug, Default)]
@@ -18,35 +49,130 @@ pub struct BatchStats {
     pub accuracy: f64,
 }
 
-/// The compute interface the simulator drives. Implementations own the
-/// model state layout (flat f32 vector) and the local datasets.
+/// Per-client mutable training state, owned by the caller (the simulator
+/// keeps one per client for the whole run) so the backend core stays
+/// `&self` during training. `C` is the backend's cursor type — the
+/// epoch-shuffle position for the PJRT backend, `()` for the mock.
+pub struct ClientTrainState<C> {
+    /// local model params; reset from the global snapshot at round start
+    /// (in place, reusing capacity) and read back for aggregation
+    pub params: Vec<f32>,
+    /// backend-specific data cursor (persists across rounds so local
+    /// training continues the client's epoch where it left off)
+    pub cursor: C,
+    /// train-step executions recorded through this state — bumped by the
+    /// shard layer, summed per client in index order for perf accounting
+    pub steps: u64,
+}
+
+impl<C> ClientTrainState<C> {
+    pub fn new(cursor: C) -> Self {
+        ClientTrainState { params: Vec::new(), cursor, steps: 0 }
+    }
+
+    /// Reset the local params to the global snapshot, reusing capacity.
+    pub fn reset_params(&mut self, global: &[f32]) {
+        self.params.clear();
+        self.params.extend_from_slice(global);
+    }
+}
+
+/// One unit of shard training: run `n_batches` local minibatches for
+/// `client` against its own state. Jobs in a shard reference *distinct*
+/// clients, so they are independent by construction.
+pub struct TrainJob<'a, C> {
+    pub client: usize,
+    pub n_batches: usize,
+    pub state: &'a mut ClientTrainState<C>,
+    /// filled by [`TrainBackend::train_shard`] on success
+    pub stats: BatchStats,
+}
+
+impl<'a, C> TrainJob<'a, C> {
+    pub fn new(client: usize, n_batches: usize, state: &'a mut ClientTrainState<C>) -> Self {
+        TrainJob { client, n_batches, state, stats: BatchStats::default() }
+    }
+}
+
+/// The compute interface the simulator drives. Implementations are a
+/// read-mostly core (see the module docs); per-client mutation goes
+/// through the caller-owned [`ClientTrainState`].
 pub trait TrainBackend {
+    /// Backend-specific per-client cursor carried in [`ClientTrainState`].
+    type Cursor: Send;
+
     fn param_count(&self) -> usize;
 
     /// fresh global model
-    fn init_params(&mut self, seed: i32) -> Result<Vec<f32>>;
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
 
-    /// Run `n_batches` local minibatches for `client`, updating `params`
-    /// in place (FedProx against `global`). Implementations keep the
-    /// per-client data cursor so consecutive calls continue the epoch.
+    /// Fresh cursor for `client` (called once per client at sim start;
+    /// deterministic given the backend's seed).
+    fn make_cursor(&self, client: usize) -> Self::Cursor;
+
+    /// Run `n_batches` local minibatches for `client`, updating
+    /// `state.params` in place (FedProx against `global`) and advancing
+    /// `state.cursor`. Must depend only on `(client, state, global,
+    /// n_batches)` — the determinism invariant the shard fan-out relies
+    /// on. Does NOT touch `state.steps`; the shard layer owns step
+    /// accounting.
     fn train_batches(
-        &mut self,
+        &self,
         client: usize,
-        params: &mut Vec<f32>,
+        state: &mut ClientTrainState<Self::Cursor>,
         global: &[f32],
         n_batches: usize,
     ) -> Result<BatchStats>;
 
-    /// FedAvg over client models with the given weights.
-    fn aggregate(&mut self, updates: &[Vec<f32>], weights: &[f32]) -> Result<Vec<f32>>;
+    /// Run a shard of independent train jobs (distinct clients), filling
+    /// `job.stats` and bumping `job.state.steps`. The default runs jobs
+    /// serially in slice order and stops at the first error; `Sync`
+    /// backends override it with [`train_shard_parallel`], which is
+    /// bit-identical on success and reports the same (smallest-index)
+    /// error on failure. State beyond a failing job is unspecified —
+    /// callers abort the run on error.
+    fn train_shard(
+        &self,
+        global: &[f32],
+        jobs: &mut [TrainJob<'_, Self::Cursor>],
+    ) -> Result<()> {
+        for j in jobs.iter_mut() {
+            j.stats = self.train_batches(j.client, &mut *j.state, global, j.n_batches)?;
+            j.state.steps += j.n_batches as u64;
+        }
+        Ok(())
+    }
+
+    /// FedAvg over client models with the given weights (rows borrowed
+    /// straight from the clients' [`ClientTrainState::params`]).
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>>;
 
     /// centralized test-set evaluation -> (accuracy, mean loss)
-    fn evaluate(&mut self, params: &[f32]) -> Result<(f64, f64)>;
+    fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)>;
+}
 
-    /// total train-step executions so far (perf accounting)
-    fn steps_executed(&self) -> u64 {
-        0
-    }
+/// Fork-join shard training for `Sync` backends: fans contiguous job
+/// blocks out across `util::par` workers once the shard has at least
+/// `min_par` jobs. Each job exclusively owns its client's state, so the
+/// result is bit-identical to the serial default of
+/// [`TrainBackend::train_shard`]; on failure the error with the smallest
+/// job index is reported regardless of chunking.
+pub fn train_shard_parallel<B>(
+    backend: &B,
+    global: &[f32],
+    jobs: &mut [TrainJob<'_, B::Cursor>],
+    min_par: usize,
+) -> Result<()>
+where
+    B: TrainBackend + Sync + ?Sized,
+    B::Cursor: Send,
+{
+    par::try_par_fill_rows(jobs, 1, min_par.max(1), |_r, row: &mut [TrainJob<'_, B::Cursor>]| -> Result<()> {
+        let j = &mut row[0];
+        j.stats = backend.train_batches(j.client, &mut *j.state, global, j.n_batches)?;
+        j.state.steps += j.n_batches as u64;
+        Ok(())
+    })
 }
 
 /// FedAvg weights from sample counts (the standard weighting the paper's
@@ -62,5 +188,31 @@ mod tests {
     #[test]
     fn fedavg_weights_are_sample_counts() {
         assert_eq!(fedavg_weights(&[10, 0, 5]), vec![10.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn default_train_shard_fills_stats_and_steps() {
+        let b = MockBackend::new(3, 4, 0.1, 9);
+        let global = b.init_params(0).unwrap();
+        let mut states: Vec<ClientTrainState<()>> = (0..3)
+            .map(|c| {
+                let mut st = ClientTrainState::new(b.make_cursor(c));
+                st.reset_params(&global);
+                st
+            })
+            .collect();
+        let mut jobs: Vec<TrainJob<'_, ()>> = states
+            .iter_mut()
+            .enumerate()
+            .map(|(c, st)| TrainJob::new(c, 2 + c, st))
+            .collect();
+        b.train_shard(&global, &mut jobs).unwrap();
+        for (c, j) in jobs.iter().enumerate() {
+            assert_eq!(j.stats.batches, 2 + c);
+            assert!(j.stats.mean_loss > 0.0);
+        }
+        drop(jobs);
+        let steps: Vec<u64> = states.iter().map(|s| s.steps).collect();
+        assert_eq!(steps, vec![2, 3, 4]);
     }
 }

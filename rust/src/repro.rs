@@ -138,7 +138,7 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
     let (loss_sum, correct) = rt.eval_step(&params, &x, &y)?;
     println!("  eval_step ok: loss_sum={loss_sum:.3} correct={correct}");
 
-    let agg = rt.aggregate(&[params.clone(), pcur], &[1.0, 1.0])?;
+    let agg = rt.aggregate(&[params.as_slice(), pcur.as_slice()], &[1.0, 1.0])?;
     assert_eq!(agg.len(), p);
     println!("  aggregate ok");
     println!("selftest PASSED");

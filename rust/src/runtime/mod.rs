@@ -123,14 +123,15 @@ pub struct StepOutput {
 }
 
 /// The loaded model runtime: one compiled executable per entry point.
+/// Read-only after `load` — step accounting lives in the caller-owned
+/// `fl::ClientTrainState` (a shared interior-mutable counter here would
+/// keep the runtime from ever being shared across train workers).
 pub struct ModelRuntime {
     pub manifest: Manifest,
     train: Executable,
     eval: Executable,
     init: Executable,
     aggregate: Executable,
-    /// cumulative number of train-step executions (perf accounting)
-    pub steps_executed: std::cell::Cell<u64>,
 }
 
 impl ModelRuntime {
@@ -149,7 +150,6 @@ impl ModelRuntime {
             eval,
             init,
             aggregate,
-            steps_executed: std::cell::Cell::new(0),
         })
     }
 
@@ -185,7 +185,6 @@ impl ModelRuntime {
             Input::F32(&[lr]),
             Input::F32(&[mu]),
         ])?;
-        self.steps_executed.set(self.steps_executed.get() + 1);
         Ok(StepOutput {
             params: out[0].to_vec::<f32>()?,
             loss: out[1].to_vec::<f32>()?[0],
@@ -208,11 +207,12 @@ impl ModelRuntime {
         Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<i32>()?[0]))
     }
 
-    /// FedAvg over up to `agg_k` flat models; `updates` rows beyond
-    /// `weights.len()` are zero-padded.
+    /// FedAvg over up to `agg_k` flat models (rows borrowed from the
+    /// callers' client states); `updates` rows beyond `weights.len()`
+    /// are zero-padded.
     pub fn aggregate(
         &self,
-        updates: &[Vec<f32>],
+        updates: &[&[f32]],
         weights: &[f32],
     ) -> Result<Vec<f32>> {
         let k = self.manifest.agg_k;

@@ -22,20 +22,36 @@
 //!   independent across domains (a selected client belongs to exactly one
 //!   domain), so `execute_round` computes every domain's water-filling
 //!   grants in a fork-join (`util::par`, reused per-worker scratch) and
-//!   then applies them — progress, energy metering, training — serially
-//!   in ascending (domain, slot) order. The apply order and all f64
-//!   arithmetic are identical to the serial path, so metrics and model
-//!   state are bit-identical whether or not the fan-out engages
+//!   then applies them — progress, energy metering, loss accounting —
+//!   serially in ascending (domain, slot) order. The apply order and all
+//!   f64 arithmetic are identical to the serial path, so metrics and
+//!   model state are bit-identical whether or not the fan-out engages
 //!   (`par_domains_min` + `par_slots_min` gate it on domain count AND
 //!   work; tests force both paths and compare). The per-step
 //!   `active`/`reqs`/grant buffers are hoisted out of the step loop and
 //!   refilled in place on both paths.
+//! * **Shard-parallel local training** (`fl` module docs): the backend is
+//!   a `&self` read-mostly core, and each client's mutable train state
+//!   (local params, data cursor, step counter) lives in an engine-owned
+//!   [`ClientTrainState`]. Per step, the serial apply phase only
+//!   *schedules* whole batches (one [`TrainJob`] per slot that earned
+//!   them); the jobs — independent by construction, every job owns its
+//!   client's state exclusively — then run through
+//!   `TrainBackend::train_shard`, which `Sync` backends fan out across
+//!   `util::par` workers. Job stats feed the loss accounting back in
+//!   ascending slot order, so `MetricsLog`, the energy meter and the
+//!   aggregated global model are bit-identical between the serial and
+//!   sharded train paths (tests and the endtoend bench gate enforce
+//!   this). Aggregation reads participant params straight out of the
+//!   client states (no per-round model copies), and total train steps
+//!   are a deterministic per-client reduction (`Simulation::steps_executed`)
+//!   instead of a shared mutable counter.
 
 use anyhow::Result;
 
 use crate::client::ClientInfo;
 use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
-use crate::fl::{fedavg_weights, TrainBackend};
+use crate::fl::{fedavg_weights, ClientTrainState, TrainBackend, TrainJob};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
 use crate::selection::oort::UtilityTracker;
 use crate::selection::ring::{FcSource, FcView, ForecastRing};
@@ -95,7 +111,9 @@ pub struct Simulation<'a, B: TrainBackend> {
     /// batches/step); `ErrorLevel::Unavailable` means "assume full m_c"
     pub load_fc: Vec<SeriesForecaster>,
     pub load_fc_level: ErrorLevel,
-    pub backend: &'a mut B,
+    /// read-mostly backend core (`fl` module docs); all per-client
+    /// mutation goes through `train_states`
+    pub backend: &'a B,
     pub strategy: &'a mut dyn Strategy,
     /// fan the per-domain round-execution loop out across threads once a
     /// round spans at least this many domains AND selects at least
@@ -109,12 +127,21 @@ pub struct Simulation<'a, B: TrainBackend> {
     pub par_slots_min: usize,
     // --- state ---
     pub states: Vec<ClientRoundState>,
+    /// persistent per-client train state (local params, data cursor,
+    /// step counter); `take`n by the slot during an executed round and
+    /// returned before aggregation, so a `None` here would mean a client
+    /// was selected into two concurrent rounds (impossible: rounds are
+    /// sequential)
+    pub train_states: Vec<Option<ClientTrainState<B::Cursor>>>,
     pub utility: UtilityTracker,
     pub meter: EnergyMeter,
     pub metrics: MetricsLog,
     pub rng: Rng,
     /// wall-clock spent inside strategy.select (overhead accounting)
     pub select_time: std::time::Duration,
+    /// the global model after `run` finishes (equality fixture for the
+    /// serial-vs-sharded train-path tests and the bench gate)
+    pub final_global: Vec<f32>,
 }
 
 /// Actual spare capacity of client `i` at step `t` (batches/step) — free
@@ -243,13 +270,16 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         load_actual: Vec<Vec<f64>>,
         load_fc: Vec<SeriesForecaster>,
         load_fc_level: ErrorLevel,
-        backend: &'a mut B,
+        backend: &'a B,
         strategy: &'a mut dyn Strategy,
     ) -> Self {
         let n_clients = clients.len();
         let n_domains = domains.len();
         let seed = cfg.seed;
         let step_minutes = cfg.step_minutes;
+        let train_states = (0..n_clients)
+            .map(|i| Some(ClientTrainState::new(backend.make_cursor(i))))
+            .collect();
         Simulation {
             cfg,
             clients,
@@ -262,12 +292,25 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             par_domains_min: 8,
             par_slots_min: 256,
             states: vec![ClientRoundState::default(); n_clients],
+            train_states,
             utility: UtilityTracker::new(n_clients),
             meter: EnergyMeter::new(n_clients, n_domains),
             metrics: MetricsLog::new(step_minutes),
             rng: Rng::new(seed ^ 0x51D),
             select_time: std::time::Duration::ZERO,
+            final_global: Vec::new(),
         }
+    }
+
+    /// Total train-step executions across all clients: a deterministic
+    /// reduction over the per-client state counters in client-index
+    /// order — no shared mutable counter to contend on (or for a backend
+    /// to forget to maintain).
+    pub fn steps_executed(&self) -> u64 {
+        self.train_states
+            .iter()
+            .map(|st| st.as_ref().map_or(0, |s| s.steps))
+            .sum()
     }
 
     /// actual spare capacity of client `i` at step `t` (batches/step)
@@ -335,10 +378,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             }
             last_was_wait = false;
 
-            let outcome = self.execute_round(&decision, t, &global)?;
+            let (out, losses) = self.execute_round(&decision, t, &global)?;
 
-            // aggregate participant updates (weights = sample counts)
-            let participants = outcome.0.participants.clone();
+            // aggregate participant updates (weights = sample counts),
+            // reading the params straight out of the returned client
+            // states — no per-round model copies
+            let participants = out.participants.clone();
             if !participants.is_empty() {
                 let weights = fedavg_weights(
                     &participants
@@ -346,11 +391,21 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                         .map(|&c| self.clients[c].num_samples())
                         .collect::<Vec<_>>(),
                 );
-                global = self.backend.aggregate(&outcome.1, &weights)?;
+                let updates: Vec<&[f32]> = participants
+                    .iter()
+                    .map(|&c| {
+                        self.train_states[c]
+                            .as_ref()
+                            .expect("round returned its states")
+                            .params
+                            .as_slice()
+                    })
+                    .collect();
+                global = self.backend.aggregate(&updates, &weights)?;
             }
 
             // bookkeeping: utility, participation, blocklist
-            for (&c, &loss) in participants.iter().zip(&outcome.2) {
+            for (&c, &loss) in participants.iter().zip(&losses) {
                 self.states[c].participation += 1;
                 self.utility.update(c, loss, self.clients[c].num_samples());
             }
@@ -360,11 +415,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 &mut self.rng,
             );
 
-            let out = &outcome.0;
-            let mean_loss = if outcome.2.is_empty() {
+            let mean_loss = if losses.is_empty() {
                 0.0
             } else {
-                outcome.2.iter().sum::<f64>() / outcome.2.len() as f64
+                losses.iter().sum::<f64>() / losses.len() as f64
             };
             self.metrics.rounds.push(RoundRecord {
                 round,
@@ -391,27 +445,56 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 });
             }
         }
+        self.final_global = global;
         Ok(())
     }
 
     /// Execute one round starting at `t0`. Returns (outcome, participant
-    /// updated params aligned with outcome.participants, participant mean
-    /// losses).
-    #[allow(clippy::type_complexity)]
+    /// mean losses aligned with outcome.participants); the participants'
+    /// updated params stay in `self.train_states` for the caller to
+    /// aggregate.
     fn execute_round(
         &mut self,
         decision: &SelectionDecision,
         t0: usize,
         global: &[f32],
-    ) -> Result<(RoundOutcome, Vec<Vec<f32>>, Vec<f64>)> {
+    ) -> Result<(RoundOutcome, Vec<f64>)> {
         self.meter.begin_round();
         let sel = &decision.clients;
         let k = sel.len();
-        let mut local: Vec<Vec<f32>> = vec![global.to_vec(); k];
+        // pull the selected clients' persistent train states for the
+        // round; params reset to the global snapshot in place (reusing
+        // their capacity — the historical code cloned `global` k times)
+        let mut round_states: Vec<ClientTrainState<B::Cursor>> =
+            Vec::with_capacity(k);
+        for &c in sel.iter() {
+            let mut st = self.train_states[c].take().unwrap_or_else(|| {
+                panic!(
+                    "SelectionDecision lists client {c} more than once \
+                     (decisions must select distinct clients)"
+                )
+            });
+            st.reset_params(global);
+            round_states.push(st);
+        }
         let mut progress = vec![0.0f64; k]; // fractional batch credit
         let mut executed = vec![0usize; k]; // whole batches run
+        let mut n_new = vec![0usize; k]; // whole batches earned this step
         let mut loss_acc = vec![0.0f64; k];
         let mut loss_batches = vec![0usize; k];
+        // incremental end-condition: progress is monotone within a round,
+        // so count each slot once when it first crosses m_min instead of
+        // rescanning all k slots every step. Slots with m_min <= 0 count
+        // from step one, exactly like the historical rescan did.
+        let mut reached = vec![false; k];
+        let mut done = 0usize;
+        for s in 0..k {
+            if 0.0 >= self.clients[sel[s]].m_min - 1e-9 {
+                reached[s] = true;
+                done += 1;
+            }
+        }
+        let mut job_slots: Vec<usize> = Vec::with_capacity(k);
         let mut duration = 0usize;
 
         // group selected clients by domain once per round (ascending
@@ -485,9 +568,13 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 }
             }
 
-            // apply phase: serial, ascending (domain, slot) order — the
-            // exact historical sequence, so metering and backend calls
-            // are identical to the sequential execution
+            // apply/meter phase: serial, ascending (domain, slot) order —
+            // the exact historical sequence for progress and energy
+            // metering. Training is only *scheduled* here: the whole
+            // batches each slot earned this step go into `n_new`.
+            for v in n_new.iter_mut() {
+                *v = 0;
+            }
             for (g, (dom, _slots)) in groups.iter().enumerate() {
                 for &(s, b) in &grants[g] {
                     if b <= 0.0 {
@@ -496,27 +583,44 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     progress[s] += b;
                     let wh = b * self.clients[sel[s]].delta();
                     self.meter.record(sel[s], *dom, wh);
-                    // run the whole batches that became available
                     let want = progress[s].floor() as usize;
                     if want > executed[s] {
-                        let n_new = want - executed[s];
-                        let stats = self.backend.train_batches(
-                            sel[s],
-                            &mut local[s],
-                            global,
-                            n_new,
-                        )?;
-                        loss_acc[s] += stats.mean_loss * n_new as f64;
-                        loss_batches[s] += n_new;
+                        n_new[s] = want - executed[s];
                         executed[s] = want;
+                    }
+                    if !reached[s]
+                        && progress[s] >= self.clients[sel[s]].m_min - 1e-9
+                    {
+                        reached[s] = true;
+                        done += 1;
                     }
                 }
             }
 
+            // train phase: one job per slot that earned whole batches,
+            // in ascending slot order. Each job exclusively owns its
+            // client's state, so `train_shard` may fan the jobs out
+            // across workers — per-slot params/stats are bit-identical
+            // to the serial order either way, and the loss accounting
+            // below stays serial in slot order.
+            job_slots.clear();
+            let mut jobs: Vec<TrainJob<'_, B::Cursor>> = Vec::with_capacity(k);
+            for (s, st) in round_states.iter_mut().enumerate() {
+                if n_new[s] > 0 {
+                    job_slots.push(s);
+                    jobs.push(TrainJob::new(sel[s], n_new[s], st));
+                }
+            }
+            if !jobs.is_empty() {
+                self.backend.train_shard(global, &mut jobs)?;
+            }
+            for (&s, j) in job_slots.iter().zip(&jobs) {
+                loss_acc[s] += j.stats.mean_loss * j.n_batches as f64;
+                loss_batches[s] += j.n_batches;
+            }
+
             // end condition: n_required clients reached their minimum
-            let done = (0..k)
-                .filter(|&s| progress[s] >= self.clients[sel[s]].m_min - 1e-9)
-                .count();
+            // (incremental `done` counter, see above)
             if done >= decision.n_required {
                 break;
             }
@@ -524,14 +628,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
 
         let mut participants = Vec::new();
         let mut stragglers = Vec::new();
-        let mut updates = Vec::new();
         let mut losses = Vec::new();
         for s in 0..k {
-            if progress[s] >= self.clients[sel[s]].m_min - 1e-9
-                && executed[s] > 0
-            {
+            if reached[s] && executed[s] > 0 {
                 participants.push(sel[s]);
-                updates.push(std::mem::take(&mut local[s]));
                 losses.push(if loss_batches[s] > 0 {
                     loss_acc[s] / loss_batches[s] as f64
                 } else {
@@ -543,6 +643,11 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         }
         let total_batches: f64 = progress.iter().sum();
         let energy_wh = self.meter.round_wh(self.meter.rounds() - 1);
+        // return the states; participants' params are read by the caller
+        // for aggregation before the next round resets them
+        for (s, st) in round_states.into_iter().enumerate() {
+            self.train_states[sel[s]] = Some(st);
+        }
         Ok((
             RoundOutcome {
                 duration,
@@ -551,7 +656,6 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 total_batches,
                 energy_wh,
             },
-            updates,
             losses,
         ))
     }
@@ -611,17 +715,24 @@ mod tests {
         strategy: &mut dyn Strategy,
         power_w: f64,
     ) -> (MetricsLog, f64) {
-        run_sim_par(strategy, power_w, 8)
+        let (m, kwh, _, _) = run_sim_forced(strategy, power_w, 8, usize::MAX);
+        (m, kwh)
     }
 
-    fn run_sim_par(
+    /// Run the fixture with both fan-outs pinned: `par_domains_min`
+    /// forces/disables the grant compute fan-out, `par_train_min` the
+    /// backend train-shard fan-out. Returns (metrics, kwh, final global
+    /// params, total train steps).
+    fn run_sim_forced(
         strategy: &mut dyn Strategy,
         power_w: f64,
         par_domains_min: usize,
-    ) -> (MetricsLog, f64) {
+        par_train_min: usize,
+    ) -> (MetricsLog, f64, Vec<f32>, u64) {
         let horizon = 600;
         let (clients, domains, load, load_fc) = build(9, 3, power_w, horizon);
         let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        backend.par_min_jobs = par_train_min;
         let cfg = SimConfig {
             horizon,
             n_per_round: 3,
@@ -637,14 +748,16 @@ mod tests {
             load,
             load_fc,
             ErrorLevel::Realistic,
-            &mut backend,
+            &backend,
             strategy,
         );
         sim.par_domains_min = par_domains_min;
         sim.par_slots_min = par_domains_min; // force both gates together
         sim.run().unwrap();
         let kwh = sim.meter.total_kwh();
-        (sim.metrics, kwh)
+        let steps = sim.steps_executed();
+        let global = std::mem::take(&mut sim.final_global);
+        (sim.metrics, kwh, global, steps)
     }
 
     #[test]
@@ -740,17 +853,74 @@ mod tests {
         // assertion is trivially true.
         for power in [800.0, 100.0, 60.0] {
             let mut fz_par = FedZero::new(SolverKind::Greedy);
-            let (m_par, kwh_par) = run_sim_par(&mut fz_par, power, 1);
+            let (m_par, kwh_par, _, _) =
+                run_sim_forced(&mut fz_par, power, 1, usize::MAX);
             let mut fz_ser = FedZero::new(SolverKind::Greedy);
-            let (m_ser, kwh_ser) = run_sim_par(&mut fz_ser, power, usize::MAX);
+            let (m_ser, kwh_ser, _, _) =
+                run_sim_forced(&mut fz_ser, power, usize::MAX, usize::MAX);
             assert_eq!(m_par, m_ser, "metrics diverged at power {power}");
             assert_eq!(kwh_par, kwh_ser, "energy diverged at power {power}");
         }
         // over-selection exercises straggler paths under contention
         let mut b_par = Baseline::random_over();
-        let (m_par, _) = run_sim_par(&mut b_par, 60.0, 1);
+        let (m_par, _, _, _) = run_sim_forced(&mut b_par, 60.0, 1, usize::MAX);
         let mut b_ser = Baseline::random_over();
-        let (m_ser, _) = run_sim_par(&mut b_ser, 60.0, usize::MAX);
+        let (m_ser, _, _, _) =
+            run_sim_forced(&mut b_ser, 60.0, usize::MAX, usize::MAX);
         assert_eq!(m_par, m_ser);
+    }
+
+    #[test]
+    fn parallel_training_matches_serial_bitwise() {
+        // forced shard fan-out vs forced serial shard, with the grant
+        // fan-out toggled independently: MetricsLog, energy, the FINAL
+        // GLOBAL MODEL (bitwise) and the step totals must all agree.
+        for power in [800.0, 100.0, 60.0] {
+            let mut fz_ser = FedZero::new(SolverKind::Greedy);
+            let (m_ser, kwh_ser, g_ser, steps_ser) =
+                run_sim_forced(&mut fz_ser, power, usize::MAX, usize::MAX);
+            for grants_min in [1usize, usize::MAX] {
+                let mut fz_par = FedZero::new(SolverKind::Greedy);
+                let (m_par, kwh_par, g_par, steps_par) =
+                    run_sim_forced(&mut fz_par, power, grants_min, 1);
+                assert_eq!(m_par, m_ser, "metrics diverged at power {power}");
+                assert_eq!(kwh_par, kwh_ser, "energy diverged at power {power}");
+                assert_eq!(steps_par, steps_ser, "steps diverged at {power}");
+                let bits_ser: Vec<u32> =
+                    g_ser.iter().map(|x| x.to_bits()).collect();
+                let bits_par: Vec<u32> =
+                    g_par.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    bits_par, bits_ser,
+                    "global model diverged at power {power}"
+                );
+            }
+        }
+        // straggler-heavy contention through the sharded path too
+        let mut b_ser = Baseline::random_over();
+        let (m_ser, _, g_ser, _) =
+            run_sim_forced(&mut b_ser, 60.0, usize::MAX, usize::MAX);
+        let mut b_par = Baseline::random_over();
+        let (m_par, _, g_par, _) = run_sim_forced(&mut b_par, 60.0, 1, 1);
+        assert_eq!(m_par, m_ser);
+        assert_eq!(
+            g_par.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            g_ser.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn steps_executed_counts_trained_batches() {
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let (m, _, _, steps) = run_sim_forced(&mut fz, 800.0, 8, usize::MAX);
+        assert!(!m.rounds.is_empty());
+        // every executed whole batch is one train step; batch totals in
+        // the metrics are fractional credits, so steps <= ceil(batches)
+        let credit: f64 = m.rounds.iter().map(|r| r.batches).sum();
+        assert!(steps > 0, "no steps recorded");
+        assert!(
+            (steps as f64) <= credit + m.rounds.len() as f64,
+            "steps {steps} exceed batch credit {credit}"
+        );
     }
 }

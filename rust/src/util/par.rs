@@ -9,9 +9,11 @@
 //! — the unit-test and evaluation-scale instances never pay thread-spawn
 //! overhead.
 //!
-//! Two primitives own the chunking policy ([`par_ranges`] for
-//! collect-style maps, [`par_fill_rows_scratch`] for in-place disjoint
-//! row fills); everything else is a thin wrapper, so a change to the
+//! Two internals own the fan-out policy — `chunking` (how many units per
+//! worker) and `spawn_blocks` (the split-and-spawn walk every in-place
+//! fill funnels through); [`par_ranges`] owns the collect-style maps.
+//! Everything else ([`par_map`], [`par_fill_rows`], [`try_par_fill_rows`],
+//! [`par_fill_slice`], ...) is a thin wrapper, so a change to the
 //! worker/chunk computation cannot silently diverge between callers.
 
 use std::thread;
@@ -29,6 +31,47 @@ fn chunking(n: usize) -> (usize, usize) {
     let chunk = (n + workers - 1) / workers;
     let n_chunks = (n + chunk - 1) / chunk;
     (chunk, n_chunks)
+}
+
+/// The shared block-spawn walk for every in-place parallel fill: split
+/// `out` — interpreted as `out.len() / unit` units of `unit` elements —
+/// into contiguous blocks of `units_per_block` units, run
+/// `f(first_unit_index, block)` on each block in its own scoped thread,
+/// and return the per-block results in block order. All mutable-fill
+/// entry points funnel through here so the split arithmetic cannot
+/// silently diverge between them (the same promise [`chunking`] makes
+/// for chunk sizing).
+fn spawn_blocks<T, R, F>(
+    out: &mut [T],
+    unit: usize,
+    units_per_block: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    let n_units = out.len() / unit;
+    thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::new();
+        let mut rest: &mut [T] = out;
+        let mut u0 = 0usize;
+        while u0 < n_units {
+            let take = units_per_block.min(n_units - u0);
+            let tmp = std::mem::take(&mut rest);
+            let (head, tail) = tmp.split_at_mut(take * unit);
+            rest = tail;
+            let start = u0;
+            handles.push(s.spawn(move || f(start, head)));
+            u0 += take;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("spawn_blocks worker panicked"))
+            .collect()
+    })
 }
 
 /// Split `0..n` into contiguous ranges, run `f(start, end)` on each (in
@@ -130,28 +173,10 @@ pub fn par_fill_rows_scratch<T, S, I, F>(
         return;
     }
     let (rows_per, _) = chunking(n_rows);
-    thread::scope(|s| {
-        let f = &f;
-        let init = &init;
-        let mut handles = Vec::new();
-        let mut rest: &mut [T] = out;
-        let mut r0 = 0usize;
-        while r0 < n_rows {
-            let take = rows_per.min(n_rows - r0);
-            let tmp = std::mem::take(&mut rest);
-            let (head, tail) = tmp.split_at_mut(take * row_len);
-            rest = tail;
-            let start = r0;
-            handles.push(s.spawn(move || {
-                let mut scratch = init();
-                for (k, row) in head.chunks_mut(row_len).enumerate() {
-                    f(start + k, row, &mut scratch);
-                }
-            }));
-            r0 += take;
-        }
-        for h in handles {
-            h.join().expect("par_fill_rows worker panicked");
+    spawn_blocks(out, row_len, rows_per, |start, head| {
+        let mut scratch = init();
+        for (k, row) in head.chunks_mut(row_len).enumerate() {
+            f(start + k, row, &mut scratch);
         }
     });
 }
@@ -166,6 +191,80 @@ where
     F: Fn(usize, &mut [T]) + Sync,
 {
     par_fill_rows_scratch(out, row_len, min_serial_rows, || (), |r, row, _| f(r, row));
+}
+
+/// Fallible [`par_fill_rows`]: `f` returns `Result<(), E>` per row. The
+/// serial path stops at the first failing row. On the parallel path each
+/// worker stops its own contiguous block at its first error; after the
+/// join, the error with the *smallest row index* is returned, so the
+/// reported error is deterministic regardless of chunking. Rows after a
+/// failing one may or may not have been filled — callers are expected to
+/// abort on error (the training shard does).
+pub fn try_par_fill_rows<T, E, F>(
+    out: &mut [T],
+    row_len: usize,
+    min_serial_rows: usize,
+    f: F,
+) -> Result<(), E>
+where
+    T: Send,
+    E: Send,
+    F: Fn(usize, &mut [T]) -> Result<(), E> + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return Ok(());
+    }
+    debug_assert_eq!(out.len() % row_len, 0, "out is not a whole number of rows");
+    let n_rows = out.len() / row_len;
+    if n_rows < min_serial_rows || threads() <= 1 {
+        for (r, row) in out.chunks_mut(row_len).enumerate() {
+            f(r, row)?;
+        }
+        return Ok(());
+    }
+    let (rows_per, _) = chunking(n_rows);
+    let results = spawn_blocks(out, row_len, rows_per, |start, head| {
+        for (k, row) in head.chunks_mut(row_len).enumerate() {
+            f(start + k, row).map_err(|e| (start + k, e))?;
+        }
+        Ok(())
+    });
+    let mut first: Option<(usize, E)> = None;
+    for block in results {
+        if let Err((r, e)) = block {
+            if first.as_ref().map(|(fr, _)| r < *fr).unwrap_or(true) {
+                first = Some((r, e));
+            }
+        }
+    }
+    match first {
+        Some((_, e)) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Fill a flat slice in parallel by contiguous chunks: `f(start, seg)`
+/// must write every element of `seg` (= `out[start..start + seg.len()]`).
+/// Chunks are disjoint, so each output element is computed by exactly one
+/// worker — with an index-deterministic `f`, the parallel fill writes
+/// bytes identical to `f(0, out)`. Used by the chunked FedAvg: every
+/// aggregated coordinate is produced by one worker evaluating the same
+/// serial expression.
+pub fn par_fill_slice<T, F>(out: &mut [T], min_serial: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    if n < min_serial || threads() <= 1 {
+        f(0, out);
+        return;
+    }
+    let (chunk, _) = chunking(n);
+    spawn_blocks(out, 1, chunk, |start, head| f(start, head));
 }
 
 #[cfg(test)]
@@ -251,6 +350,76 @@ mod tests {
         let mut parallel: Vec<Vec<usize>> = vec![Vec::new(); n];
         par_fill_rows_scratch(&mut parallel, 1, 0, Vec::new, fill);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn try_par_fill_rows_ok_matches_serial() {
+        let rows = 301usize;
+        let fill = |r: usize, row: &mut [u64]| -> Result<(), String> {
+            row[0] = (r as u64).wrapping_mul(0xABCD) ^ 7;
+            Ok(())
+        };
+        let mut serial = vec![0u64; rows];
+        for (r, row) in serial.chunks_mut(1).enumerate() {
+            fill(r, row).unwrap();
+        }
+        let mut parallel = vec![0u64; rows];
+        try_par_fill_rows(&mut parallel, 1, 0, fill).unwrap();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn try_par_fill_rows_reports_smallest_failing_row() {
+        // several failing rows spread over different worker blocks: the
+        // returned error must always be the smallest row index
+        let rows = 512usize;
+        let err = try_par_fill_rows(
+            &mut vec![0u8; rows],
+            1,
+            0,
+            |r, _row: &mut [u8]| -> Result<(), usize> {
+                if r % 100 == 37 {
+                    Err(r)
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err, 37);
+        // serial path (threshold above row count) agrees
+        let err_serial = try_par_fill_rows(
+            &mut vec![0u8; rows],
+            1,
+            usize::MAX,
+            |r, _row: &mut [u8]| -> Result<(), usize> {
+                if r % 100 == 37 {
+                    Err(r)
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err_serial, 37);
+    }
+
+    #[test]
+    fn par_fill_slice_matches_serial_fill() {
+        let n = 10_007usize;
+        let fill = |start: usize, seg: &mut [u64]| {
+            for (j, v) in seg.iter_mut().enumerate() {
+                *v = ((start + j) as u64).wrapping_mul(0x9E3779B9);
+            }
+        };
+        let mut serial = vec![0u64; n];
+        fill(0, &mut serial);
+        let mut parallel = vec![0u64; n];
+        par_fill_slice(&mut parallel, 0, fill);
+        assert_eq!(serial, parallel);
+        let mut inline = vec![0u64; n];
+        par_fill_slice(&mut inline, usize::MAX, fill);
+        assert_eq!(serial, inline);
     }
 
     #[test]

@@ -107,7 +107,7 @@ fn aggregate_matches_host_weighted_mean() {
     let Some(rt) = runtime() else { return };
     let a = rt.init_params(10).unwrap();
     let b = rt.init_params(11).unwrap();
-    let out = rt.aggregate(&[a.clone(), b.clone()], &[3.0, 1.0]).unwrap();
+    let out = rt.aggregate(&[a.as_slice(), b.as_slice()], &[3.0, 1.0]).unwrap();
     for i in 0..a.len() {
         let expect = (3.0 * a[i] + b[i]) / 4.0;
         assert!(
@@ -117,7 +117,7 @@ fn aggregate_matches_host_weighted_mean() {
         );
     }
     // zero-padding invariance (fixed-K artifact)
-    let padded = rt.aggregate(&[a.clone(), b], &[3.0, 1.0]).unwrap();
+    let padded = rt.aggregate(&[a.as_slice(), b.as_slice()], &[3.0, 1.0]).unwrap();
     assert_eq!(out, padded);
 }
 

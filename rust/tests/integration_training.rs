@@ -1,9 +1,17 @@
 //! Integration: full simulated FL training through the PJRT backend —
 //! the three layers composing (Pallas kernels inside the HLO, executed by
-//! the Rust coordinator under energy constraints).
+//! the Rust coordinator under energy constraints) — plus a mock-backed
+//! serial-vs-sharded train-path parity run that needs no artifacts.
 
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
 use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
+use fedzero::energy::PowerDomain;
+use fedzero::fl::MockBackend;
+use fedzero::metrics::MetricsLog;
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::sim::{SimConfig, Simulation};
+use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
 
 fn base_spec() -> ExperimentSpec {
     ExperimentSpec {
@@ -97,6 +105,85 @@ fn upper_bound_beats_constrained_in_time() {
         ub.metrics.rounds.len(),
         fz.metrics.rounds.len()
     );
+}
+
+/// Run a mock-backed FedZero sim with the shard fan-out forced on/off.
+/// Returns (metrics, final global model bits, total train steps).
+fn mock_parity_run(par_train_min: usize) -> (MetricsLog, Vec<u32>, u64) {
+    let n_clients = 18;
+    let n_domains = 6;
+    let horizon = 500;
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[i % 3],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, i % n_domains, p, (0..60).collect(), 10)
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            // staggered sine power so rounds see contention and dark gaps
+            let series: Vec<f64> = (0..horizon)
+                .map(|t| (400.0 * ((t + i * 37) as f64 / 29.0).sin()).max(0.0))
+                .collect();
+            PowerDomain::new(
+                i,
+                "d",
+                800.0,
+                series.clone(),
+                SeriesForecaster::realistic(series, i as u64, 60.0),
+                1.0,
+            )
+        })
+        .collect();
+    let load: Vec<Vec<f64>> =
+        (0..n_clients).map(|_| vec![0.2; horizon]).collect();
+    let load_fc: Vec<SeriesForecaster> = clients
+        .iter()
+        .map(|c| SeriesForecaster::perfect(vec![c.capacity(); horizon]))
+        .collect();
+    let mut backend = MockBackend::new(n_clients, 32, 0.3, 11);
+    backend.par_min_jobs = par_train_min;
+    let mut fz = FedZero::new(SolverKind::Greedy);
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 6,
+        d_max: 40,
+        eval_every: 3,
+        seed: 5,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &backend,
+        &mut fz,
+    );
+    sim.run().unwrap();
+    let steps = sim.steps_executed();
+    let bits: Vec<u32> = sim.final_global.iter().map(|x| x.to_bits()).collect();
+    (std::mem::take(&mut sim.metrics), bits, steps)
+}
+
+#[test]
+fn sharded_training_is_bit_identical_end_to_end() {
+    // whole-sim parity: metrics log, final global model (bitwise) and
+    // the deterministic step totals must not depend on the fan-out
+    let (m_ser, g_ser, s_ser) = mock_parity_run(usize::MAX);
+    let (m_par, g_par, s_par) = mock_parity_run(1);
+    assert!(!m_ser.rounds.is_empty(), "fixture executed no rounds");
+    assert_eq!(m_par, m_ser, "MetricsLog diverged");
+    assert_eq!(g_par, g_ser, "final global model diverged");
+    assert_eq!(s_par, s_ser, "train-step totals diverged");
+    assert!(s_ser > 0);
 }
 
 #[test]
