@@ -16,9 +16,20 @@
 #
 # When a committed baseline (BENCH_<name>.baseline.json) exists next to a
 # freshly written BENCH_<name>.json, the two are compared metric by
-# metric: regressions >10% warn, >50% fail the run. To (re)ratchet a
-# baseline after an intentional change:
-#   cp rust/BENCH_endtoend.json rust/BENCH_endtoend.baseline.json
+# metric: regressions >10% warn, >50% fail the run.
+#
+# ARMING / RE-RATCHETING THE BASELINES (run in a toolchain environment —
+# the authoring container has no cargo, so the first arming must happen
+# wherever CI actually runs):
+#   1. ./ci.sh                  # green build/tests + fresh quick-mode JSON
+#   2. cp rust/BENCH_selection.json rust/BENCH_selection.baseline.json
+#      cp rust/BENCH_endtoend.json  rust/BENCH_endtoend.baseline.json
+#   3. git add rust/BENCH_*.baseline.json && git commit
+# Baselines are mode-tagged: a quick-mode baseline only gates quick-mode
+# runs (the comparator skips mismatched modes), so arm with the mode CI
+# uses. After an INTENTIONAL perf change, repeat 1–3 in the same
+# environment; never copy a baseline produced on different hardware over
+# an existing one — the ratchet compares absolute numbers.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 

@@ -12,6 +12,11 @@
 //! is tracked across PRs (fields: median_ns / ref_median_ns /
 //! speedup_vs_reference per point).
 //!
+//! A branch-and-bound point additionally records exact-solver node
+//! throughput forced-serial vs forced-parallel (shared-incumbent subtree
+//! fan-out) and fails the run if completed searches disagree — the
+//! serial/parallel identity guarantee of `solver::mip`.
+//!
 //! Flags: --quick  CI smoke (small points only, few samples)
 //!        --full   add the 100k-scale paper-envelope points
 
@@ -19,7 +24,11 @@ use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
-use fedzero::solver::mip::{greedy, reference_greedy, SelClient, SelInstance, SelSolution};
+use fedzero::solver::alloc::AllocWorkspace;
+use fedzero::solver::mip::{
+    branch_and_bound_view_forced, greedy, reference_greedy, SelClient, SelInstance,
+    SelSolution,
+};
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
 use fedzero::util::stats;
@@ -209,6 +218,61 @@ fn point(
     pt
 }
 
+/// Branch-and-bound node throughput, forced-serial vs forced-parallel on
+/// the same seeded instance. Returns (json, mismatch): results must be
+/// identical whenever both searches complete (the canonical-reduction
+/// guarantee; mismatch fails the bench like the greedy equivalence
+/// checks).
+fn bnb_point(budget: usize) -> (Json, bool) {
+    let inst = instance(40, 5, 8, 77);
+    let vs = inst.view_storage();
+    let mut ws1 = AllocWorkspace::default();
+    let mut ws2 = AllocWorkspace::default();
+    let t0 = Instant::now();
+    let (ser, nodes_ser) = branch_and_bound_view_forced(vs.view(), budget, &mut ws1, false);
+    let dt_ser = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let (par, nodes_par) = branch_and_bound_view_forced(vs.view(), budget, &mut ws2, true);
+    let dt_par = t1.elapsed().as_secs_f64();
+    let nps_ser = nodes_ser as f64 / dt_ser.max(1e-9);
+    let nps_par = nodes_par as f64 / dt_par.max(1e-9);
+    let both_complete = ser.optimal && par.optimal;
+    let mismatch = both_complete
+        && (ser.chosen != par.chosen
+            || ser.objective.to_bits() != par.objective.to_bits());
+    println!(
+        "bnb/40c_5p_8t serial {nodes_ser} nodes in {dt_ser:.3} s ({nps_ser:.0}/s), \
+         parallel {nodes_par} nodes in {dt_par:.3} s ({nps_par:.0}/s, \
+         wallclock speedup {:.2}x){}{}",
+        dt_ser / dt_par.max(1e-9),
+        if both_complete { "" } else { " [budget exhausted]" },
+        if mismatch { " MISMATCH" } else { "" },
+    );
+    let mut m = BTreeMap::new();
+    m.insert("clients".into(), Json::Num(40.0));
+    m.insert("domains".into(), Json::Num(5.0));
+    m.insert("steps".into(), Json::Num(8.0));
+    m.insert("node_budget".into(), Json::Num(budget as f64));
+    m.insert("nodes_serial".into(), Json::Num(nodes_ser as f64));
+    m.insert("nodes_parallel".into(), Json::Num(nodes_par as f64));
+    m.insert("nodes_per_s_serial".into(), Json::Num(nps_ser));
+    m.insert("nodes_per_s_parallel".into(), Json::Num(nps_par));
+    m.insert(
+        "wallclock_speedup".into(),
+        Json::Num(dt_ser / dt_par.max(1e-9)),
+    );
+    m.insert("complete_serial".into(), Json::Bool(ser.optimal));
+    m.insert("complete_parallel".into(), Json::Bool(par.optimal));
+    // null (not true) when the equivalence was never checkable — the
+    // identity guarantee only covers completed searches, matching the
+    // chosen_matches_reference convention of the greedy points
+    m.insert(
+        "chosen_match".into(),
+        if both_complete { Json::Bool(!mismatch) } else { Json::Null },
+    );
+    (Json::Obj(m), mismatch)
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let full = std::env::args().any(|a| a == "--full");
@@ -253,6 +317,11 @@ fn main() {
         }
     }
 
+    // --- exact-solver node throughput: serial vs parallel B&B on one
+    // seeded instance; completed searches must return identical results
+    println!("\n== branch-and-bound serial vs parallel ==");
+    let (bnb_json, bnb_mismatch) = bnb_point(if quick { 200_000 } else { 2_000_000 });
+
     // all reference-checked points must have matched
     let mismatches: Vec<&str> = points
         .iter()
@@ -269,6 +338,7 @@ fn main() {
         "points".into(),
         Json::Arr(points.iter().map(|p| p.to_json()).collect()),
     );
+    root.insert("bnb".into(), bnb_json);
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_selection.json";
     match std::fs::write(path, &out) {
@@ -278,6 +348,10 @@ fn main() {
 
     if !mismatches.is_empty() {
         eprintln!("solver equivalence FAILED at: {mismatches:?}");
+        std::process::exit(1);
+    }
+    if bnb_mismatch {
+        eprintln!("branch-and-bound serial/parallel equivalence FAILED");
         std::process::exit(1);
     }
     println!("== done ==");

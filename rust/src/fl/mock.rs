@@ -119,9 +119,10 @@ impl TrainBackend for MockBackend {
     fn train_shard(
         &self,
         global: &[f32],
-        jobs: &mut [TrainJob<'_, ()>],
+        jobs: &mut [TrainJob],
+        states: &mut [ClientTrainState<()>],
     ) -> Result<()> {
-        train_shard_parallel(self, global, jobs, self.par_min_jobs)
+        train_shard_parallel(self, global, jobs, states, self.par_min_jobs)
     }
 
     fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
@@ -189,20 +190,20 @@ mod tests {
     fn training_reduces_loss_and_counts_steps() {
         let b = MockBackend::new(4, 8, 0.1, 1);
         let global = b.init_params(0).unwrap();
-        let mut st = fresh_state(&b, 0, &global);
+        let mut states = vec![fresh_state(&b, 0, &global)];
         let (s1, s2);
         {
-            let mut jobs = [TrainJob::new(0, 5, &mut st)];
-            b.train_shard(&global, &mut jobs).unwrap();
+            let mut jobs = [TrainJob::new(0, 5, 0)];
+            b.train_shard(&global, &mut jobs, &mut states).unwrap();
             s1 = jobs[0].stats;
         }
         {
-            let mut jobs = [TrainJob::new(0, 5, &mut st)];
-            b.train_shard(&global, &mut jobs).unwrap();
+            let mut jobs = [TrainJob::new(0, 5, 0)];
+            b.train_shard(&global, &mut jobs, &mut states).unwrap();
             s2 = jobs[0].stats;
         }
         assert!(s2.mean_loss < s1.mean_loss);
-        assert_eq!(st.steps, 10);
+        assert_eq!(states[0].steps, 10);
     }
 
     #[test]
@@ -282,18 +283,13 @@ mod tests {
                 let run = |b: &MockBackend,
                            states: &mut [ClientTrainState<()>]|
                  -> Vec<BatchStats> {
-                    let mut jobs: Vec<TrainJob<'_, ()>> = Vec::new();
-                    let mut iter = states.iter_mut().enumerate();
-                    for &(c, n) in &schedule {
-                        let st = loop {
-                            let (i, st) = iter.next().expect("schedule sorted");
-                            if i == c {
-                                break st;
-                            }
-                        };
-                        jobs.push(TrainJob::new(c, n, st));
-                    }
-                    b.train_shard(&global, &mut jobs).unwrap();
+                    // index-based jobs: slot == client index into the
+                    // full state arena (strictly increasing)
+                    let mut jobs: Vec<TrainJob> = schedule
+                        .iter()
+                        .map(|&(c, n)| TrainJob::new(c, n, c))
+                        .collect();
+                    b.train_shard(&global, &mut jobs, states).unwrap();
                     jobs.iter().map(|j| j.stats).collect()
                 };
                 let stats_ser = run(&ser, &mut st_ser);
@@ -323,13 +319,9 @@ mod tests {
             for st in states.iter_mut() {
                 st.reset_params(&global);
             }
-            let mut jobs: Vec<TrainJob<'_, ()>> = states
-                .iter_mut()
-                .enumerate()
-                .map(|(c, st)| TrainJob::new(c, 3, st))
-                .collect();
-            b.train_shard(&global, &mut jobs).unwrap();
-            drop(jobs);
+            let mut jobs: Vec<TrainJob> =
+                (0..6).map(|c| TrainJob::new(c, 3, c)).collect();
+            b.train_shard(&global, &mut jobs, &mut states).unwrap();
             let updates: Vec<&[f32]> =
                 states.iter().map(|st| st.params.as_slice()).collect();
             global = b.aggregate(&updates, &[1.0; 6]).unwrap();

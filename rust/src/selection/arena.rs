@@ -7,22 +7,28 @@
 //! those forecasts per probe; the previous arena copied them into flat
 //! per-`select()` f64 storage.
 //!
-//! [`SelArena`] now **borrows** its forecast storage from the
+//! [`SelArena`] **borrows** its forecast storage from the
 //! [`super::ring::FcView`] handed in through the [`SelectionContext`] —
 //! the persistent f32 ring-arena the simulation advances incrementally
-//! (see `selection::ring`). Building an arena therefore copies **no
-//! forecast rows at all**; per `select()` it computes only:
+//! (see `selection::ring`) — and, when the context carries the
+//! persistent [`super::incr::IncrSelState`], it also borrows every
+//! filter structure instead of recomputing it:
 //!
-//! * `energy_prefix` — f64 running sums per domain over the f32 rows,
-//!   making the line-6 "domain has excess energy within d" filter O(1)
-//!   per probe (threshold `> 0`, which on non-negative rows is exactly
-//!   "some column `> 0`" — consistent with the ring's integer liveness
-//!   counters, see `FcView::domain_alive`);
-//! * `d_reach` — the smallest feasible duration per client under the
-//!   line-11 standalone filter (monotone in d), folding in the blocklist
-//!   and σ_c > 0 checks, making per-probe client eligibility a single
-//!   integer compare. The fold is term-for-term identical to
-//!   [`SelectionContext::reachable_min`];
+//! * **effective reach** — the smallest duration at which a client
+//!   passes ALL pre-filters (line 6 domain energy, line 8 blocklist/σ,
+//!   line 11 standalone reachability), one integer per client. With the
+//!   incremental state attached this is a borrowed lookup (the state
+//!   patches it on ring advance — O(C·d_max) per select → nothing);
+//!   without it, it is derived freshly via the canonical bucketed walk
+//!   ([`super::incr::reach_walk`]) — bit-identical by construction.
+//!   For `m_min > 0` the line-6 energy condition is implied by the
+//!   reach crossing (a positive term needs a positive energy column);
+//!   `m_min <= 0` clients fold in the domain's first lit column.
+//! * **cumulative eligibility histogram** — `cum_elig[d]` = #clients
+//!   with reach ≤ d, built once per `select()` in O(C + d_max) integer
+//!   work, making `eligible_count(d)` **O(1) per probe** and letting
+//!   `fill_probe` reject infeasible probes without scanning a single
+//!   client (the historical filter scanned all C clients per probe).
 //! * one O(C) pass of per-client scalars (σ, δ, m_min, m_max, domain).
 //!
 //! Probes then borrow `row[..d]` slice views straight out of the ring
@@ -35,19 +41,27 @@
 //!
 //! Forecast values are f32 end to end (ring → arena → solver views) and
 //! widened to f64 wherever arithmetic happens — every layer reads the
-//! same quantised bits, which is what makes the ring-advance, fresh-build
-//! and quick-gate paths agree exactly (property-tested below and in
+//! same quantised bits, which together with the single canonical
+//! accumulation order (`selection::incr` module docs) makes the
+//! ring-advance, fresh-build, incremental and quick-gate paths agree
+//! exactly (property-tested below, in `selection::incr`, and in
 //! `tests/integration_ring.rs`).
 
+use super::incr::{self, IncrSelState};
 use super::SelectionContext;
 use crate::solver::mip::{ClientView, InstanceView};
 use crate::util::par;
+use crate::util::par::thresholds::MIN_FILL_ROWS;
 
-/// Row counts below which arena construction stays single-threaded.
-const PAR_MIN_ROWS: usize = 2048;
+/// Where the per-client effective reach comes from: borrowed from the
+/// persistent incremental state, or derived freshly per `select()`.
+enum EffSource<'a> {
+    Incr(&'a IncrSelState),
+    Fresh(Vec<usize>),
+}
 
-/// Per-`select()` arena: borrowed forecast rows plus the precomputed
-/// filter structures; see the module docs.
+/// Per-`select()` arena: borrowed forecast rows plus the (borrowed or
+/// freshly derived) filter structures; see the module docs.
 pub struct SelArena<'a> {
     /// clients required per round (ctx.n)
     pub n: usize,
@@ -56,12 +70,10 @@ pub struct SelArena<'a> {
     n_domains: usize,
     /// borrowed forecast window (ring or fresh buffers)
     fc: super::ring::FcView<'a>,
-    /// prefix[p·(d_max+1) + d] = Σ energy_row(p)[0..d] (f64 left fold
-    /// over the f32 row)
-    energy_prefix: Vec<f64>,
-    /// smallest d (1-based) at which client i passes the line-11
-    /// reachability filter, with blocklist/σ folded in; usize::MAX = never
-    d_reach: Vec<usize>,
+    /// per-client effective reach (see module docs)
+    eff: EffSource<'a>,
+    /// cum_elig[d] = #clients with effective reach ≤ d (cum_elig[0] = 0)
+    cum_elig: Vec<u32>,
     // per-client scalars copied once so probe filling never touches the
     // original context
     domain: Vec<usize>,
@@ -98,17 +110,25 @@ impl<'a> ProbeScratch<'a> {
 
 impl<'a> SelArena<'a> {
     /// The d_max eligibility count straight off the context, WITHOUT
-    /// building the arena — the dark-period early exit. Applies the same
-    /// line-6/8/11 filters as [`Self::build`]/[`Self::eligible`]; the
-    /// ring's O(1) liveness counters short-circuit dead domains and
-    /// `reachable_min` early-breaks, so idle (night) steps cost one
-    /// domain-counter check per client and zero allocations.
+    /// building the arena — the dark-period early exit. With the
+    /// incremental state attached this is a pure O(D) per-domain counter
+    /// sum (a fully dark idle step touches no client at all); the
+    /// fallback applies the same line-6/8/11 filters client by client —
+    /// the ring's O(1) liveness counters short-circuit dead domains and
+    /// the canonical walk gates on lit columns, so idle (night) steps
+    /// cost one domain-counter check per client and zero allocations.
     ///
-    /// KEEP IN SYNC with the filter in [`Self::build`]/[`Self::eligible`]:
-    /// any new eligibility condition must land in both places, or select()
-    /// will wait on rounds the arena considers feasible. Agreement is
-    /// property-tested in `tests::quick_count_agrees_with_arena`.
+    /// KEEP IN SYNC with the filter in [`Self::build`]/[`Self::eligible`]
+    /// (and `IncrSelState::quick_eligible_count`): any new eligibility
+    /// condition must land in all places, or select() will wait on
+    /// rounds the arena considers feasible. Agreement is property-tested
+    /// in `tests::quick_count_agrees_with_arena` and `selection::incr`.
     pub fn quick_eligible_count(ctx: &SelectionContext) -> usize {
+        if let Some(state) = ctx.incr {
+            debug_assert_eq!(state.phase(), ctx.fc.phase(), "stale incr state");
+            debug_assert_eq!(state.n_clients(), ctx.clients.len());
+            return state.quick_eligible_count();
+        }
         let d = ctx.d_max;
         (0..ctx.clients.len())
             .filter(|&i| {
@@ -120,8 +140,10 @@ impl<'a> SelArena<'a> {
             .count()
     }
 
-    /// Precompute the prefix sums and per-client reachability curve over
-    /// the context's borrowed forecast window.
+    /// Assemble the arena over the context's borrowed forecast window:
+    /// borrow the persistent reach structures when `ctx.incr` is
+    /// attached (O(C) integer work), or derive them freshly via the
+    /// canonical walk (O(C·d_max)) — bit-identical either way.
     pub fn build(ctx: &SelectionContext<'a>) -> SelArena<'a> {
         let n_clients = ctx.clients.len();
         let n_domains = ctx.fc.n_domains();
@@ -146,44 +168,71 @@ impl<'a> SelArena<'a> {
             live.push(!ctx.states[i].blocked && ctx.states[i].sigma > 0.0);
         }
 
-        let mut energy_prefix = vec![0.0f64; n_domains * (d_max + 1)];
-        par::par_fill_rows(&mut energy_prefix, d_max + 1, PAR_MIN_ROWS, |p, row| {
-            let src = fc.energy_row(p);
-            let mut acc = 0.0f64;
-            row[0] = 0.0;
-            for (t, &e) in src.iter().enumerate() {
-                acc += e as f64;
-                row[t + 1] = acc;
+        let eff = match ctx.incr {
+            Some(state) => {
+                debug_assert_eq!(state.phase(), fc.phase(), "stale incr state");
+                debug_assert_eq!(state.n_clients(), n_clients);
+                debug_assert_eq!(state.d_max(), d_max);
+                EffSource::Incr(state)
             }
-        });
+            None => {
+                // fresh derivation: the canonical bucketed walk (see
+                // selection::incr) per live client, plus each domain's
+                // first lit column for the m_min <= 0 shortcut
+                let bucket = incr::bucket_width(d_max);
+                let phase = fc.phase();
+                let d_first: Vec<usize> = (0..n_domains)
+                    .map(|p| {
+                        fc.energy_row(p)
+                            .iter()
+                            .position(|&e| e > 0.0)
+                            .map(|t| t + 1)
+                            .unwrap_or(usize::MAX)
+                    })
+                    .collect();
+                let mut eff = vec![usize::MAX; n_clients];
+                {
+                    let domain = &domain;
+                    let delta = &delta;
+                    let m_min = &m_min;
+                    let live = &live;
+                    let d_first = &d_first;
+                    par::par_fill_rows(&mut eff, 1, MIN_FILL_ROWS, |i, out| {
+                        if !live[i] {
+                            return; // stays usize::MAX
+                        }
+                        if m_min[i] > 0.0 {
+                            out[0] = incr::reach_fresh(
+                                fc.spare_row(i),
+                                fc.energy_row(domain[i]),
+                                delta[i],
+                                m_min[i],
+                                phase,
+                                bucket,
+                            );
+                        } else {
+                            out[0] = d_first[domain[i]];
+                        }
+                    });
+                }
+                EffSource::Fresh(eff)
+            }
+        };
 
-        // line-11 reachability: smallest d where the cumulative standalone
-        // batch curve crosses m_min. Term-for-term identical to
-        // SelectionContext::reachable_min (spare rows are pre-clamped to
-        // capacity at the forecast source).
-        let mut d_reach = vec![usize::MAX; n_clients];
-        {
-            let domain = &domain;
-            let delta = &delta;
-            let m_min = &m_min;
-            let live = &live;
-            par::par_fill_rows(&mut d_reach, 1, PAR_MIN_ROWS, |i, out| {
-                if !live[i] {
-                    return; // stays usize::MAX
-                }
-                let erow = fc.energy_row(domain[i]);
-                let srow = fc.spare_row(i);
-                let dl = delta[i];
-                let need = m_min[i];
-                let mut cum = 0.0f64;
-                for t in 0..d_max {
-                    cum += (srow[t] as f64).min(erow[t] as f64 / dl);
-                    if cum >= need {
-                        out[0] = t + 1;
-                        return;
-                    }
-                }
-            });
+        // cumulative eligibility histogram: O(C + d_max) integer work,
+        // then every eligible_count(d) probe is O(1)
+        let mut cum_elig = vec![0u32; d_max + 1];
+        for i in 0..n_clients {
+            let e = match &eff {
+                EffSource::Incr(state) => state.eff_rel(i),
+                EffSource::Fresh(v) => v[i],
+            };
+            if e <= d_max {
+                cum_elig[e] += 1;
+            }
+        }
+        for d in 1..=d_max {
+            cum_elig[d] += cum_elig[d - 1];
         }
 
         SelArena {
@@ -192,8 +241,8 @@ impl<'a> SelArena<'a> {
             n_clients,
             n_domains,
             fc,
-            energy_prefix,
-            d_reach,
+            eff,
+            cum_elig,
             domain,
             sigma,
             delta,
@@ -202,34 +251,41 @@ impl<'a> SelArena<'a> {
         }
     }
 
-    /// Σ energy of domain `p` over the first `d` steps (O(1)).
+    /// The effective reach of client `i`: smallest duration at which it
+    /// passes every pre-filter; usize::MAX = never (see module docs).
     #[inline]
-    fn energy_sum(&self, p: usize, d: usize) -> f64 {
-        self.energy_prefix[p * (self.d_max + 1) + d]
+    pub fn eff_reach(&self, i: usize) -> usize {
+        match &self.eff {
+            EffSource::Incr(state) => state.eff_rel(i),
+            EffSource::Fresh(v) => v[i],
+        }
     }
 
     /// Is client `i` eligible at duration `d`? (line-6 + line-8 + line-11
-    /// pre-filters, all O(1) per query). The `> 0` threshold on the f64
-    /// prefix of non-negative f32 terms is exactly "some column > 0",
-    /// matching the ring's integer liveness counters at d = d_max.
+    /// pre-filters, one integer compare.)
     #[inline]
     fn eligible(&self, i: usize, d: usize) -> bool {
-        self.d_reach[i] <= d && self.energy_sum(self.domain[i], d) > 0.0
+        self.eff_reach(i) <= d
     }
 
     /// Number of eligible clients at duration `d` — the cheap necessary
-    /// condition checked before the binary search.
+    /// condition checked before each probe. O(1): a histogram lookup.
     pub fn eligible_count(&self, d: usize) -> usize {
-        (0..self.n_clients).filter(|&i| self.eligible(i, d)).count()
+        assert!(d >= 1 && d <= self.d_max);
+        self.cum_elig[d] as usize
     }
 
     /// Fill `scratch` with the probe instance for duration `d`: slice
     /// views into the borrowed forecast window for every eligible client
     /// plus the parallel id map. Returns false when fewer than `n`
     /// clients survive the filters (the probe is infeasible without
-    /// solving).
+    /// solving) — decided O(1) from the histogram, in which case the
+    /// scratch is NOT filled and no client is scanned.
     pub fn fill_probe(&self, scratch: &mut ProbeScratch<'a>, d: usize) -> bool {
         assert!(d >= 1 && d <= self.d_max, "probe duration {d} out of range");
+        if (self.cum_elig[d] as usize) < self.n {
+            return false;
+        }
         scratch.n = self.n;
         scratch.energy.clear();
         for p in 0..self.n_domains {
@@ -251,7 +307,8 @@ impl<'a> SelArena<'a> {
             });
             scratch.ids.push(i);
         }
-        scratch.clients.len() >= self.n
+        debug_assert_eq!(scratch.ids.len(), self.cum_elig[d] as usize);
+        true
     }
 }
 
@@ -328,6 +385,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fc.view(),
+            incr: None,
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);
@@ -335,7 +393,7 @@ mod tests {
         for d in [1usize, 7, 30] {
             let ok = arena.fill_probe(&mut scratch, d);
             // manual filter via the context's own reachable_min; the
-            // domain-energy condition mirrors the arena's "> 0" prefix
+            // domain-energy condition mirrors the arena's folded filter
             let expect: Vec<usize> = (0..clients.len())
                 .filter(|&i| {
                     !states[i].blocked
@@ -347,8 +405,14 @@ mod tests {
                         && ctx.reachable_min(i, d)
                 })
                 .collect();
-            assert_eq!(scratch.ids, expect, "d={d}");
             assert_eq!(ok, expect.len() >= 3, "d={d}");
+            assert_eq!(arena.eligible_count(d), expect.len(), "d={d}");
+            if !ok {
+                // infeasible probes are rejected O(1) off the histogram
+                // WITHOUT filling the scratch
+                continue;
+            }
+            assert_eq!(scratch.ids, expect, "d={d}");
             let inst = scratch.instance();
             assert_eq!(inst.clients.len(), expect.len());
             for (k, &i) in scratch.ids.iter().enumerate() {
@@ -384,6 +448,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fc.view(),
+            incr: None,
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);
@@ -446,6 +511,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fc.view(),
+            incr: None,
             spare_now: &snow,
         };
         let arena = SelArena::build(&ctx);

@@ -257,6 +257,7 @@ mod tests {
             states: &f.states,
             domains: &f.domains,
             fc: bufs.view(),
+            incr: None,
             spare_now: &f.spare_now,
         }
     }

@@ -110,20 +110,29 @@ impl Strategy for FedZero {
         }
     }
 
+    fn needs_spare_now(&self) -> bool {
+        false // every FedZero filter is forecast-driven
+    }
+
+    fn uses_selection_state(&self) -> bool {
+        true // SelArena borrows ctx.incr when the engine maintains it
+    }
+
     fn select(&mut self, ctx: &SelectionContext, _rng: &mut Rng) -> SelectionDecision {
         // §Perf: cheap necessary condition before any arena work — if
         // fewer than n clients are even standalone-eligible at d_max, no d
         // can work; skip both the arena build and the O(log d · greedy)
-        // search during dark periods. With the persistent ring-arena the
-        // simulator advances incrementally (selection::ring), this gate is
-        // allocation-free and dead domains short-circuit via O(1)
-        // liveness counters, so idle (night) polling never touches a
-        // forecast row.
+        // search during dark periods. With the persistent incremental
+        // selection state (selection::incr) attached this gate is a pure
+        // O(D) counter sum — a fully dark idle poll touches no client and
+        // no forecast row at all; the fresh fallback is allocation-free
+        // and short-circuits dead domains via O(1) liveness counters.
         if SelArena::quick_eligible_count(ctx) < ctx.n {
             return SelectionDecision::wait();
         }
-        // the arena borrows the context's forecast window (no row copies);
-        // every probe below borrows slice views into it
+        // the arena borrows the context's forecast window (no row copies)
+        // and, when attached, the persistent reach structures (no
+        // O(C·d_max) recompute); every probe below borrows slice views
         let arena = SelArena::build(ctx);
         match self.search(&arena, ctx.n, ctx.d_max) {
             Some((clients, d)) => {
@@ -207,6 +216,7 @@ mod tests {
             states,
             domains,
             fc,
+            incr: None,
             spare_now,
         }
     }

@@ -1,0 +1,986 @@
+//! Incremental selection state — the persistent structure that makes
+//! FedZero's *dark-period polling loop* O(D) per idle step and its
+//! per-`select()` filter precompute incremental (ROADMAP: "Sub-O(C)
+//! dark-period polling", "Incremental `d_reach`").
+//!
+//! The scheduler spends most simulated time polling `select()` between
+//! rounds. PRs 1–3 made a poll allocation-free and the forecast window
+//! incremental, but two O(C·…) costs remained in the loop:
+//!
+//! * the dark-period quick gate scanned all C clients per idle step;
+//! * the per-client line-11 reachability curve (`d_reach`) was recomputed
+//!   from scratch per `select()` — O(C·d_max) whenever the gate passed.
+//!
+//! [`IncrSelState`] is owned by the sim loop next to the
+//! [`super::ring::ForecastRing`] and is patched in lockstep with it:
+//!
+//! * **Per-domain client index + dirty-domain tracking** — clients are
+//!   grouped by domain once per rebuild (CSR layout). On
+//!   [`IncrSelState::advance`] only *dirty* domains touch their clients:
+//!   a domain is dirty when its evicted window column had energy > 0
+//!   (every prefix sum of its clients changed), when its appended column
+//!   has energy > 0 (new crossings possible at the window tail), or when
+//!   the window tail just completed a bucket that holds some of its
+//!   energy (the walk's geometry for that bucket changed, see below). A
+//!   FULLY DARK window makes every domain clean, so an idle step touches
+//!   only the D domain counters and **no client state at all** —
+//!   property- and unit-tested via [`IncrSelState::last_advance_touched`].
+//! * **Ring-patched `d_reach` over √d_max buckets** — window columns are
+//!   partitioned into buckets of `B = ⌈√d_max⌉` columns aligned to the
+//!   *forecast anchor* (absolute step = anchor + phase + offset), so a
+//!   bucket's member columns never change as the window slides. Per
+//!   client the state holds one f64 left-fold term sum per bucket
+//!   (`bsum`); per advance only the tail bucket gains one term (a single
+//!   gated add per client of a lit domain), and re-deriving a client's
+//!   reach walks O(√d_max) bucket sums instead of O(d_max) columns.
+//! * **Eligibility aggregates** — `elig_fin[p]` counts live clients of
+//!   domain p whose reach lies inside the window, maintained on every
+//!   reach transition, so the dark-period gate
+//!   ([`IncrSelState::quick_eligible_count`]) is a pure O(D) counter
+//!   sum. The per-probe `eligible_count(d)` of the arena becomes an O(1)
+//!   lookup into a cumulative histogram built from these reaches once
+//!   per `select()` (O(C + d_max) integer work, no forecast reads).
+//!
+//! ## The canonical accumulation order (f64 rationale)
+//!
+//! f64 addition is not associative, so "the sum of the first d terms"
+//! depends on the order of operations. The pre-incremental code defined
+//! the line-11 curve as a plain left fold; a bucket-patched structure
+//! cannot reproduce a plain left fold bitwise (it adds whole-bucket
+//! subtotals). Instead of chasing an impossible equivalence, this module
+//! *defines* the canonical order — [`reach_walk`]: head columns up to
+//! the first anchor-aligned bucket boundary term by term, then one add
+//! per full bucket subtotal, switching to term-by-term for the remainder
+//! of the window at the bucket where the crossing falls, tail columns
+//! term by term — and EVERY layer (the fresh [`super::arena::SelArena`]
+//! build, [`super::SelectionContext::reachable_min`], and the
+//! incremental patches here) evaluates exactly this walk on exactly the
+//! same `f32`-quantised inputs. Fresh and incremental state are then
+//! bit-equivalent by construction (property-tested below, gated end to
+//! end in `benches/endtoend.rs`).
+//!
+//! Why the patches preserve the walk bit for bit:
+//!
+//! * terms are `min(spare_t, energy_t/δ)` gated on `energy_t > 0`; a
+//!   zero-energy column contributes `+0.0`, and `x + 0.0 == x` bitwise
+//!   for every non-negative f64 — so skipping dark columns (and whole
+//!   dark domains) is exact, and the head region's fold is unchanged
+//!   when a zero-term column is evicted;
+//! * bucket subtotals are only ever *extended at the tail* (same left
+//!   fold the fresh build performs) and are read only for buckets fully
+//!   inside the window, whose member columns are immutable;
+//! * the only geometry change the slide causes is a tail bucket becoming
+//!   full (its subtotal replaces term-by-term evaluation mid-walk, which
+//!   can flip a knife-edge `cum >= need` comparison) — exactly then, the
+//!   domains with energy in that bucket re-derive their clients. The
+//!   head-side transition (a full bucket becoming the partial head) is
+//!   exact without re-derivation: the head region starts from
+//!   `cum = 0.0`, where one subtotal add and the term fold are the same
+//!   float sequence.
+//!
+//! Liveness (`!blocked && σ > 0`) is snapshotted at
+//! [`IncrSelState::rebuild`]: the engine rebuilds after every executed
+//! round (states only mutate at round boundaries; the σ refresh is
+//! idempotent across consecutive idle polls), so advances always run
+//! under an unchanged snapshot.
+
+use super::ring::{FcSource, FcView, ForecastRing};
+use crate::client::ClientInfo;
+use crate::selection::ClientRoundState;
+use crate::util::par;
+use crate::util::par::thresholds::MIN_FILL_ROWS;
+
+/// Bucket width of the √d_max decomposition: ⌈√d_max⌉ (integer-exact).
+pub fn bucket_width(d_max: usize) -> usize {
+    let mut b = 1usize;
+    while b * b < d_max {
+        b += 1;
+    }
+    b
+}
+
+/// One gated term of the line-11 standalone curve: what client spare and
+/// domain energy allow at window offset `t`, in batches. Zero-energy
+/// columns are exactly `+0.0` regardless of spare (which is what lets
+/// dark columns — whose spare may be lazily deferred by the ring — never
+/// be read).
+#[inline]
+fn term_at(spare: &[f32], energy: &[f32], delta: f64, t: usize) -> f64 {
+    let e = energy[t];
+    if e > 0.0 {
+        (spare[t] as f64).min(e as f64 / delta)
+    } else {
+        0.0
+    }
+}
+
+/// THE canonical line-11 reachability evaluation (see the module docs
+/// for the order contract): smallest 1-based duration `d` at which the
+/// cumulative standalone batch curve reaches `need`, or `usize::MAX` if
+/// it never does within the window. `phase` is the window's advance
+/// count since its forecast anchor (bucket boundaries sit at absolute
+/// steps divisible by `bucket`); `bsum(t)` must return the left-fold
+/// subtotal of the full bucket starting at window offset `t`.
+pub fn reach_walk(
+    spare: &[f32],
+    energy: &[f32],
+    delta: f64,
+    need: f64,
+    phase: usize,
+    bucket: usize,
+    mut bsum: impl FnMut(usize) -> f64,
+) -> usize {
+    let d_max = spare.len();
+    debug_assert_eq!(energy.len(), d_max);
+    debug_assert!(bucket >= 1);
+    let mut cum = 0.0f64;
+    // head region: up to the first anchor-aligned bucket boundary
+    let head_len = match phase % bucket {
+        0 => 0,
+        r => (bucket - r).min(d_max),
+    };
+    for t in 0..head_len {
+        cum += term_at(spare, energy, delta, t);
+        if cum >= need {
+            return t + 1;
+        }
+    }
+    // full buckets: one add per subtotal while the crossing is not here
+    let mut t = head_len;
+    while t + bucket <= d_max {
+        let bs = bsum(t);
+        if cum + bs >= need {
+            // the crossing falls in (or knife-edge ties) this bucket:
+            // term-by-term for the remainder of the window
+            for tt in t..d_max {
+                cum += term_at(spare, energy, delta, tt);
+                if cum >= need {
+                    return tt + 1;
+                }
+            }
+            return usize::MAX;
+        }
+        cum += bs;
+        t += bucket;
+    }
+    // tail region
+    for tt in t..d_max {
+        cum += term_at(spare, energy, delta, tt);
+        if cum >= need {
+            return tt + 1;
+        }
+    }
+    usize::MAX
+}
+
+/// [`reach_walk`] with bucket subtotals computed on the fly (the fresh
+/// path used by `SelArena::build` and `SelectionContext::reachable_min`
+/// when no incremental state is attached). The subtotal fold is the same
+/// gated left fold the incremental patches maintain, so the two paths
+/// are bit-equivalent.
+pub fn reach_fresh(
+    spare: &[f32],
+    energy: &[f32],
+    delta: f64,
+    need: f64,
+    phase: usize,
+    bucket: usize,
+) -> usize {
+    reach_walk(spare, energy, delta, need, phase, bucket, |t| {
+        let mut acc = 0.0f64;
+        for k in t..t + bucket {
+            let e = energy[k];
+            if e > 0.0 {
+                acc += (spare[k] as f64).min(e as f64 / delta);
+            }
+        }
+        acc
+    })
+}
+
+/// The persistent incremental selection state (see the module docs).
+/// Owned by the simulation loop next to the [`ForecastRing`]; rebuilt
+/// whenever the ring re-anchors, advanced in lockstep with it.
+#[derive(Debug, Default)]
+pub struct IncrSelState {
+    built: bool,
+    d_max: usize,
+    /// √d_max bucket width (see [`bucket_width`])
+    bucket: usize,
+    /// bucket slots per row (window spans ≤ d_max/bucket + 2 buckets)
+    n_slots: usize,
+    n_clients: usize,
+    n_domains: usize,
+    /// advances since the anchor — mirrors the ring's `FcView::phase`
+    k: usize,
+    // --- per-client constants captured at rebuild ---
+    domain: Vec<usize>,
+    delta: Vec<f64>,
+    /// m_min — `need <= 0` clients are "trivially reachable" and tracked
+    /// via `n_triv`/`first_e_abs` instead of `reach_abs`
+    need: Vec<f64>,
+    /// liveness snapshot: `!blocked && σ > 0` (constant between rebuilds)
+    live: Vec<bool>,
+    /// CSR client-by-domain index: clients of domain p are
+    /// `dom_clients[dom_start[p]..dom_start[p+1]]`
+    dom_start: Vec<usize>,
+    dom_clients: Vec<usize>,
+    // --- incremental structures ---
+    /// [n_clients × n_slots] full-bucket term subtotals (slot =
+    /// bucket_index % n_slots); valid iff the matching `binit` entry
+    /// names the bucket — otherwise the bucket held no energy for the
+    /// client's domain and its subtotal is exactly +0.0
+    bsum: Vec<f64>,
+    /// [n_domains × n_slots] bucket index whose subtotals currently
+    /// occupy the slot for this domain's clients; u64::MAX = none
+    binit: Vec<u64>,
+    /// [n_domains × n_slots] count of in-window columns with energy > 0
+    /// per bucket (integer-exact, like the ring's liveness counters)
+    ecount: Vec<u32>,
+    /// per-client anchor-relative reach: `phase_at_crossing + d` where
+    /// `d` is the canonical walk result, or usize::MAX when the curve
+    /// never reaches `need` inside the window. Window-relative reach at
+    /// phase k is `reach_abs - k`. Maintained only for `need > 0`.
+    reach_abs: Vec<usize>,
+    /// per-domain: live `need > 0` clients with in-window reach
+    elig_fin: Vec<u32>,
+    /// per-domain: live `need <= 0` clients (eligible iff the domain has
+    /// any energy within the first d columns)
+    n_triv: Vec<u32>,
+    /// per-domain: anchor-relative index of the first window column with
+    /// energy > 0 (usize::MAX = fully dark domain)
+    first_e_abs: Vec<usize>,
+    /// scratch: evicted energy column captured before the ring advances
+    evict_scratch: Vec<f32>,
+    /// instrumentation: per-client operations performed by the last
+    /// `advance` (bucket appends + reach re-derivations). 0 for a fully
+    /// dark step — the O(D) guarantee the tests pin down.
+    last_touched: usize,
+}
+
+impl IncrSelState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_built(&self) -> bool {
+        self.built
+    }
+
+    /// Advances since the anchor (== the window view's `phase`).
+    pub fn phase(&self) -> usize {
+        self.k
+    }
+
+    pub fn d_max(&self) -> usize {
+        self.d_max
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Per-client operations performed by the last [`Self::advance`]
+    /// (dirty-domain work). Exactly 0 for a fully dark advance.
+    pub fn last_advance_touched(&self) -> usize {
+        self.last_touched
+    }
+
+    /// Window-relative effective reach of client `i`: the smallest
+    /// duration d at which it passes ALL of the line-6/8/11 eligibility
+    /// filters (blocklist, σ > 0, domain energy within d, standalone
+    /// reachability within d); usize::MAX = not eligible at any d. For
+    /// `need > 0` the domain-energy condition is implied by the curve
+    /// crossing (a positive term needs a positive energy column), so
+    /// this is exactly the canonical walk result.
+    #[inline]
+    pub fn eff_rel(&self, i: usize) -> usize {
+        if !self.live[i] {
+            return usize::MAX;
+        }
+        if self.need[i] > 0.0 {
+            match self.reach_abs[i] {
+                usize::MAX => usize::MAX,
+                a => a - self.k,
+            }
+        } else {
+            match self.first_e_abs[self.domain[i]] {
+                usize::MAX => usize::MAX,
+                a => a - self.k + 1,
+            }
+        }
+    }
+
+    /// The d_max eligibility count in O(D): per-domain counter sums, no
+    /// client is touched. Equals `SelArena::quick_eligible_count` on the
+    /// same context (KEEP IN SYNC — property-tested in this module and
+    /// in `selection::arena`). `first_e_abs[p] != MAX` is exactly the
+    /// ring's integer domain-liveness condition.
+    pub fn quick_eligible_count(&self) -> usize {
+        let mut total = 0usize;
+        for p in 0..self.n_domains {
+            total += self.elig_fin[p] as usize;
+            if self.n_triv[p] > 0 && self.first_e_abs[p] != usize::MAX {
+                total += self.n_triv[p] as usize;
+            }
+        }
+        total
+    }
+
+    /// Snapshot client constants + liveness and derive every incremental
+    /// structure from the (anchor-fresh) window. O(C·d_max) for lit
+    /// domains — the cost one historical `SelArena::build` paid on EVERY
+    /// select — and O(C + D·√d_max) when the window is fully dark.
+    /// Called by the engine whenever the ring re-anchors (after every
+    /// executed round); client walks fan out across threads at scale.
+    pub fn rebuild(
+        &mut self,
+        clients: &[ClientInfo],
+        states: &[ClientRoundState],
+        fc: FcView<'_>,
+    ) {
+        let d_max = fc.d_max();
+        assert!(d_max >= 1, "rebuild on an empty window");
+        assert_eq!(
+            fc.phase(),
+            0,
+            "incremental state must be rebuilt at a fresh anchor"
+        );
+        assert_eq!(clients.len(), states.len());
+        assert_eq!(clients.len(), fc.n_clients());
+        let b = bucket_width(d_max);
+        let n_slots = d_max / b + 2;
+        let n_clients = clients.len();
+        let n_domains = fc.n_domains();
+        self.d_max = d_max;
+        self.bucket = b;
+        self.n_slots = n_slots;
+        self.n_clients = n_clients;
+        self.n_domains = n_domains;
+        self.k = 0;
+        self.last_touched = 0;
+
+        self.domain.clear();
+        self.delta.clear();
+        self.need.clear();
+        self.live.clear();
+        for (i, c) in clients.iter().enumerate() {
+            self.domain.push(c.domain);
+            self.delta.push(c.delta());
+            self.need.push(c.m_min);
+            self.live.push(!states[i].blocked && states[i].sigma > 0.0);
+        }
+
+        // CSR domain → clients (counting sort; stable in client order)
+        self.dom_start.clear();
+        self.dom_start.resize(n_domains + 1, 0);
+        for &p in &self.domain {
+            self.dom_start[p + 1] += 1;
+        }
+        for p in 0..n_domains {
+            self.dom_start[p + 1] += self.dom_start[p];
+        }
+        self.dom_clients.clear();
+        self.dom_clients.resize(n_clients, 0);
+        {
+            let mut cursor = self.dom_start.clone();
+            for (i, &p) in self.domain.iter().enumerate() {
+                self.dom_clients[cursor[p]] = i;
+                cursor[p] += 1;
+            }
+        }
+
+        // per-domain energy buckets + first lit column
+        self.ecount.clear();
+        self.ecount.resize(n_domains * n_slots, 0);
+        self.binit.clear();
+        self.binit.resize(n_domains * n_slots, u64::MAX);
+        self.first_e_abs.clear();
+        self.first_e_abs.resize(n_domains, usize::MAX);
+        for p in 0..n_domains {
+            let row = fc.energy_row(p);
+            for (t, &e) in row.iter().enumerate() {
+                if e > 0.0 {
+                    let bu = t / b; // phase 0: offset == anchor-relative
+                    self.ecount[p * n_slots + bu % n_slots] += 1;
+                    if self.first_e_abs[p] == usize::MAX {
+                        self.first_e_abs[p] = t;
+                    }
+                }
+            }
+            for bu in 0..=(d_max - 1) / b {
+                if self.ecount[p * n_slots + bu % n_slots] > 0 {
+                    self.binit[p * n_slots + bu % n_slots] = bu as u64;
+                }
+            }
+        }
+
+        // per-client bucket subtotals: the same gated left fold the
+        // advance-time appends extend. Rows of dark domains are skipped
+        // (their slots are sentinel-guarded and read as +0.0).
+        if self.bsum.len() != n_clients * n_slots {
+            self.bsum.clear();
+            self.bsum.resize(n_clients * n_slots, 0.0);
+        }
+        {
+            let domain = &self.domain;
+            let delta = &self.delta;
+            let first_e_abs = &self.first_e_abs;
+            let binit = &self.binit;
+            par::par_fill_rows(&mut self.bsum, n_slots, MIN_FILL_ROWS, |i, row| {
+                let p = domain[i];
+                if first_e_abs[p] == usize::MAX {
+                    return;
+                }
+                let srow = fc.spare_row(i);
+                let erow = fc.energy_row(p);
+                let dl = delta[i];
+                for bu in 0..=(d_max - 1) / b {
+                    if binit[p * n_slots + bu % n_slots] != bu as u64 {
+                        continue;
+                    }
+                    let lo = bu * b;
+                    let hi = ((bu + 1) * b).min(d_max);
+                    let mut acc = 0.0f64;
+                    for t in lo..hi {
+                        let e = erow[t];
+                        if e > 0.0 {
+                            acc += (srow[t] as f64).min(e as f64 / dl);
+                        }
+                    }
+                    row[bu % n_slots] = acc;
+                }
+            });
+        }
+
+        // per-client reach (need > 0 only; dark domains stay MAX)
+        self.reach_abs.clear();
+        self.reach_abs.resize(n_clients, usize::MAX);
+        {
+            let domain = &self.domain;
+            let delta = &self.delta;
+            let need = &self.need;
+            let first_e_abs = &self.first_e_abs;
+            let binit = &self.binit;
+            let bsum = &self.bsum;
+            par::par_fill_rows(&mut self.reach_abs, 1, MIN_FILL_ROWS, |i, out| {
+                out[0] = usize::MAX;
+                let p = domain[i];
+                if need[i] <= 0.0 || first_e_abs[p] == usize::MAX {
+                    return;
+                }
+                let r = reach_walk(
+                    fc.spare_row(i),
+                    fc.energy_row(p),
+                    delta[i],
+                    need[i],
+                    0,
+                    b,
+                    |t| {
+                        let bu = t / b;
+                        if binit[p * n_slots + bu % n_slots] == bu as u64 {
+                            bsum[i * n_slots + bu % n_slots]
+                        } else {
+                            0.0
+                        }
+                    },
+                );
+                if r != usize::MAX {
+                    out[0] = r; // phase 0: abs == window-relative
+                }
+            });
+        }
+
+        // eligibility aggregates
+        self.elig_fin.clear();
+        self.elig_fin.resize(n_domains, 0);
+        self.n_triv.clear();
+        self.n_triv.resize(n_domains, 0);
+        for i in 0..n_clients {
+            if !self.live[i] {
+                continue;
+            }
+            if self.need[i] <= 0.0 {
+                self.n_triv[self.domain[i]] += 1;
+            } else if self.reach_abs[i] != usize::MAX {
+                self.elig_fin[self.domain[i]] += 1;
+            }
+        }
+        self.built = true;
+    }
+
+    /// Advance the ring one slot and patch every incremental structure.
+    /// A fully dark step is O(D) — only the per-domain counters are
+    /// touched; lit/dirty domains pay one gated add per client (tail
+    /// append) plus O(√d_max)-walk re-derivations for the clients whose
+    /// reach may have moved (see the module docs for the dirty rules).
+    pub fn advance(&mut self, ring: &mut ForecastRing, src: &impl FcSource) {
+        assert!(self.built, "advance() before rebuild()");
+        assert!(ring.is_built());
+        debug_assert_eq!(ring.window_start() - ring.anchor(), self.k);
+        let d_max = self.d_max;
+        let b = self.bucket;
+        let ns = self.n_slots;
+        let k_old = self.k;
+        let evict_abs = k_old;
+        let append_abs = k_old + d_max;
+
+        // capture the evicted energy column before the ring overwrites it
+        self.evict_scratch.clear();
+        {
+            let v = ring.view();
+            debug_assert_eq!(v.n_domains(), self.n_domains);
+            for p in 0..self.n_domains {
+                self.evict_scratch.push(v.energy_row(p)[0]);
+            }
+        }
+        ring.advance(src);
+        self.k = k_old + 1;
+
+        let fcv = ring.view();
+        let b_ev = evict_abs / b;
+        let b_ap = append_abs / b;
+        let new_bucket = append_abs % b == 0;
+        // did this append COMPLETE bucket b_ap? (its last column is
+        // append_abs ⇔ the next column starts a new bucket) — the walk
+        // now reads b_ap via its subtotal, a geometry change that needs
+        // re-derivation for domains with energy in it (module docs)
+        let promoted = (append_abs + 1) % b == 0;
+        let mut touched = 0usize;
+
+        for p in 0..self.n_domains {
+            let e_old = self.evict_scratch[p];
+            let e_new = fcv.energy_row(p)[d_max - 1];
+            // integer bucket counters (exact, every advance, O(1))
+            if e_old > 0.0 {
+                self.ecount[p * ns + b_ev % ns] -= 1;
+            }
+            let ap_cnt = p * ns + b_ap % ns;
+            if new_bucket {
+                self.ecount[ap_cnt] = (e_new > 0.0) as u32;
+            } else if e_new > 0.0 {
+                self.ecount[ap_cnt] += 1;
+            }
+            // first lit column
+            if e_new > 0.0 && self.first_e_abs[p] == usize::MAX {
+                self.first_e_abs[p] = append_abs;
+            }
+            if e_old > 0.0 && self.first_e_abs[p] == evict_abs {
+                let fe = self.scan_first_e(p, &fcv);
+                self.first_e_abs[p] = fe;
+            }
+
+            let (cs, ce) = (self.dom_start[p], self.dom_start[p + 1]);
+            // tail append: one gated add per client, only when the new
+            // column actually carries energy (a zero term is a bitwise
+            // no-op, so clean domains skip their clients entirely)
+            if e_new > 0.0 {
+                let bidx = p * ns + b_ap % ns;
+                let fresh_bucket = self.binit[bidx] != b_ap as u64;
+                if fresh_bucket {
+                    self.binit[bidx] = b_ap as u64;
+                }
+                let slot = b_ap % ns;
+                for j in cs..ce {
+                    let i = self.dom_clients[j];
+                    let term =
+                        (fcv.spare_row(i)[d_max - 1] as f64).min(e_new as f64 / self.delta[i]);
+                    let cell = &mut self.bsum[i * ns + slot];
+                    if fresh_bucket {
+                        *cell = term;
+                    } else {
+                        *cell += term;
+                    }
+                    touched += 1;
+                }
+            }
+
+            // reach re-derivation (dirty rules, module docs):
+            //  * evicted energy > 0     → every prefix changed: all clients
+            //  * promoted lit bucket    → walk geometry changed: all clients
+            //  * appended energy > 0    → only never-reaching clients can
+            //                             gain a crossing (at the new tail)
+            let full_rederive = e_old > 0.0
+                || (promoted && self.ecount[p * ns + b_ap % ns] > 0);
+            if full_rederive {
+                for j in cs..ce {
+                    let i = self.dom_clients[j];
+                    self.rederive(i, p, &fcv);
+                    touched += 1;
+                }
+            } else if e_new > 0.0 {
+                for j in cs..ce {
+                    let i = self.dom_clients[j];
+                    if self.reach_abs[i] == usize::MAX && self.need[i] > 0.0 {
+                        self.rederive(i, p, &fcv);
+                        touched += 1;
+                    }
+                }
+            }
+        }
+        self.last_touched = touched;
+    }
+
+    /// Re-run the canonical walk for client `i` of domain `p` against
+    /// the current window and fold the result into `reach_abs` and the
+    /// per-domain eligibility counter. O(√d_max).
+    fn rederive(&mut self, i: usize, p: usize, fcv: &FcView<'_>) {
+        if self.need[i] <= 0.0 {
+            return; // trivially-reachable clients live in n_triv
+        }
+        let new_abs = {
+            let b = self.bucket;
+            let ns = self.n_slots;
+            let k = self.k;
+            let binit = &self.binit;
+            let bsum = &self.bsum;
+            let r = reach_walk(
+                fcv.spare_row(i),
+                fcv.energy_row(p),
+                self.delta[i],
+                self.need[i],
+                k,
+                b,
+                |t| {
+                    let bu = (k + t) / b;
+                    if binit[p * ns + bu % ns] == bu as u64 {
+                        bsum[i * ns + bu % ns]
+                    } else {
+                        0.0
+                    }
+                },
+            );
+            if r == usize::MAX {
+                usize::MAX
+            } else {
+                self.k + r
+            }
+        };
+        let old = self.reach_abs[i];
+        if self.live[i] && (old == usize::MAX) != (new_abs == usize::MAX) {
+            if new_abs == usize::MAX {
+                self.elig_fin[p] -= 1;
+            } else {
+                self.elig_fin[p] += 1;
+            }
+        }
+        self.reach_abs[i] = new_abs;
+    }
+
+    /// First in-window column with energy > 0 for domain `p`, in
+    /// anchor-relative terms — O(√d_max) via the bucket counters.
+    fn scan_first_e(&self, p: usize, fcv: &FcView<'_>) -> usize {
+        let b = self.bucket;
+        let ns = self.n_slots;
+        let k = self.k;
+        let d = self.d_max;
+        let row = fcv.energy_row(p);
+        let b_lo = k / b;
+        let b_hi = (k + d - 1) / b;
+        for bu in b_lo..=b_hi {
+            if self.ecount[p * ns + bu % ns] == 0 {
+                continue;
+            }
+            let lo = (bu * b).max(k);
+            let hi = ((bu + 1) * b).min(k + d);
+            for c in lo..hi {
+                if row[c - k] > 0.0 {
+                    return c;
+                }
+            }
+        }
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientProfile, DeviceType, ModelKind};
+    use crate::selection::arena::SelArena;
+    use crate::selection::ring::{FcBuffers, SeriesSource};
+    use crate::selection::SelectionContext;
+    use crate::trace::forecast::SeriesForecaster;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn mk_clients(
+        rng: &mut Rng,
+        n: usize,
+        n_domains: usize,
+        random_domains: bool,
+    ) -> Vec<ClientInfo> {
+        (0..n)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::ALL[rng.below(3)],
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                let dom = if random_domains { rng.below(n_domains) } else { i % n_domains };
+                ClientInfo::new(i, dom, p, (0..rng.range(1, 60)).collect(), 10)
+            })
+            .collect()
+    }
+
+    fn mk_source(
+        rng: &mut Rng,
+        clients: &[ClientInfo],
+        n_domains: usize,
+        horizon: usize,
+        dark: bool,
+        realistic: bool,
+    ) -> SeriesSource {
+        let mk = |rng: &mut Rng, series: Vec<f64>| {
+            if realistic {
+                SeriesForecaster::realistic(series, rng.next_u64(), 60.0)
+            } else {
+                SeriesForecaster::perfect(series)
+            }
+        };
+        let energy = (0..n_domains)
+            .map(|_| {
+                let series: Vec<f64> = if dark {
+                    vec![0.0; horizon]
+                } else {
+                    let base = rng.range_f64(0.0, 40.0);
+                    let ph = rng.range_f64(0.0, 6.0);
+                    (0..horizon)
+                        .map(|t| (base * ((t as f64 / 9.0 + ph).sin())).max(0.0))
+                        .collect()
+                };
+                mk(rng, series)
+            })
+            .collect();
+        let caps: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+        let spare = caps
+            .iter()
+            .map(|&cap| {
+                let series: Vec<f64> = (0..horizon)
+                    .map(|_| cap * rng.range_f64(0.0, 1.3))
+                    .collect();
+                mk(rng, series)
+            })
+            .collect();
+        SeriesSource { energy, spare, caps }
+    }
+
+    #[test]
+    fn bucket_width_is_ceil_sqrt() {
+        assert_eq!(bucket_width(1), 1);
+        assert_eq!(bucket_width(2), 2);
+        assert_eq!(bucket_width(4), 2);
+        assert_eq!(bucket_width(5), 3);
+        assert_eq!(bucket_width(9), 3);
+        assert_eq!(bucket_width(60), 8);
+        assert_eq!(bucket_width(1440), 38);
+        for d in 1..2000 {
+            let b = bucket_width(d);
+            assert!(b * b >= d && (b - 1) * (b - 1) < d, "d={d} b={b}");
+            assert!(b <= d);
+        }
+    }
+
+    /// The tentpole invariant: after arbitrary advance sequences
+    /// (including dark edges, bucket promotions, head wraparound, and a
+    /// round-boundary re-anchor) the incremental state is bit-equal to a
+    /// fresh `SelArena::build` over a fresh window — same per-client
+    /// effective reach, same eligibility counts at EVERY duration, same
+    /// quick gate.
+    #[test]
+    fn incremental_state_matches_fresh_arena_after_advances() {
+        forall(20, |rng| {
+            let n_domains = rng.range(1, 4);
+            let n_clients = rng.range(3, 14);
+            let d_max = rng.range(4, 32);
+            let steps = rng.range(2 * d_max, 3 * d_max + 5);
+            let horizon = d_max + steps + d_max + 10;
+            let realistic = rng.bool(0.5);
+            let mut clients = mk_clients(rng, n_clients, n_domains, true);
+            // exercise the trivially-reachable (need <= 0) path too
+            if rng.bool(0.4) {
+                clients[0].m_min = 0.0;
+            }
+            let mut states = vec![ClientRoundState::default(); n_clients];
+            for s in states.iter_mut() {
+                s.blocked = rng.bool(0.2);
+                s.sigma = if s.blocked { 0.0 } else { rng.range_f64(0.0, 8.0) };
+            }
+            let src = mk_source(rng, &clients, n_domains, horizon, false, realistic);
+            let spare_now: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+
+            let mut ring = ForecastRing::new();
+            let mut incr = IncrSelState::new();
+            let mut anchor = 0usize;
+            ring.rebuild(&src, anchor, d_max);
+            incr.rebuild(&clients, &states, ring.view());
+            // re-anchor once mid-run, like the engine does after a round
+            let reanchor_at = rng.range(1, steps);
+
+            for step in 1..=steps {
+                if step == reanchor_at {
+                    anchor += step;
+                    ring.rebuild(&src, anchor, d_max);
+                    incr.rebuild(&clients, &states, ring.view());
+                }
+                incr.advance(&mut ring, &src);
+                let t = ring.window_start();
+                let fresh = FcBuffers::from_source(&src, anchor, t, d_max);
+                let ctx_fresh = SelectionContext {
+                    now: t,
+                    n: 1,
+                    d_max,
+                    clients: &clients,
+                    states: &states,
+                    domains: &[],
+                    fc: fresh.view(),
+                    incr: None,
+                    spare_now: &spare_now,
+                };
+                let ctx_incr = SelectionContext {
+                    now: t,
+                    n: 1,
+                    d_max,
+                    clients: &clients,
+                    states: &states,
+                    domains: &[],
+                    fc: ring.view(),
+                    incr: Some(&incr),
+                    spare_now: &spare_now,
+                };
+                let a_fresh = SelArena::build(&ctx_fresh);
+                let a_incr = SelArena::build(&ctx_incr);
+                for i in 0..n_clients {
+                    assert_eq!(
+                        a_incr.eff_reach(i),
+                        a_fresh.eff_reach(i),
+                        "eff reach diverged: client {i} at step {step} (t={t})"
+                    );
+                }
+                for d in 1..=d_max {
+                    assert_eq!(
+                        a_incr.eligible_count(d),
+                        a_fresh.eligible_count(d),
+                        "eligible_count({d}) diverged at step {step}"
+                    );
+                }
+                assert_eq!(
+                    SelArena::quick_eligible_count(&ctx_incr),
+                    SelArena::quick_eligible_count(&ctx_fresh),
+                    "quick gate diverged at step {step}"
+                );
+                assert_eq!(
+                    incr.quick_eligible_count(),
+                    a_fresh.eligible_count(d_max),
+                    "O(D) gate != fresh arena count at step {step}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn dark_advances_touch_no_clients() {
+        // the acceptance criterion: a fully dark idle step performs NO
+        // per-client work — only the D domain counters move
+        let mut rng = Rng::new(7);
+        let n_domains = 5;
+        let clients = mk_clients(&mut rng, 40, n_domains, false);
+        let states = vec![ClientRoundState::default(); clients.len()];
+        let d_max = 24;
+        let src = mk_source(&mut rng, &clients, n_domains, 400, true, false);
+        let mut ring = ForecastRing::new();
+        let mut incr = IncrSelState::new();
+        ring.rebuild(&src, 0, d_max);
+        incr.rebuild(&clients, &states, ring.view());
+        for step in 1..=100 {
+            incr.advance(&mut ring, &src);
+            assert_eq!(
+                incr.last_advance_touched(),
+                0,
+                "dark advance touched clients at step {step}"
+            );
+            assert_eq!(incr.quick_eligible_count(), 0);
+        }
+    }
+
+    #[test]
+    fn lit_advance_touches_only_dirty_domain_clients() {
+        // one domain lit, the others dark: advance work is bounded by
+        // the lit domain's client count (appends + re-derivations)
+        let mut rng = Rng::new(11);
+        let n_domains = 4;
+        let clients = mk_clients(&mut rng, 32, n_domains, false);
+        let states = vec![ClientRoundState::default(); clients.len()];
+        let lit_clients = clients.iter().filter(|c| c.domain == 0).count();
+        let d_max = 16;
+        let horizon = 300;
+        let caps: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+        let mut energy: Vec<SeriesForecaster> = (1..n_domains)
+            .map(|_| SeriesForecaster::perfect(vec![0.0; horizon]))
+            .collect();
+        energy.insert(0, SeriesForecaster::perfect(vec![9.0; horizon]));
+        let spare = caps
+            .iter()
+            .map(|&c| SeriesForecaster::perfect(vec![c; horizon]))
+            .collect();
+        let src = SeriesSource { energy, spare, caps };
+        let mut ring = ForecastRing::new();
+        let mut incr = IncrSelState::new();
+        ring.rebuild(&src, 0, d_max);
+        incr.rebuild(&clients, &states, ring.view());
+        for step in 1..=60 {
+            incr.advance(&mut ring, &src);
+            assert!(
+                incr.last_advance_touched() <= 2 * lit_clients,
+                "advance touched {} ops for {lit_clients} lit clients (step {step})",
+                incr.last_advance_touched()
+            );
+            assert!(incr.last_advance_touched() > 0, "lit advance did nothing");
+        }
+    }
+
+    #[test]
+    fn quick_count_tracks_dark_to_lit_transitions() {
+        // a domain that turns on mid-horizon: the O(D) gate must flip
+        // from 0 to the live client count exactly when the window sees
+        // the first lit column, and back to 0 once it scrolls out
+        let mut rng = Rng::new(3);
+        let n_domains = 2;
+        let clients = mk_clients(&mut rng, 10, n_domains, false);
+        let states = vec![ClientRoundState::default(); clients.len()];
+        let d_max = 8;
+        let horizon = 120;
+        let caps: Vec<f64> = clients.iter().map(|c| c.capacity()).collect();
+        // lit only during [40, 50)
+        let series: Vec<f64> = (0..horizon)
+            .map(|t| if (40..50).contains(&t) { 500.0 } else { 0.0 })
+            .collect();
+        let energy = vec![
+            SeriesForecaster::perfect(series),
+            SeriesForecaster::perfect(vec![0.0; horizon]),
+        ];
+        let spare = caps
+            .iter()
+            .map(|&c| SeriesForecaster::perfect(vec![c; horizon]))
+            .collect();
+        let src = SeriesSource { energy, spare, caps };
+        let mut ring = ForecastRing::new();
+        let mut incr = IncrSelState::new();
+        ring.rebuild(&src, 0, d_max);
+        incr.rebuild(&clients, &states, ring.view());
+        for step in 1..=horizon - d_max - 1 {
+            incr.advance(&mut ring, &src);
+            let t = ring.window_start();
+            let window_lit = t < 50 && t + d_max > 40;
+            let count = incr.quick_eligible_count();
+            if !window_lit {
+                assert_eq!(count, 0, "t={t}");
+            } else if t + d_max > 40 && t <= 40 {
+                // the lit stretch is fully ahead: every live domain-0
+                // client with enough spare can reach m_min
+                assert!(count > 0, "t={t}");
+            }
+        }
+    }
+}

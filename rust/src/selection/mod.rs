@@ -13,6 +13,7 @@ pub mod arena;
 pub mod baselines;
 pub mod fairness;
 pub mod fedzero;
+pub mod incr;
 pub mod ring;
 pub mod semisync;
 pub mod oort;
@@ -21,6 +22,7 @@ use crate::client::ClientInfo;
 use crate::energy::PowerDomain;
 use crate::util::rng::Rng;
 
+pub use incr::IncrSelState;
 pub use ring::{FcBuffers, FcSource, FcView, ForecastRing};
 
 /// Per-client mutable state the server tracks across rounds.
@@ -64,8 +66,18 @@ pub struct SelectionContext<'a> {
     /// to capacity at the source). [`FcView::empty`] for strategies whose
     /// `needs_forecasts()` is false — those must not read it.
     pub fc: FcView<'a>,
+    /// §Perf: the engine-owned persistent selection state
+    /// ([`incr::IncrSelState`]), advanced in lockstep with the forecast
+    /// ring, for strategies whose `uses_selection_state()` is true. When
+    /// present it must describe exactly this window (same phase) and the
+    /// current `states` liveness; `SelArena` then borrows its reach
+    /// structures instead of recomputing them (O(C·d_max) → O(C)), and
+    /// the dark-period quick gate drops to O(D). `None` means every
+    /// filter is derived freshly from `fc` — bit-identical results.
+    pub incr: Option<&'a incr::IncrSelState>,
     /// actual current spare capacity per client (what an energy-agnostic
-    /// baseline can observe "right now")
+    /// baseline can observe "right now"). Empty for strategies whose
+    /// `needs_spare_now()` is false — those must not read it.
     pub spare_now: &'a [f64],
 }
 
@@ -87,23 +99,26 @@ impl<'a> SelectionContext<'a> {
     /// the paper's line-11 filter: can client `i` reach m_min within
     /// `d` steps per the forecasts, assuming the whole domain budget?
     ///
-    /// Spare rows are pre-clamped to capacity at the forecast source (see
-    /// `ring`), so no clamp happens here — this fold must stay
-    /// term-for-term identical to the arena's `d_reach` computation or
-    /// the dark-period gate and the probe filter will disagree.
+    /// Evaluated as THE canonical bucketed reachability walk
+    /// ([`incr::reach_walk`]) — the single accumulation order every
+    /// layer shares (fresh arena builds, the incremental selection
+    /// state, this filter), which is what keeps the dark-period gate,
+    /// the probe filter, and the ring-patched state bit-equivalent.
+    /// Spare rows are pre-clamped to capacity at the forecast source
+    /// (see `ring`), so no clamp happens here; zero-energy columns
+    /// contribute exactly nothing, so spare values of dark columns are
+    /// never read.
     pub fn reachable_min(&self, i: usize, d: usize) -> bool {
         let c = &self.clients[i];
-        let delta = c.delta();
-        let srow = self.fc.spare_row(i);
-        let erow = self.fc.energy_row(c.domain);
-        let mut batches = 0.0;
-        for t in 0..d.min(self.fc.d_max()) {
-            batches += (srow[t] as f64).min(erow[t] as f64 / delta);
-            if batches >= c.m_min {
-                return true;
-            }
-        }
-        batches >= c.m_min
+        let r = incr::reach_fresh(
+            self.fc.spare_row(i),
+            self.fc.energy_row(c.domain),
+            c.delta(),
+            c.m_min,
+            self.fc.phase(),
+            incr::bucket_width(self.fc.d_max()),
+        );
+        r <= d
     }
 }
 
@@ -152,6 +167,20 @@ pub trait Strategy {
     /// Random/Oort baselines; they receive `FcView::empty()`).
     fn needs_forecasts(&self) -> bool {
         true
+    }
+    /// Does this strategy read `ctx.spare_now`? Strategies that never
+    /// touch current spare capacity (FedZero — its filters are purely
+    /// forecast-driven) return false and the simulator skips the O(C)
+    /// per-step spare refresh, keeping dark idle polling O(D).
+    fn needs_spare_now(&self) -> bool {
+        true
+    }
+    /// Does this strategy consume the engine-owned incremental selection
+    /// state (`ctx.incr`)? Only strategies built on `SelArena` (FedZero,
+    /// and wrappers around it) benefit; the engine only pays for
+    /// maintaining the state when this is true.
+    fn uses_selection_state(&self) -> bool {
+        false
     }
     /// Hook after a round completes (participants = clients that reached
     /// m_min). FedZero updates its blocklist here.

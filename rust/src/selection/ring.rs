@@ -20,7 +20,12 @@
 //!   downstream. Advancing evicts the oldest column in place (the new
 //!   column overwrites it) and bumps `head`; cost is one forecast fetch
 //!   and two 4-byte writes per row: **O(C + D) per step**, independent of
-//!   d_max.
+//!   d_max — and while the window is FULLY dark the per-client spare
+//!   append is deferred entirely (**O(D)**, no client row touched): a
+//!   zero-energy column contributes a zero term to every selection
+//!   filter regardless of spare, and the first lit append refetches all
+//!   skipped columns before any reader can observe them (see
+//!   `spare_stale_since`).
 //! * **Exact domain-liveness counters** — the dark-period gate needs "does
 //!   domain p have any excess energy in the window". A float window sum
 //!   maintained by add/subtract would drift from a fresh left-fold and
@@ -63,9 +68,7 @@
 //!   solvers) never clamps again, so every layer reads identical bits.
 
 use crate::util::par;
-
-/// Row counts below which ring fills stay single-threaded.
-const PAR_MIN_ROWS: usize = 2048;
+use crate::util::par::thresholds::MIN_FILL_ROWS;
 
 /// Where forecast values come from. `t0` is the issue (anchor) step, `t`
 /// the absolute target step; implementations must be pure in `(t0, t)` so
@@ -92,6 +95,11 @@ pub struct FcView<'a> {
     d_max: usize,
     stride: usize,
     head: usize,
+    /// advances since the forecast anchor (`window_start - anchor`) —
+    /// the √d_max-bucket alignment of the canonical reachability walk
+    /// (`selection::incr`) is anchored here, so a ring advanced k times
+    /// and a fresh build at the same window agree on bucket boundaries.
+    phase: usize,
     energy: &'a [f32],
     spare: &'a [f32],
     nonzero: &'a [u32],
@@ -107,6 +115,7 @@ impl<'a> FcView<'a> {
             d_max: 0,
             stride: 0,
             head: 0,
+            phase: 0,
             energy: &[],
             spare: &[],
             nonzero: &[],
@@ -116,6 +125,13 @@ impl<'a> FcView<'a> {
     #[inline]
     pub fn d_max(&self) -> usize {
         self.d_max
+    }
+
+    /// Advances since the forecast anchor (`window_start - anchor`); 0
+    /// for a freshly (re)built window. See the field docs.
+    #[inline]
+    pub fn phase(&self) -> usize {
+        self.phase
     }
 
     #[inline]
@@ -172,6 +188,18 @@ pub struct ForecastRing {
     spare: Vec<f32>,
     /// exact count of window columns > 0 per domain
     nonzero: Vec<u32>,
+    /// Σ nonzero — "is any domain lit anywhere in the window", exact
+    nonzero_total: u64,
+    /// §Perf (O(D) dark polling): while the window is FULLY dark, spare
+    /// appends are skipped — a zero-energy column contributes a zero term
+    /// to every selection filter regardless of spare, so no reader may
+    /// observe the stale values (filters gate on energy > 0, and the
+    /// solver only sees rows of clients whose domain is lit, which
+    /// implies the window is lit and therefore fresh). This records the
+    /// first skipped absolute column; the first lit append (the only way
+    /// a dark window can become lit) catches all stale columns up before
+    /// any spare value can be read.
+    spare_stale_since: Option<usize>,
 }
 
 impl ForecastRing {
@@ -198,8 +226,17 @@ impl ForecastRing {
         (self.energy.len() + self.spare.len()) * std::mem::size_of::<f32>()
     }
 
+    /// Is there any excess energy anywhere in the window? Exact (integer
+    /// counters). While false, spare rows may be stale (see
+    /// `spare_stale_since`) — no selection layer reads them then.
+    pub fn window_lit(&self) -> bool {
+        self.nonzero_total > 0
+    }
+
     /// Re-issue every forecast at anchor `t` and fill the window
-    /// [t, t + d_max). O((C + D) · d_max); row fills fan out across
+    /// [t, t + d_max). O((C + D) · d_max) when the window is lit; a fully
+    /// dark window skips the per-client spare fills entirely (they are
+    /// caught up at the first lit append). Row fills fan out across
     /// threads at scale (identical bytes either way).
     pub fn rebuild(&mut self, src: &impl FcSource, t: usize, d_max: usize) {
         assert!(d_max >= 1, "d_max must be at least 1");
@@ -211,12 +248,17 @@ impl ForecastRing {
         self.head = 0;
         self.energy.clear();
         self.energy.resize(self.n_domains * 2 * d_max, 0.0);
-        self.spare.clear();
-        self.spare.resize(self.n_clients * 2 * d_max, 0.0);
+        // spare rows are fully overwritten below (or marked stale), so
+        // only reshape when the geometry changed — no O(C·d_max) zeroing
+        let spare_len = self.n_clients * 2 * d_max;
+        if self.spare.len() != spare_len {
+            self.spare.clear();
+            self.spare.resize(spare_len, 0.0);
+        }
         self.nonzero.clear();
         self.nonzero.resize(self.n_domains, 0);
 
-        par::par_fill_rows(&mut self.energy, 2 * d_max, PAR_MIN_ROWS, |p, row| {
+        par::par_fill_rows(&mut self.energy, 2 * d_max, MIN_FILL_ROWS, |p, row| {
             for k in 0..d_max {
                 let v = src.energy_at(t, t + k, p) as f32;
                 row[k] = v;
@@ -229,20 +271,31 @@ impl ForecastRing {
                 .filter(|&&v| v > 0.0)
                 .count() as u32;
         }
-        par::par_fill_rows(&mut self.spare, 2 * d_max, PAR_MIN_ROWS, |i, row| {
-            for k in 0..d_max {
-                let v = src.spare_at(t, t + k, i) as f32;
-                row[k] = v;
-                row[k + d_max] = v;
-            }
-        });
+        self.nonzero_total = self.nonzero.iter().map(|&c| c as u64).sum();
+        if self.nonzero_total > 0 {
+            self.spare_stale_since = None;
+            par::par_fill_rows(&mut self.spare, 2 * d_max, MIN_FILL_ROWS, |i, row| {
+                for k in 0..d_max {
+                    let v = src.spare_at(t, t + k, i) as f32;
+                    row[k] = v;
+                    row[k + d_max] = v;
+                }
+            });
+        } else {
+            // fully dark at issue time: every spare column is stale until
+            // the first lit append catches the whole window up
+            self.spare_stale_since = Some(t);
+        }
         self.built = true;
     }
 
     /// Shift the window one slot: evict the column at `window_start`,
     /// append the column at `window_start + d_max` fetched at the SAME
     /// anchor. O(C + D) — one forecast fetch + two writes per row, and an
-    /// exact integer patch of the liveness counters.
+    /// exact integer patch of the liveness counters. While the window is
+    /// fully dark the per-client spare append is skipped too (**O(D)**:
+    /// no client row is touched at all); the first lit append refetches
+    /// every skipped column before any reader can observe it.
     pub fn advance(&mut self, src: &impl FcSource) {
         assert!(self.built, "advance() before rebuild()");
         let dm = self.d_max;
@@ -257,18 +310,54 @@ impl ForecastRing {
             self.energy[base + h + dm] = v;
             if evicted > 0.0 {
                 self.nonzero[p] -= 1;
+                self.nonzero_total -= 1;
             }
             if v > 0.0 {
                 self.nonzero[p] += 1;
+                self.nonzero_total += 1;
             }
         }
-        par::par_fill_rows(&mut self.spare, 2 * dm, PAR_MIN_ROWS, |i, row| {
-            let v = src.spare_at(anchor, t_new, i) as f32;
-            row[h] = v;
-            row[h + dm] = v;
-        });
         self.start += 1;
         self.head = (self.head + 1) % dm;
+        if self.nonzero_total > 0 {
+            // lit: catch up any columns skipped during a dark stretch
+            // (clamped to the window — older skipped columns are gone),
+            // then the steady state fills exactly the appended column
+            let from = self.spare_stale_since.take().unwrap_or(t_new);
+            self.fill_spare_cols(src, from.max(self.start), t_new);
+        } else if self.spare_stale_since.is_none() {
+            self.spare_stale_since = Some(t_new);
+        }
+    }
+
+    /// Fetch and mirror-write spare columns for the absolute steps
+    /// `[from, to]` (inclusive; must lie within the current window).
+    fn fill_spare_cols(&mut self, src: &impl FcSource, from: usize, to: usize) {
+        let dm = self.d_max;
+        debug_assert!(from >= self.start && to < self.start + dm && from <= to);
+        let head = self.head;
+        let start = self.start;
+        let anchor = self.anchor;
+        par::par_fill_rows(&mut self.spare, 2 * dm, MIN_FILL_ROWS, |i, row| {
+            for c in from..=to {
+                let v = src.spare_at(anchor, c, i) as f32;
+                let j = (head + (c - start)) % dm;
+                row[j] = v;
+                row[j + dm] = v;
+            }
+        });
+    }
+
+    /// Refetch any spare columns skipped during a fully dark stretch so
+    /// the whole window is byte-identical to a fresh build. A no-op when
+    /// nothing is stale. Selection never needs this (dark columns are
+    /// never read); it exists for the equivalence tests and any external
+    /// consumer that wants to inspect spare rows of a dark window.
+    pub fn refresh_spare(&mut self, src: &impl FcSource) {
+        if let Some(from) = self.spare_stale_since.take() {
+            let last = self.start + self.d_max - 1;
+            self.fill_spare_cols(src, from.max(self.start), last);
+        }
     }
 
     pub fn view(&self) -> FcView<'_> {
@@ -279,6 +368,7 @@ impl ForecastRing {
             d_max: self.d_max,
             stride: 2 * self.d_max,
             head: self.head,
+            phase: self.start - self.anchor,
             energy: &self.energy,
             spare: &self.spare,
             nonzero: &self.nonzero,
@@ -294,6 +384,9 @@ pub struct FcBuffers {
     d_max: usize,
     n_domains: usize,
     n_clients: usize,
+    /// advances since the anchor this window corresponds to (see
+    /// [`FcView::phase`]); 0 for anchor-fresh windows built from rows
+    phase: usize,
     energy: Vec<f32>,
     spare: Vec<f32>,
     nonzero: Vec<u32>,
@@ -329,20 +422,23 @@ impl FcBuffers {
                     .count() as u32
             })
             .collect();
-        FcBuffers { d_max, n_domains, n_clients, energy, spare, nonzero }
+        FcBuffers { d_max, n_domains, n_clients, phase: 0, energy, spare, nonzero }
     }
 
     /// Fresh build of the window [t, t + d_max) with forecasts issued at
     /// `anchor` — the reference a ring advanced `t - anchor` times must
-    /// match byte for byte.
+    /// match byte for byte (including the bucket-alignment phase).
     pub fn from_source(src: &impl FcSource, anchor: usize, t: usize, d_max: usize) -> Self {
+        assert!(t >= anchor, "window start before its forecast anchor");
         let energy_fc: Vec<Vec<f64>> = (0..src.n_domains())
             .map(|p| (t..t + d_max).map(|k| src.energy_at(anchor, k, p)).collect())
             .collect();
         let spare_fc: Vec<Vec<f64>> = (0..src.n_clients())
             .map(|i| (t..t + d_max).map(|k| src.spare_at(anchor, k, i)).collect())
             .collect();
-        Self::from_rows(&energy_fc, &spare_fc, d_max)
+        let mut out = Self::from_rows(&energy_fc, &spare_fc, d_max);
+        out.phase = t - anchor;
+        out
     }
 
     pub fn view(&self) -> FcView<'_> {
@@ -352,6 +448,7 @@ impl FcBuffers {
             d_max: self.d_max,
             stride: self.d_max,
             head: 0,
+            phase: self.phase,
             energy: &self.energy,
             spare: &self.spare,
             nonzero: &self.nonzero,
@@ -427,6 +524,7 @@ mod tests {
 
     fn assert_views_identical(a: FcView<'_>, b: FcView<'_>, what: &str) {
         assert_eq!(a.d_max(), b.d_max(), "{what}: d_max");
+        assert_eq!(a.phase(), b.phase(), "{what}: phase");
         assert_eq!(a.n_domains(), b.n_domains(), "{what}: n_domains");
         assert_eq!(a.n_clients(), b.n_clients(), "{what}: n_clients");
         for p in 0..a.n_domains() {
@@ -453,16 +551,61 @@ mod tests {
             let anchor = rng.range(0, 4);
             let mut ring = ForecastRing::new();
             ring.rebuild(&src, anchor, d_max);
+            // fully dark windows legitimately defer their spare fills;
+            // refresh_spare makes them observable for the byte comparison
+            ring.refresh_spare(&src);
             let fresh0 = FcBuffers::from_source(&src, anchor, anchor, d_max);
             assert_views_identical(ring.view(), fresh0.view(), "rebuild");
             for k in 1..=steps {
                 ring.advance(&src);
+                ring.refresh_spare(&src);
                 assert_eq!(ring.window_start(), anchor + k);
                 assert_eq!(ring.anchor(), anchor);
                 let fresh = FcBuffers::from_source(&src, anchor, anchor + k, d_max);
                 assert_views_identical(ring.view(), fresh.view(), "advance");
             }
         });
+    }
+
+    #[test]
+    fn dark_stretch_spare_catches_up_without_manual_refresh() {
+        // 15 fully dark steps (spare appends deferred), then power
+        // returns: the first lit append must refetch every still-in-window
+        // skipped column, so the view equals a fresh build with NO manual
+        // refresh_spare call — the auto catch-up the selection path relies
+        // on. A second dark stretch exercises re-entry into laziness.
+        let energy = [vec![6.0; 4], vec![0.0; 15], vec![3.0; 20], vec![0.0; 30]]
+            .concat();
+        let horizon = energy.len();
+        let caps = vec![5.0, 9.0, 2.5];
+        let spare: Vec<SeriesForecaster> = caps
+            .iter()
+            .enumerate()
+            .map(|(i, &cap)| {
+                let series: Vec<f64> =
+                    (0..horizon).map(|t| cap * (0.3 + 0.7 * ((t + i) % 3) as f64 / 2.0)).collect();
+                SeriesForecaster::realistic(series, 5 + i as u64, 60.0)
+            })
+            .collect();
+        let src = SeriesSource {
+            energy: vec![SeriesForecaster::perfect(energy)],
+            spare,
+            caps,
+        };
+        let d_max = 6;
+        let mut ring = ForecastRing::new();
+        ring.rebuild(&src, 0, d_max);
+        let mut saw_dark = false;
+        for k in 1..=horizon - d_max - 1 {
+            ring.advance(&src);
+            if !ring.window_lit() {
+                saw_dark = true;
+                continue; // stale spare allowed (and unreadable) here
+            }
+            let fresh = FcBuffers::from_source(&src, 0, k, d_max);
+            assert_views_identical(ring.view(), fresh.view(), "lit window");
+        }
+        assert!(saw_dark, "fixture never went fully dark");
     }
 
     #[test]
@@ -476,6 +619,7 @@ mod tests {
         }
         assert_eq!(ring.anchor(), 0);
         ring.rebuild(&src, 31, 20);
+        ring.refresh_spare(&src);
         assert_eq!(ring.anchor(), 31);
         assert_eq!(ring.window_start(), 31);
         let fresh = FcBuffers::from_source(&src, 31, 31, 20);
@@ -533,6 +677,7 @@ mod tests {
         ring.rebuild(&src, 0, d_max);
         for k in 1..=2 * d_max + 1 {
             ring.advance(&src);
+            ring.refresh_spare(&src);
             let fresh = FcBuffers::from_source(&src, 0, k, d_max);
             assert_views_identical(ring.view(), fresh.view(), "wrap");
         }

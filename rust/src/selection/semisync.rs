@@ -33,6 +33,14 @@ impl<S: Strategy> Strategy for SemiSync<S> {
         self.inner.needs_forecasts()
     }
 
+    fn needs_spare_now(&self) -> bool {
+        self.inner.needs_spare_now()
+    }
+
+    fn uses_selection_state(&self) -> bool {
+        self.inner.uses_selection_state()
+    }
+
     fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision {
         let mut d = self.inner.select(ctx, rng);
         if d.wait {
@@ -117,6 +125,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fcb.view(),
+            incr: None,
             spare_now: &snow,
         };
         let mut rng = Rng::new(0);
@@ -139,6 +148,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fcb.view(),
+            incr: None,
             spare_now: &snow,
         };
         let mut rng = Rng::new(1);
@@ -177,6 +187,7 @@ mod tests {
             states: &states,
             domains: &domains,
             fc: fcb.view(),
+            incr: None,
             spare_now: &snow,
         };
         let mut rng = Rng::new(2);

@@ -2,15 +2,19 @@
 //!
 //! §Perf — the two hot structures of the simulation loop:
 //!
-//! * **Persistent forecast ring-arena** ([`crate::selection::ring`]): the
-//!   engine owns one [`ForecastRing`] across the whole run. After every
-//!   executed round it re-anchors the ring (forecasts re-issued at round
-//!   start, as the paper's server does); during consecutive idle (wait)
-//!   polls it *advances* the ring by one slot — evict column t, append
-//!   column t+d_max at the same issue anchor, patch the integer liveness
-//!   counters — so a dark-period poll costs O(C + D) instead of the
-//!   historical O((C + D)·d_max) window re-materialisation. Strategies
-//!   see the window as a borrowed [`FcView`] in the [`SelectionContext`];
+//! * **Persistent forecast ring-arena + incremental selection state**
+//!   ([`crate::selection::ring`], [`crate::selection::incr`]): the
+//!   engine owns one [`ForecastRing`] and one [`IncrSelState`] across
+//!   the whole run. After every executed round it re-anchors both
+//!   (forecasts re-issued at round start, as the paper's server does);
+//!   during consecutive idle (wait) polls it *advances* them by one slot
+//!   — evict column t, append column t+d_max at the same issue anchor,
+//!   patch the integer liveness counters and the per-domain/per-client
+//!   reach structures of dirty domains. A FULLY DARK idle poll is
+//!   **O(D)**: the σ refresh, the spare_now refresh, the ring's spare
+//!   appends and the quick eligibility gate all skip per-client work
+//!   (see the respective §Perf notes in the loop below). Strategies see
+//!   the window as a borrowed [`FcView`] in the [`SelectionContext`];
 //!   nothing is copied per select(). Under `ErrorLevel::Perfect` the
 //!   anchoring is unobservable (forecast = actual regardless of issue
 //!   time); under `Realistic` it means idle-period re-polls reuse the
@@ -53,11 +57,13 @@ use crate::client::ClientInfo;
 use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
 use crate::fl::{fedavg_weights, ClientTrainState, TrainBackend, TrainJob};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
+use crate::selection::incr::IncrSelState;
 use crate::selection::oort::UtilityTracker;
 use crate::selection::ring::{FcSource, FcView, ForecastRing};
 use crate::selection::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
 use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
 use crate::util::par;
+use crate::util::par::thresholds;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -289,8 +295,8 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             load_fc_level,
             backend,
             strategy,
-            par_domains_min: 8,
-            par_slots_min: 256,
+            par_domains_min: thresholds::ROUND_DOMAINS,
+            par_slots_min: thresholds::ROUND_SLOTS,
             states: vec![ClientRoundState::default(); n_clients],
             train_states,
             utility: UtilityTracker::new(n_clients),
@@ -323,23 +329,35 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut global = self.backend.init_params(self.cfg.seed as i32)?;
         let mut t = 0usize;
         let mut round = 0usize;
-        // §Perf: the forecast ring-arena persists across the whole run —
-        // see the module docs. `last_was_wait` decides advance (same
-        // anchor, O(C+D)) vs rebuild (re-issue at t, O((C+D)·d_max)).
+        // §Perf: the forecast ring-arena AND the incremental selection
+        // state persist across the whole run — see the module docs.
+        // `last_was_wait` decides advance (same anchor, O(D) when dark)
+        // vs rebuild (re-issue at t, O((C+D)·d_max)).
         let mut ring = ForecastRing::new();
+        let mut incr = IncrSelState::new();
+        let wants_fc = self.strategy.needs_forecasts();
+        let wants_spare = self.strategy.needs_spare_now();
+        let use_incr = wants_fc && self.strategy.uses_selection_state();
         let mut last_was_wait = false;
         let mut samples: Vec<usize> = Vec::with_capacity(self.clients.len());
         let mut spare_now: Vec<f64> = Vec::with_capacity(self.clients.len());
         while t < self.cfg.horizon {
-            // refresh σ, assemble context, ask the strategy
-            samples.clear();
-            samples.extend(self.clients.iter().map(|c| c.num_samples()));
-            self.utility.refresh(&mut self.states, &samples);
+            // §Perf: σ/participation/blocklist only mutate when a round
+            // executes, and the utility refresh is a pure function of
+            // them — consecutive idle polls skip the O(C) refresh
+            // entirely (bit-identical: it would recompute the same σ).
+            // This invariant is also what keeps the incremental state's
+            // liveness snapshot valid across advances.
+            if !last_was_wait {
+                samples.clear();
+                samples.extend(self.clients.iter().map(|c| c.num_samples()));
+                self.utility.refresh(&mut self.states, &samples);
+            }
 
             // §Perf: the window is only maintained for strategies that
             // read forecasts (FedZero, *-fc); Random/Oort/UpperBound
-            // never pay for it.
-            let wants_fc = self.strategy.needs_forecasts();
+            // never pay for it. The incremental selection state rides
+            // along only for strategies that consume it (FedZero).
             if wants_fc {
                 let src = EngineFcSource {
                     domains: &self.domains,
@@ -348,13 +366,27 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     level: self.load_fc_level,
                 };
                 if ring.is_built() && last_was_wait && t == ring.window_start() + 1 {
-                    ring.advance(&src);
+                    if use_incr {
+                        incr.advance(&mut ring, &src);
+                    } else {
+                        ring.advance(&src);
+                    }
                 } else if !ring.is_built() || ring.window_start() != t {
                     ring.rebuild(&src, t, self.cfg.d_max);
+                    if use_incr {
+                        incr.rebuild(&self.clients, &self.states, ring.view());
+                    }
                 }
             }
-            spare_now.clear();
-            spare_now.extend((0..self.clients.len()).map(|i| self.spare_actual(i, t)));
+            // §Perf: the O(C) current-spare refresh only runs for
+            // strategies that read it (needs_spare_now) — FedZero's
+            // filters are purely forecast-driven, so its dark idle polls
+            // stay O(D)
+            if wants_spare {
+                spare_now.clear();
+                spare_now
+                    .extend((0..self.clients.len()).map(|i| self.spare_actual(i, t)));
+            }
             let decision = {
                 let ctx = SelectionContext {
                     now: t,
@@ -364,6 +396,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     states: &self.states,
                     domains: &self.domains,
                     fc: if wants_fc { ring.view() } else { FcView::empty() },
+                    incr: if use_incr && incr.is_built() { Some(&incr) } else { None },
                     spare_now: &spare_now,
                 };
                 let t0 = std::time::Instant::now();
@@ -494,7 +527,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 done += 1;
             }
         }
-        let mut job_slots: Vec<usize> = Vec::with_capacity(k);
+        // §Perf (ROADMAP "per-step job vec"): ONE index-based job arena
+        // hoisted to round scope — jobs reference slot indices into
+        // `round_states` instead of borrowing them, so the buffer is
+        // refilled in place every step and training steps allocate
+        // nothing in steady state
+        let mut jobs: Vec<TrainJob> = Vec::with_capacity(k);
         let mut duration = 0usize;
 
         // group selected clients by domain once per round (ascending
@@ -598,25 +636,24 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             }
 
             // train phase: one job per slot that earned whole batches,
-            // in ascending slot order. Each job exclusively owns its
-            // client's state, so `train_shard` may fan the jobs out
-            // across workers — per-slot params/stats are bit-identical
-            // to the serial order either way, and the loss accounting
-            // below stays serial in slot order.
-            job_slots.clear();
-            let mut jobs: Vec<TrainJob<'_, B::Cursor>> = Vec::with_capacity(k);
-            for (s, st) in round_states.iter_mut().enumerate() {
+            // in ascending slot order (the strictly-increasing-slot
+            // contract of `train_shard`). Each job exclusively owns its
+            // slot's state, so the backend may fan the jobs out across
+            // workers — per-slot params/stats are bit-identical to the
+            // serial order either way, and the loss accounting below
+            // stays serial in slot order.
+            jobs.clear();
+            for s in 0..k {
                 if n_new[s] > 0 {
-                    job_slots.push(s);
-                    jobs.push(TrainJob::new(sel[s], n_new[s], st));
+                    jobs.push(TrainJob::new(sel[s], n_new[s], s));
                 }
             }
             if !jobs.is_empty() {
-                self.backend.train_shard(global, &mut jobs)?;
+                self.backend.train_shard(global, &mut jobs, &mut round_states)?;
             }
-            for (&s, j) in job_slots.iter().zip(&jobs) {
-                loss_acc[s] += j.stats.mean_loss * j.n_batches as f64;
-                loss_batches[s] += j.n_batches;
+            for j in &jobs {
+                loss_acc[j.slot] += j.stats.mean_loss * j.n_batches as f64;
+                loss_batches[j.slot] += j.n_batches;
             }
 
             // end condition: n_required clients reached their minimum

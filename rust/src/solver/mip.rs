@@ -17,7 +17,11 @@
 //!   domain cannot serve the sum of its members' standalone values; see
 //!   [`branch_and_bound_view`]) — plus infeasibility pruning (infeasible
 //!   partial selections stay infeasible for supersets); falls back to the
-//!   greedy incumbent when the node budget runs out.
+//!   greedy incumbent when the node budget runs out. At scale,
+//!   independent root subtrees fan out across `util::par` workers with a
+//!   shared atomic incumbent; strict pruning plus a canonical
+//!   (objective, lex-smallest-selection) reduction makes the parallel
+//!   result identical to the serial one on completed searches.
 //! * [`enumerate`] — brute force over all C-choose-n subsets; ground truth
 //!   for tests on tiny instances.
 //!
@@ -52,20 +56,18 @@
 //! baseline the selection bench measures speedups against
 //! (`BENCH_selection.json`, field `speedup_vs_reference`).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
 use super::alloc::{
     self, AllocClient, AllocClientView, AllocProblem, AllocWorkspace,
 };
 use crate::util::par;
-
-/// Parallel fan-out thresholds: below these sizes every stage runs
-/// inline, so unit-test and evaluation-scale instances are unaffected by
-/// threading (results are identical either way; see `util::par`).
-const PAR_MIN_CLIENTS: usize = 4096;
-const PAR_MIN_DOMAIN_GROUPS: usize = 16;
-/// evaluate_view only fans out when chosen·steps clears this (thread
-/// spawn/join costs more than a handful of tiny flow solves — branch and
-/// bound calls evaluate on every node)
-const PAR_MIN_EVAL_WORK: usize = 8192;
+// The fan-out thresholds live in ONE documented table (they used to be
+// duplicated per module and could drift): see `util::par::thresholds`.
+use crate::util::par::thresholds::{
+    BNB_MIN_CLIENTS as PAR_MIN_BNB_CLIENTS, MIN_CLIENTS as PAR_MIN_CLIENTS,
+    MIN_DOMAIN_GROUPS as PAR_MIN_DOMAIN_GROUPS, MIN_EVAL_WORK as PAR_MIN_EVAL_WORK,
+};
 
 /// One eligible (pre-filtered) candidate client (owned builder form).
 #[derive(Clone, Debug)]
@@ -679,6 +681,144 @@ pub fn reference_greedy(inst: &SelInstance, swap_passes: usize) -> SelSolution {
     SelSolution { chosen, objective, totals, optimal: false }
 }
 
+/// Order-preserving `u64` key for non-NaN `f64` (a < b ⟺ key(a) <
+/// key(b)): lets the shared branch-and-bound incumbent live in one
+/// `AtomicU64` with monotone `fetch_max` publication.
+#[inline]
+fn f64_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 0 {
+        b | (1 << 63)
+    } else {
+        !b
+    }
+}
+
+/// Canonical "is (obj, chosen) better than `best`": larger objective
+/// wins; EXACT float ties break to the lexicographically smaller
+/// selection vector. A strict total preference, so the final reduction
+/// is independent of the order solutions were discovered in — the key to
+/// serial/parallel identity.
+fn better_solution(obj: f64, chosen: &[usize], best: Option<(f64, &[usize])>) -> bool {
+    match best {
+        None => true,
+        Some((bo, bc)) => obj > bo || (obj == bo && chosen < bc),
+    }
+}
+
+/// Immutable search context + the cross-worker atomics of one
+/// branch-and-bound run.
+struct BnbShared<'a, 'b> {
+    inst: &'b InstanceView<'a>,
+    order: &'b [usize],
+    sorted_scores: &'b [f64],
+    /// ρ_p^max · E_p per domain (fixed)
+    dom_cap: &'b [f64],
+    /// monotone incumbent objective ([`f64_key`]-encoded). Workers read
+    /// it for pruning and `fetch_max` improvements into it; a stale read
+    /// only prunes less, never wrongly, so any interleaving is sound.
+    incumbent: AtomicU64,
+    nodes: AtomicUsize,
+    budget: usize,
+    exhausted: AtomicBool,
+}
+
+/// Worker-local branch-and-bound state.
+struct BnbLocal {
+    /// Σ positive standalone scores of the undecided (suffix) candidates
+    /// per domain — exact save/restore along the DFS path, identical
+    /// float sequences in every worker (a pure function of the depth)
+    rem_score_sum: Vec<f64>,
+    ws: AllocWorkspace,
+    best: Option<(f64, Vec<usize>, Vec<f64>)>,
+}
+
+/// Admissible upper bound 1: exact standalone sum of chosen + top
+/// remaining standalone scores from position `idx`.
+fn bnb_bound(sorted_scores: &[f64], chosen_score: f64, idx: usize, need: usize) -> f64 {
+    let mut b = chosen_score;
+    let mut taken = 0;
+    let mut i = idx;
+    while taken < need && i < sorted_scores.len() {
+        if sorted_scores[i] > 0.0 {
+            b += sorted_scores[i];
+        }
+        taken += 1;
+        i += 1;
+    }
+    b
+}
+
+/// Admissible upper bound 2: per-domain energy-capacity cap over the
+/// undecided candidates (see [`branch_and_bound_view`]).
+fn bnb_domain_bound(rem: &[f64], dom_cap: &[f64], chosen_score: f64) -> f64 {
+    let mut b = chosen_score;
+    for (r, cap) in rem.iter().zip(dom_cap) {
+        b += r.min(*cap);
+    }
+    b
+}
+
+/// The DFS both the serial path and every parallel worker run. Pruning
+/// is STRICT (`bound < incumbent`): a subtree whose bound exactly ties
+/// the incumbent may still hold an equal-objective, lexicographically
+/// smaller selection, so it is explored — which is what makes the final
+/// (objective, lex) winner independent of incumbent timing and thus of
+/// the worker schedule.
+fn bnb_dfs(
+    sh: &BnbShared<'_, '_>,
+    lo: &mut BnbLocal,
+    chosen: &mut Vec<usize>,
+    chosen_score: f64,
+    idx: usize,
+) {
+    if sh.nodes.fetch_add(1, Ordering::Relaxed) >= sh.budget {
+        sh.exhausted.store(true, Ordering::Relaxed);
+        return;
+    }
+    let need = sh.inst.n - chosen.len();
+    if need == 0 {
+        if let Some((obj, totals)) = evaluate_view(sh.inst, chosen, &mut lo.ws) {
+            sh.incumbent.fetch_max(f64_key(obj), Ordering::Relaxed);
+            let is_better = better_solution(
+                obj,
+                chosen,
+                lo.best.as_ref().map(|(o, c, _)| (*o, c.as_slice())),
+            );
+            if is_better {
+                lo.best = Some((obj, chosen.clone(), totals));
+            }
+        }
+        return;
+    }
+    if idx >= sh.order.len() || sh.order.len() - idx < need {
+        return;
+    }
+    let inc = sh.incumbent.load(Ordering::Relaxed);
+    if f64_key(bnb_bound(sh.sorted_scores, chosen_score, idx, need)) < inc
+        || f64_key(bnb_domain_bound(&lo.rem_score_sum, sh.dom_cap, chosen_score)) < inc
+    {
+        return;
+    }
+    let cand = sh.order[idx];
+    // order[idx] leaves the undecided set for both branches: its value is
+    // either exact (in chosen_score) or excluded. Exact save/restore so
+    // sibling subtrees see identical sums.
+    let p = sh.inst.clients[cand].domain;
+    let saved_rem = lo.rem_score_sum[p];
+    lo.rem_score_sum[p] = saved_rem - sh.sorted_scores[idx].max(0.0);
+    // Branch 1: include (prune infeasible partial selections — the joint
+    // lower bounds only tighten as the set grows).
+    chosen.push(cand);
+    if evaluate_view(sh.inst, chosen, &mut lo.ws).is_some() {
+        bnb_dfs(sh, lo, chosen, chosen_score + sh.sorted_scores[idx], idx + 1);
+    }
+    chosen.pop();
+    // Branch 2: exclude
+    bnb_dfs(sh, lo, chosen, chosen_score, idx + 1);
+    lo.rem_score_sum[p] = saved_rem;
+}
+
 /// Exact branch-and-bound on borrowed views. `node_budget` caps the
 /// search; on exhaustion the best incumbent (at least as good as greedy)
 /// is returned with `optimal = false`.
@@ -697,11 +837,63 @@ pub fn reference_greedy(inst: &SelInstance, swap_passes: usize) -> SelSolution {
 ///    contended domains it prunes far deeper than bound 1 alone.
 ///    `rem_score_sum` is maintained by exact save/restore along the DFS
 ///    path (no float drift across siblings).
+///
+/// §Perf — parallel subtree fan-out (ROADMAP "Parallel branch-and-
+/// bound"): above `thresholds::BNB_MIN_CLIENTS` the root is expanded
+/// breadth-first into a deterministic frontier of independent subtrees
+/// (uniform depth, feasibility-pruned), which `util::par` workers drain
+/// with a SHARED atomic incumbent — bound reads are monotone, so a stale
+/// incumbent only prunes less and pruning stays admissible. Results are
+/// IDENTICAL serial vs parallel on completed searches: pruning is strict
+/// (`bound < incumbent`), so every leaf achieving the global maximum is
+/// explored regardless of schedule, and the final reduction picks the
+/// maximum objective with exact ties broken to the lexicographically
+/// smallest selection (greedy seed included) — a schedule-independent
+/// canonical winner (property-tested, and load-tested in
+/// `benches/selection.rs`). On budget exhaustion the node accounting is
+/// schedule-dependent and only `optimal = false` is guaranteed.
+///
+/// Trade-off of the strict prune: subtrees whose bound EXACTLY ties the
+/// incumbent are explored (they may hold an equal-objective,
+/// lex-smaller selection). On tie-dense degenerate instances — many
+/// candidates with bit-identical standalone scores whose bound is
+/// achieved exactly, e.g. a fresh fleet where every σ_c = 1 on
+/// uncontended singleton domains — this enumerates tie completions
+/// until `node_budget` caps it and the search falls back to the greedy
+/// incumbent with `optimal = false` (the historical epsilon prune cut
+/// these early, but made the surviving tie set depend on incumbent
+/// timing, which is exactly what breaks serial/parallel identity).
+/// Exactness + schedule-independence costs tie exploration; the budget
+/// bounds the damage and the fallback is the scalable default solver.
 pub fn branch_and_bound_view(
     inst: InstanceView<'_>,
     node_budget: usize,
     ws: &mut AllocWorkspace,
 ) -> SelSolution {
+    let parallel =
+        inst.clients.len() >= PAR_MIN_BNB_CLIENTS && par::threads() > 1;
+    bnb_run(inst, node_budget, ws, parallel).0
+}
+
+/// [`branch_and_bound_view`] with the parallel fan-out forced on or off,
+/// returning the visited node count — the serial/parallel equivalence
+/// tests and the selection bench's node-throughput point use this.
+#[doc(hidden)]
+pub fn branch_and_bound_view_forced(
+    inst: InstanceView<'_>,
+    node_budget: usize,
+    ws: &mut AllocWorkspace,
+    parallel: bool,
+) -> (SelSolution, usize) {
+    bnb_run(inst, node_budget, ws, parallel)
+}
+
+fn bnb_run(
+    inst: InstanceView<'_>,
+    node_budget: usize,
+    ws: &mut AllocWorkspace,
+    parallel: bool,
+) -> (SelSolution, usize) {
     let scores = standalone_scores_view(&inst);
     let mut order: Vec<usize> = (0..inst.clients.len()).collect();
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
@@ -709,18 +901,18 @@ pub fn branch_and_bound_view(
     let sorted_scores: Vec<f64> = order.iter().map(|&i| scores[i]).collect();
 
     // per-domain energy-capacity caps (bound 2): dom_cap[p] = ρ_p^max·E_p,
-    // rem_score_sum[p] = Σ positive standalone scores of undecided
-    // candidates in p (all of them at the root)
+    // rem_root[p] = Σ positive standalone scores of undecided candidates
+    // in p (all of them at the root)
     let n_domains = inst.energy.len();
     let mut dom_cap = vec![0.0f64; n_domains];
-    let mut rem_score_sum = vec![0.0f64; n_domains];
+    let mut rem_root = vec![0.0f64; n_domains];
     for (p, row) in inst.energy.iter().enumerate() {
         let e_total: f64 = row.iter().map(|&e| e as f64).sum();
         dom_cap[p] = e_total; // scaled by ρ_p^max below
     }
     let mut rho_max = vec![0.0f64; n_domains];
     for (i, c) in inst.clients.iter().enumerate() {
-        rem_score_sum[c.domain] += scores[i].max(0.0);
+        rem_root[c.domain] += scores[i].max(0.0);
         rho_max[c.domain] = rho_max[c.domain].max(c.sigma / c.delta);
     }
     for (cap, rho) in dom_cap.iter_mut().zip(&rho_max) {
@@ -728,131 +920,128 @@ pub fn branch_and_bound_view(
     }
 
     let seed = greedy_view(inst, 1, ws);
-    let mut best = seed;
-    let best_obj = if best.chosen.len() == inst.n {
-        best.objective
-    } else {
-        f64::NEG_INFINITY
-    };
+    let seed_full = seed.chosen.len() == inst.n;
+    let seed_obj = if seed_full { seed.objective } else { f64::NEG_INFINITY };
 
-    struct Dfs<'a, 'b> {
-        inst: &'b InstanceView<'a>,
-        order: &'b [usize],
-        sorted_scores: &'b [f64],
-        /// Σ positive standalone scores of the undecided (suffix)
-        /// candidates per domain — save/restore maintained along the path
-        rem_score_sum: Vec<f64>,
-        /// ρ_p^max · E_p per domain (fixed)
-        dom_cap: &'b [f64],
-        ws: &'b mut AllocWorkspace,
-        nodes: usize,
-        budget: usize,
-        best_obj: f64,
-        best: Option<(Vec<usize>, f64, Vec<f64>)>,
-        complete: bool,
-    }
-
-    impl<'a, 'b> Dfs<'a, 'b> {
-        /// admissible upper bound 1: exact standalone sum of chosen + top
-        /// remaining standalone scores from position `idx`.
-        fn bound(&self, chosen_score: f64, idx: usize, need: usize) -> f64 {
-            let mut b = chosen_score;
-            let mut taken = 0;
-            let mut i = idx;
-            while taken < need && i < self.sorted_scores.len() {
-                if self.sorted_scores[i] > 0.0 {
-                    b += self.sorted_scores[i];
-                }
-                taken += 1;
-                i += 1;
-            }
-            b
-        }
-
-        /// admissible upper bound 2: per-domain energy-capacity cap over
-        /// the undecided candidates (see the function docs). Computed only
-        /// when bound 1 fails to prune.
-        fn domain_bound(&self, chosen_score: f64) -> f64 {
-            let mut b = chosen_score;
-            for (rem, cap) in self.rem_score_sum.iter().zip(self.dom_cap) {
-                b += rem.min(*cap);
-            }
-            b
-        }
-
-        fn run(&mut self, chosen: &mut Vec<usize>, chosen_score: f64, idx: usize) {
-            if self.nodes >= self.budget {
-                self.complete = false;
-                return;
-            }
-            self.nodes += 1;
-            let need = self.inst.n - chosen.len();
-            if need == 0 {
-                if let Some((obj, totals)) = evaluate_view(self.inst, chosen, self.ws)
-                {
-                    if obj > self.best_obj + 1e-12 {
-                        self.best_obj = obj;
-                        self.best = Some((chosen.clone(), obj, totals));
-                    }
-                }
-                return;
-            }
-            if idx >= self.order.len()
-                || self.order.len() - idx < need
-                || self.bound(chosen_score, idx, need) <= self.best_obj + 1e-12
-                || self.domain_bound(chosen_score) <= self.best_obj + 1e-12
-            {
-                return;
-            }
-            let cand = self.order[idx];
-            // order[idx] leaves the undecided set for both branches: its
-            // value is either exact (in chosen_score) or excluded. Exact
-            // save/restore so sibling subtrees see identical sums.
-            let p = self.inst.clients[cand].domain;
-            let saved_rem = self.rem_score_sum[p];
-            self.rem_score_sum[p] = saved_rem - self.sorted_scores[idx].max(0.0);
-            // Branch 1: include (prune infeasible partial selections — the
-            // joint lower bounds only tighten as the set grows).
-            chosen.push(cand);
-            if evaluate_view(self.inst, chosen, self.ws).is_some() {
-                self.run(
-                    chosen,
-                    chosen_score + self.sorted_scores[idx],
-                    idx + 1,
-                );
-            }
-            chosen.pop();
-            // Branch 2: exclude
-            self.run(chosen, chosen_score, idx + 1);
-            self.rem_score_sum[p] = saved_rem;
-        }
-    }
-
-    let mut dfs = Dfs {
+    let shared = BnbShared {
         inst: &inst,
         order: &order,
         sorted_scores: &sorted_scores,
-        rem_score_sum,
         dom_cap: &dom_cap,
-        ws,
-        nodes: 0,
+        incumbent: AtomicU64::new(f64_key(seed_obj)),
+        nodes: AtomicUsize::new(0),
         budget: node_budget,
-        best_obj,
-        best: None,
-        complete: true,
+        exhausted: AtomicBool::new(false),
     };
-    let mut chosen = Vec::new();
-    dfs.run(&mut chosen, 0.0, 0);
 
-    if let Some((chosen, objective, totals)) = dfs.best {
-        let complete = dfs.complete;
-        SelSolution { chosen, objective, totals, optimal: complete }
+    let mut candidates: Vec<(f64, Vec<usize>, Vec<f64>)> = Vec::new();
+    if !parallel {
+        let mut local = BnbLocal {
+            rem_score_sum: rem_root,
+            ws: std::mem::take(ws),
+            best: None,
+        };
+        let mut chosen = Vec::new();
+        bnb_dfs(&shared, &mut local, &mut chosen, 0.0, 0);
+        *ws = local.ws;
+        if let Some(b) = local.best {
+            candidates.push(b);
+        }
     } else {
-        // No better feasible size-n selection was found: return the
-        // (possibly shorter) greedy solution, marked exact if search
-        // completed.
-        best.optimal = dfs.complete;
-        best
+        // Deterministic frontier: expand every decision prefix over the
+        // first `depth` candidates (dropping infeasible includes and
+        // dead ends), so all open nodes share idx == depth and the same
+        // undecided suffix. Complete prefixes ride along untouched — the
+        // worker DFS evaluates them at entry.
+        struct Root {
+            chosen: Vec<usize>,
+            score: f64,
+        }
+        let target = par::threads().saturating_mul(8).max(16);
+        let mut frontier = vec![Root { chosen: Vec::new(), score: 0.0 }];
+        let mut depth = 0usize;
+        while frontier.len() < target && depth < order.len() && !frontier.is_empty() {
+            let mut next = Vec::with_capacity(frontier.len() * 2);
+            for node in frontier.drain(..) {
+                if node.chosen.len() == inst.n {
+                    next.push(node);
+                    continue;
+                }
+                if order.len() - depth < inst.n - node.chosen.len() {
+                    continue; // cannot be filled any more
+                }
+                let cand = order[depth];
+                let mut inc_chosen = node.chosen.clone();
+                inc_chosen.push(cand);
+                if evaluate_view(&inst, &inc_chosen, ws).is_some() {
+                    next.push(Root {
+                        chosen: inc_chosen,
+                        score: node.score + sorted_scores[depth],
+                    });
+                }
+                next.push(Root { chosen: node.chosen, score: node.score });
+            }
+            frontier = next;
+            depth += 1;
+        }
+        // rem at `depth` is a pure function of the depth (both branches
+        // remove the candidate from the undecided set) — the SAME
+        // subtraction sequence the serial DFS performs along its path
+        let mut rem_at = rem_root.clone();
+        for pos in 0..depth {
+            let p = inst.clients[order[pos]].domain;
+            rem_at[p] -= sorted_scores[pos].max(0.0);
+        }
+        let results: Vec<Option<(f64, Vec<usize>, Vec<f64>)>> =
+            par::par_ranges(frontier.len(), 1, |a, b| {
+                let mut local = BnbLocal {
+                    rem_score_sum: rem_at.clone(),
+                    ws: AllocWorkspace::default(),
+                    best: None,
+                };
+                let mut chosen = Vec::new();
+                for node in &frontier[a..b] {
+                    chosen.clear();
+                    chosen.extend_from_slice(&node.chosen);
+                    // save/restore-exact: rem returns to rem_at after
+                    // every subtree, so one vector serves all nodes
+                    bnb_dfs(&shared, &mut local, &mut chosen, node.score, depth);
+                }
+                local.best
+            });
+        candidates.extend(results.into_iter().flatten());
+    }
+
+    let nodes = shared.nodes.load(Ordering::Relaxed);
+    let complete = !shared.exhausted.load(Ordering::Relaxed);
+    // deterministic final reduction (canonical total preference): the
+    // greedy seed participates like any other candidate
+    let mut best: Option<(f64, Vec<usize>, Vec<f64>)> = if seed_full {
+        Some((seed.objective, seed.chosen.clone(), seed.totals.clone()))
+    } else {
+        None
+    };
+    for (obj, chosen, totals) in candidates {
+        let is_better = better_solution(
+            obj,
+            &chosen,
+            best.as_ref().map(|(o, c, _)| (*o, c.as_slice())),
+        );
+        if is_better {
+            best = Some((obj, chosen, totals));
+        }
+    }
+    match best {
+        Some((objective, chosen, totals)) => {
+            (SelSolution { chosen, objective, totals, optimal: complete }, nodes)
+        }
+        None => {
+            // No feasible size-n selection exists: return the (possibly
+            // shorter) greedy solution, marked exact if search completed.
+            let mut s = seed;
+            s.optimal = complete;
+            (s, nodes)
+        }
     }
 }
 
@@ -971,6 +1160,71 @@ mod tests {
             }
         }
         assert!(compared >= 10, "too few feasible instances: {compared}");
+    }
+
+    #[test]
+    fn parallel_bnb_equals_serial_bnb_exactly() {
+        // the tentpole invariant for the exact solver: forced-parallel
+        // and forced-serial searches return the IDENTICAL selection,
+        // objective (bitwise) and totals on completed searches — the
+        // canonical (objective, lex) reduction is schedule-independent
+        forall(25, |rng| {
+            let seed = rng.next_u64();
+            let c_n = rng.range(6, 16);
+            let p_n = rng.range(1, 5);
+            let t_n = rng.range(2, 7);
+            let n = rng.range(1, 5.min(c_n));
+            let inst = random_instance(seed, c_n, p_n, t_n, n);
+            let vs = inst.view_storage();
+            let mut ws1 = AllocWorkspace::default();
+            let mut ws2 = AllocWorkspace::default();
+            let (ser, _) =
+                branch_and_bound_view_forced(vs.view(), 4_000_000, &mut ws1, false);
+            let (par_s, _) =
+                branch_and_bound_view_forced(vs.view(), 4_000_000, &mut ws2, true);
+            assert!(ser.optimal && par_s.optimal, "seed {seed}: budget exhausted");
+            assert_eq!(ser.chosen, par_s.chosen, "seed {seed}: chosen diverged");
+            assert_eq!(
+                ser.objective.to_bits(),
+                par_s.objective.to_bits(),
+                "seed {seed}: objective diverged ({} vs {})",
+                ser.objective,
+                par_s.objective
+            );
+            assert_eq!(ser.totals.len(), par_s.totals.len(), "seed {seed}");
+            for (a, b) in ser.totals.iter().zip(&par_s.totals) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: totals diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_bnb_still_matches_enumeration() {
+        // the parallel path is exact, not just self-consistent
+        for seed in 200..215u64 {
+            let inst = random_instance(seed, 8, 3, 4, 3);
+            let exact = enumerate(&inst);
+            let vs = inst.view_storage();
+            let mut ws = AllocWorkspace::default();
+            let (bnb, _) =
+                branch_and_bound_view_forced(vs.view(), 1_000_000, &mut ws, true);
+            match exact {
+                Some(e) => {
+                    assert!(bnb.optimal, "seed {seed}: budget exhausted");
+                    assert_eq!(bnb.chosen.len(), inst.n, "seed {seed}");
+                    assert!(
+                        (e.objective - bnb.objective).abs()
+                            < 1e-6 * (1.0 + e.objective),
+                        "seed {seed}: enum={} bnb={}",
+                        e.objective,
+                        bnb.objective
+                    );
+                }
+                None => {
+                    assert!(bnb.chosen.len() < inst.n, "seed {seed}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,40 @@
 
 use std::thread;
 
+/// The ONE table of fan-out thresholds for every parallel stage in the
+/// crate (satellite: these used to be duplicated per module —
+/// `PAR_MIN_ROWS` in `selection::{ring,arena}`, `PAR_MIN_*` in
+/// `solver::mip` — and could drift apart silently). Below a threshold
+/// the stage runs inline; results are bit-identical either way, so these
+/// are pure performance knobs: thread spawn/join costs a few µs, which
+/// only pays off once a stage has enough independent work.
+pub mod thresholds {
+    /// Rows below which in-place row fills stay single-threaded (ring
+    /// rebuild/advance/catch-up, arena reachability fills). One row is a
+    /// handful of float writes, so fan-out needs thousands of them.
+    pub const MIN_FILL_ROWS: usize = 2048;
+    /// Candidate counts below which per-client map stages stay serial
+    /// (standalone scoring, swap-candidate scans).
+    pub const MIN_CLIENTS: usize = 4096;
+    /// Domain-group counts below which per-domain evaluation stays
+    /// serial (groups are tiny flow solves; see `MIN_EVAL_WORK`).
+    pub const MIN_DOMAIN_GROUPS: usize = 16;
+    /// `chosen·steps` product below which `evaluate_view` stays serial —
+    /// branch-and-bound calls it on every node, where spawn/join would
+    /// dwarf a handful of tiny flow solves.
+    pub const MIN_EVAL_WORK: usize = 8192;
+    /// Candidate count at which the exact solver fans independent root
+    /// subtrees out across workers (small instances finish faster than
+    /// the frontier split costs).
+    pub const BNB_MIN_CLIENTS: usize = 64;
+    /// Engine round execution: minimum domains spanned by a round before
+    /// the per-domain grant computation fans out…
+    pub const ROUND_DOMAINS: usize = 8;
+    /// …AND minimum selected clients (both gates must pass; water-filling
+    /// a few slots is cheaper than a spawn).
+    pub const ROUND_SLOTS: usize = 256;
+}
+
 /// Number of worker threads to fan out to (>= 1).
 pub fn threads() -> usize {
     thread::available_parallelism().map(|t| t.get()).unwrap_or(1)

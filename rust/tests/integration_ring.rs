@@ -9,6 +9,7 @@
 use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
 use fedzero::energy::PowerDomain;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::incr::IncrSelState;
 use fedzero::selection::ring::{FcBuffers, ForecastRing, SeriesSource};
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
 use fedzero::trace::forecast::SeriesForecaster;
@@ -111,6 +112,7 @@ fn random_scenario(rng: &mut Rng, realistic: bool, dark: bool) -> Scenario {
 fn select_with<'a>(
     s: &'a Scenario,
     fc: fedzero::selection::ring::FcView<'a>,
+    incr: Option<&'a IncrSelState>,
     now: usize,
     n: usize,
     fz: &mut FedZero,
@@ -123,6 +125,7 @@ fn select_with<'a>(
         states: &s.states,
         domains: &s.domains,
         fc,
+        incr,
         spare_now: &s.spare_now,
     };
     let mut rng = Rng::new(42);
@@ -135,18 +138,27 @@ fn check_scenario(rng: &mut Rng, realistic: bool, dark: bool) {
     let steps = rng.range(5, 25);
     let mut ring = ForecastRing::new();
     ring.rebuild(&s.src, 0, s.d_max);
+    let mut incr = IncrSelState::new();
+    incr.rebuild(&s.clients, &s.states, ring.view());
     for step in 0..steps {
         if step > 0 {
-            ring.advance(&s.src);
+            incr.advance(&mut ring, &s.src);
         }
         let fresh = FcBuffers::from_source(&s.src, 0, step, s.d_max);
         let mut fz_ring = FedZero::new(SolverKind::Greedy);
+        let mut fz_incr = FedZero::new(SolverKind::Greedy);
         let mut fz_fresh = FedZero::new(SolverKind::Greedy);
-        let d_ring = select_with(&s, ring.view(), step, n, &mut fz_ring);
-        let d_fresh = select_with(&s, fresh.view(), step, n, &mut fz_fresh);
+        let d_ring = select_with(&s, ring.view(), None, step, n, &mut fz_ring);
+        let d_incr = select_with(&s, ring.view(), Some(&incr), step, n, &mut fz_incr);
+        let d_fresh = select_with(&s, fresh.view(), None, step, n, &mut fz_fresh);
         assert_eq!(
             d_ring, d_fresh,
             "decision diverged at step {step} (realistic={realistic} dark={dark})"
+        );
+        assert_eq!(
+            d_incr, d_fresh,
+            "incremental-state decision diverged at step {step} \
+             (realistic={realistic} dark={dark})"
         );
         if dark {
             assert!(d_ring.wait, "selected a round with zero energy");
@@ -178,16 +190,21 @@ fn exact_solver_agrees_over_ring_and_fresh_windows() {
         let n = rng.range(1, 4);
         let mut ring = ForecastRing::new();
         ring.rebuild(&s.src, 0, s.d_max);
+        let mut incr = IncrSelState::new();
+        incr.rebuild(&s.clients, &s.states, ring.view());
         for step in 0..6 {
             if step > 0 {
-                ring.advance(&s.src);
+                incr.advance(&mut ring, &s.src);
             }
             let fresh = FcBuffers::from_source(&s.src, 0, step, s.d_max);
             let mut fz_ring = FedZero::new(SolverKind::Exact);
+            let mut fz_incr = FedZero::new(SolverKind::Exact);
             let mut fz_fresh = FedZero::new(SolverKind::Exact);
-            let d_ring = select_with(&s, ring.view(), step, n, &mut fz_ring);
-            let d_fresh = select_with(&s, fresh.view(), step, n, &mut fz_fresh);
+            let d_ring = select_with(&s, ring.view(), None, step, n, &mut fz_ring);
+            let d_incr = select_with(&s, ring.view(), Some(&incr), step, n, &mut fz_incr);
+            let d_fresh = select_with(&s, fresh.view(), None, step, n, &mut fz_fresh);
             assert_eq!(d_ring, d_fresh, "exact-solver divergence at {step}");
+            assert_eq!(d_incr, d_fresh, "exact-solver incr divergence at {step}");
         }
     });
 }

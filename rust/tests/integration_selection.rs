@@ -89,6 +89,7 @@ fn ctx<'a>(s: &'a Scenario, n: usize) -> SelectionContext<'a> {
         states: &s.states,
         domains: &s.domains,
         fc: s.fc.view(),
+        incr: None,
         spare_now: &s.spare_now,
     }
 }
