@@ -3,6 +3,10 @@
 # regressions fail loudly.
 #
 #   ./ci.sh          tier-1 (build + tests) + quick bench smokes
+#   ./ci.sh --quick  tier-1 + the 2-cell campaign smoke only (fastest
+#                    gate: report-schema validation, worker-count
+#                    determinism, and the builtin-spec-vs-legacy
+#                    Scenario::Global diff — exit 1 on any divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
 #
 # The selection bench writes rust/BENCH_selection.json (median ns per
@@ -12,7 +16,11 @@
 # idle/round sim step, train-phase ns/round serial vs sharded, ring
 # footprint) and exits non-zero if the incrementally-advanced forecast
 # ring diverges from fresh-built windows OR sharded training diverges
-# from serial.
+# from serial. The campaign bench writes rust/BENCH_campaign.json
+# (cells/sec serial vs parallel drain, trace-memoization hit rate) and
+# exits non-zero if the report schema is invalid, the report is not
+# byte-identical across worker counts, or the declarative builtin spec
+# diverges from the legacy config::build path.
 #
 # When a committed baseline (BENCH_<name>.baseline.json) exists next to a
 # freshly written BENCH_<name>.json, the two are compared metric by
@@ -24,6 +32,7 @@
 #   1. ./ci.sh                  # green build/tests + fresh quick-mode JSON
 #   2. cp rust/BENCH_selection.json rust/BENCH_selection.baseline.json
 #      cp rust/BENCH_endtoend.json  rust/BENCH_endtoend.baseline.json
+#      cp rust/BENCH_campaign.json  rust/BENCH_campaign.baseline.json
 #   3. git add rust/BENCH_*.baseline.json && git commit
 # Baselines are mode-tagged: a quick-mode baseline only gates quick-mode
 # runs (the comparator skips mismatched modes), so arm with the mode CI
@@ -120,6 +129,15 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== campaign smoke (--quick: schema + determinism + legacy gates) =="
+cargo bench --bench campaign -- --quick
+compare_bench BENCH_campaign.json BENCH_campaign.baseline.json
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "CI OK (quick)"
+    exit 0
+fi
 
 echo "== selection bench smoke (--quick) =="
 cargo bench --bench selection -- --quick

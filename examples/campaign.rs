@@ -1,0 +1,72 @@
+//! Declarative campaign quickstart: build a sweep in code (custom solar
+//! sites × Dirichlet α × battery × churn), drain it across workers, and
+//! print the deterministic report — the programmatic twin of
+//! `fedzero campaign <spec.json>`.
+//!
+//!   cargo run --release --example campaign
+
+use anyhow::Result;
+use fedzero::coordinator::StrategyKind;
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::scenario::{ChurnSpec, EnvSpec, SiteSet};
+use fedzero::trace::solar::Site;
+use fedzero::util::par;
+
+fn main() -> Result<()> {
+    // an environment the paper never shipped: two hemispheres, one
+    // cloudless desert site, asymmetric capacity
+    let islands = EnvSpec {
+        sites: SiteSet::Custom(vec![
+            Site::new("Reykjavik", 64.1, 0.0, 0.55),
+            Site::new("Atacama", -24.5, -4.0, 0.05),
+            Site::new("Nairobi", -1.3, 3.0, 0.3),
+        ]),
+        capacity_w: vec![600.0, 1200.0, 800.0],
+        ..EnvSpec::global()
+    };
+
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "islands-robustness".into();
+    spec.n_clients = 24;
+    spec.n_per_round = 5;
+    spec.dataset_scale = 0.2;
+    spec.target_accuracy = 0.4;
+    spec.envs = vec![("global".into(), EnvSpec::global()), ("islands".into(), islands)];
+    spec.alphas = vec![0.1, 0.5];
+    spec.battery_axis = vec![0.0, 400.0];
+    spec.churn_axis = vec![
+        None,
+        Some(ChurnSpec { outages_per_day: 2.0, mean_outage_min: 60.0 }),
+    ];
+    spec.strategies = vec![StrategyKind::FedZero, StrategyKind::Random];
+
+    let workers = par::threads();
+    let cells = spec.expand().len();
+    println!("expanding {cells} cells across {workers} workers...\n");
+    let run = run_campaign(&spec, workers)?;
+
+    println!(
+        "{:<56} {:>6} {:>9} {:>9} {:>8} {:>7}",
+        "cell", "rounds", "best acc", "kWh", "waste", "jain"
+    );
+    for r in &run.results {
+        println!(
+            "{:<56} {:>6} {:>8.1}% {:>9.2} {:>8.2} {:>7.3}",
+            r.cell.label,
+            r.rounds,
+            r.best_accuracy * 100.0,
+            r.energy_kwh,
+            r.wasted_kwh,
+            r.fairness_jain,
+        );
+    }
+    println!(
+        "\n{cells} cells in {:.1}s — memoization saved {}/{} env builds",
+        run.wall_s,
+        run.memo_hits,
+        run.memo_hits + run.memo_misses,
+    );
+    std::fs::write("CAMPAIGN_report.json", run.report_json().to_string_pretty())?;
+    println!("wrote CAMPAIGN_report.json (byte-identical for any worker count)");
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Campaign-runner benches + CI gates.
+//!
+//! Measures cells/second for a serial vs parallel drain of a campaign
+//! grid (and the trace-memoization hit rate that makes the parallel
+//! drain worthwhile), and gates three correctness properties:
+//!
+//! 1. **schema** — the campaign report parses and carries the required
+//!    keys for every cell;
+//! 2. **determinism** — the report is byte-identical at 1 vs 2 workers;
+//! 3. **legacy equivalence** — the builtin global spec routed through
+//!    the declarative scenario engine reproduces the legacy
+//!    `config::build` path's `MetricsLog` exactly.
+//!
+//! Any gate failure exits non-zero (wired into ci.sh like the ring and
+//! train divergence gates). Results go to rust/BENCH_campaign.json.
+//!
+//! Flags: --quick  CI smoke (2-cell campaign)
+
+use std::collections::BTreeMap;
+
+use fedzero::client::ModelKind;
+use fedzero::config::{build, Scenario, ScenarioConfig};
+use fedzero::coordinator::{build_dataset, run_built_mock, run_experiment, ExperimentSpec, StrategyKind};
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::scenario::EnvSpec;
+use fedzero::util::json::Json;
+use fedzero::util::par;
+
+/// The bench grid: the 2-cell smoke campaign in quick mode, a 16-cell
+/// two-scenario sweep otherwise.
+fn bench_spec(quick: bool) -> CampaignSpec {
+    let mut spec = CampaignSpec::smoke();
+    if !quick {
+        spec.name = "bench-grid".into();
+        spec.envs = vec![
+            ("global".into(), EnvSpec::global()),
+            ("colocated".into(), EnvSpec::colocated()),
+        ];
+        spec.alphas = vec![0.1, 0.5];
+        spec.seeds = vec![0, 1];
+        spec.strategies = vec![StrategyKind::FedZero, StrategyKind::Random];
+    }
+    spec
+}
+
+/// Gate 1: required report keys, cell count, parseability.
+fn validate_schema(report: &Json, expect_cells: usize) -> Result<(), String> {
+    let text = report.to_string_pretty();
+    let parsed = Json::parse(&text).map_err(|e| format!("report does not re-parse: {e}"))?;
+    for key in ["campaign", "preset", "days", "clients", "target_accuracy", "n_cells", "cells"] {
+        if parsed.get(key).is_none() {
+            return Err(format!("report missing key {key:?}"));
+        }
+    }
+    if parsed.get("n_cells").and_then(|v| v.as_usize()) != Some(expect_cells) {
+        return Err("n_cells mismatch".into());
+    }
+    let cells = parsed
+        .get("cells")
+        .and_then(|v| v.as_arr())
+        .ok_or("cells is not an array")?;
+    if cells.len() != expect_cells {
+        return Err(format!("expected {expect_cells} cells, got {}", cells.len()));
+    }
+    for (i, cell) in cells.iter().enumerate() {
+        for key in [
+            "cell", "label", "env", "alpha", "energy_error", "load_error", "battery_wh",
+            "churn", "seed", "strategy", "rounds", "best_accuracy", "time_to_target_days",
+            "energy_to_target_kwh", "energy_kwh", "wasted_kwh", "mean_round_min",
+            "fairness_domain_std", "fairness_jain", "train_steps",
+        ] {
+            if cell.get(key).is_none() {
+                return Err(format!("cell {i} missing key {key:?}"));
+            }
+        }
+        if cell.get("cell").and_then(|v| v.as_usize()) != Some(i) {
+            return Err(format!("cell {i} has wrong index"));
+        }
+    }
+    Ok(())
+}
+
+/// Gate 3: the declarative builtin-global path vs the legacy
+/// enum-driven `config::build` path, `MetricsLog`-equal.
+fn legacy_divergence() -> usize {
+    let mut mismatches = 0;
+    for seed in [0u64, 11] {
+        let spec = ExperimentSpec {
+            use_mock: true,
+            days: 1,
+            n_clients: 20,
+            n_per_round: 4,
+            d_max: 30,
+            scenario: Scenario::Global,
+            preset: "tiny".into(),
+            dataset_scale: 0.2,
+            seed,
+            ..Default::default()
+        };
+        let fresh = match run_experiment(&spec) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("spec-driven run failed (seed {seed}): {e:#}");
+                mismatches += 1;
+                continue;
+            }
+        };
+        let (_, partition) = build_dataset(&spec, 16);
+        let legacy_built = build(
+            &ScenarioConfig {
+                scenario: Scenario::Global,
+                n_clients: spec.n_clients,
+                days: spec.days,
+                step_minutes: 1.0,
+                domain_capacity_w: 800.0,
+                energy_error: spec.energy_error,
+                load_error: spec.load_error,
+                unlimited_domain: None,
+                seed,
+            },
+            ModelKind::from_preset(&spec.preset),
+            10,
+            &partition,
+        );
+        let legacy = match run_built_mock(&spec, legacy_built) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("legacy run failed (seed {seed}): {e:#}");
+                mismatches += 1;
+                continue;
+            }
+        };
+        if fresh.metrics != legacy.metrics || fresh.steps_executed != legacy.steps_executed {
+            eprintln!(
+                "LEGACY DIVERGENCE (seed {seed}): spec-driven builtin != config::build \
+                 ({} vs {} rounds, {} vs {} steps)",
+                fresh.metrics.rounds.len(),
+                legacy.metrics.rounds.len(),
+                fresh.steps_executed,
+                legacy.steps_executed,
+            );
+            mismatches += 1;
+        }
+    }
+    mismatches
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mode = if quick { "quick" } else { "default" };
+    println!("== campaign benches [{mode}] ==");
+
+    let spec = bench_spec(quick);
+    let n_cells = spec.expand().len();
+
+    // --- serial vs parallel drain -----------------------------------------
+    let serial = run_campaign(&spec, 1).expect("serial campaign failed");
+    let cells_per_s_serial = n_cells as f64 / serial.wall_s.max(1e-9);
+    let workers = par::threads().max(2);
+    let parallel = run_campaign(&spec, workers).expect("parallel campaign failed");
+    let cells_per_s_parallel = n_cells as f64 / parallel.wall_s.max(1e-9);
+    println!(
+        "campaign/{n_cells}cells serial   {:>8.2} cells/s ({:.2}s)",
+        cells_per_s_serial, serial.wall_s
+    );
+    println!(
+        "campaign/{n_cells}cells x{workers:<2}      {:>8.2} cells/s ({:.2}s, speedup {:.2}x)",
+        cells_per_s_parallel,
+        parallel.wall_s,
+        cells_per_s_parallel / cells_per_s_serial.max(1e-9)
+    );
+    println!(
+        "trace memoization: serial {}/{} hits ({:.0}%), parallel {}/{} ({:.0}%)",
+        serial.memo_hits,
+        serial.memo_hits + serial.memo_misses,
+        serial.memo_hit_rate() * 100.0,
+        parallel.memo_hits,
+        parallel.memo_hits + parallel.memo_misses,
+        parallel.memo_hit_rate() * 100.0,
+    );
+
+    // --- gates -------------------------------------------------------------
+    let report = serial.report_json();
+    let schema_err = validate_schema(&report, n_cells).err();
+    if let Some(e) = &schema_err {
+        eprintln!("SCHEMA GATE FAILED: {e}");
+    } else {
+        println!("schema gate: ok ({n_cells} cells validated)");
+    }
+
+    let determinism_mismatch =
+        (report.to_string_pretty() != parallel.report_json().to_string_pretty()) as usize;
+    if determinism_mismatch > 0 {
+        eprintln!("DETERMINISM GATE FAILED: serial vs {workers}-worker reports differ");
+    } else {
+        println!("determinism gate: ok (serial == {workers}-worker report, byte for byte)");
+    }
+
+    let legacy_mismatches = legacy_divergence();
+    if legacy_mismatches > 0 {
+        eprintln!("LEGACY GATE FAILED: {legacy_mismatches} mismatches");
+    } else {
+        println!("legacy-equivalence gate: ok (builtin spec == config::build path)");
+    }
+
+    // --- machine-readable results ------------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("campaign".into()));
+    root.insert("mode".into(), Json::Str(mode.into()));
+    root.insert("cells".into(), Json::Num(n_cells as f64));
+    root.insert("workers".into(), Json::Num(workers as f64));
+    root.insert("cells_per_s_serial".into(), Json::Num(cells_per_s_serial));
+    root.insert("cells_per_s_parallel".into(), Json::Num(cells_per_s_parallel));
+    root.insert(
+        "speedup".into(),
+        Json::Num(cells_per_s_parallel / cells_per_s_serial.max(1e-9)),
+    );
+    root.insert("memo_hit_rate".into(), Json::Num(serial.memo_hit_rate()));
+    root.insert(
+        "schema_failures".into(),
+        Json::Num(schema_err.is_some() as usize as f64),
+    );
+    root.insert(
+        "determinism_mismatch".into(),
+        Json::Num(determinism_mismatch as f64),
+    );
+    root.insert("legacy_divergence".into(), Json::Num(legacy_mismatches as f64));
+    let out = Json::Obj(root).to_string_pretty();
+    let path = "BENCH_campaign.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if schema_err.is_some() || determinism_mismatch > 0 || legacy_mismatches > 0 {
+        eprintln!("campaign gates FAILED");
+        std::process::exit(1);
+    }
+    println!("== done ==");
+}

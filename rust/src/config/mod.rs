@@ -72,7 +72,11 @@ impl Default for ScenarioConfig {
     }
 }
 
-/// Everything the simulator needs about the environment.
+/// Everything the simulator needs about the environment. `Clone` so the
+/// campaign runner (`crate::scenario::campaign`) can memoize one build
+/// per (environment, seed) and hand cells cheap copies instead of
+/// regenerating the traces.
+#[derive(Clone)]
 pub struct BuiltScenario {
     pub clients: Vec<ClientInfo>,
     pub domains: Vec<PowerDomain>,
@@ -80,6 +84,12 @@ pub struct BuiltScenario {
     pub load_actual: Vec<Vec<f64>>,
     /// spare-capacity forecasters (batches/step series)
     pub load_fc: Vec<SeriesForecaster>,
+    /// per-client outage windows `[start, end)` in steps (empty inner
+    /// vec = always online) from the scenario churn model; the engine
+    /// grants an offline client neither energy nor batches. The legacy
+    /// paper scenarios have no churn, so [`build`] leaves every client
+    /// fully available.
+    pub outages: Vec<Vec<(usize, usize)>>,
     pub horizon: usize,
 }
 
@@ -91,6 +101,15 @@ impl BuiltScenario {
 
 /// Build clients/domains/traces. `partition` provides each client's data
 /// shard (and thereby m_min/m_max); `model` picks the Table-2 column.
+///
+/// This is the LEGACY enum-driven path, retained verbatim as the
+/// bit-equivalence oracle for the declarative scenario engine: the
+/// builtin specs of [`crate::scenario`] must reproduce this function's
+/// output exactly — same RNG call sequence, same float arithmetic —
+/// which `scenario::tests` and `benches/campaign.rs` gate on. The
+/// coordinator now routes every experiment through
+/// [`crate::scenario::build_env`]; do not change this function and the
+/// spec-driven builder independently.
 pub fn build(
     cfg: &ScenarioConfig,
     model: ModelKind,
@@ -138,7 +157,7 @@ pub fn build(
             };
             PowerDomain::new(
                 i,
-                site.name,
+                &site.name,
                 cfg.domain_capacity_w,
                 power,
                 forecaster,
@@ -191,7 +210,8 @@ pub fn build(
         load_fc.push(fc);
     }
 
-    BuiltScenario { clients, domains, load_actual, load_fc, horizon }
+    let outages = vec![Vec::new(); cfg.n_clients];
+    BuiltScenario { clients, domains, load_actual, load_fc, outages, horizon }
 }
 
 #[cfg(test)]

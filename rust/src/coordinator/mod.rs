@@ -9,9 +9,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::client::ModelKind;
-use crate::config::{build, BuiltScenario, Scenario, ScenarioConfig};
+use crate::config::{BuiltScenario, Scenario};
 use crate::data::{dirichlet_partition, imbalanced_partition, Partition, SynthConfig, SynthDataset};
 use crate::fl::{MockBackend, TrainBackend, XlaBackend};
+use crate::scenario::{build_env, EnvConfig, EnvSpec};
 use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
 use crate::selection::baselines::{Baseline, UpperBound};
@@ -105,11 +106,23 @@ impl StrategyKind {
 }
 
 /// One experiment = scenario × dataset/model × strategy (× error model).
+///
+/// Environment construction is spec-driven ([`crate::scenario`]): the
+/// `scenario` enum picks a builtin [`EnvSpec`] (bit-identical to the
+/// legacy `config::build` output), and `env` overrides it with an
+/// arbitrary declarative environment — custom sites, batteries, device
+/// mixes, churn — without touching the rest of the pipeline.
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
     /// model/dataset preset: tiny | vision | imagenet | seq | speech
     pub preset: String,
     pub scenario: Scenario,
+    /// declarative environment override; None = builtin spec for
+    /// `scenario`
+    pub env: Option<EnvSpec>,
+    /// Dirichlet α override for label-skew partitions (None = the
+    /// preset's paper value) — the campaign runner's non-IID sweep axis
+    pub partition_alpha: Option<f64>,
     pub strategy: StrategyKind,
     pub days: usize,
     pub n_clients: usize,
@@ -136,6 +149,8 @@ impl Default for ExperimentSpec {
         ExperimentSpec {
             preset: "tiny".into(),
             scenario: Scenario::Global,
+            env: None,
+            partition_alpha: None,
             strategy: StrategyKind::FedZero,
             days: 7,
             n_clients: 100,
@@ -203,7 +218,8 @@ pub fn build_dataset(
     let mut rng = Rng::new(spec.seed ^ 0x9A97);
     let partition = match part_kind {
         "dirichlet" => {
-            dirichlet_partition(&ds.train_y, spec.n_clients, 0.5, &mut rng)
+            let alpha = spec.partition_alpha.unwrap_or(0.5);
+            dirichlet_partition(&ds.train_y, spec.n_clients, alpha, &mut rng)
         }
         "imbalanced" => {
             // paper's Shakespeare shape (min 730 / max 27950) at our scale
@@ -213,20 +229,25 @@ pub fn build_dataset(
         }
         "speaker" => {
             // speakers assigned randomly -> milder skew
-            dirichlet_partition(&ds.train_y, spec.n_clients, 2.0, &mut rng)
+            let alpha = spec.partition_alpha.unwrap_or(2.0);
+            dirichlet_partition(&ds.train_y, spec.n_clients, alpha, &mut rng)
         }
         other => panic!("unknown partition kind {other}"),
     };
     (ds, partition)
 }
 
-fn scenario_cfg(spec: &ExperimentSpec) -> ScenarioConfig {
-    ScenarioConfig {
-        scenario: spec.scenario,
+/// The experiment's environment spec: an explicit override, or the
+/// builtin spec matching the legacy scenario enum.
+fn env_spec(spec: &ExperimentSpec) -> EnvSpec {
+    spec.env.clone().unwrap_or_else(|| EnvSpec::builtin(spec.scenario))
+}
+
+fn env_cfg(spec: &ExperimentSpec) -> EnvConfig {
+    EnvConfig {
         n_clients: spec.n_clients,
         days: spec.days,
         step_minutes: 1.0,
-        domain_capacity_w: 800.0,
         energy_error: spec.energy_error,
         load_error: spec.load_error,
         unlimited_domain: spec.unlimited_domain,
@@ -261,6 +282,7 @@ fn run_with_backend<B: TrainBackend>(
         backend,
         strategy.as_mut(),
     );
+    sim.outages = built.outages;
     sim.run()?;
     let wallclock_s = t0.elapsed().as_secs_f64();
     let select_time_ms = sim.select_time.as_secs_f64() * 1e3;
@@ -286,20 +308,50 @@ fn run_with_backend<B: TrainBackend>(
     })
 }
 
-/// Run one experiment end to end.
+/// Run a mock-backed simulation over an already-built environment —
+/// the campaign runner's entry point (it memoizes [`BuiltScenario`]s
+/// across cells) and the mock arm of [`run_experiment`]. The backend
+/// wiring here defines the deterministic mock fixture: input dim 16,
+/// batch 10, noise 0.3, seeded by the spec.
+pub fn run_built_mock(spec: &ExperimentSpec, built: BuiltScenario) -> Result<RunReport> {
+    let backend = MockBackend::new(spec.n_clients, 16, 0.3, spec.seed);
+    run_with_backend(spec, built, &backend)
+}
+
+/// Build the mock fixture's environment for a spec (partition at input
+/// dim 16, batch size 10, spec-driven env). ONE definition shared by
+/// [`run_experiment`]'s mock arm and the campaign runner, so the two
+/// cannot drift apart on the fixture constants.
+pub fn build_mock_env(spec: &ExperimentSpec) -> Result<BuiltScenario> {
+    let model = ModelKind::from_preset(&spec.preset);
+    let (_, partition) = build_dataset(spec, 16);
+    build_env(&env_spec(spec), &env_cfg(spec), model, 10, &partition)
+}
+
+/// Does this preset's partition scheme read `partition_alpha`? The
+/// Shakespeare-shaped "seq" preset uses the log-normal imbalanced
+/// partition, which has no α knob — a campaign sweeping α over it would
+/// silently produce duplicate cells (the campaign runner rejects that).
+pub fn preset_uses_alpha(preset: &str) -> bool {
+    dataset_plan(preset).3 != "imbalanced"
+}
+
+/// Run one experiment end to end. The environment always comes from the
+/// declarative builder ([`crate::scenario::build_env`]); the builtin
+/// specs reproduce the legacy `config::build` output bit for bit
+/// (`builtin_spec_path_matches_legacy_config_build` below).
 pub fn run_experiment(spec: &ExperimentSpec) -> Result<RunReport> {
     let model = ModelKind::from_preset(&spec.preset);
     if spec.use_mock {
-        let (_, partition) = build_dataset(spec, 16);
-        let built = build(&scenario_cfg(spec), model, 10, &partition);
-        let backend = MockBackend::new(spec.n_clients, 16, 0.3, spec.seed);
-        run_with_backend(spec, built, &backend)
+        let built = build_mock_env(spec)?;
+        run_built_mock(spec, built)
     } else {
         let runtime = ModelRuntime::load(&spec.artifact_dir, &spec.preset)?;
         let (ds, partition) =
             build_dataset(spec, runtime.manifest.input_dim);
         let batch = runtime.manifest.batch_size;
-        let built = build(&scenario_cfg(spec), model, batch, &partition);
+        let built =
+            build_env(&env_spec(spec), &env_cfg(spec), model, batch, &partition)?;
         let mut backend = XlaBackend::new(
             runtime,
             ds,
@@ -379,6 +431,83 @@ mod tests {
         };
         let (_, part2) = build_dataset(&spec2, 16);
         assert!(part2.is_disjoint());
+    }
+
+    /// The ISSUE-5 acceptance gate: the spec-driven coordinator path
+    /// reproduces the pre-refactor `config::build` path bit for bit —
+    /// `MetricsLog` equality (f64 energies/losses included), same step
+    /// totals — for both paper scenarios.
+    #[test]
+    fn builtin_spec_path_matches_legacy_config_build() {
+        for scenario in [Scenario::Global, Scenario::Colocated] {
+            let spec = ExperimentSpec {
+                use_mock: true,
+                days: 1,
+                n_clients: 20,
+                n_per_round: 4,
+                d_max: 30,
+                scenario,
+                preset: "tiny".into(),
+                dataset_scale: 0.2,
+                seed: 3,
+                ..Default::default()
+            };
+            // new path: run_experiment -> scenario::build_env(builtin)
+            let fresh = run_experiment(&spec).unwrap();
+            // legacy path: the retained enum-driven builder, wired into
+            // the identical backend/sim fixture
+            let model = ModelKind::from_preset(&spec.preset);
+            let (_, partition) = build_dataset(&spec, 16);
+            let legacy_built = crate::config::build(
+                &crate::config::ScenarioConfig {
+                    scenario: spec.scenario,
+                    n_clients: spec.n_clients,
+                    days: spec.days,
+                    step_minutes: 1.0,
+                    domain_capacity_w: 800.0,
+                    energy_error: spec.energy_error,
+                    load_error: spec.load_error,
+                    unlimited_domain: spec.unlimited_domain,
+                    seed: spec.seed,
+                },
+                model,
+                10,
+                &partition,
+            );
+            let legacy = run_built_mock(&spec, legacy_built).unwrap();
+            assert_eq!(
+                fresh.metrics, legacy.metrics,
+                "{scenario:?}: spec-driven metrics diverged from legacy"
+            );
+            assert_eq!(fresh.steps_executed, legacy.steps_executed);
+            assert_eq!(fresh.client_domains, legacy.client_domains);
+        }
+    }
+
+    #[test]
+    fn env_override_reaches_the_simulation() {
+        // a custom 2-site environment flows through the whole pipeline
+        let spec = ExperimentSpec {
+            use_mock: true,
+            days: 1,
+            n_clients: 12,
+            n_per_round: 3,
+            d_max: 30,
+            preset: "tiny".into(),
+            dataset_scale: 0.2,
+            env: Some(EnvSpec {
+                sites: crate::scenario::SiteSet::Custom(vec![
+                    crate::trace::solar::Site::new("a", 10.0, 0.0, 0.1),
+                    crate::trace::solar::Site::new("b", -10.0, 12.0, 0.1),
+                ]),
+                ..EnvSpec::global()
+            }),
+            ..Default::default()
+        };
+        let report = run_experiment(&spec).unwrap();
+        assert_eq!(report.n_domains, 2);
+        assert!(report.client_domains.iter().all(|&d| d < 2));
+        assert!(!report.metrics.rounds.is_empty());
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod energy;
 pub mod fl;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod sim;
 pub mod solver;

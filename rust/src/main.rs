@@ -5,6 +5,8 @@
 //!   selftest               load artifacts, verify PJRT numerics
 //!   repro <id>             regenerate a paper table/figure:
 //!       fig1 fig2 fig4 table2 fig5 table3 fig6 table4 fig7 fig8
+//!   campaign <spec.json>   declarative multi-scenario sweep
+//!       (alias: repro campaign <spec.json>)
 //!   help
 //!
 //! Every repro harness prints the same rows/series the paper reports, at a
@@ -21,6 +23,7 @@ fn main() -> Result<()> {
         Some("train") => repro::cmd_train(&args),
         Some("selftest") => repro::cmd_selftest(&args),
         Some("repro") => repro::cmd_repro(&args),
+        Some("campaign") => repro::cmd_campaign(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -45,9 +48,14 @@ USAGE:
     fedzero selftest [--preset tiny] [--artifacts DIR]
     fedzero repro   fig1|fig2|fig4|table2|fig5|table3|fig6|table4|fig7|fig8
                     [--full] [--mock] [--preset ...] [--seed N]
+    fedzero campaign <spec.json>|smoke [--workers N] [--out FILE]
+                    declarative sweep grid (sites × α × errors × battery
+                    × churn × strategy × seed); writes a deterministic
+                    CAMPAIGN_report.json — see README for the schema
 
 Strategies: FedZero, FedZero-exact, Random, Random-1.3n, Random-fc,
             Oort, Oort-1.3n, Oort-fc, Upper-bound.
-Artifacts must exist (make artifacts) unless --mock is given."
+Artifacts must exist (make artifacts) unless --mock is given;
+campaigns always run the deterministic mock backend."
     );
 }

@@ -17,6 +17,10 @@ pub struct RoundRecord {
     pub participants: Vec<usize>,
     pub batches: f64,
     pub energy_wh: f64,
+    /// energy metered to clients whose round work was discarded
+    /// (stragglers that missed m_min) — the waste column of the
+    /// campaign report
+    pub wasted_wh: f64,
     pub mean_loss: f64,
 }
 
@@ -82,6 +86,11 @@ impl MetricsLog {
 
     pub fn total_energy_kwh(&self) -> f64 {
         self.rounds.iter().map(|r| r.energy_wh).sum::<f64>() / 1000.0
+    }
+
+    /// energy spent on work that was discarded (straggler updates)
+    pub fn total_wasted_kwh(&self) -> f64 {
+        self.rounds.iter().map(|r| r.wasted_wh).sum::<f64>() / 1000.0
     }
 
     pub fn round_durations_min(&self) -> Vec<f64> {
@@ -154,6 +163,7 @@ impl MetricsLog {
                             ("participants", num(r.participants.len() as f64)),
                             ("batches", num(r.batches)),
                             ("energy_wh", num(r.energy_wh)),
+                            ("wasted_wh", num(r.wasted_wh)),
                             ("mean_loss", num(r.mean_loss)),
                         ])
                     })
@@ -206,6 +216,7 @@ impl MetricsLog {
                 participants: vec![round % 2],
                 batches: 50.0,
                 energy_wh: 500.0,
+                wasted_wh: 60.0,
                 mean_loss: 1.0,
             });
             m.evals.push(EvalRecord {
@@ -234,6 +245,7 @@ mod tests {
         assert!((m.energy_to_accuracy(0.4).unwrap() - 1.5).abs() < 1e-12);
         assert!(m.time_to_accuracy(0.99).is_none());
         assert!((m.total_energy_kwh() - 2.0).abs() < 1e-12);
+        assert!((m.total_wasted_kwh() - 0.24).abs() < 1e-12);
     }
 
     #[test]

@@ -4,11 +4,14 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use fedzero::client::{ClientProfile, DeviceType, ModelKind};
 use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, RunReport, StrategyKind};
 use fedzero::runtime::ModelRuntime;
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::util::json::Json;
+use fedzero::util::par;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
 use fedzero::solver::mip::{greedy, SelClient, SelInstance};
@@ -163,6 +166,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
         "fig6" | "table4" => fig6_table4(args),
         "fig7" => fig7(args),
         "fig8" => fig8(args),
+        "campaign" => cmd_campaign(args),
         "all" => {
             for id in ["fig1", "fig2", "table2", "fig5", "fig6", "fig7", "fig8"] {
                 let mut a = args.clone();
@@ -470,6 +474,76 @@ fn fig7(args: &Args) -> Result<()> {
             h.sparkline()
         );
     }
+    Ok(())
+}
+
+// --- campaign: declarative multi-scenario sweeps -----------------------------
+
+/// `fedzero repro campaign <spec.json>` (also reachable as the top-level
+/// `fedzero campaign <spec.json>`): expand the spec's grid, drain the
+/// cells across workers, print a summary table, and write the
+/// deterministic machine-readable report (default CAMPAIGN_report.json;
+/// byte-identical for any --workers value).
+pub fn cmd_campaign(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .iter()
+        .find(|p| p.as_str() != "campaign")
+        .ok_or_else(|| {
+            anyhow!(
+                "campaign needs a spec file: fedzero repro campaign <spec.json> \
+                 [--workers N] [--out FILE] (builtin: pass 'smoke')"
+            )
+        })?;
+    let spec = if path.as_str() == "smoke" {
+        CampaignSpec::smoke()
+    } else {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading campaign spec {path}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        CampaignSpec::from_json(&json).with_context(|| format!("invalid spec {path}"))?
+    };
+    let workers = args.get_usize("workers", par::threads());
+    let cells = spec.expand();
+    println!(
+        "=== campaign {:?}: {} cells across {} workers ===",
+        spec.name,
+        cells.len(),
+        workers
+    );
+    let run = run_campaign(&spec, workers)?;
+    println!(
+        "\n{:<52} {:>6} {:>9} {:>10} {:>10} {:>9} {:>7}",
+        "cell", "rounds", "best acc", "tta (d)", "kWh", "waste", "jain"
+    );
+    for r in &run.results {
+        println!(
+            "{:<52} {:>6} {:>8.2}% {:>10} {:>10.2} {:>9.2} {:>7.3}",
+            r.cell.label,
+            r.rounds,
+            r.best_accuracy * 100.0,
+            r.time_to_target_days
+                .map(|d| format!("{d:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            r.energy_kwh,
+            r.wasted_kwh,
+            r.fairness_jain,
+        );
+    }
+    println!(
+        "\n{} cells in {:.1}s ({:.2} cells/s), trace memoization {}/{} hits ({:.0}%)",
+        run.results.len(),
+        run.wall_s,
+        run.results.len() as f64 / run.wall_s.max(1e-9),
+        run.memo_hits,
+        run.memo_hits + run.memo_misses,
+        run.memo_hit_rate() * 100.0,
+    );
+    let out = args.get_str("out", "CAMPAIGN_report.json");
+    std::fs::write(out, run.report_json().to_string_pretty())
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -1,0 +1,661 @@
+//! Campaign runner: expand a declarative spec grid into
+//! scenario×strategy×seed cells and drain them across workers.
+//!
+//! ## Campaign JSON schema
+//!
+//! ```json
+//! {
+//!   "name": "robustness-sweep",
+//!   "preset": "tiny", "days": 1, "clients": 20, "n_per_round": 4,
+//!   "d_max": 30, "eval_every": 5, "dataset_scale": 0.2,
+//!   "target_accuracy": 0.5,
+//!   "envs": ["global", "colocated", {"name": "islands", "sites": [...]}],
+//!   "alpha": [0.1, 0.5, 1.0],
+//!   "energy_error": ["perfect", "realistic"],
+//!   "load_error": ["realistic"],
+//!   "battery_wh_axis": [0, 500],
+//!   "churn_axis": [null, {"outages_per_day": 2, "mean_outage_min": 45}],
+//!   "strategies": ["FedZero", "Random", "Oort-1.3n"],
+//!   "seeds": [0, 1, 2]
+//! }
+//! ```
+//!
+//! Every axis is optional. `envs` entries are preset names or full
+//! [`EnvSpec`] objects (with an optional `"name"`); `battery_wh_axis`
+//! and `churn_axis`, when present, override the envs' own knobs cell by
+//! cell. The grid is the cartesian product expanded in the FIXED nested
+//! order env → alpha → energy_error → load_error → battery → churn →
+//! seed → strategy, so cell indices (and the report) are stable across
+//! machines and worker counts.
+//!
+//! ## Determinism
+//!
+//! Cells are drained by a work-stealing pool of `workers` threads
+//! (1 = inline), but every cell is a pure function of (spec, cell axes)
+//! — mock backend, seeded RNG, bit-identical parallel sim paths — and
+//! results are stored by cell index, so `report_json()` is
+//! **byte-identical for any worker count** (gated by
+//! `tests/integration_campaign.rs` at 1/2/8 workers). Wall-clock
+//! numbers live only in [`CampaignRun`], never in the report.
+//!
+//! ## Trace memoization
+//!
+//! Cells differing only in strategy share one environment build: the
+//! runner keys [`crate::scenario::build_env`] outputs by
+//! (env cache key, alpha, errors, seed, run shape) and hands each cell
+//! a clone of the shared immutable build — regenerating a 7-day solar +
+//! load trace set per strategy would otherwise dominate small-model
+//! campaigns. Hit/miss counts are reported by `benches/campaign.rs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{
+    build_mock_env, preset_uses_alpha, run_built_mock, ExperimentSpec, RunReport, StrategyKind,
+};
+use crate::trace::forecast::ErrorLevel;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats;
+
+use super::churn::ChurnSpec;
+use super::spec::{error_level_name, parse_error_level, EnvSpec};
+
+/// One sweep definition: base experiment shape + grid axes.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub name: String,
+    pub preset: String,
+    pub days: usize,
+    pub n_clients: usize,
+    pub n_per_round: usize,
+    pub d_max: usize,
+    pub eval_every: usize,
+    pub dataset_scale: f64,
+    /// absolute accuracy target for the time/energy-to-accuracy columns
+    pub target_accuracy: f64,
+    // --- axes (expansion order is fixed; see the module docs) ---
+    pub envs: Vec<(String, EnvSpec)>,
+    pub alphas: Vec<f64>,
+    pub energy_errors: Vec<ErrorLevel>,
+    pub load_errors: Vec<ErrorLevel>,
+    /// empty = each env keeps its own battery knob
+    pub battery_axis: Vec<f64>,
+    /// empty = each env keeps its own churn knob; `None` entry = no churn
+    pub churn_axis: Vec<Option<ChurnSpec>>,
+    pub seeds: Vec<u64>,
+    pub strategies: Vec<StrategyKind>,
+}
+
+impl CampaignSpec {
+    /// A minimal 2-cell smoke campaign (one env, FedZero vs Random) —
+    /// the CI gate and the determinism fixtures build on this.
+    pub fn smoke() -> CampaignSpec {
+        CampaignSpec {
+            name: "smoke".into(),
+            preset: "tiny".into(),
+            days: 1,
+            n_clients: 20,
+            n_per_round: 4,
+            d_max: 30,
+            eval_every: 5,
+            dataset_scale: 0.2,
+            target_accuracy: 0.3,
+            envs: vec![("global".into(), EnvSpec::global())],
+            alphas: vec![0.5],
+            energy_errors: vec![ErrorLevel::Realistic],
+            load_errors: vec![ErrorLevel::Realistic],
+            battery_axis: Vec::new(),
+            churn_axis: Vec::new(),
+            seeds: vec![0],
+            strategies: vec![StrategyKind::FedZero, StrategyKind::Random],
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<CampaignSpec> {
+        let mut spec = CampaignSpec::smoke();
+        spec.name = j.get("name").and_then(|v| v.as_str()).unwrap_or("campaign").to_string();
+        if let Some(v) = j.get("preset").and_then(|v| v.as_str()) {
+            spec.preset = v.to_string();
+        }
+        spec.days = j.get("days").and_then(|v| v.as_usize()).unwrap_or(spec.days);
+        spec.n_clients = j.get("clients").and_then(|v| v.as_usize()).unwrap_or(spec.n_clients);
+        spec.n_per_round =
+            j.get("n_per_round").and_then(|v| v.as_usize()).unwrap_or(spec.n_per_round);
+        spec.d_max = j.get("d_max").and_then(|v| v.as_usize()).unwrap_or(spec.d_max);
+        spec.eval_every =
+            j.get("eval_every").and_then(|v| v.as_usize()).unwrap_or(spec.eval_every);
+        spec.dataset_scale =
+            j.get("dataset_scale").and_then(|v| v.as_f64()).unwrap_or(spec.dataset_scale);
+        spec.target_accuracy =
+            j.get("target_accuracy").and_then(|v| v.as_f64()).unwrap_or(spec.target_accuracy);
+        if let Some(items) = j.get("envs").and_then(|v| v.as_arr()) {
+            let mut envs = Vec::new();
+            for (k, item) in items.iter().enumerate() {
+                match item {
+                    Json::Str(name) => match name.as_str() {
+                        "global" => envs.push(("global".to_string(), EnvSpec::global())),
+                        "colocated" | "co-located" => {
+                            envs.push(("colocated".to_string(), EnvSpec::colocated()))
+                        }
+                        other => bail!("unknown env preset {other:?}"),
+                    },
+                    Json::Obj(_) => {
+                        let name = item
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .map(str::to_string)
+                            .unwrap_or_else(|| format!("env{k}"));
+                        envs.push((name, EnvSpec::from_json(item)?));
+                    }
+                    other => bail!("envs entries must be names or objects, got {other:?}"),
+                }
+            }
+            if envs.is_empty() {
+                bail!("envs must not be empty");
+            }
+            spec.envs = envs;
+        }
+        if let Some(items) = j.get("alpha").and_then(|v| v.as_arr()) {
+            spec.alphas = items
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow!("alpha entries must be numbers")))
+                .collect::<Result<_>>()?;
+        }
+        for (key, out) in [
+            ("energy_error", &mut spec.energy_errors),
+            ("load_error", &mut spec.load_errors),
+        ] {
+            if let Some(items) = j.get(key).and_then(|v| v.as_arr()) {
+                *out = items
+                    .iter()
+                    .map(|v| {
+                        parse_error_level(
+                            v.as_str().ok_or_else(|| anyhow!("{key} entries must be strings"))?,
+                        )
+                    })
+                    .collect::<Result<_>>()?;
+            }
+        }
+        if let Some(items) = j.get("battery_wh_axis").and_then(|v| v.as_arr()) {
+            spec.battery_axis = items
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow!("battery_wh_axis must be numeric")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(items) = j.get("churn_axis").and_then(|v| v.as_arr()) {
+            spec.churn_axis = items
+                .iter()
+                .map(|v| match v {
+                    Json::Null => Ok(None),
+                    other => ChurnSpec::from_json(other).map(Some),
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(items) = j.get("seeds").and_then(|v| v.as_arr()) {
+            spec.seeds = items
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|x| x as u64)
+                        .ok_or_else(|| anyhow!("seeds must be numeric"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(items) = j.get("strategies").and_then(|v| v.as_arr()) {
+            spec.strategies = items
+                .iter()
+                .map(|v| {
+                    StrategyKind::parse(
+                        v.as_str().ok_or_else(|| anyhow!("strategies must be strings"))?,
+                    )
+                })
+                .collect::<Result<_>>()?;
+        }
+        for (name, len) in [
+            ("alpha", spec.alphas.len()),
+            ("energy_error", spec.energy_errors.len()),
+            ("load_error", spec.load_errors.len()),
+            ("seeds", spec.seeds.len()),
+            ("strategies", spec.strategies.len()),
+        ] {
+            if len == 0 {
+                bail!("axis {name} must not be empty");
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Expand the grid in the documented fixed nesting order.
+    pub fn expand(&self) -> Vec<CampaignCell> {
+        let mut cells = Vec::new();
+        let batteries: Vec<Option<f64>> = if self.battery_axis.is_empty() {
+            vec![None]
+        } else {
+            self.battery_axis.iter().map(|&b| Some(b)).collect()
+        };
+        let churns: Vec<Option<Option<ChurnSpec>>> = if self.churn_axis.is_empty() {
+            vec![None]
+        } else {
+            self.churn_axis.iter().map(|c| Some(*c)).collect()
+        };
+        for (env_name, env) in &self.envs {
+            for &alpha in &self.alphas {
+                for &ee in &self.energy_errors {
+                    for &le in &self.load_errors {
+                        for battery in &batteries {
+                            for churn in &churns {
+                                for &seed in &self.seeds {
+                                    for &strategy in &self.strategies {
+                                        let mut env = env.clone();
+                                        if let Some(b) = battery {
+                                            env.battery_wh =
+                                                if *b > 0.0 { vec![*b] } else { Vec::new() };
+                                        }
+                                        if let Some(c) = churn {
+                                            env.churn = *c;
+                                        }
+                                        let label = format!(
+                                            "{env_name}/a{alpha}/ee-{}/le-{}/bat{}/churn{}/s{seed}/{}",
+                                            error_level_name(ee),
+                                            error_level_name(le),
+                                            env.battery_of(0),
+                                            env.churn.is_some() as u8,
+                                            strategy.name(),
+                                        );
+                                        cells.push(CampaignCell {
+                                            index: cells.len(),
+                                            label,
+                                            env_name: env_name.clone(),
+                                            env,
+                                            alpha,
+                                            energy_error: ee,
+                                            load_error: le,
+                                            seed,
+                                            strategy,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One fully resolved grid point.
+#[derive(Clone, Debug)]
+pub struct CampaignCell {
+    pub index: usize,
+    pub label: String,
+    pub env_name: String,
+    pub env: EnvSpec,
+    pub alpha: f64,
+    pub energy_error: ErrorLevel,
+    pub load_error: ErrorLevel,
+    pub seed: u64,
+    pub strategy: StrategyKind,
+}
+
+impl CampaignCell {
+    /// The coordinator experiment this cell runs (always mock-backed:
+    /// campaigns are simulation sweeps, not PJRT training runs).
+    pub fn experiment(&self, spec: &CampaignSpec) -> ExperimentSpec {
+        ExperimentSpec {
+            preset: spec.preset.clone(),
+            strategy: self.strategy,
+            days: spec.days,
+            n_clients: spec.n_clients,
+            n_per_round: spec.n_per_round,
+            d_max: spec.d_max,
+            seed: self.seed,
+            energy_error: self.energy_error,
+            load_error: self.load_error,
+            dataset_scale: spec.dataset_scale,
+            use_mock: true,
+            eval_every: spec.eval_every,
+            eval_subset: 0,
+            partition_alpha: Some(self.alpha),
+            env: Some(self.env.clone()),
+            ..Default::default()
+        }
+    }
+}
+
+/// Deterministic summary of one finished cell (everything that goes
+/// into the report; no wall-clock values).
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: CampaignCell,
+    pub rounds: usize,
+    pub best_accuracy: f64,
+    pub final_accuracy: f64,
+    pub time_to_target_days: Option<f64>,
+    pub energy_to_target_kwh: Option<f64>,
+    pub energy_kwh: f64,
+    pub wasted_kwh: f64,
+    pub mean_round_min: f64,
+    pub fairness_domain_std: f64,
+    pub fairness_jain: f64,
+    pub train_steps: u64,
+}
+
+impl CellResult {
+    fn from_report(cell: &CampaignCell, target: f64, report: &RunReport) -> CellResult {
+        let m = &report.metrics;
+        let shares = m.participation_shares(report.client_domains.len());
+        let (_, between_std) =
+            m.participation_by_domain(&report.client_domains, report.n_domains);
+        CellResult {
+            cell: cell.clone(),
+            rounds: m.rounds.len(),
+            best_accuracy: m.best_accuracy(),
+            final_accuracy: m.final_accuracy(),
+            time_to_target_days: m.time_to_accuracy(target),
+            energy_to_target_kwh: m.energy_to_accuracy(target),
+            energy_kwh: m.total_energy_kwh(),
+            wasted_kwh: m.total_wasted_kwh(),
+            mean_round_min: m.mean_round_duration_min(),
+            fairness_domain_std: between_std,
+            fairness_jain: stats::jain(&shares),
+            train_steps: report.steps_executed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("cell", num(self.cell.index as f64)),
+            ("label", s(&self.cell.label)),
+            ("env", s(&self.cell.env_name)),
+            ("alpha", num(self.cell.alpha)),
+            ("energy_error", s(error_level_name(self.cell.energy_error))),
+            ("load_error", s(error_level_name(self.cell.load_error))),
+            ("battery_wh", num(self.cell.env.battery_of(0))),
+            ("churn", Json::Bool(self.cell.env.churn.is_some())),
+            ("seed", num(self.cell.seed as f64)),
+            ("strategy", s(self.cell.strategy.name())),
+            ("rounds", num(self.rounds as f64)),
+            ("best_accuracy", num(self.best_accuracy)),
+            ("final_accuracy", num(self.final_accuracy)),
+            ("time_to_target_days", opt(self.time_to_target_days)),
+            ("energy_to_target_kwh", opt(self.energy_to_target_kwh)),
+            ("energy_kwh", num(self.energy_kwh)),
+            ("wasted_kwh", num(self.wasted_kwh)),
+            ("mean_round_min", num(self.mean_round_min)),
+            ("fairness_domain_std", num(self.fairness_domain_std)),
+            ("fairness_jain", num(self.fairness_jain)),
+            ("train_steps", num(self.train_steps as f64)),
+        ])
+    }
+}
+
+/// A finished campaign: ordered cell results plus runner statistics
+/// (the wall-clock and memoization numbers stay OUT of the report).
+pub struct CampaignRun {
+    pub spec: CampaignSpec,
+    pub results: Vec<CellResult>,
+    pub memo_hits: usize,
+    pub memo_misses: usize,
+    pub wall_s: f64,
+}
+
+impl CampaignRun {
+    /// The deterministic machine-readable report (CAMPAIGN_report.json).
+    pub fn report_json(&self) -> Json {
+        obj(vec![
+            ("campaign", s(&self.spec.name)),
+            ("preset", s(&self.spec.preset)),
+            ("days", num(self.spec.days as f64)),
+            ("clients", num(self.spec.n_clients as f64)),
+            ("n_per_round", num(self.spec.n_per_round as f64)),
+            ("d_max", num(self.spec.d_max as f64)),
+            ("target_accuracy", num(self.spec.target_accuracy)),
+            ("n_cells", num(self.results.len() as f64)),
+            ("cells", arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Memoization hit rate over all environment lookups.
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Shared immutable environment cache (see the module docs).
+struct EnvCache {
+    map: Mutex<HashMap<String, Arc<crate::config::BuiltScenario>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EnvCache {
+    fn new() -> Self {
+        EnvCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<crate::config::BuiltScenario>,
+    ) -> Result<Arc<crate::config::BuiltScenario>> {
+        if let Some(hit) = self.map.lock().unwrap().get(key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        // build OUTSIDE the lock: concurrent workers may race to build
+        // the same key (identical results; one insert wins), which beats
+        // serialising every trace generation behind one mutex
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build()?);
+        let mut map = self.map.lock().unwrap();
+        Ok(map.entry(key.to_string()).or_insert(built).clone())
+    }
+}
+
+/// Run one cell: (memoized) environment build through the coordinator's
+/// shared mock fixture, mock simulation, deterministic summary.
+fn run_cell(spec: &CampaignSpec, cell: &CampaignCell, cache: &EnvCache) -> Result<CellResult> {
+    let xspec = cell.experiment(spec);
+    // key over every build input except the strategy — the axis cells
+    // share builds across
+    let key = format!(
+        "{}|alpha={:?}|ee={}|le={}|seed={}|preset={}|nc={}|days={}|scale={:?}",
+        cell.env.cache_key(),
+        cell.alpha,
+        error_level_name(cell.energy_error),
+        error_level_name(cell.load_error),
+        cell.seed,
+        spec.preset,
+        spec.n_clients,
+        spec.days,
+        spec.dataset_scale,
+    );
+    let built = cache
+        .get_or_build(&key, || build_mock_env(&xspec))
+        .with_context(|| format!("cell {} ({})", cell.index, cell.label))?;
+    let report = run_built_mock(&xspec, (*built).clone())
+        .with_context(|| format!("cell {} ({})", cell.index, cell.label))?;
+    Ok(CellResult::from_report(cell, spec.target_accuracy, &report))
+}
+
+/// Expand and drain a campaign across `workers` threads (1 = inline).
+/// Results are index-ordered; see the module docs for the determinism
+/// and memoization contracts.
+pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> {
+    if spec.alphas.len() > 1 && !preset_uses_alpha(&spec.preset) {
+        bail!(
+            "preset {:?} uses an imbalanced partition with no α knob — an \
+             alpha axis of {} values would produce identical duplicate cells",
+            spec.preset,
+            spec.alphas.len()
+        );
+    }
+    let cells = spec.expand();
+    if cells.is_empty() {
+        bail!("campaign expands to zero cells");
+    }
+    let cache = EnvCache::new();
+    let t0 = Instant::now();
+    let n = cells.len();
+    let results: Vec<Option<Result<CellResult>>> = if workers <= 1 {
+        cells.iter().map(|c| Some(run_cell(spec, c, &cache))).collect()
+    } else {
+        let slots: Mutex<Vec<Option<Result<CellResult>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers.min(n) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = run_cell(spec, &cells[i], &cache);
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        slots.into_inner().unwrap()
+    };
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in results.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| anyhow!("cell {i} was never run"))??);
+    }
+    Ok(CampaignRun {
+        spec: spec.clone(),
+        results: out,
+        memo_hits: cache.hits.load(Ordering::Relaxed),
+        memo_misses: cache.misses.load(Ordering::Relaxed),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_expands_to_two_cells() {
+        let cells = CampaignSpec::smoke().expand();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].strategy, StrategyKind::FedZero);
+        assert_eq!(cells[1].strategy, StrategyKind::Random);
+        assert_eq!(cells[0].index, 0);
+        assert_ne!(cells[0].label, cells[1].label);
+    }
+
+    #[test]
+    fn grid_expansion_is_the_cartesian_product_in_order() {
+        let mut spec = CampaignSpec::smoke();
+        spec.envs = vec![
+            ("global".into(), EnvSpec::global()),
+            ("colocated".into(), EnvSpec::colocated()),
+        ];
+        spec.alphas = vec![0.1, 1.0];
+        spec.battery_axis = vec![0.0, 500.0];
+        spec.churn_axis =
+            vec![None, Some(ChurnSpec { outages_per_day: 2.0, mean_outage_min: 30.0 })];
+        spec.seeds = vec![0, 1, 2];
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3 * 2);
+        // fixed nesting: strategy is the innermost axis, env the outermost
+        assert_eq!(cells[0].strategy, StrategyKind::FedZero);
+        assert_eq!(cells[1].strategy, StrategyKind::Random);
+        assert_eq!(cells[0].env_name, "global");
+        assert_eq!(cells.last().unwrap().env_name, "colocated");
+        // battery/churn overrides resolved into the cell envs
+        assert_eq!(cells[0].env.battery_of(0), 0.0);
+        assert!(cells[0].env.churn.is_none());
+        let last = cells.last().unwrap();
+        assert_eq!(last.env.battery_of(0), 500.0);
+        assert!(last.env.churn.is_some());
+        // indices are dense and ordered
+        for (k, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, k);
+        }
+    }
+
+    #[test]
+    fn campaign_json_parses_axes() {
+        let text = r#"{
+            "name": "sweep", "preset": "tiny", "days": 1, "clients": 16,
+            "n_per_round": 3, "d_max": 20, "dataset_scale": 0.2,
+            "target_accuracy": 0.4,
+            "envs": ["global", {"name": "islands",
+                     "sites": [{"name": "a", "latitude": 10},
+                               {"name": "b", "latitude": -10}]}],
+            "alpha": [0.1, 0.5],
+            "energy_error": ["perfect", "realistic"],
+            "battery_wh_axis": [0, 250],
+            "churn_axis": [null, {"outages_per_day": 1, "mean_outage_min": 30}],
+            "strategies": ["FedZero"],
+            "seeds": [7]
+        }"#;
+        let spec = CampaignSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.envs.len(), 2);
+        assert_eq!(spec.envs[1].0, "islands");
+        assert_eq!(spec.alphas, vec![0.1, 0.5]);
+        assert_eq!(spec.energy_errors.len(), 2);
+        assert_eq!(spec.battery_axis, vec![0.0, 250.0]);
+        assert_eq!(spec.churn_axis.len(), 2);
+        assert!(spec.churn_axis[0].is_none());
+        assert_eq!(spec.expand().len(), 2 * 2 * 2 * 2 * 2);
+        // bad specs are rejected
+        assert!(CampaignSpec::from_json(&Json::parse(r#"{"strategies": []}"#).unwrap()).is_err());
+        assert!(
+            CampaignSpec::from_json(&Json::parse(r#"{"strategies": ["bogus"]}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn alpha_sweep_over_imbalanced_preset_is_rejected() {
+        // "seq" partitions log-normally (no α knob): sweeping α would
+        // run bit-identical duplicate cells and report them as distinct
+        let mut spec = CampaignSpec::smoke();
+        spec.preset = "seq".into();
+        spec.alphas = vec![0.1, 0.5, 1.0];
+        assert!(run_campaign(&spec, 1).is_err());
+        // a single (no-op) α value stays allowed
+        spec.alphas = vec![0.5];
+        assert_eq!(spec.expand().len(), 2);
+    }
+
+    #[test]
+    fn smoke_campaign_runs_and_reports() {
+        let spec = CampaignSpec::smoke();
+        let run = run_campaign(&spec, 1).unwrap();
+        assert_eq!(run.results.len(), 2);
+        for r in &run.results {
+            assert!(r.rounds > 0, "{} did no rounds", r.cell.label);
+            assert!(r.best_accuracy > 0.0);
+            assert!(r.energy_kwh > 0.0);
+            assert!(r.fairness_jain > 0.0 && r.fairness_jain <= 1.0 + 1e-12);
+        }
+        // both cells share one environment build (same env+seed, only
+        // the strategy differs)
+        assert_eq!(run.memo_misses, 1);
+        assert_eq!(run.memo_hits, 1);
+        // the report parses back and carries every cell
+        let text = run.report_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("n_cells").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

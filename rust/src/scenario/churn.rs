@@ -1,0 +1,171 @@
+//! Client-churn / outage model: seeded per-client availability windows
+//! injected into the simulation loop.
+//!
+//! The paper assumes registered clients stay reachable; at fleet scale
+//! (and in the green-FL follow-up work this repo's PAPERS.md collects)
+//! devices drop out — network loss, local jobs, users unplugging
+//! hardware. The model here is a two-state Markov process per client,
+//! discretised to simulation steps: an online client goes offline with a
+//! per-step probability calibrated from `outages_per_day`, and an
+//! offline client comes back with a per-step probability calibrated from
+//! `mean_outage_min` (geometric dwell time). Windows are materialised
+//! once at build time as sorted, disjoint `[start, end)` step ranges so
+//! the engine's per-step check is a cheap scan of a short list.
+//!
+//! Every client draws from its own `Rng` stream derived from
+//! `seed ^ CHURN_STREAM ^ hash(client)`, independent of the environment
+//! builder's RNG — adding churn to a spec cannot perturb the generated
+//! traces, and a spec without churn is bit-identical to the legacy
+//! builder (the equivalence gate in `scenario::tests` relies on this).
+//!
+//! Enforcement lives in `sim::engine::execute_round`: an offline client
+//! is excluded from the active set before power requests are built, so
+//! it is granted **no energy and no batches** for the step — the unit
+//! tests below pin that down end to end. Selection intentionally stays
+//! unaware of future outages (the server cannot forecast churn); a
+//! selected client that drops mid-round simply stalls and, if it misses
+//! `m_min`, is discarded as a straggler, feeding the campaign's waste
+//! metric.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Stream tag separating churn draws from every other consumer of the
+/// experiment seed.
+const CHURN_STREAM: u64 = 0x43_48_55_52_4E; // "CHURN"
+
+/// Churn axis of an [`super::EnvSpec`].
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnSpec {
+    /// expected outage events per client per simulated day
+    pub outages_per_day: f64,
+    /// mean outage duration in minutes (geometric dwell)
+    pub mean_outage_min: f64,
+}
+
+impl ChurnSpec {
+    pub fn from_json(j: &Json) -> Result<ChurnSpec> {
+        let spec = ChurnSpec {
+            outages_per_day: j.get("outages_per_day").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            mean_outage_min: j.get("mean_outage_min").and_then(|v| v.as_f64()).unwrap_or(60.0),
+        };
+        if spec.outages_per_day < 0.0 || spec.mean_outage_min <= 0.0 {
+            bail!(
+                "churn needs outages_per_day >= 0 and mean_outage_min > 0, got {spec:?}"
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Materialise per-client outage windows `[start, end)` over the
+    /// horizon. Deterministic in `(self, n_clients, horizon,
+    /// step_minutes, seed)`; every client uses an independent stream.
+    pub fn generate(
+        &self,
+        n_clients: usize,
+        horizon: usize,
+        step_minutes: f64,
+        seed: u64,
+    ) -> Vec<Vec<(usize, usize)>> {
+        let p_start =
+            (self.outages_per_day * step_minutes / (24.0 * 60.0)).clamp(0.0, 1.0);
+        // geometric dwell with mean = mean_outage_min (floored to one step)
+        let p_end = (step_minutes / self.mean_outage_min.max(step_minutes)).clamp(0.0, 1.0);
+        (0..n_clients)
+            .map(|i| {
+                let mut rng = Rng::new(
+                    seed ^ CHURN_STREAM ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let mut windows = Vec::new();
+                let mut t = 0usize;
+                while t < horizon {
+                    if rng.bool(p_start) {
+                        let start = t;
+                        t += 1;
+                        while t < horizon && !rng.bool(p_end) {
+                            t += 1;
+                        }
+                        windows.push((start, t.min(horizon)));
+                    }
+                    t += 1;
+                }
+                windows
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ChurnSpec {
+        ChurnSpec { outages_per_day: 3.0, mean_outage_min: 60.0 }
+    }
+
+    #[test]
+    fn windows_are_deterministic_sorted_and_disjoint() {
+        let a = spec().generate(20, 5_000, 1.0, 42);
+        let b = spec().generate(20, 5_000, 1.0, 42);
+        assert_eq!(a, b);
+        for ws in &a {
+            let mut last_end = 0usize;
+            for &(s, e) in ws {
+                assert!(s < e, "empty window ({s},{e})");
+                assert!(e <= 5_000);
+                assert!(s >= last_end, "overlapping windows");
+                last_end = e;
+            }
+        }
+        // a different seed produces different schedules
+        let c = spec().generate(20, 5_000, 1.0, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn outage_rate_and_duration_track_the_spec() {
+        // 3 outages/day × ~60 min each over many client-days
+        let horizon = 10 * 1440;
+        let ws = spec().generate(50, horizon, 1.0, 7);
+        let events: usize = ws.iter().map(|w| w.len()).sum();
+        let offline: usize =
+            ws.iter().flat_map(|w| w.iter().map(|&(s, e)| e - s)).sum();
+        let days = 50.0 * 10.0;
+        let per_day = events as f64 / days;
+        assert!((1.5..5.0).contains(&per_day), "events/day {per_day}");
+        let mean_min = offline as f64 / events.max(1) as f64;
+        assert!((30.0..100.0).contains(&mean_min), "mean outage {mean_min} min");
+    }
+
+    #[test]
+    fn zero_rate_means_no_outages() {
+        let ws = ChurnSpec { outages_per_day: 0.0, mean_outage_min: 60.0 }
+            .generate(10, 2_000, 1.0, 1);
+        assert!(ws.iter().all(|w| w.is_empty()));
+    }
+
+    #[test]
+    fn clients_are_independent_streams() {
+        let ws = spec().generate(8, 8_000, 1.0, 9);
+        // no two clients share an identical schedule (astronomically
+        // unlikely with independent streams; equality would mean the
+        // stream derivation collapsed)
+        for i in 0..ws.len() {
+            for j in i + 1..ws.len() {
+                assert_ne!(ws[i], ws[j], "clients {i} and {j} share a schedule");
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let j = Json::parse(r#"{"outages_per_day": 2.5, "mean_outage_min": 30}"#).unwrap();
+        let s = ChurnSpec::from_json(&j).unwrap();
+        assert_eq!(s.outages_per_day, 2.5);
+        assert_eq!(s.mean_outage_min, 30.0);
+        let bad = Json::parse(r#"{"mean_outage_min": 0}"#).unwrap();
+        assert!(ChurnSpec::from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,446 @@
+//! The declarative environment spec: everything that shapes one simulated
+//! world, parsed from JSON (`util::json`, no external crates). See the
+//! module docs of [`crate::scenario`] for the full schema.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Scenario;
+use crate::trace::forecast::ErrorLevel;
+use crate::trace::solar::{self, Site};
+use crate::util::json::Json;
+
+use super::churn::ChurnSpec;
+
+/// Which solar sites back the power domains: one of the paper's presets
+/// or a fully parameterized custom list.
+#[derive(Clone, Debug)]
+pub enum SiteSet {
+    /// the ten globally distributed cities (paper global scenario)
+    Global,
+    /// the ten German cities (paper co-located scenario)
+    Colocated,
+    Custom(Vec<Site>),
+}
+
+impl SiteSet {
+    pub fn sites(&self) -> Vec<Site> {
+        match self {
+            SiteSet::Global => solar::global_sites(),
+            SiteSet::Colocated => solar::colocated_sites(),
+            SiteSet::Custom(sites) => sites.clone(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            SiteSet::Global => "global",
+            SiteSet::Colocated => "co-located",
+            SiteSet::Custom(_) => "custom",
+        }
+    }
+
+    /// paper dates: June 8 (global) / July 15 (co-located); custom site
+    /// lists default to the global date unless the spec overrides it
+    pub fn default_start_day(&self) -> u32 {
+        match self {
+            SiteSet::Colocated => 196,
+            _ => 159,
+        }
+    }
+
+    /// co-located sites share one regional cloud process (paper Fig 2)
+    pub fn default_regional_clouds(&self) -> Option<f64> {
+        match self {
+            SiteSet::Colocated => Some(0.4),
+            _ => None,
+        }
+    }
+}
+
+/// Overrides for the realistic forecast-error model beyond the coarse
+/// [`ErrorLevel`] switch (per-axis robustness sweeps: Fig-7 style but
+/// with a controllable error magnitude).
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorParams {
+    /// relative error std at 1 h lead
+    pub sigma0: f64,
+    /// saturation of the relative error
+    pub sigma_max: f64,
+    /// multiplicative bias
+    pub bias: f64,
+}
+
+/// Declarative description of one simulated environment — the shape
+/// knobs that used to be hard-coded in `config::Scenario`. Per-run knobs
+/// (client count, days, seed, coarse error levels) stay in [`EnvConfig`];
+/// the builtin specs plus a default `EnvConfig` reproduce the legacy
+/// `config::build` output bit for bit (gated by `scenario::tests`).
+#[derive(Clone, Debug)]
+pub struct EnvSpec {
+    pub sites: SiteSet,
+    /// start day-of-year override (None = the site set's paper date)
+    pub start_day_of_year: Option<u32>,
+    /// shared regional cloud process depth (None = independent clouds;
+    /// builtin co-located: Some(0.4))
+    pub regional_clouds: Option<f64>,
+    /// nameplate capacity per domain in W: one entry broadcasts to all
+    /// domains (paper: [800]), or one entry per domain
+    pub capacity_w: Vec<f64>,
+    /// battery capacity per domain in Wh: empty = no storage, one entry
+    /// broadcasts, or one entry per domain (see `scenario::apply_battery`)
+    pub battery_wh: Vec<f64>,
+    /// battery sustain threshold as a fraction of the domain capacity
+    pub battery_sustain_frac: f64,
+    /// device-type mix weights [small, mid, large]; None = the paper's
+    /// uniform draw (exactly the legacy RNG sequence)
+    pub device_mix: Option<[f64; 3]>,
+    /// overrides for the energy forecasters' realistic-error parameters
+    pub energy_error_params: Option<ErrorParams>,
+    /// client-churn model (None = full availability, the paper's setting)
+    pub churn: Option<ChurnSpec>,
+}
+
+impl EnvSpec {
+    /// The builtin spec for a legacy paper scenario — bit-identical to
+    /// `config::build` by construction.
+    pub fn builtin(scenario: Scenario) -> EnvSpec {
+        match scenario {
+            Scenario::Global => EnvSpec::global(),
+            Scenario::Colocated => EnvSpec::colocated(),
+        }
+    }
+
+    pub fn global() -> EnvSpec {
+        EnvSpec {
+            sites: SiteSet::Global,
+            start_day_of_year: None,
+            regional_clouds: None,
+            capacity_w: vec![800.0],
+            battery_wh: Vec::new(),
+            battery_sustain_frac: 0.25,
+            device_mix: None,
+            energy_error_params: None,
+            churn: None,
+        }
+    }
+
+    pub fn colocated() -> EnvSpec {
+        EnvSpec { sites: SiteSet::Colocated, regional_clouds: Some(0.4), ..EnvSpec::global() }
+    }
+
+    pub fn start_day(&self) -> u32 {
+        self.start_day_of_year.unwrap_or_else(|| self.sites.default_start_day())
+    }
+
+    /// Nameplate capacity of domain `p` (broadcast or per-domain).
+    pub fn capacity_of(&self, p: usize) -> f64 {
+        match self.capacity_w.len() {
+            0 => 800.0,
+            1 => self.capacity_w[0],
+            _ => self.capacity_w[p],
+        }
+    }
+
+    /// Battery capacity of domain `p`, Wh (0 = none).
+    pub fn battery_of(&self, p: usize) -> f64 {
+        match self.battery_wh.len() {
+            0 => 0.0,
+            1 => self.battery_wh[0],
+            _ => self.battery_wh[p],
+        }
+    }
+
+    /// Validate vector knob lengths against the site count.
+    pub fn validate(&self) -> Result<()> {
+        let d = self.sites.sites().len();
+        if d == 0 {
+            bail!("spec has no sites");
+        }
+        for (name, v) in [("capacity_w", &self.capacity_w), ("battery_wh", &self.battery_wh)] {
+            if v.len() > 1 && v.len() != d {
+                bail!("{name} has {} entries for {d} domains (want 1 or {d})", v.len());
+            }
+        }
+        if let Some(mix) = self.device_mix {
+            if mix.iter().any(|&w| w < 0.0) || mix.iter().sum::<f64>() <= 0.0 {
+                bail!("device_mix weights must be non-negative with a positive sum");
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from the JSON schema documented in the module docs.
+    pub fn from_json(j: &Json) -> Result<EnvSpec> {
+        let mut spec = EnvSpec::global();
+        let sites = match j.get("sites") {
+            None => SiteSet::Global,
+            Some(Json::Str(s)) => match s.as_str() {
+                "global" => SiteSet::Global,
+                "colocated" | "co-located" => SiteSet::Colocated,
+                other => bail!("unknown site preset {other:?}"),
+            },
+            Some(Json::Arr(items)) => {
+                let mut out = Vec::new();
+                for (k, item) in items.iter().enumerate() {
+                    let name = item
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .map(str::to_string)
+                        .unwrap_or_else(|| format!("site{k}"));
+                    let lat = req_f64(item, "latitude")?;
+                    let utc = item.get("utc_offset_h").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let cl = item.get("cloudiness").and_then(|v| v.as_f64()).unwrap_or(0.35);
+                    if !(-90.0..=90.0).contains(&lat) {
+                        bail!("site {name}: latitude {lat} out of range");
+                    }
+                    if !(0.0..=1.0).contains(&cl) {
+                        bail!("site {name}: cloudiness {cl} out of [0,1]");
+                    }
+                    out.push(Site { name, latitude: lat, utc_offset_h: utc, cloudiness: cl });
+                }
+                SiteSet::Custom(out)
+            }
+            Some(other) => bail!("sites must be a preset name or an array, got {other:?}"),
+        };
+        spec.regional_clouds = match j.get("regional_clouds") {
+            None => sites.default_regional_clouds(),
+            Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64().ok_or_else(|| anyhow!("regional_clouds must be a number or null"))?,
+            ),
+        };
+        spec.sites = sites;
+        if let Some(v) = j.get("start_day_of_year") {
+            let day = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("start_day_of_year must be a number"))?;
+            if !(1.0..=366.0).contains(&day) {
+                bail!("start_day_of_year {day} out of 1..=366");
+            }
+            spec.start_day_of_year = Some(day as u32);
+        }
+        if let Some(v) = j.get("capacity_w") {
+            spec.capacity_w = num_or_list(v, "capacity_w")?;
+        }
+        if let Some(v) = j.get("battery_wh") {
+            spec.battery_wh = num_or_list(v, "battery_wh")?;
+        }
+        if let Some(v) = j.get("battery_sustain_frac").and_then(|v| v.as_f64()) {
+            spec.battery_sustain_frac = v;
+        }
+        if let Some(v) = j.get("device_mix") {
+            let items = v.as_arr().ok_or_else(|| anyhow!("device_mix must be an array"))?;
+            if items.len() != 3 {
+                bail!("device_mix needs exactly 3 weights [small, mid, large]");
+            }
+            let mut mix = [0.0; 3];
+            for (k, item) in items.iter().enumerate() {
+                mix[k] = item.as_f64().ok_or_else(|| anyhow!("device_mix entries must be numbers"))?;
+            }
+            spec.device_mix = Some(mix);
+        }
+        if let Some(v) = j.get("energy_error_params") {
+            spec.energy_error_params = Some(ErrorParams {
+                sigma0: v.get("sigma0").and_then(|x| x.as_f64()).unwrap_or(0.10),
+                sigma_max: v.get("sigma_max").and_then(|x| x.as_f64()).unwrap_or(0.35),
+                bias: v.get("bias").and_then(|x| x.as_f64()).unwrap_or(0.02),
+            });
+        }
+        if let Some(v) = j.get("churn") {
+            spec.churn = Some(ChurnSpec::from_json(v)?);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Deterministic memoization key over every trace-shaping field (the
+    /// campaign runner builds one environment per distinct key+seed and
+    /// shares it immutably across cells).
+    pub fn cache_key(&self) -> String {
+        use std::fmt::Write as _;
+        let mut k = String::new();
+        match &self.sites {
+            SiteSet::Global => k.push_str("sites=global"),
+            SiteSet::Colocated => k.push_str("sites=colocated"),
+            SiteSet::Custom(sites) => {
+                k.push_str("sites=[");
+                for s in sites {
+                    let _ = write!(
+                        k,
+                        "({},{:?},{:?},{:?})",
+                        s.name, s.latitude, s.utc_offset_h, s.cloudiness
+                    );
+                }
+                k.push(']');
+            }
+        }
+        let _ = write!(
+            k,
+            ";day={:?};reg={:?};cap={:?};bat={:?};sus={:?};mix={:?}",
+            self.start_day_of_year,
+            self.regional_clouds,
+            self.capacity_w,
+            self.battery_wh,
+            self.battery_sustain_frac,
+            self.device_mix,
+        );
+        if let Some(e) = self.energy_error_params {
+            let _ = write!(k, ";err=({:?},{:?},{:?})", e.sigma0, e.sigma_max, e.bias);
+        }
+        if let Some(c) = &self.churn {
+            let _ = write!(k, ";churn=({:?},{:?})", c.outages_per_day, c.mean_outage_min);
+        }
+        k
+    }
+}
+
+/// Per-run knobs that combine with an [`EnvSpec`] into one environment —
+/// the fields of the legacy `config::ScenarioConfig` that are not shape.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvConfig {
+    pub n_clients: usize,
+    pub days: usize,
+    pub step_minutes: f64,
+    pub energy_error: ErrorLevel,
+    pub load_error: ErrorLevel,
+    /// give this domain unlimited energy + its clients unlimited capacity
+    pub unlimited_domain: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            n_clients: 100,
+            days: 7,
+            step_minutes: 1.0,
+            energy_error: ErrorLevel::Realistic,
+            load_error: ErrorLevel::Realistic,
+            unlimited_domain: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Parse an [`ErrorLevel`] axis value.
+pub fn parse_error_level(s: &str) -> Result<ErrorLevel> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "perfect" => ErrorLevel::Perfect,
+        "realistic" => ErrorLevel::Realistic,
+        "unavailable" | "none" => ErrorLevel::Unavailable,
+        other => bail!("unknown error level {other:?}"),
+    })
+}
+
+pub fn error_level_name(e: ErrorLevel) -> &'static str {
+    match e {
+        ErrorLevel::Perfect => "perfect",
+        ErrorLevel::Realistic => "realistic",
+        ErrorLevel::Unavailable => "unavailable",
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing numeric field {key:?}"))
+}
+
+/// A scalar broadcasts; an array is taken verbatim.
+fn num_or_list(j: &Json, key: &str) -> Result<Vec<f64>> {
+    match j {
+        Json::Num(x) => Ok(vec![*x]),
+        Json::Arr(items) => items
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("{key} entries must be numbers")))
+            .collect(),
+        other => bail!("{key} must be a number or an array, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_match_legacy_defaults() {
+        let g = EnvSpec::global();
+        assert!(matches!(g.sites, SiteSet::Global));
+        assert_eq!(g.start_day(), 159);
+        assert!(g.regional_clouds.is_none());
+        assert_eq!(g.capacity_of(7), 800.0);
+        assert_eq!(g.battery_of(7), 0.0);
+        let c = EnvSpec::colocated();
+        assert_eq!(c.start_day(), 196);
+        assert_eq!(c.regional_clouds, Some(0.4));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_spec() {
+        let text = r#"{
+            "sites": [
+                {"name": "Reykjavik", "latitude": 64.1, "utc_offset_h": 0.0, "cloudiness": 0.5},
+                {"name": "Atacama", "latitude": -24.5, "utc_offset_h": -4.0, "cloudiness": 0.05}
+            ],
+            "start_day_of_year": 80,
+            "capacity_w": [500, 1200],
+            "battery_wh": 400,
+            "device_mix": [0.7, 0.2, 0.1],
+            "energy_error_params": {"sigma0": 0.2, "bias": -0.05},
+            "churn": {"outages_per_day": 1.5, "mean_outage_min": 45}
+        }"#;
+        let spec = EnvSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.sites.sites().len(), 2);
+        assert_eq!(spec.start_day(), 80);
+        assert_eq!(spec.capacity_of(1), 1200.0);
+        assert_eq!(spec.battery_of(0), 400.0);
+        assert_eq!(spec.battery_of(1), 400.0);
+        assert_eq!(spec.device_mix.unwrap()[0], 0.7);
+        let e = spec.energy_error_params.unwrap();
+        assert_eq!(e.sigma0, 0.2);
+        assert_eq!(e.sigma_max, 0.35); // default kept
+        assert!(spec.churn.is_some());
+    }
+
+    #[test]
+    fn preset_strings_and_defaults() {
+        let j = Json::parse(r#"{"sites": "colocated"}"#).unwrap();
+        let spec = EnvSpec::from_json(&j).unwrap();
+        assert!(matches!(spec.sites, SiteSet::Colocated));
+        // colocated preset implies the shared regional cloud process
+        assert_eq!(spec.regional_clouds, Some(0.4));
+        // explicit null disables it
+        let j = Json::parse(r#"{"sites": "colocated", "regional_clouds": null}"#).unwrap();
+        assert!(EnvSpec::from_json(&j).unwrap().regional_clouds.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for text in [
+            r#"{"sites": "mars"}"#,
+            r#"{"sites": [{"latitude": 200}]}"#,
+            r#"{"capacity_w": [1, 2, 3]}"#,       // 3 entries for 10 domains
+            r#"{"device_mix": [1.0, 2.0]}"#,      // wrong arity
+            r#"{"device_mix": [-1.0, 1.0, 1.0]}"#, // negative weight
+            r#"{"start_day_of_year": null}"#,     // must be numeric
+            r#"{"start_day_of_year": 400}"#,      // out of range
+        ] {
+            assert!(
+                EnvSpec::from_json(&Json::parse(text).unwrap()).is_err(),
+                "accepted {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_keys_distinguish_specs() {
+        let a = EnvSpec::global();
+        let b = EnvSpec::colocated();
+        let mut c = EnvSpec::global();
+        c.battery_wh = vec![500.0];
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_eq!(a.cache_key(), EnvSpec::global().cache_key());
+    }
+}

@@ -29,7 +29,13 @@
 //!   work, making `eligible_count(d)` **O(1) per probe** and letting
 //!   `fill_probe` reject infeasible probes without scanning a single
 //!   client (the historical filter scanned all C clients per probe).
-//! * one O(C) pass of per-client scalars (σ, δ, m_min, m_max, domain).
+//! * **per-client scalars** (σ, δ, m_min, m_max, domain, liveness) —
+//!   with the incremental state attached these are BORROWED from its
+//!   rebuild-time snapshot (σ is the only per-round mutable in the set,
+//!   and the engine rebuilds the state right after every round-end σ
+//!   refresh), so a build performs no O(C) copies at all; without it,
+//!   one O(C) copy pass — the historical cost (ROADMAP "incremental
+//!   arena scalars").
 //!
 //! Probes then borrow `row[..d]` slice views straight out of the ring
 //! (monotone feasibility means every probe shares the d_max window and
@@ -47,7 +53,7 @@
 //! exactly (property-tested below, in `selection::incr`, and in
 //! `tests/integration_ring.rs`).
 
-use super::incr::{self, IncrSelState};
+use super::incr::{self, IncrSelState, ScalarTable};
 use super::SelectionContext;
 use crate::solver::mip::{ClientView, InstanceView};
 use crate::util::par;
@@ -58,6 +64,45 @@ use crate::util::par::thresholds::MIN_FILL_ROWS;
 enum EffSource<'a> {
     Incr(&'a IncrSelState),
     Fresh(Vec<usize>),
+}
+
+/// Owned per-client scalars for the incr-less path (tests, baselines
+/// without the persistent state attached).
+struct OwnedScalars {
+    domain: Vec<usize>,
+    sigma: Vec<f64>,
+    delta: Vec<f64>,
+    m_min: Vec<f64>,
+    m_max: Vec<f64>,
+    live: Vec<bool>,
+}
+
+/// Where the per-client scalars come from (ROADMAP "incremental arena
+/// scalars"): with the persistent [`IncrSelState`] attached, the arena
+/// BORROWS its scalar snapshot — σ is the only per-round mutable in the
+/// set and the engine re-captures it at every round end — so a build
+/// performs no O(C) scalar copies at all; without it, one O(C) copy
+/// pass, exactly the historical cost.
+enum Scalars<'a> {
+    Incr(ScalarTable<'a>),
+    Fresh(OwnedScalars),
+}
+
+impl<'a> Scalars<'a> {
+    #[inline]
+    fn table(&self) -> ScalarTable<'_> {
+        match self {
+            Scalars::Incr(t) => *t,
+            Scalars::Fresh(o) => ScalarTable {
+                domain: &o.domain,
+                sigma: &o.sigma,
+                delta: &o.delta,
+                m_min: &o.m_min,
+                m_max: &o.m_max,
+                live: &o.live,
+            },
+        }
+    }
 }
 
 /// Per-`select()` arena: borrowed forecast rows plus the (borrowed or
@@ -74,13 +119,9 @@ pub struct SelArena<'a> {
     eff: EffSource<'a>,
     /// cum_elig[d] = #clients with effective reach ≤ d (cum_elig[0] = 0)
     cum_elig: Vec<u32>,
-    // per-client scalars copied once so probe filling never touches the
-    // original context
-    domain: Vec<usize>,
-    sigma: Vec<f64>,
-    delta: Vec<f64>,
-    m_min: Vec<f64>,
-    m_max: Vec<f64>,
+    /// per-client scalars — borrowed from the incremental state or
+    /// copied once (see [`Scalars`])
+    scalars: Scalars<'a>,
 }
 
 /// Reusable per-probe buffers of borrowed views into a [`SelArena`]'s
@@ -141,9 +182,10 @@ impl<'a> SelArena<'a> {
     }
 
     /// Assemble the arena over the context's borrowed forecast window:
-    /// borrow the persistent reach structures when `ctx.incr` is
-    /// attached (O(C) integer work), or derive them freshly via the
-    /// canonical walk (O(C·d_max)) — bit-identical either way.
+    /// borrow the persistent reach structures AND the per-client scalar
+    /// table when `ctx.incr` is attached (O(C) integer work, zero O(C)
+    /// copies), or derive both freshly — one O(C) scalar pass plus the
+    /// canonical walks (O(C·d_max)) — bit-identical either way.
     pub fn build(ctx: &SelectionContext<'a>) -> SelArena<'a> {
         let n_clients = ctx.clients.len();
         let n_domains = ctx.fc.n_domains();
@@ -151,34 +193,35 @@ impl<'a> SelArena<'a> {
         let fc = ctx.fc;
         debug_assert_eq!(fc.d_max(), d_max, "context window shorter than d_max");
 
-        // per-client scalars (also used by the parallel passes below, so
-        // the closures only capture plain slices and the Copy view)
-        let mut domain = Vec::with_capacity(n_clients);
-        let mut sigma = Vec::with_capacity(n_clients);
-        let mut delta = Vec::with_capacity(n_clients);
-        let mut m_min = Vec::with_capacity(n_clients);
-        let mut m_max = Vec::with_capacity(n_clients);
-        let mut live = Vec::with_capacity(n_clients); // !blocked && σ > 0
-        for (i, c) in ctx.clients.iter().enumerate() {
-            domain.push(c.domain);
-            sigma.push(ctx.states[i].sigma);
-            delta.push(c.delta());
-            m_min.push(c.m_min);
-            m_max.push(c.m_max);
-            live.push(!ctx.states[i].blocked && ctx.states[i].sigma > 0.0);
-        }
-
-        let eff = match ctx.incr {
+        let (eff, scalars) = match ctx.incr {
             Some(state) => {
                 debug_assert_eq!(state.phase(), fc.phase(), "stale incr state");
                 debug_assert_eq!(state.n_clients(), n_clients);
                 debug_assert_eq!(state.d_max(), d_max);
-                EffSource::Incr(state)
+                (EffSource::Incr(state), Scalars::Incr(state.scalar_table()))
             }
             None => {
-                // fresh derivation: the canonical bucketed walk (see
-                // selection::incr) per live client, plus each domain's
-                // first lit column for the m_min <= 0 shortcut
+                // one O(C) scalar pass (the historical per-select cost)…
+                let mut owned = OwnedScalars {
+                    domain: Vec::with_capacity(n_clients),
+                    sigma: Vec::with_capacity(n_clients),
+                    delta: Vec::with_capacity(n_clients),
+                    m_min: Vec::with_capacity(n_clients),
+                    m_max: Vec::with_capacity(n_clients),
+                    live: Vec::with_capacity(n_clients),
+                };
+                for (i, c) in ctx.clients.iter().enumerate() {
+                    owned.domain.push(c.domain);
+                    owned.sigma.push(ctx.states[i].sigma);
+                    owned.delta.push(c.delta());
+                    owned.m_min.push(c.m_min);
+                    owned.m_max.push(c.m_max);
+                    owned.live.push(!ctx.states[i].blocked && ctx.states[i].sigma > 0.0);
+                }
+                // …then the fresh reach derivation: the canonical
+                // bucketed walk (see selection::incr) per live client,
+                // plus each domain's first lit column for the
+                // m_min <= 0 shortcut
                 let bucket = incr::bucket_width(d_max);
                 let phase = fc.phase();
                 let d_first: Vec<usize> = (0..n_domains)
@@ -192,10 +235,10 @@ impl<'a> SelArena<'a> {
                     .collect();
                 let mut eff = vec![usize::MAX; n_clients];
                 {
-                    let domain = &domain;
-                    let delta = &delta;
-                    let m_min = &m_min;
-                    let live = &live;
+                    let domain = &owned.domain;
+                    let delta = &owned.delta;
+                    let m_min = &owned.m_min;
+                    let live = &owned.live;
                     let d_first = &d_first;
                     par::par_fill_rows(&mut eff, 1, MIN_FILL_ROWS, |i, out| {
                         if !live[i] {
@@ -215,7 +258,7 @@ impl<'a> SelArena<'a> {
                         }
                     });
                 }
-                EffSource::Fresh(eff)
+                (EffSource::Fresh(eff), Scalars::Fresh(owned))
             }
         };
 
@@ -243,11 +286,7 @@ impl<'a> SelArena<'a> {
             fc,
             eff,
             cum_elig,
-            domain,
-            sigma,
-            delta,
-            m_min,
-            m_max,
+            scalars,
         }
     }
 
@@ -293,16 +332,17 @@ impl<'a> SelArena<'a> {
         }
         scratch.clients.clear();
         scratch.ids.clear();
+        let t = self.scalars.table();
         for i in 0..self.n_clients {
             if !self.eligible(i, d) {
                 continue;
             }
             scratch.clients.push(ClientView {
-                domain: self.domain[i],
-                sigma: self.sigma[i],
-                delta: self.delta[i],
-                m_min: self.m_min[i],
-                m_max: self.m_max[i],
+                domain: t.domain[i],
+                sigma: t.sigma[i],
+                delta: t.delta[i],
+                m_min: t.m_min[i],
+                m_max: t.m_max[i],
                 spare: &self.fc.spare_row(i)[..d],
             });
             scratch.ids.push(i);
@@ -488,6 +528,7 @@ mod tests {
                 states: &states,
                 domains: &domains,
                 fc: fc.view(),
+                incr: None,
                 spare_now: &snow,
             };
             let arena = SelArena::build(&ctx);

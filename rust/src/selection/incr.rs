@@ -88,7 +88,25 @@ use super::ring::{FcSource, FcView, ForecastRing};
 use crate::client::ClientInfo;
 use crate::selection::ClientRoundState;
 use crate::util::par;
-use crate::util::par::thresholds::MIN_FILL_ROWS;
+use crate::util::par::thresholds::{MIN_FILL_ROWS, REDERIVE_CLIENTS};
+
+/// Borrowed view of the per-client scalar snapshot captured at
+/// [`IncrSelState::rebuild`] (ROADMAP "incremental arena scalars"): the
+/// constants (domain, δ, m_min, m_max) plus the per-round mutables
+/// (σ, liveness). σ only changes when a round executes, and the engine
+/// rebuilds this state right after every executed round's σ refresh —
+/// so between rebuilds the snapshot equals the live `ClientRoundState`
+/// values and [`super::arena::SelArena::build`] borrows it instead of
+/// copying five O(C) vectors per `select()`.
+#[derive(Clone, Copy)]
+pub struct ScalarTable<'a> {
+    pub domain: &'a [usize],
+    pub sigma: &'a [f64],
+    pub delta: &'a [f64],
+    pub m_min: &'a [f64],
+    pub m_max: &'a [f64],
+    pub live: &'a [bool],
+}
 
 /// Bucket width of the √d_max decomposition: ⌈√d_max⌉ (integer-exact).
 pub fn bucket_width(d_max: usize) -> usize {
@@ -213,12 +231,17 @@ pub struct IncrSelState {
     n_domains: usize,
     /// advances since the anchor — mirrors the ring's `FcView::phase`
     k: usize,
-    // --- per-client constants captured at rebuild ---
+    // --- per-client scalars captured at rebuild (see [`ScalarTable`]) ---
     domain: Vec<usize>,
     delta: Vec<f64>,
     /// m_min — `need <= 0` clients are "trivially reachable" and tracked
     /// via `n_triv`/`first_e_abs` instead of `reach_abs`
     need: Vec<f64>,
+    /// m_max (constant; part of the borrowed scalar table)
+    m_max: Vec<f64>,
+    /// σ snapshot (valid between rebuilds; the engine rebuilds after the
+    /// round-end σ refresh)
+    sigma: Vec<f64>,
     /// liveness snapshot: `!blocked && σ > 0` (constant between rebuilds)
     live: Vec<bool>,
     /// CSR client-by-domain index: clients of domain p are
@@ -252,10 +275,21 @@ pub struct IncrSelState {
     first_e_abs: Vec<usize>,
     /// scratch: evicted energy column captured before the ring advances
     evict_scratch: Vec<f32>,
+    /// scratch: (client, domain) re-derivation candidates of the current
+    /// advance (reused across advances; see [`Self::advance`])
+    cand_scratch: Vec<(u32, u32)>,
+    /// scratch: walk results parallel to `cand_scratch` (reused so lit
+    /// advances stay allocation-free in steady state)
+    walk_scratch: Vec<usize>,
     /// instrumentation: per-client operations performed by the last
     /// `advance` (bucket appends + reach re-derivations). 0 for a fully
     /// dark step — the O(D) guarantee the tests pin down.
     last_touched: usize,
+    /// dirty-client count at which the re-derivation walks fan out
+    /// across threads; 0 (the `Default`) means
+    /// `thresholds::REDERIVE_CLIENTS`. Tests pin 1 / usize::MAX to force
+    /// both paths — results are bit-identical either way.
+    pub rederive_par_min: usize,
 }
 
 impl IncrSelState {
@@ -284,6 +318,19 @@ impl IncrSelState {
     /// (dirty-domain work). Exactly 0 for a fully dark advance.
     pub fn last_advance_touched(&self) -> usize {
         self.last_touched
+    }
+
+    /// The per-client scalar snapshot captured at the last rebuild —
+    /// borrowed by `SelArena::build` instead of re-copying per select.
+    pub fn scalar_table(&self) -> ScalarTable<'_> {
+        ScalarTable {
+            domain: &self.domain,
+            sigma: &self.sigma,
+            delta: &self.delta,
+            m_min: &self.need,
+            m_max: &self.m_max,
+            live: &self.live,
+        }
     }
 
     /// Window-relative effective reach of client `i`: the smallest
@@ -363,11 +410,15 @@ impl IncrSelState {
         self.domain.clear();
         self.delta.clear();
         self.need.clear();
+        self.m_max.clear();
+        self.sigma.clear();
         self.live.clear();
         for (i, c) in clients.iter().enumerate() {
             self.domain.push(c.domain);
             self.delta.push(c.delta());
             self.need.push(c.m_min);
+            self.m_max.push(c.m_max);
+            self.sigma.push(states[i].sigma);
             self.live.push(!states[i].blocked && states[i].sigma > 0.0);
         }
 
@@ -514,6 +565,24 @@ impl IncrSelState {
     /// touched; lit/dirty domains pay one gated add per client (tail
     /// append) plus O(√d_max)-walk re-derivations for the clients whose
     /// reach may have moved (see the module docs for the dirty rules).
+    ///
+    /// §Perf (ROADMAP "parallel dirty-domain re-derivation"): the
+    /// advance is three phases. Phase 1 (serial, O(D) + one gated add
+    /// per lit-domain client) updates the integer counters and appends
+    /// the tail terms, and collects the re-derivation candidates in
+    /// (domain, CSR) order — the exact order the historical serial loop
+    /// visited them. Phase 2 runs the candidates' canonical walks in
+    /// parallel (`util::par::par_fill_rows` into a reused result
+    /// scratch, so lit advances allocate nothing in steady state): each
+    /// walk is a pure read of the
+    /// window, `bsum`/`binit` and the per-client constants, all frozen
+    /// during the phase, so chunking cannot change any result. Phase 3
+    /// applies the reach transitions and eligibility counters serially
+    /// in candidate order. Interleaving per domain (the historical
+    /// shape) and phase-splitting are equivalent because appends only
+    /// touch the appending domain's rows and applications only touch
+    /// state no walk reads — bit-equivalence is property-tested with
+    /// both fan-out gates forced.
     pub fn advance(&mut self, ring: &mut ForecastRing, src: &impl FcSource) {
         assert!(self.built, "advance() before rebuild()");
         assert!(ring.is_built());
@@ -547,6 +616,8 @@ impl IncrSelState {
         // re-derivation for domains with energy in it (module docs)
         let promoted = (append_abs + 1) % b == 0;
         let mut touched = 0usize;
+        let mut cand = std::mem::take(&mut self.cand_scratch);
+        cand.clear();
 
         for p in 0..self.n_domains {
             let e_old = self.evict_scratch[p];
@@ -595,7 +666,7 @@ impl IncrSelState {
                 }
             }
 
-            // reach re-derivation (dirty rules, module docs):
+            // reach re-derivation candidates (dirty rules, module docs):
             //  * evicted energy > 0     → every prefix changed: all clients
             //  * promoted lit bucket    → walk geometry changed: all clients
             //  * appended energy > 0    → only never-reaching clients can
@@ -604,58 +675,79 @@ impl IncrSelState {
                 || (promoted && self.ecount[p * ns + b_ap % ns] > 0);
             if full_rederive {
                 for j in cs..ce {
-                    let i = self.dom_clients[j];
-                    self.rederive(i, p, &fcv);
-                    touched += 1;
+                    cand.push((self.dom_clients[j] as u32, p as u32));
                 }
             } else if e_new > 0.0 {
                 for j in cs..ce {
                     let i = self.dom_clients[j];
                     if self.reach_abs[i] == usize::MAX && self.need[i] > 0.0 {
-                        self.rederive(i, p, &fcv);
-                        touched += 1;
+                        cand.push((i as u32, p as u32));
                     }
                 }
             }
         }
-        self.last_touched = touched;
-    }
+        touched += cand.len();
 
-    /// Re-run the canonical walk for client `i` of domain `p` against
-    /// the current window and fold the result into `reach_abs` and the
-    /// per-domain eligibility counter. O(√d_max).
-    fn rederive(&mut self, i: usize, p: usize, fcv: &FcView<'_>) {
-        if self.need[i] <= 0.0 {
-            return; // trivially-reachable clients live in n_triv
-        }
-        let new_abs = {
+        // phase 2: the candidates' canonical walks, independent and
+        // read-only — fanned out across workers at scale
+        let min_par = match self.rederive_par_min {
+            0 => REDERIVE_CLIENTS,
+            m => m,
+        };
+        let mut new_abs = std::mem::take(&mut self.walk_scratch);
+        new_abs.clear();
+        new_abs.resize(cand.len(), usize::MAX);
+        {
             let b = self.bucket;
             let ns = self.n_slots;
             let k = self.k;
             let binit = &self.binit;
             let bsum = &self.bsum;
-            let r = reach_walk(
-                fcv.spare_row(i),
-                fcv.energy_row(p),
-                self.delta[i],
-                self.need[i],
-                k,
-                b,
-                |t| {
-                    let bu = (k + t) / b;
-                    if binit[p * ns + bu % ns] == bu as u64 {
-                        bsum[i * ns + bu % ns]
-                    } else {
-                        0.0
-                    }
-                },
-            );
-            if r == usize::MAX {
-                usize::MAX
-            } else {
-                self.k + r
-            }
-        };
+            let need = &self.need;
+            let delta = &self.delta;
+            let cand = &cand;
+            par::par_fill_rows(&mut new_abs, 1, min_par, |j, out| {
+                let (i, p) = (cand[j].0 as usize, cand[j].1 as usize);
+                if need[i] <= 0.0 {
+                    return; // trivially reachable (n_triv): stays MAX
+                }
+                let r = reach_walk(
+                    fcv.spare_row(i),
+                    fcv.energy_row(p),
+                    delta[i],
+                    need[i],
+                    k,
+                    b,
+                    |t| {
+                        let bu = (k + t) / b;
+                        if binit[p * ns + bu % ns] == bu as u64 {
+                            bsum[i * ns + bu % ns]
+                        } else {
+                            0.0
+                        }
+                    },
+                );
+                if r != usize::MAX {
+                    out[0] = k + r;
+                }
+            });
+        }
+
+        // phase 3: serial reach/counter application in candidate order
+        for (j, &(i, p)) in cand.iter().enumerate() {
+            self.apply_reach(i as usize, p as usize, new_abs[j]);
+        }
+        self.cand_scratch = cand;
+        self.walk_scratch = new_abs;
+        self.last_touched = touched;
+    }
+
+    /// Fold one re-derived walk result into `reach_abs` and the
+    /// per-domain eligibility counter (serial application phase).
+    fn apply_reach(&mut self, i: usize, p: usize, new_abs: usize) {
+        if self.need[i] <= 0.0 {
+            return; // trivially-reachable clients live in n_triv
+        }
         let old = self.reach_abs[i];
         if self.live[i] && (old == usize::MAX) != (new_abs == usize::MAX) {
             if new_abs == usize::MAX {
@@ -865,6 +957,24 @@ mod tests {
                         "eligible_count({d}) diverged at step {step}"
                     );
                 }
+                // the borrowed scalar table must hand probes the same
+                // per-client values the fresh O(C) copy produced
+                let mut s_fresh = crate::selection::arena::ProbeScratch::new();
+                let mut s_incr = crate::selection::arena::ProbeScratch::new();
+                let ok_f = a_fresh.fill_probe(&mut s_fresh, d_max);
+                let ok_i = a_incr.fill_probe(&mut s_incr, d_max);
+                assert_eq!(ok_f, ok_i, "probe feasibility diverged at {step}");
+                if ok_f {
+                    assert_eq!(s_fresh.ids, s_incr.ids);
+                    let (inst_f, inst_i) = (s_fresh.instance(), s_incr.instance());
+                    for (a, b) in inst_f.clients.iter().zip(inst_i.clients.iter()) {
+                        assert_eq!(a.domain, b.domain);
+                        assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+                        assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+                        assert_eq!(a.m_min.to_bits(), b.m_min.to_bits());
+                        assert_eq!(a.m_max.to_bits(), b.m_max.to_bits());
+                    }
+                }
                 assert_eq!(
                     SelArena::quick_eligible_count(&ctx_incr),
                     SelArena::quick_eligible_count(&ctx_fresh),
@@ -875,6 +985,61 @@ mod tests {
                     a_fresh.eligible_count(d_max),
                     "O(D) gate != fresh arena count at step {step}"
                 );
+            }
+        });
+    }
+
+    /// The parallel dirty-domain re-derivation satellite: advancing with
+    /// the walk fan-out forced ON must be bit-equivalent to forced-serial
+    /// advances — same reaches, same counters, same touch counts — over
+    /// arbitrary windows including dark edges and re-anchors.
+    #[test]
+    fn parallel_rederive_matches_serial_bitwise() {
+        forall(12, |rng| {
+            let n_domains = rng.range(1, 4);
+            let n_clients = rng.range(4, 24);
+            let d_max = rng.range(4, 32);
+            let steps = rng.range(d_max, 2 * d_max + 5);
+            let horizon = d_max + steps + d_max + 10;
+            let clients = mk_clients(rng, n_clients, n_domains, true);
+            let mut states = vec![ClientRoundState::default(); n_clients];
+            for s in states.iter_mut() {
+                s.blocked = rng.bool(0.2);
+                s.sigma = if s.blocked { 0.0 } else { rng.range_f64(0.0, 8.0) };
+            }
+            let src =
+                mk_source(rng, &clients, n_domains, horizon, false, rng.bool(0.5));
+
+            let mut ring_ser = ForecastRing::new();
+            let mut ring_par = ForecastRing::new();
+            let mut ser = IncrSelState::new();
+            let mut par_ = IncrSelState::new();
+            ser.rederive_par_min = usize::MAX; // never fan out
+            par_.rederive_par_min = 1; // always fan out
+            ring_ser.rebuild(&src, 0, d_max);
+            ring_par.rebuild(&src, 0, d_max);
+            ser.rebuild(&clients, &states, ring_ser.view());
+            par_.rebuild(&clients, &states, ring_par.view());
+            for step in 1..=steps {
+                ser.advance(&mut ring_ser, &src);
+                par_.advance(&mut ring_par, &src);
+                assert_eq!(
+                    ser.last_advance_touched(),
+                    par_.last_advance_touched(),
+                    "touch counts diverged at step {step}"
+                );
+                assert_eq!(
+                    ser.quick_eligible_count(),
+                    par_.quick_eligible_count(),
+                    "quick gate diverged at step {step}"
+                );
+                for i in 0..n_clients {
+                    assert_eq!(
+                        ser.eff_rel(i),
+                        par_.eff_rel(i),
+                        "reach diverged: client {i} at step {step}"
+                    );
+                }
             }
         });
     }

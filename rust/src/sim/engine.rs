@@ -103,6 +103,8 @@ pub struct RoundOutcome {
     pub stragglers: Vec<usize>,
     pub total_batches: f64,
     pub energy_wh: f64,
+    /// the stragglers' share of `energy_wh` — spent on discarded work
+    pub wasted_wh: f64,
 }
 
 /// Everything needed to simulate one experiment configuration.
@@ -131,6 +133,14 @@ pub struct Simulation<'a, B: TrainBackend> {
     /// minimum selected-client count before the per-domain fan-out
     /// engages (see `par_domains_min`)
     pub par_slots_min: usize,
+    /// per-client outage windows `[start, end)` from the scenario churn
+    /// model; empty (the default and the paper's setting) = every client
+    /// always online. An offline client is excluded from the active set
+    /// before power requests are built, so it receives no energy and no
+    /// batches for the step. Selection stays churn-blind (the server
+    /// cannot forecast outages); a client that drops mid-round stalls
+    /// and, if it misses m_min, is discarded as a straggler.
+    pub outages: Vec<Vec<(usize, usize)>>,
     // --- state ---
     pub states: Vec<ClientRoundState>,
     /// persistent per-client train state (local params, data cursor,
@@ -165,6 +175,19 @@ fn spare_actual_raw(
         .copied()
         .unwrap_or(1.0);
     clients[i].capacity() * (1.0 - util)
+}
+
+/// Is client `i` online at step `t` per its outage windows? Windows are
+/// sorted, disjoint `[start, end)` ranges from the scenario churn model
+/// (`crate::scenario::churn`); an empty outage table (the legacy paper
+/// scenarios) means every client is always online — and, because the
+/// check only ever REMOVES slots from the active set, leaves the float
+/// sequence of every grant computation untouched.
+fn online_at(outages: &[Vec<(usize, usize)>], i: usize, t: usize) -> bool {
+    match outages.get(i) {
+        None => true,
+        Some(ws) => !ws.iter().any(|&(start, end)| start <= t && t < end),
+    }
 }
 
 /// The engine's forecast source for the ring: domain energy through each
@@ -210,6 +233,7 @@ fn compute_domain_grants(
     clients: &[ClientInfo],
     domains: &[PowerDomain],
     load_actual: &[Vec<f64>],
+    outages: &[Vec<(usize, usize)>],
     sel: &[usize],
     progress: &[f64],
     unconstrained: bool,
@@ -222,11 +246,17 @@ fn compute_domain_grants(
 ) {
     out.clear();
     active.clear();
+    // an offline (churned-out) client is dropped BEFORE requests are
+    // built, so it is granted neither energy nor batches this step —
+    // on either the constrained or the unconstrained (Upper Bound) path
     active.extend(
         slots
             .iter()
             .copied()
-            .filter(|&s| progress[s] < clients[sel[s]].m_max - 1e-9),
+            .filter(|&s| {
+                progress[s] < clients[sel[s]].m_max - 1e-9
+                    && online_at(outages, sel[s], tt)
+            }),
     );
     if active.is_empty() {
         return;
@@ -297,6 +327,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             strategy,
             par_domains_min: thresholds::ROUND_DOMAINS,
             par_slots_min: thresholds::ROUND_SLOTS,
+            outages: Vec::new(),
             states: vec![ClientRoundState::default(); n_clients],
             train_states,
             utility: UtilityTracker::new(n_clients),
@@ -461,6 +492,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 participants: participants.clone(),
                 batches: out.total_batches,
                 energy_wh: out.energy_wh,
+                wasted_wh: out.wasted_wh,
                 mean_loss,
             });
 
@@ -515,6 +547,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut n_new = vec![0usize; k]; // whole batches earned this step
         let mut loss_acc = vec![0.0f64; k];
         let mut loss_batches = vec![0usize; k];
+        let mut slot_wh = vec![0.0f64; k]; // per-slot energy (waste split)
         // incremental end-condition: progress is monotone within a round,
         // so count each slot once when it first crosses m_min instead of
         // rescanning all k slots every step. Slots with m_min <= 0 count
@@ -573,6 +606,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 let clients = &self.clients;
                 let domains = &self.domains;
                 let load_actual = &self.load_actual;
+                let outages: &[Vec<(usize, usize)>] = &self.outages;
                 let progress_ro: &[f64] = &progress;
                 let unconstrained = decision.unconstrained;
                 let use_par = groups.len() >= self.par_domains_min
@@ -589,17 +623,17 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                          row: &mut [Vec<(usize, f64)>],
                          (active, reqs): &mut (Vec<usize>, Vec<PowerRequest>)| {
                             compute_domain_grants(
-                                clients, domains, load_actual, sel, progress_ro,
-                                unconstrained, groups[g].0, &groups[g].1, tt,
-                                active, reqs, &mut row[0],
+                                clients, domains, load_actual, outages, sel,
+                                progress_ro, unconstrained, groups[g].0,
+                                &groups[g].1, tt, active, reqs, &mut row[0],
                             );
                         },
                     );
                 } else {
                     for (g, (dom, slots)) in groups.iter().enumerate() {
                         compute_domain_grants(
-                            clients, domains, load_actual, sel, progress_ro,
-                            unconstrained, *dom, slots, tt,
+                            clients, domains, load_actual, outages, sel,
+                            progress_ro, unconstrained, *dom, slots, tt,
                             &mut active, &mut reqs, &mut grants[g],
                         );
                     }
@@ -621,6 +655,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     progress[s] += b;
                     let wh = b * self.clients[sel[s]].delta();
                     self.meter.record(sel[s], *dom, wh);
+                    slot_wh[s] += wh;
                     let want = progress[s].floor() as usize;
                     if want > executed[s] {
                         n_new[s] = want - executed[s];
@@ -666,6 +701,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut participants = Vec::new();
         let mut stragglers = Vec::new();
         let mut losses = Vec::new();
+        let mut wasted_wh = 0.0f64;
         for s in 0..k {
             if reached[s] && executed[s] > 0 {
                 participants.push(sel[s]);
@@ -676,6 +712,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 });
             } else {
                 stragglers.push(sel[s]);
+                wasted_wh += slot_wh[s];
             }
         }
         let total_batches: f64 = progress.iter().sum();
@@ -692,6 +729,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 stragglers,
                 total_batches,
                 energy_wh,
+                wasted_wh,
             },
             losses,
         ))
@@ -858,8 +896,111 @@ mod tests {
             if r.participants.len() < r.selected.len() {
                 saw_discard = true;
             }
+            // waste accounting: the stragglers' energy is a sub-share of
+            // the round total, and zero when everyone finished
+            assert!(r.wasted_wh >= 0.0 && r.wasted_wh <= r.energy_wh + 1e-9);
+            if r.participants.len() == r.selected.len() {
+                assert_eq!(r.wasted_wh, 0.0);
+            }
         }
         assert!(saw_discard, "expected at least one straggler");
+        assert!(m.total_wasted_kwh() > 0.0, "stragglers wasted no energy?");
+    }
+
+    #[test]
+    fn offline_clients_get_no_energy_and_no_batches() {
+        // the churn-model contract: a client inside an outage window is
+        // granted neither energy nor training batches — here client 0 is
+        // offline for the whole horizon, so it must end at exactly zero
+        // despite abundant power and being selectable
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, 800.0, horizon);
+        let backend = MockBackend::new(9, 8, 0.2, 7);
+        let mut s = Baseline::random();
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut s,
+        );
+        let mut outages = vec![Vec::new(); 9];
+        outages[0] = vec![(0, horizon)];
+        outages[1] = vec![(0, 100), (300, 400)]; // partial outages
+        sim.outages = outages;
+        sim.run().unwrap();
+        assert!(!sim.metrics.rounds.is_empty());
+        assert_eq!(sim.meter.client_wh(0), 0.0, "offline client drew energy");
+        assert_eq!(
+            sim.train_states[0].as_ref().unwrap().steps,
+            0,
+            "offline client ran batches"
+        );
+        assert_eq!(sim.metrics.participation_counts(9)[0], 0);
+        // the partially offline client can still participate while online
+        // but never inside its windows: rounds fully inside an outage
+        // window must not list it as a participant
+        for r in &sim.metrics.rounds {
+            let span = (r.start_step, r.start_step + r.duration_steps);
+            let inside_outage =
+                span.1 <= 100 || (span.0 >= 300 && span.1 <= 400);
+            if inside_outage {
+                assert!(
+                    !r.participants.contains(&1),
+                    "client 1 participated during an outage (round at {span:?})"
+                );
+            }
+        }
+        // the run as a whole still makes progress
+        assert!(sim.meter.total_kwh() > 0.0);
+    }
+
+    #[test]
+    fn empty_outage_table_changes_nothing() {
+        // the churn hook must be a strict no-op when unused: a run with
+        // an explicit all-online table equals the default bit for bit
+        let mut a = FedZero::new(SolverKind::Greedy);
+        let (m_default, kwh_default) = run_sim(&mut a, 300.0);
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, 300.0, horizon);
+        let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        backend.par_min_jobs = usize::MAX; // mirror run_sim's fixture
+        let mut fz = FedZero::new(SolverKind::Greedy);
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut fz,
+        );
+        sim.outages = vec![Vec::new(); 9]; // explicit, but all online
+        sim.par_domains_min = 8; // mirror run_sim's forced gates
+        sim.par_slots_min = 8;
+        sim.run().unwrap();
+        assert_eq!(sim.metrics, m_default);
+        assert_eq!(sim.meter.total_kwh(), kwh_default);
     }
 
     #[test]

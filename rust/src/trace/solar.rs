@@ -6,10 +6,13 @@
 
 use crate::util::rng::Rng;
 
-/// A solar site (one power domain's generation).
+/// A solar site (one power domain's generation). Sites are either one of
+/// the paper's presets ([`global_sites`], [`colocated_sites`]) or fully
+/// parameterized custom entries built by the declarative scenario layer
+/// (`crate::scenario`), hence the owned name.
 #[derive(Clone, Debug)]
 pub struct Site {
-    pub name: &'static str,
+    pub name: String,
     /// latitude in degrees (drives day length + peak elevation)
     pub latitude: f64,
     /// offset of local solar noon from simulation time, in hours
@@ -18,19 +21,25 @@ pub struct Site {
     pub cloudiness: f64,
 }
 
+impl Site {
+    pub fn new(name: &str, latitude: f64, utc_offset_h: f64, cloudiness: f64) -> Site {
+        Site { name: name.to_string(), latitude, utc_offset_h, cloudiness }
+    }
+}
+
 /// Ten globally distributed cities (paper: global scenario, June 8–15).
 pub fn global_sites() -> Vec<Site> {
     vec![
-        Site { name: "Berlin", latitude: 52.5, utc_offset_h: 2.0, cloudiness: 0.35 },
-        Site { name: "Lagos", latitude: 6.5, utc_offset_h: 1.0, cloudiness: 0.45 },
-        Site { name: "Mumbai", latitude: 19.1, utc_offset_h: 5.5, cloudiness: 0.5 },
-        Site { name: "Tokyo", latitude: 35.7, utc_offset_h: 9.0, cloudiness: 0.4 },
-        Site { name: "Sydney", latitude: -33.9, utc_offset_h: 10.0, cloudiness: 0.3 },
-        Site { name: "SaoPaulo", latitude: -23.6, utc_offset_h: -3.0, cloudiness: 0.35 },
-        Site { name: "MexicoCity", latitude: 19.4, utc_offset_h: -6.0, cloudiness: 0.3 },
-        Site { name: "SanFrancisco", latitude: 37.8, utc_offset_h: -7.0, cloudiness: 0.2 },
-        Site { name: "NewYork", latitude: 40.7, utc_offset_h: -4.0, cloudiness: 0.35 },
-        Site { name: "CapeTown", latitude: -33.9, utc_offset_h: 2.0, cloudiness: 0.25 },
+        Site::new("Berlin", 52.5, 2.0, 0.35),
+        Site::new("Lagos", 6.5, 1.0, 0.45),
+        Site::new("Mumbai", 19.1, 5.5, 0.5),
+        Site::new("Tokyo", 35.7, 9.0, 0.4),
+        Site::new("Sydney", -33.9, 10.0, 0.3),
+        Site::new("SaoPaulo", -23.6, -3.0, 0.35),
+        Site::new("MexicoCity", 19.4, -6.0, 0.3),
+        Site::new("SanFrancisco", 37.8, -7.0, 0.2),
+        Site::new("NewYork", 40.7, -4.0, 0.35),
+        Site::new("CapeTown", -33.9, 2.0, 0.25),
     ]
 }
 
@@ -50,12 +59,7 @@ pub fn colocated_sites() -> Vec<Site> {
     ];
     cities
         .iter()
-        .map(|&(name, latitude)| Site {
-            name,
-            latitude,
-            utc_offset_h: 2.0,
-            cloudiness: 0.4,
-        })
+        .map(|&(name, latitude)| Site::new(name, latitude, 2.0, 0.4))
         .collect()
 }
 

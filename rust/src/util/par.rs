@@ -44,6 +44,11 @@ pub mod thresholds {
     /// subtrees out across workers (small instances finish faster than
     /// the frontier split costs).
     pub const BNB_MIN_CLIENTS: usize = 64;
+    /// Dirty-client count at which `IncrSelState::advance` fans its
+    /// reach re-derivation walks out across workers (each walk is an
+    /// O(√d_max) read-only fold; the counter/append phase and the
+    /// reach/counter application stay serial either way).
+    pub const REDERIVE_CLIENTS: usize = 4096;
     /// Engine round execution: minimum domains spanned by a round before
     /// the per-domain grant computation fans out…
     pub const ROUND_DOMAINS: usize = 8;

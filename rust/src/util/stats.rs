@@ -72,6 +72,22 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Jain's fairness index: (Σx)² / (n·Σx²) — 1.0 for a perfectly even
+/// allocation, 1/n for a single-winner one; 0.0 for the empty/all-zero
+/// case. Used by the campaign report to summarise participation shares.
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        0.0
+    } else {
+        sum * sum / (xs.len() as f64 * sq)
+    }
+}
+
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
@@ -173,5 +189,15 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain(&[]), 0.0);
+        assert_eq!(jain(&[0.0, 0.0]), 0.0);
+        assert!((jain(&[3.0, 3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!((jain(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        let mid = jain(&[4.0, 2.0, 1.0, 1.0]);
+        assert!(mid > 0.25 && mid < 1.0, "jain {mid}");
     }
 }

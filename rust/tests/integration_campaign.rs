@@ -1,0 +1,116 @@
+//! Campaign-level integration tests: the ISSUE-5 determinism gate
+//! (byte-identical reports across worker counts) and end-to-end sweeps
+//! over the new scenario axes (battery, churn, α, custom sites).
+
+use fedzero::coordinator::StrategyKind;
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::scenario::{ChurnSpec, EnvSpec, SiteSet};
+use fedzero::trace::solar::Site;
+use fedzero::util::json::Json;
+
+/// A 4-cell fixture that exercises two axes on top of the smoke spec.
+fn small_spec() -> CampaignSpec {
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "determinism-fixture".into();
+    spec.n_clients = 16;
+    spec.n_per_round = 3;
+    spec.dataset_scale = 0.15;
+    spec.seeds = vec![0, 1];
+    spec.strategies = vec![StrategyKind::FedZero, StrategyKind::Random];
+    spec
+}
+
+/// The acceptance criterion: for a fixed spec+seed the campaign report
+/// is BYTE-identical at worker counts 1, 2 and 8 — scheduling, work
+/// stealing and memoization races must be unobservable in the output.
+#[test]
+fn report_is_byte_identical_across_worker_counts() {
+    let spec = small_spec();
+    let reference = run_campaign(&spec, 1).unwrap();
+    let ref_text = reference.report_json().to_string_pretty();
+    assert_eq!(reference.results.len(), 4);
+    for workers in [2usize, 8] {
+        let run = run_campaign(&spec, workers).unwrap();
+        let text = run.report_json().to_string_pretty();
+        assert_eq!(
+            text, ref_text,
+            "report diverged at {workers} workers (len {} vs {})",
+            text.len(),
+            ref_text.len()
+        );
+    }
+}
+
+#[test]
+fn memoization_shares_environments_across_strategies() {
+    let spec = small_spec(); // 2 seeds × 2 strategies = 4 cells, 2 envs
+    let run = run_campaign(&spec, 1).unwrap();
+    assert_eq!(run.memo_misses, 2, "one build per seed expected");
+    assert_eq!(run.memo_hits, 2, "strategy cells should share builds");
+    assert!(run.memo_hit_rate() > 0.49);
+}
+
+#[test]
+fn churn_axis_degrades_useful_energy() {
+    // same env with and without heavy churn: the churned cells must see
+    // outages reflected somewhere — fewer rounds, less energy, or more
+    // waste — and never crash
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "churn-axis".into();
+    spec.strategies = vec![StrategyKind::Random];
+    spec.churn_axis = vec![
+        None,
+        Some(ChurnSpec { outages_per_day: 40.0, mean_outage_min: 180.0 }),
+    ];
+    let run = run_campaign(&spec, 2).unwrap();
+    assert_eq!(run.results.len(), 2);
+    let calm = &run.results[0];
+    let churned = &run.results[1];
+    assert!(calm.rounds > 0 && churned.rounds > 0);
+    // heavy churn (~5h offline per client-day) must not yield MORE
+    // useful energy throughput than the calm world
+    let calm_useful = calm.energy_kwh - calm.wasted_kwh;
+    let churned_useful = churned.energy_kwh - churned.wasted_kwh;
+    assert!(
+        churned_useful <= calm_useful + 1e-9,
+        "churned useful {churned_useful} > calm useful {calm_useful}"
+    );
+}
+
+#[test]
+fn custom_sites_battery_and_alpha_axes_run_end_to_end() {
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "axes".into();
+    spec.n_clients = 12;
+    spec.n_per_round = 3;
+    spec.dataset_scale = 0.15;
+    spec.envs = vec![(
+        "islands".into(),
+        EnvSpec {
+            sites: SiteSet::Custom(vec![
+                Site::new("north", 55.0, 0.0, 0.2),
+                Site::new("south", -30.0, 11.0, 0.2),
+            ]),
+            ..EnvSpec::global()
+        },
+    )];
+    spec.alphas = vec![0.1, 1.0];
+    spec.battery_axis = vec![0.0, 400.0];
+    spec.strategies = vec![StrategyKind::FedZero];
+    let run = run_campaign(&spec, 2).unwrap();
+    assert_eq!(run.results.len(), 4);
+    for r in &run.results {
+        assert!(r.rounds > 0, "{} did no rounds", r.cell.label);
+        assert!(r.fairness_jain > 0.0);
+    }
+    // the report round-trips through the JSON parser with every cell
+    let parsed = Json::parse(&run.report_json().to_string_pretty()).unwrap();
+    assert_eq!(parsed.get("n_cells").unwrap().as_usize(), Some(4));
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4);
+    for c in cells {
+        assert!(c.get("strategy").is_some());
+        assert!(c.get("wasted_kwh").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(c.get("env").unwrap().as_str(), Some("islands"));
+    }
+}
