@@ -3,10 +3,12 @@
 # regressions fail loudly.
 #
 #   ./ci.sh          tier-1 (build + tests) + quick bench smokes
-#   ./ci.sh --quick  tier-1 + the 2-cell campaign smoke only (fastest
-#                    gate: report-schema validation, worker-count
-#                    determinism, and the builtin-spec-vs-legacy
-#                    Scenario::Global diff — exit 1 on any divergence)
+#   ./ci.sh --quick  tier-1 + the campaign and chaos smokes (fastest
+#                    gates: report-schema validation, worker-count
+#                    determinism, the builtin-spec-vs-legacy
+#                    Scenario::Global diff, and the seeded
+#                    fault-injection determinism/visibility gates —
+#                    exit 1 on any divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
 #
 # The selection bench writes rust/BENCH_selection.json (median ns per
@@ -20,7 +22,13 @@
 # (cells/sec serial vs parallel drain, trace-memoization hit rate) and
 # exits non-zero if the report schema is invalid, the report is not
 # byte-identical across worker counts, or the declarative builtin spec
-# diverges from the legacy config::build path.
+# diverges from the legacy config::build path. The chaos bench writes
+# rust/BENCH_chaos.json (ns/step with the fault injector on vs off) and
+# exits non-zero if two identically seeded chaos runs differ, the
+# injected faults leave no trace in the metrics, or a chaos-axis
+# campaign diverges across worker counts. The endtoend bench
+# additionally gates the event-driven round FSM against the legacy loop
+# (no-fault runs must be bit-identical).
 #
 # When a committed baseline (BENCH_<name>.baseline.json) exists next to a
 # freshly written BENCH_<name>.json, the two are compared metric by
@@ -33,6 +41,7 @@
 #   2. cp rust/BENCH_selection.json rust/BENCH_selection.baseline.json
 #      cp rust/BENCH_endtoend.json  rust/BENCH_endtoend.baseline.json
 #      cp rust/BENCH_campaign.json  rust/BENCH_campaign.baseline.json
+#      cp rust/BENCH_chaos.json     rust/BENCH_chaos.baseline.json
 #   3. git add rust/BENCH_*.baseline.json && git commit
 # Baselines are mode-tagged: a quick-mode baseline only gates quick-mode
 # runs (the comparator skips mismatched modes), so arm with the mode CI
@@ -134,6 +143,10 @@ echo "== campaign smoke (--quick: schema + determinism + legacy gates) =="
 cargo bench --bench campaign -- --quick
 compare_bench BENCH_campaign.json BENCH_campaign.baseline.json
 
+echo "== chaos smoke (--quick: seeded fault-injection determinism + visibility gates) =="
+cargo bench --bench chaos -- --quick
+compare_bench BENCH_chaos.json BENCH_chaos.baseline.json
+
 if [[ "${1:-}" == "--quick" ]]; then
     echo "CI OK (quick)"
     exit 0
@@ -143,7 +156,7 @@ echo "== selection bench smoke (--quick) =="
 cargo bench --bench selection -- --quick
 compare_bench BENCH_selection.json BENCH_selection.baseline.json
 
-echo "== endtoend bench smoke (--quick, ring + train divergence gates) =="
+echo "== endtoend bench smoke (--quick, ring + train + fsm divergence gates) =="
 cargo bench --bench endtoend -- --quick
 compare_bench BENCH_endtoend.json BENCH_endtoend.baseline.json
 

@@ -65,9 +65,10 @@ fn validate_schema(report: &Json, expect_cells: usize) -> Result<(), String> {
     for (i, cell) in cells.iter().enumerate() {
         for key in [
             "cell", "label", "env", "alpha", "energy_error", "load_error", "battery_wh",
-            "churn", "seed", "strategy", "rounds", "best_accuracy", "time_to_target_days",
-            "energy_to_target_kwh", "energy_kwh", "wasted_kwh", "mean_round_min",
-            "fairness_domain_std", "fairness_jain", "train_steps",
+            "churn", "chaos", "seed", "strategy", "rounds", "best_accuracy",
+            "time_to_target_days", "energy_to_target_kwh", "energy_kwh", "wasted_kwh",
+            "mean_round_min", "fairness_domain_std", "fairness_jain", "train_steps",
+            "rejected_updates", "timeout_rounds",
         ] {
             if cell.get(key).is_none() {
                 return Err(format!("cell {i} missing key {key:?}"));

@@ -1,0 +1,248 @@
+//! Fault-injection (chaos) benches + CI gates.
+//!
+//! Gates three robustness properties of the event-driven round engine:
+//!
+//! 1. **seeded-chaos determinism** — the same `ChaosSpec` + seed run
+//!    twice yields a bit-identical `MetricsLog` (compared structurally
+//!    AND as serialized JSON text): fault draws are pure functions of
+//!    (seed, client, round start), never of wall clock or scheduling;
+//! 2. **fault visibility** — the injector actually injects: with a
+//!    forced stale-update schedule against a semi-synchronous deadline
+//!    the run must meter rejected updates, deadline-closed rounds and
+//!    straggler waste, while the validation path stays clean;
+//! 3. **worker-count determinism under faults** — a campaign carrying
+//!    a chaos axis is byte-identical at 1, 2 and 8 workers, and every
+//!    cell carries the `rejected_updates` / `timeout_rounds` columns.
+//!
+//! Plus throughput: ns per simulated step with the injector on vs off
+//! (the price of the event queue + fault plans on a powered horizon).
+//!
+//! Results go to rust/BENCH_chaos.json; any gate failure exits non-zero
+//! (wired into ci.sh --quick beside the campaign gates).
+//!
+//! Flags: --quick  CI smoke (short horizon)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+use fedzero::coordinator::StrategyKind;
+use fedzero::energy::PowerDomain;
+use fedzero::fl::MockBackend;
+use fedzero::metrics::MetricsLog;
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::semisync::SemiSync;
+use fedzero::sim::{ChaosSpec, SimConfig, Simulation};
+use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
+use fedzero::util::bench::fmt_ns;
+use fedzero::util::json::Json;
+
+/// Constant-power mock fixture (same shape as the endtoend bench).
+fn sim_parts(
+    n_clients: usize,
+    n_domains: usize,
+    power_w: f64,
+    horizon: usize,
+) -> (Vec<ClientInfo>, Vec<PowerDomain>, Vec<Vec<f64>>, Vec<SeriesForecaster>) {
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[i % 3],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, i % n_domains, p, (0..60).collect(), 10)
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            let series = vec![power_w; horizon];
+            let fc = SeriesForecaster::realistic(series.clone(), i as u64, 60.0);
+            PowerDomain::new(i, "d", 800.0, series, fc, 1.0)
+        })
+        .collect();
+    let load: Vec<Vec<f64>> = (0..n_clients).map(|_| vec![0.0; horizon]).collect();
+    let load_fc: Vec<SeriesForecaster> = clients
+        .iter()
+        .map(|c| {
+            SeriesForecaster::realistic(vec![c.capacity(); horizon], 7, 60.0)
+        })
+        .collect();
+    (clients, domains, load, load_fc)
+}
+
+/// One FSM run over the fixture (SemiSync deadline so injected delays
+/// have a deadline to miss). Returns (metrics, train steps, ns/step).
+fn chaos_run(chaos: Option<ChaosSpec>, horizon: usize) -> (MetricsLog, u64, f64) {
+    let n_clients = 24;
+    let (clients, domains, load, load_fc) = sim_parts(n_clients, 6, 800.0, horizon);
+    let backend = MockBackend::new(n_clients, 2_048, 0.2, 7);
+    let mut strat = SemiSync::new(FedZero::new(SolverKind::Greedy), 15);
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 6,
+        d_max: 30,
+        eval_every: 50,
+        seed: 5,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &backend,
+        &mut strat,
+    );
+    sim.chaos = chaos;
+    let t0 = Instant::now();
+    sim.run().unwrap();
+    let ns = t0.elapsed().as_nanos() as f64 / horizon as f64;
+    let steps = sim.steps_executed();
+    (sim.metrics, steps, ns)
+}
+
+/// 2-cell campaign (calm + faulty twin) for the worker-count gate.
+fn campaign_spec(chaos: ChaosSpec) -> CampaignSpec {
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "chaos-bench".into();
+    spec.strategies = vec![StrategyKind::FedZero];
+    spec.chaos_axis = vec![None, Some(chaos)];
+    spec
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mode = if quick { "quick" } else { "default" };
+    println!("== chaos benches [{mode}] ==");
+    let horizon = if quick { 400 } else { 1_200 };
+
+    // aggressive schedule: every submission delayed past the 15-min
+    // deadline often enough that stale fencing MUST fire
+    let chaos = ChaosSpec {
+        dropout_per_round: 0.2,
+        stale_prob: 1.0,
+        mean_delay_min: 40.0,
+        ..ChaosSpec::default()
+    };
+
+    // --- seeded-chaos determinism + fault visibility -------------------
+    let (m_clean, steps_clean, ns_clean) = chaos_run(None, horizon);
+    let (m_a, steps_a, ns_chaos) = chaos_run(Some(chaos), horizon);
+    let (m_b, steps_b, _) = chaos_run(Some(chaos), horizon);
+    let det_mismatch = (m_a != m_b
+        || steps_a != steps_b
+        || m_a.to_json().to_string_pretty() != m_b.to_json().to_string_pretty())
+        as usize;
+    if det_mismatch > 0 {
+        eprintln!("CHAOS DETERMINISM FAILED: two identically seeded runs differ");
+    } else {
+        println!(
+            "chaos determinism: ok (two seeded runs bit-identical, {} rounds)",
+            m_a.rounds.len()
+        );
+    }
+    let mut vis_failures = 0usize;
+    for (ok, what) in [
+        (m_a.rejected_updates > 0, "no stale update was fenced"),
+        (m_a.timeout_rounds() > 0, "no round was closed by its deadline"),
+        (m_a.total_wasted_kwh() > 0.0, "stragglers metered no waste"),
+        (m_a.rejected_decisions == 0, "faults corrupted the validation path"),
+        (m_clean.rejected_updates == 0, "clean run fenced an update"),
+    ] {
+        if !ok {
+            eprintln!("FAULT VISIBILITY FAILED: {what}");
+            vis_failures += 1;
+        }
+    }
+    if vis_failures == 0 {
+        println!(
+            "fault visibility: ok ({} stale updates fenced, {} deadline rounds)",
+            m_a.rejected_updates,
+            m_a.timeout_rounds()
+        );
+    }
+    println!(
+        "chaos_step/24c_6p injector off {:>12} per step ({} rounds, {steps_clean} steps)",
+        fmt_ns(ns_clean),
+        m_clean.rounds.len()
+    );
+    println!(
+        "chaos_step/24c_6p injector on  {:>12} per step ({} rounds, {steps_a} steps)",
+        fmt_ns(ns_chaos),
+        m_a.rounds.len()
+    );
+
+    // --- campaign worker-count determinism under faults -----------------
+    let spec = campaign_spec(chaos);
+    let reference = run_campaign(&spec, 1).expect("serial chaos campaign failed");
+    let ref_text = reference.report_json().to_string_pretty();
+    let mut worker_divergence = 0usize;
+    for workers in [2usize, 8] {
+        let run = run_campaign(&spec, workers).expect("parallel chaos campaign failed");
+        if run.report_json().to_string_pretty() != ref_text {
+            eprintln!("CHAOS CAMPAIGN DIVERGENCE at {workers} workers");
+            worker_divergence += 1;
+        }
+    }
+    let parsed = Json::parse(&ref_text).expect("chaos report does not re-parse");
+    let cells = parsed.get("cells").and_then(|v| v.as_arr()).expect("no cells");
+    let mut schema_failures = 0usize;
+    for (i, c) in cells.iter().enumerate() {
+        for key in ["chaos", "rejected_updates", "timeout_rounds"] {
+            if c.get(key).is_none() {
+                eprintln!("CHAOS SCHEMA FAILED: cell {i} missing key {key:?}");
+                schema_failures += 1;
+            }
+        }
+    }
+    if worker_divergence == 0 && schema_failures == 0 {
+        println!(
+            "chaos campaign: ok ({} cells byte-identical at 1/2/8 workers)",
+            cells.len()
+        );
+    }
+
+    // --- machine-readable results --------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("chaos".into()));
+    root.insert("mode".into(), Json::Str(mode.into()));
+    root.insert("ns_per_step_clean".into(), Json::Num(ns_clean));
+    root.insert("ns_per_step_chaos".into(), Json::Num(ns_chaos));
+    root.insert("rounds_clean".into(), Json::Num(m_clean.rounds.len() as f64));
+    root.insert("rounds_chaos".into(), Json::Num(m_a.rounds.len() as f64));
+    root.insert(
+        "rejected_updates".into(),
+        Json::Num(m_a.rejected_updates as f64),
+    );
+    root.insert(
+        "timeout_rounds".into(),
+        Json::Num(m_a.timeout_rounds() as f64),
+    );
+    root.insert("determinism_mismatch".into(), Json::Num(det_mismatch as f64));
+    root.insert(
+        "visibility_failures".into(),
+        Json::Num(vis_failures as f64),
+    );
+    root.insert(
+        "campaign_divergence".into(),
+        Json::Num(worker_divergence as f64),
+    );
+    root.insert("schema_failures".into(), Json::Num(schema_failures as f64));
+    let out = Json::Obj(root).to_string_pretty();
+    let path = "BENCH_chaos.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if det_mismatch + vis_failures + worker_divergence + schema_failures > 0 {
+        eprintln!("chaos gates FAILED");
+        std::process::exit(1);
+    }
+    println!("== done ==");
+}

@@ -12,8 +12,12 @@
 //!    dirty-domain touch counter is hard-asserted to be zero), ns per
 //!    round-bearing step, the incremental-vs-fresh divergence gate
 //!    (ring view AND attached `IncrSelState` vs fresh builds; exits
-//!    non-zero on any decision or quick-gate mismatch), and the
-//!    f32-ring vs historical-f64 window footprint.
+//!    non-zero on any decision or quick-gate mismatch), the
+//!    **FSM-vs-legacy round-loop gate** (ns/round through the
+//!    event-driven state machine vs the legacy batch loop; with no
+//!    faults injected the two must be bit-identical in `MetricsLog`,
+//!    step totals and final global model), and the f32-ring vs
+//!    historical-f64 window footprint.
 //!
 //! Results go to rust/BENCH_endtoend.json for cross-PR tracking.
 //!
@@ -33,7 +37,7 @@ use fedzero::selection::fedzero::{FedZero, SolverKind};
 use fedzero::selection::incr::IncrSelState;
 use fedzero::selection::ring::{FcBuffers, FcSource, ForecastRing, SeriesSource};
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
-use fedzero::sim::{SimConfig, Simulation};
+use fedzero::sim::{ExecMode, SimConfig, Simulation};
 use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
 use fedzero::util::bench::fmt_ns;
 use fedzero::util::json::Json;
@@ -202,6 +206,52 @@ fn train_phase_cost(
         &backend,
         &mut strat,
     );
+    let t0 = Instant::now();
+    sim.run().unwrap();
+    let dt = t0.elapsed().as_nanos() as f64;
+    let rounds = sim.metrics.rounds.len();
+    let steps = sim.steps_executed();
+    let global = std::mem::take(&mut sim.final_global);
+    (dt / rounds.max(1) as f64, rounds, steps, sim.metrics, global)
+}
+
+/// Round-loop cost under one execution path: the same powered fixture
+/// run through the legacy batch loop or the event-driven round state
+/// machine. Returns (ns per executed round, rounds, train steps,
+/// metrics, final global model) so the caller can report the event
+/// queue's overhead AND gate on the two paths being bit-identical (the
+/// FSM determinism criterion: with no faults injected the state
+/// machine must reproduce the legacy `MetricsLog` exactly).
+fn fsm_phase_cost(
+    exec: ExecMode,
+    quick: bool,
+) -> (f64, usize, u64, fedzero::metrics::MetricsLog, Vec<f32>) {
+    let n_clients = 36;
+    let n_domains = 9;
+    let horizon = if quick { 300 } else { 900 };
+    let (clients, domains, load, load_fc) =
+        sim_parts(n_clients, n_domains, 500.0, horizon, true);
+    let backend = MockBackend::new(n_clients, 2_048, 0.2, 7);
+    let mut fz = FedZero::new(SolverKind::Greedy);
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 8,
+        d_max: 45,
+        eval_every: 50,
+        seed: 5,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &backend,
+        &mut fz,
+    );
+    sim.exec = exec;
     let t0 = Instant::now();
     sim.run().unwrap();
     let dt = t0.elapsed().as_nanos() as f64;
@@ -540,6 +590,31 @@ fn main() {
         eprintln!("TRAIN DIVERGENCE: sharded training != serial training");
     }
 
+    // --- round-loop cost: legacy batch loop vs event-driven FSM ---
+    // (the no-fault FSM run must be bit-identical to the legacy loop —
+    // gated below like the ring and train divergences)
+    println!("\n== round-loop cost (36c/9p, legacy vs event-driven FSM) ==");
+    let (ns_loop_leg, loop_rounds, loop_steps_leg, m_leg, g_leg) =
+        fsm_phase_cost(ExecMode::Legacy, quick);
+    let (ns_loop_fsm, _, loop_steps_fsm, m_fsm, g_fsm) =
+        fsm_phase_cost(ExecMode::Fsm, quick);
+    println!(
+        "round_loop/legacy           {:>12} per round ({loop_rounds} rounds, {loop_steps_leg} steps)",
+        fmt_ns(ns_loop_leg)
+    );
+    println!(
+        "round_loop/fsm              {:>12} per round (event-queue overhead {:+.1}%)",
+        fmt_ns(ns_loop_fsm),
+        (ns_loop_fsm / ns_loop_leg.max(1.0) - 1.0) * 100.0
+    );
+    let fsm_diverged = m_leg != m_fsm
+        || loop_steps_leg != loop_steps_fsm
+        || g_leg.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            != g_fsm.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    if fsm_diverged {
+        eprintln!("FSM DIVERGENCE: event-driven round loop != legacy loop");
+    }
+
     // --- ring-vs-fresh divergence gate ---
     println!("\n== ring-vs-fresh divergence gate ==");
     let gate_steps = if quick { 120 } else { 400 };
@@ -591,9 +666,22 @@ fn main() {
         m.insert("speedup".into(), Json::Num(train_speedup));
         root.insert("train_phase".into(), Json::Obj(m));
     }
+    {
+        let mut m = BTreeMap::new();
+        m.insert("clients".into(), Json::Num(36.0));
+        m.insert("domains".into(), Json::Num(9.0));
+        m.insert("rounds".into(), Json::Num(loop_rounds as f64));
+        m.insert("ns_per_round_legacy".into(), Json::Num(ns_loop_leg));
+        m.insert("ns_per_round_fsm".into(), Json::Num(ns_loop_fsm));
+        root.insert("round_loop".into(), Json::Obj(m));
+    }
     root.insert(
         "train_divergence".into(),
         Json::Num(if train_diverged { 1.0 } else { 0.0 }),
+    );
+    root.insert(
+        "fsm_divergence".into(),
+        Json::Num(if fsm_diverged { 1.0 } else { 0.0 }),
     );
     root.insert(
         "ring_divergence_mismatches".into(),
@@ -612,6 +700,10 @@ fn main() {
     }
     if train_diverged {
         eprintln!("serial-vs-sharded training equivalence FAILED");
+        std::process::exit(1);
+    }
+    if fsm_diverged {
+        eprintln!("FSM-vs-legacy round-loop equivalence FAILED");
         std::process::exit(1);
     }
     println!("== done ==");

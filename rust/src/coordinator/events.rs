@@ -1,0 +1,183 @@
+//! Client-event vocabulary and the deterministic event queue that
+//! drives the round state machine ([`super::fsm`]).
+//!
+//! Modeled on the `state_machine` / `events` split used by production
+//! FL coordinators (e.g. xaynet): the engine never mutates round
+//! liveness directly — every change of client state during a round
+//! (check-in, dropout, rejoin, update submission, deadline expiry)
+//! arrives as a [`ClientEvent`] popped from an [`EventQueue`].
+//!
+//! # Determinism rules
+//!
+//! The queue is a min-heap ordered by `(at, seq)` where `seq` is a
+//! monotone insertion counter. Two events due at the same timestep are
+//! therefore delivered in exactly the order they were pushed, and the
+//! push order itself is deterministic (round seeding iterates selected
+//! slots in ascending order; chaos schedules are pure functions of
+//! `(seed, client, round start)` — see [`crate::sim::chaos`]). No wall
+//! clock, no thread identity, no hash-map iteration feeds the queue,
+//! so a replay with the same seeds delivers the same events in the
+//! same order regardless of worker count.
+//!
+//! # Epoch fencing
+//!
+//! Every event carries the epoch token of the round that emitted it.
+//! The state machine compares that token against its current epoch and
+//! ignores (or, for [`ClientEvent::UpdateSubmitted`], rejects and
+//! meters) anything stale. This is what lets the queue persist across
+//! rounds: a delayed update pushed during round `r` can surface while
+//! round `r + 1` is running — or while the engine is idle — and is
+//! fenced off instead of silently aggregated.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One client-visible occurrence, tagged with the epoch of the round
+/// that scheduled it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientEvent {
+    /// A selected client acknowledges the round assignment.
+    CheckIn { client: usize, epoch: u64 },
+    /// A client delivers its model update for the round with the given
+    /// epoch token. Stale tokens are rejected and metered as waste.
+    UpdateSubmitted { client: usize, epoch: u64 },
+    /// A client goes offline (churn outage window opens, or a chaos
+    /// fault fires). Liveness is a depth counter, so overlapping
+    /// windows from independent sources compose.
+    Dropout { client: usize, epoch: u64 },
+    /// A client comes back online (matching a prior `Dropout`).
+    Rejoin { client: usize, epoch: u64 },
+    /// The round deadline (`SelectionDecision::max_duration`) expired.
+    Timeout { epoch: u64 },
+}
+
+impl ClientEvent {
+    /// The epoch token this event is fenced to.
+    pub fn epoch(&self) -> u64 {
+        match *self {
+            ClientEvent::CheckIn { epoch, .. }
+            | ClientEvent::UpdateSubmitted { epoch, .. }
+            | ClientEvent::Dropout { epoch, .. }
+            | ClientEvent::Rejoin { epoch, .. }
+            | ClientEvent::Timeout { epoch } => epoch,
+        }
+    }
+}
+
+/// An event scheduled for delivery at timestep `at`. Orders by
+/// `(at, seq)` ascending — `seq` breaks ties by insertion order.
+#[derive(Clone, Copy, Debug)]
+struct TimedEvent {
+    at: usize,
+    seq: u64,
+    ev: ClientEvent,
+}
+
+impl PartialEq for TimedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for TimedEvent {}
+
+impl Ord for TimedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the smallest (at, seq)
+        // pops first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+impl PartialOrd for TimedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic time-ordered event queue (min-heap over `(at, seq)`).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<TimedEvent>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `ev` for delivery at timestep `at`.
+    pub fn push(&mut self, at: usize, ev: ClientEvent) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(TimedEvent { at, seq, ev });
+    }
+
+    /// Pop the next event due at or before `now`, if any.
+    pub fn pop_due(&mut self, now: usize) -> Option<ClientEvent> {
+        match self.heap.peek() {
+            Some(te) if te.at <= now => Some(self.heap.pop().unwrap().ev),
+            _ => None,
+        }
+    }
+
+    /// Delivery time of the next pending event, if any.
+    pub fn peek_at(&self) -> Option<usize> {
+        self.heap.peek().map(|te| te.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop every pending event (used only by tests; the engine fences
+    /// stale events by epoch instead of clearing).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_then_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, ClientEvent::Timeout { epoch: 1 });
+        q.push(2, ClientEvent::Dropout { client: 3, epoch: 1 });
+        q.push(2, ClientEvent::Rejoin { client: 3, epoch: 1 });
+        q.push(0, ClientEvent::CheckIn { client: 0, epoch: 1 });
+
+        assert_eq!(q.pop_due(10), Some(ClientEvent::CheckIn { client: 0, epoch: 1 }));
+        // same `at`: insertion order (Dropout pushed before Rejoin)
+        assert_eq!(q.pop_due(10), Some(ClientEvent::Dropout { client: 3, epoch: 1 }));
+        assert_eq!(q.pop_due(10), Some(ClientEvent::Rejoin { client: 3, epoch: 1 }));
+        assert_eq!(q.pop_due(10), Some(ClientEvent::Timeout { epoch: 1 }));
+        assert_eq!(q.pop_due(10), None);
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(7, ClientEvent::Timeout { epoch: 0 });
+        assert_eq!(q.pop_due(6), None);
+        assert_eq!(q.peek_at(), Some(7));
+        assert!(q.pop_due(7).is_some());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_ordering() {
+        let mut q = EventQueue::new();
+        q.push(3, ClientEvent::Dropout { client: 0, epoch: 2 });
+        q.push(1, ClientEvent::Dropout { client: 1, epoch: 2 });
+        assert_eq!(q.pop_due(5), Some(ClientEvent::Dropout { client: 1, epoch: 2 }));
+        q.push(2, ClientEvent::Rejoin { client: 1, epoch: 2 });
+        assert_eq!(q.pop_due(5), Some(ClientEvent::Rejoin { client: 1, epoch: 2 }));
+        assert_eq!(q.pop_due(5), Some(ClientEvent::Dropout { client: 0, epoch: 2 }));
+    }
+}

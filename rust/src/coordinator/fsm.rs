@@ -1,0 +1,507 @@
+//! Event-driven round state machine: the coordinator-side lifecycle of
+//! one federated round, driven by the deterministic event queue in
+//! [`super::events`].
+//!
+//! # State diagram
+//!
+//! ```text
+//!            begin_round(decision)         start_training()
+//!   Idle ───────────────────────▶ Selecting ───────────────▶ Training
+//!    ▲      (validates; mints a                                  │
+//!    │       fresh epoch token)                                  │ close()
+//!    │                                                           │  · quorum (done ≥ n_required)
+//!    │ finish()                              round_end()         ▼  · Timeout event · horizon
+//!    └────────────── RoundEnd ◀──────────────────────── Aggregating
+//! ```
+//!
+//! While `Training`, the engine pops due events each timestep and feeds
+//! them through [`RoundFsm::apply`]:
+//!
+//! * `CheckIn` — a selected client acknowledges the assignment.
+//! * `Dropout` / `Rejoin` — liveness bookkeeping. Offline-ness is a
+//!   **depth counter** per slot, so overlapping windows from
+//!   independent sources (churn + chaos) compose: a client is online
+//!   iff its depth is zero.
+//! * `UpdateSubmitted` — counts toward the quorum iff its epoch token
+//!   matches the current round AND the round is still training;
+//!   anything else is reported as [`EventOutcome::StaleUpdate`] so the
+//!   engine can meter it as waste instead of silently aggregating it.
+//! * `Timeout` — fires [`EventOutcome::TimeoutFired`] iff current; the
+//!   engine then closes the round gracefully with whatever
+//!   participants met `m_min` (possibly none — an empty round degrades
+//!   to a no-op aggregation, never an error).
+//!
+//! # Epoch-token invariant
+//!
+//! `begin_round` mints `epoch + 1`; every event scheduled on behalf of
+//! that round carries the token. An event whose token differs from the
+//! machine's current epoch can NEVER mutate round state — it is either
+//! ignored (liveness, timeouts) or surfaced as a stale update. Because
+//! the event queue persists across rounds, this is the only thing
+//! standing between a delayed update from round `r` and the aggregate
+//! of round `r + 1`; the invariant is load-bearing and tested.
+//!
+//! # Determinism
+//!
+//! The machine itself is pure bookkeeping — no RNG, no clock. All
+//! nondeterminism lives in the event *sources* (churn, chaos), which
+//! are seeded pure functions; event *ordering* is fixed by the queue's
+//! `(at, seq)` order. Replaying the same decisions and events yields
+//! bit-identical state, which is what the legacy-loop-vs-FSM and
+//! two-run chaos gates in `sim::engine` / `benches/chaos.rs` assert.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::selection::SelectionDecision;
+
+use super::events::{ClientEvent, EventQueue};
+
+/// Lifecycle phase of the current round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// No round in flight; stale updates arriving now are rejected.
+    Idle,
+    /// A decision has been validated; clients are being checked in.
+    Selecting,
+    /// The round is executing; events mutate liveness and quorum.
+    Training,
+    /// The round has closed; submitted updates are being aggregated.
+    Aggregating,
+    /// Bookkeeping (metrics, strategy hooks) for the finished round.
+    RoundEnd,
+}
+
+/// A malformed [`SelectionDecision`] caught at the FSM boundary —
+/// returned as a structured error (and metered) instead of the
+/// historical `panic!` inside `execute_round`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionError {
+    /// The decision lists the same client more than once.
+    DuplicateClient { client: usize },
+    /// The decision references a client id outside the population.
+    UnknownClient { client: usize, n_clients: usize },
+}
+
+impl fmt::Display for DecisionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DecisionError::DuplicateClient { client } => write!(
+                f,
+                "rejected SelectionDecision: client {client} is listed more than once"
+            ),
+            DecisionError::UnknownClient { client, n_clients } => write!(
+                f,
+                "rejected SelectionDecision: client {client} is out of range \
+                 (population has {n_clients} clients)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecisionError {}
+
+/// Validate a decision against the population before any round state
+/// is touched. Empty decisions are valid (they degrade to a no-op
+/// round), duplicates and out-of-range ids are not.
+pub fn validate_decision(
+    decision: &SelectionDecision,
+    n_clients: usize,
+) -> Result<(), DecisionError> {
+    let mut seen = vec![false; n_clients];
+    for &c in &decision.clients {
+        if c >= n_clients {
+            return Err(DecisionError::UnknownClient { client: c, n_clients });
+        }
+        if seen[c] {
+            return Err(DecisionError::DuplicateClient { client: c });
+        }
+        seen[c] = true;
+    }
+    Ok(())
+}
+
+/// What the engine must do in response to one applied event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventOutcome {
+    /// Round state was updated; nothing further to do.
+    Accepted,
+    /// An update with a stale epoch token (or arriving outside a
+    /// training round) was rejected — meter it as waste.
+    StaleUpdate,
+    /// The current round's deadline expired — close the round now.
+    TimeoutFired,
+    /// Stale liveness event or a client not in this round; no-op.
+    Ignored,
+}
+
+/// The per-round state machine. One instance lives on the simulation
+/// for its whole run — the epoch counter is monotone across rounds;
+/// per-slot state is rebuilt by each `begin_round`.
+#[derive(Debug)]
+pub struct RoundFsm {
+    phase: RoundPhase,
+    epoch: u64,
+    /// client id → slot index within the current round
+    slot_of: HashMap<usize, usize>,
+    checked_in: Vec<bool>,
+    /// offline depth per slot (0 = online); a counter so overlapping
+    /// churn + chaos windows compose correctly
+    offline_depth: Vec<u32>,
+    submitted: Vec<bool>,
+    done: usize,
+    n_required: usize,
+    timed_out: bool,
+}
+
+impl Default for RoundFsm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoundFsm {
+    pub fn new() -> Self {
+        RoundFsm {
+            phase: RoundPhase::Idle,
+            epoch: 0,
+            slot_of: HashMap::new(),
+            checked_in: Vec::new(),
+            offline_depth: Vec::new(),
+            submitted: Vec::new(),
+            done: 0,
+            n_required: 0,
+            timed_out: false,
+        }
+    }
+
+    pub fn phase(&self) -> RoundPhase {
+        self.phase
+    }
+
+    /// The current round's epoch token (monotone across rounds).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// `Idle → Selecting`: validate the decision, mint a fresh epoch,
+    /// initialise per-slot state, and schedule the ceremonial
+    /// `CheckIn` events plus the round's `Timeout` at `t0 + cap`.
+    pub fn begin_round(
+        &mut self,
+        decision: &SelectionDecision,
+        n_clients: usize,
+        t0: usize,
+        round_cap: usize,
+        queue: &mut EventQueue,
+    ) -> Result<(), DecisionError> {
+        debug_assert_eq!(self.phase, RoundPhase::Idle, "begin_round from {:?}", self.phase);
+        validate_decision(decision, n_clients)?;
+        self.epoch += 1;
+        let k = decision.clients.len();
+        self.phase = RoundPhase::Selecting;
+        self.slot_of.clear();
+        for (s, &c) in decision.clients.iter().enumerate() {
+            self.slot_of.insert(c, s);
+            queue.push(t0, ClientEvent::CheckIn { client: c, epoch: self.epoch });
+        }
+        self.checked_in = vec![false; k];
+        self.offline_depth = vec![0; k];
+        self.submitted = vec![false; k];
+        self.done = 0;
+        self.n_required = decision.n_required;
+        self.timed_out = false;
+        queue.push(t0 + round_cap, ClientEvent::Timeout { epoch: self.epoch });
+        Ok(())
+    }
+
+    /// Record an offline window already open at round start (the event
+    /// queue only carries transitions *inside* the round span).
+    pub fn add_initial_offline(&mut self, slot: usize) {
+        self.offline_depth[slot] += 1;
+    }
+
+    /// `Selecting → Training`.
+    pub fn start_training(&mut self) {
+        debug_assert_eq!(self.phase, RoundPhase::Selecting);
+        self.phase = RoundPhase::Training;
+    }
+
+    /// Feed one event through the machine. Epoch fencing happens here:
+    /// stale tokens never mutate state.
+    pub fn apply(&mut self, ev: &ClientEvent) -> EventOutcome {
+        let current = ev.epoch() == self.epoch;
+        match *ev {
+            ClientEvent::CheckIn { client, .. } => {
+                if current
+                    && matches!(self.phase, RoundPhase::Selecting | RoundPhase::Training)
+                {
+                    if let Some(&s) = self.slot_of.get(&client) {
+                        self.checked_in[s] = true;
+                        return EventOutcome::Accepted;
+                    }
+                }
+                EventOutcome::Ignored
+            }
+            ClientEvent::Dropout { client, .. } => {
+                if current && self.phase == RoundPhase::Training {
+                    if let Some(&s) = self.slot_of.get(&client) {
+                        self.offline_depth[s] += 1;
+                        return EventOutcome::Accepted;
+                    }
+                }
+                EventOutcome::Ignored
+            }
+            ClientEvent::Rejoin { client, .. } => {
+                if current && self.phase == RoundPhase::Training {
+                    if let Some(&s) = self.slot_of.get(&client) {
+                        self.offline_depth[s] = self.offline_depth[s].saturating_sub(1);
+                        return EventOutcome::Accepted;
+                    }
+                }
+                EventOutcome::Ignored
+            }
+            ClientEvent::UpdateSubmitted { client, .. } => {
+                if current && self.phase == RoundPhase::Training {
+                    if let Some(&s) = self.slot_of.get(&client) {
+                        if !self.submitted[s] {
+                            self.submitted[s] = true;
+                            self.done += 1;
+                            return EventOutcome::Accepted;
+                        }
+                    }
+                }
+                // stale token, closed round, unknown client, or double
+                // submission — all rejected, all metered
+                EventOutcome::StaleUpdate
+            }
+            ClientEvent::Timeout { .. } => {
+                if current && self.phase == RoundPhase::Training {
+                    EventOutcome::TimeoutFired
+                } else {
+                    EventOutcome::Ignored
+                }
+            }
+        }
+    }
+
+    /// Is the client in this round's slot `slot` currently online?
+    pub fn online(&self, slot: usize) -> bool {
+        self.offline_depth[slot] == 0
+    }
+
+    pub fn checked_in(&self, slot: usize) -> bool {
+        self.checked_in[slot]
+    }
+
+    /// Has slot `slot` delivered its (epoch-current) update?
+    pub fn submitted(&self, slot: usize) -> bool {
+        self.submitted[slot]
+    }
+
+    /// Updates accepted so far this round.
+    pub fn submissions(&self) -> usize {
+        self.done
+    }
+
+    /// Has the round met its quorum (`done ≥ n_required`)?
+    pub fn quorum(&self) -> bool {
+        self.done >= self.n_required
+    }
+
+    /// Did this round close on its deadline rather than its quorum?
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+
+    /// `Training → Aggregating`: the round stops executing steps.
+    pub fn close(&mut self, timed_out: bool) {
+        debug_assert_eq!(self.phase, RoundPhase::Training);
+        self.phase = RoundPhase::Aggregating;
+        self.timed_out = timed_out;
+    }
+
+    /// `Aggregating → RoundEnd`: the (possibly empty) aggregate has
+    /// been applied to the global model.
+    pub fn round_end(&mut self) {
+        debug_assert_eq!(self.phase, RoundPhase::Aggregating);
+        self.phase = RoundPhase::RoundEnd;
+    }
+
+    /// `RoundEnd → Idle`: per-round bookkeeping is done. Per-slot state
+    /// is dropped; the epoch counter survives so late events from this
+    /// round stay fenced forever.
+    pub fn finish(&mut self) {
+        debug_assert_eq!(self.phase, RoundPhase::RoundEnd);
+        self.phase = RoundPhase::Idle;
+        self.slot_of.clear();
+        self.checked_in.clear();
+        self.offline_depth.clear();
+        self.submitted.clear();
+        self.done = 0;
+        self.n_required = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decision(clients: Vec<usize>, n_required: usize) -> SelectionDecision {
+        SelectionDecision {
+            clients,
+            expected_duration: 5,
+            n_required,
+            max_duration: 10,
+            wait: false,
+            unconstrained: false,
+        }
+    }
+
+    #[test]
+    fn validate_catches_duplicates_and_unknowns() {
+        assert_eq!(
+            validate_decision(&decision(vec![1, 2, 1], 2), 5),
+            Err(DecisionError::DuplicateClient { client: 1 })
+        );
+        assert_eq!(
+            validate_decision(&decision(vec![0, 7], 2), 5),
+            Err(DecisionError::UnknownClient { client: 7, n_clients: 5 })
+        );
+        assert!(validate_decision(&decision(vec![0, 4, 2], 3), 5).is_ok());
+        assert!(validate_decision(&decision(vec![], 0), 5).is_ok());
+    }
+
+    #[test]
+    fn full_lifecycle_reaches_idle_again() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        let d = decision(vec![3, 1], 2);
+        assert_eq!(fsm.phase(), RoundPhase::Idle);
+        fsm.begin_round(&d, 5, 0, 10, &mut q).unwrap();
+        assert_eq!(fsm.phase(), RoundPhase::Selecting);
+        assert_eq!(fsm.epoch(), 1);
+        fsm.start_training();
+
+        // check-ins were queued at t0
+        while let Some(ev) = q.pop_due(0) {
+            fsm.apply(&ev);
+        }
+        assert!(fsm.checked_in(0) && fsm.checked_in(1));
+
+        let e = fsm.epoch();
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 3, epoch: e }),
+            EventOutcome::Accepted
+        );
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 1, epoch: e }),
+            EventOutcome::Accepted
+        );
+        assert!(fsm.quorum());
+        fsm.close(false);
+        assert_eq!(fsm.phase(), RoundPhase::Aggregating);
+        fsm.round_end();
+        fsm.finish();
+        assert_eq!(fsm.phase(), RoundPhase::Idle);
+        // epoch survives the reset
+        assert_eq!(fsm.epoch(), 1);
+    }
+
+    #[test]
+    fn stale_epoch_updates_are_fenced() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![0, 1], 2), 3, 0, 10, &mut q).unwrap();
+        fsm.start_training();
+        // token from a previous round
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: 0 }),
+            EventOutcome::StaleUpdate
+        );
+        assert_eq!(fsm.submissions(), 0);
+        // current token after the round closed is equally stale
+        fsm.close(true);
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: fsm.epoch() }),
+            EventOutcome::StaleUpdate
+        );
+        assert_eq!(fsm.submissions(), 0);
+    }
+
+    #[test]
+    fn double_submission_is_rejected() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![0], 1), 3, 0, 10, &mut q).unwrap();
+        fsm.start_training();
+        let e = fsm.epoch();
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: e }),
+            EventOutcome::Accepted
+        );
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: e }),
+            EventOutcome::StaleUpdate
+        );
+        assert_eq!(fsm.submissions(), 1);
+    }
+
+    #[test]
+    fn offline_depth_composes_overlapping_windows() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![4], 1), 5, 0, 10, &mut q).unwrap();
+        fsm.start_training();
+        let e = fsm.epoch();
+        assert!(fsm.online(0));
+        // churn window opens, then a chaos fault overlaps it
+        fsm.apply(&ClientEvent::Dropout { client: 4, epoch: e });
+        fsm.apply(&ClientEvent::Dropout { client: 4, epoch: e });
+        assert!(!fsm.online(0));
+        fsm.apply(&ClientEvent::Rejoin { client: 4, epoch: e });
+        assert!(!fsm.online(0), "still inside the second window");
+        fsm.apply(&ClientEvent::Rejoin { client: 4, epoch: e });
+        assert!(fsm.online(0));
+        // stale liveness events are ignored
+        assert_eq!(
+            fsm.apply(&ClientEvent::Dropout { client: 4, epoch: e + 1 }),
+            EventOutcome::Ignored
+        );
+        assert!(fsm.online(0));
+    }
+
+    #[test]
+    fn timeout_fires_only_for_current_training_round() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![0], 1), 3, 0, 10, &mut q).unwrap();
+        fsm.start_training();
+        assert_eq!(
+            fsm.apply(&ClientEvent::Timeout { epoch: 0 }),
+            EventOutcome::Ignored
+        );
+        assert_eq!(
+            fsm.apply(&ClientEvent::Timeout { epoch: fsm.epoch() }),
+            EventOutcome::TimeoutFired
+        );
+        fsm.close(true);
+        assert!(fsm.timed_out());
+        // after close, even the current token is ignored
+        assert_eq!(
+            fsm.apply(&ClientEvent::Timeout { epoch: fsm.epoch() }),
+            EventOutcome::Ignored
+        );
+    }
+
+    #[test]
+    fn begin_round_rejects_malformed_decisions_without_state_change() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        let err = fsm.begin_round(&decision(vec![2, 2], 2), 5, 0, 10, &mut q);
+        assert!(matches!(err, Err(DecisionError::DuplicateClient { client: 2 })));
+        assert_eq!(fsm.phase(), RoundPhase::Idle);
+        assert_eq!(fsm.epoch(), 0, "no epoch minted for a rejected decision");
+        assert!(q.is_empty(), "no events scheduled for a rejected decision");
+    }
+}

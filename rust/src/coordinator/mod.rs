@@ -2,6 +2,13 @@
 //! dataset, backend, strategy and simulator together and runs one
 //! experiment end to end. Every `repro` CLI subcommand and example builds
 //! on this.
+//!
+//! The round lifecycle itself lives in [`fsm`] (the event-driven state
+//! machine the engine executes rounds through) and [`events`] (the
+//! deterministic client-event queue feeding it).
+
+pub mod events;
+pub mod fsm;
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -15,6 +22,7 @@ use crate::fl::{MockBackend, TrainBackend, XlaBackend};
 use crate::scenario::{build_env, EnvConfig, EnvSpec};
 use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
+use crate::selection::adaptive::ChurnAware;
 use crate::selection::baselines::{Baseline, UpperBound};
 use crate::selection::fedzero::{FedZero, SolverKind};
 use crate::selection::semisync::SemiSync;
@@ -37,6 +45,11 @@ pub enum StrategyKind {
     UpperBound,
     /// §7 extension: FedZero selection + fixed-deadline aggregation
     SemiSync,
+    /// §7 extension: FedZero with churn-aware reactive over-selection
+    /// (`selection::adaptive::ChurnAware`)
+    FedZeroCa,
+    /// §7 extension: SemiSync with churn-aware reactive over-selection
+    SemiSyncCa,
 }
 
 impl StrategyKind {
@@ -70,6 +83,16 @@ impl StrategyKind {
                 FedZero::new(SolverKind::Greedy),
                 15,
             )),
+            StrategyKind::FedZeroCa => Box::new(ChurnAware::new(
+                FedZero::new(SolverKind::Greedy),
+                "FedZero ca",
+                true,
+            )),
+            StrategyKind::SemiSyncCa => Box::new(ChurnAware::new(
+                SemiSync::new(FedZero::new(SolverKind::Greedy), 15),
+                "SemiSync ca",
+                false,
+            )),
         }
     }
 
@@ -85,6 +108,8 @@ impl StrategyKind {
             StrategyKind::OortFc => "Oort fc",
             StrategyKind::UpperBound => "Upper bound",
             StrategyKind::SemiSync => "SemiSync",
+            StrategyKind::FedZeroCa => "FedZero ca",
+            StrategyKind::SemiSyncCa => "SemiSync ca",
         }
     }
 
@@ -100,6 +125,8 @@ impl StrategyKind {
             "oortfc" => StrategyKind::OortFc,
             "upperbound" | "upper" => StrategyKind::UpperBound,
             "semisync" => StrategyKind::SemiSync,
+            "fedzeroca" => StrategyKind::FedZeroCa,
+            "semisyncca" => StrategyKind::SemiSyncCa,
             other => return Err(anyhow!("unknown strategy {other}")),
         })
     }
@@ -283,6 +310,7 @@ fn run_with_backend<B: TrainBackend>(
         strategy.as_mut(),
     );
     sim.outages = built.outages;
+    sim.chaos = env_spec(spec).chaos;
     sim.run()?;
     let wallclock_s = t0.elapsed().as_secs_f64();
     let select_time_ms = sim.select_time.as_secs_f64() * 1e3;
@@ -372,6 +400,13 @@ mod tests {
     #[test]
     fn strategy_parse_roundtrip() {
         for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+        }
+        for k in [
+            StrategyKind::SemiSync,
+            StrategyKind::FedZeroCa,
+            StrategyKind::SemiSyncCa,
+        ] {
             assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
         }
         assert!(StrategyKind::parse("bogus").is_err());

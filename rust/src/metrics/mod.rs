@@ -22,6 +22,9 @@ pub struct RoundRecord {
     /// campaign report
     pub wasted_wh: f64,
     pub mean_loss: f64,
+    /// the round closed on its deadline/horizon with fewer than
+    /// `n_required` submitted updates (instead of on its quorum)
+    pub timed_out: bool,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -39,11 +42,23 @@ pub struct MetricsLog {
     pub rounds: Vec<RoundRecord>,
     pub evals: Vec<EvalRecord>,
     pub step_minutes: f64,
+    /// updates rejected for carrying a stale epoch token (arrived
+    /// after their round closed) — metered, never aggregated
+    pub rejected_updates: usize,
+    /// malformed `SelectionDecision`s rejected at the FSM boundary
+    /// (duplicate / out-of-range clients)
+    pub rejected_decisions: usize,
 }
 
 impl MetricsLog {
     pub fn new(step_minutes: f64) -> Self {
-        MetricsLog { rounds: Vec::new(), evals: Vec::new(), step_minutes }
+        MetricsLog {
+            rounds: Vec::new(),
+            evals: Vec::new(),
+            step_minutes,
+            rejected_updates: 0,
+            rejected_decisions: 0,
+        }
     }
 
     pub fn best_accuracy(&self) -> f64 {
@@ -104,6 +119,12 @@ impl MetricsLog {
         stats::mean(&self.round_durations_min())
     }
 
+    /// rounds that closed on their deadline/horizon instead of their
+    /// quorum (the Semi-Sync / chaos robustness column)
+    pub fn timeout_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.timed_out).count()
+    }
+
     /// participation count per client id (who completed m_min)
     pub fn participation_counts(&self, n_clients: usize) -> Vec<usize> {
         let mut counts = vec![0usize; n_clients];
@@ -150,6 +171,9 @@ impl MetricsLog {
             ("step_minutes", num(self.step_minutes)),
             ("best_accuracy", num(self.best_accuracy())),
             ("total_energy_kwh", num(self.total_energy_kwh())),
+            ("rejected_updates", num(self.rejected_updates as f64)),
+            ("rejected_decisions", num(self.rejected_decisions as f64)),
+            ("timeout_rounds", num(self.timeout_rounds() as f64)),
             (
                 "rounds",
                 arr(self
@@ -165,6 +189,7 @@ impl MetricsLog {
                             ("energy_wh", num(r.energy_wh)),
                             ("wasted_wh", num(r.wasted_wh)),
                             ("mean_loss", num(r.mean_loss)),
+                            ("timed_out", Json::Bool(r.timed_out)),
                         ])
                     })
                     .collect()),
@@ -218,6 +243,7 @@ impl MetricsLog {
                 energy_wh: 500.0,
                 wasted_wh: 60.0,
                 mean_loss: 1.0,
+                timed_out: round == 3,
             });
             m.evals.push(EvalRecord {
                 round,
@@ -308,5 +334,21 @@ mod tests {
     fn durations() {
         let m = MetricsLog::dummy_for_tests();
         assert!((m.mean_round_duration_min() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn robustness_counters_roundtrip() {
+        let mut m = MetricsLog::dummy_for_tests();
+        m.rejected_updates = 3;
+        m.rejected_decisions = 1;
+        assert_eq!(m.timeout_rounds(), 1, "dummy marks round 3 timed out");
+        let parsed =
+            crate::util::json::Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("rejected_updates").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("rejected_decisions").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("timeout_rounds").unwrap().as_usize(), Some(1));
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds[0].get("timed_out").unwrap().as_bool(), Some(false));
+        assert_eq!(rounds[3].get("timed_out").unwrap().as_bool(), Some(true));
     }
 }

@@ -15,18 +15,21 @@
 //!   "load_error": ["realistic"],
 //!   "battery_wh_axis": [0, 500],
 //!   "churn_axis": [null, {"outages_per_day": 2, "mean_outage_min": 45}],
+//!   "chaos_axis": [null, {"dropout_per_round": 0.2, "stale_prob": 0.1}],
 //!   "strategies": ["FedZero", "Random", "Oort-1.3n"],
 //!   "seeds": [0, 1, 2]
 //! }
 //! ```
 //!
 //! Every axis is optional. `envs` entries are preset names or full
-//! [`EnvSpec`] objects (with an optional `"name"`); `battery_wh_axis`
-//! and `churn_axis`, when present, override the envs' own knobs cell by
-//! cell. The grid is the cartesian product expanded in the FIXED nested
-//! order env → alpha → energy_error → load_error → battery → churn →
-//! seed → strategy, so cell indices (and the report) are stable across
-//! machines and worker counts.
+//! [`EnvSpec`] objects (with an optional `"name"`); `battery_wh_axis`,
+//! `churn_axis` and `chaos_axis`, when present, override the envs' own
+//! knobs cell by cell. The grid is the cartesian product expanded in the
+//! FIXED nested order env → alpha → energy_error → load_error →
+//! battery → churn → chaos → seed → strategy, so cell indices (and the
+//! report) are stable across machines and worker counts. Chaos is a
+//! sim-time knob (see [`crate::sim::chaos`]): cells differing only in
+//! chaos still share one memoised environment build.
 //!
 //! ## Determinism
 //!
@@ -63,6 +66,7 @@ use crate::util::stats;
 
 use super::churn::ChurnSpec;
 use super::spec::{error_level_name, parse_error_level, EnvSpec};
+use crate::sim::ChaosSpec;
 
 /// One sweep definition: base experiment shape + grid axes.
 #[derive(Clone, Debug)]
@@ -86,6 +90,8 @@ pub struct CampaignSpec {
     pub battery_axis: Vec<f64>,
     /// empty = each env keeps its own churn knob; `None` entry = no churn
     pub churn_axis: Vec<Option<ChurnSpec>>,
+    /// empty = each env keeps its own chaos knob; `None` entry = no faults
+    pub chaos_axis: Vec<Option<ChaosSpec>>,
     pub seeds: Vec<u64>,
     pub strategies: Vec<StrategyKind>,
 }
@@ -110,6 +116,7 @@ impl CampaignSpec {
             load_errors: vec![ErrorLevel::Realistic],
             battery_axis: Vec::new(),
             churn_axis: Vec::new(),
+            chaos_axis: Vec::new(),
             seeds: vec![0],
             strategies: vec![StrategyKind::FedZero, StrategyKind::Random],
         }
@@ -195,6 +202,15 @@ impl CampaignSpec {
                 })
                 .collect::<Result<_>>()?;
         }
+        if let Some(items) = j.get("chaos_axis").and_then(|v| v.as_arr()) {
+            spec.chaos_axis = items
+                .iter()
+                .map(|v| match v {
+                    Json::Null => Ok(None),
+                    other => ChaosSpec::from_json(other).map(Some),
+                })
+                .collect::<Result<_>>()?;
+        }
         if let Some(items) = j.get("seeds").and_then(|v| v.as_arr()) {
             spec.seeds = items
                 .iter()
@@ -242,41 +258,52 @@ impl CampaignSpec {
         } else {
             self.churn_axis.iter().map(|c| Some(*c)).collect()
         };
+        let chaoses: Vec<Option<Option<ChaosSpec>>> = if self.chaos_axis.is_empty() {
+            vec![None]
+        } else {
+            self.chaos_axis.iter().map(|c| Some(*c)).collect()
+        };
         for (env_name, env) in &self.envs {
             for &alpha in &self.alphas {
                 for &ee in &self.energy_errors {
                     for &le in &self.load_errors {
                         for battery in &batteries {
                             for churn in &churns {
-                                for &seed in &self.seeds {
-                                    for &strategy in &self.strategies {
-                                        let mut env = env.clone();
-                                        if let Some(b) = battery {
-                                            env.battery_wh =
-                                                if *b > 0.0 { vec![*b] } else { Vec::new() };
+                                for chaos in &chaoses {
+                                    for &seed in &self.seeds {
+                                        for &strategy in &self.strategies {
+                                            let mut env = env.clone();
+                                            if let Some(b) = battery {
+                                                env.battery_wh =
+                                                    if *b > 0.0 { vec![*b] } else { Vec::new() };
+                                            }
+                                            if let Some(c) = churn {
+                                                env.churn = *c;
+                                            }
+                                            if let Some(c) = chaos {
+                                                env.chaos = *c;
+                                            }
+                                            let label = format!(
+                                                "{env_name}/a{alpha}/ee-{}/le-{}/bat{}/churn{}/chaos{}/s{seed}/{}",
+                                                error_level_name(ee),
+                                                error_level_name(le),
+                                                env.battery_of(0),
+                                                env.churn.is_some() as u8,
+                                                env.chaos.is_some() as u8,
+                                                strategy.name(),
+                                            );
+                                            cells.push(CampaignCell {
+                                                index: cells.len(),
+                                                label,
+                                                env_name: env_name.clone(),
+                                                env,
+                                                alpha,
+                                                energy_error: ee,
+                                                load_error: le,
+                                                seed,
+                                                strategy,
+                                            });
                                         }
-                                        if let Some(c) = churn {
-                                            env.churn = *c;
-                                        }
-                                        let label = format!(
-                                            "{env_name}/a{alpha}/ee-{}/le-{}/bat{}/churn{}/s{seed}/{}",
-                                            error_level_name(ee),
-                                            error_level_name(le),
-                                            env.battery_of(0),
-                                            env.churn.is_some() as u8,
-                                            strategy.name(),
-                                        );
-                                        cells.push(CampaignCell {
-                                            index: cells.len(),
-                                            label,
-                                            env_name: env_name.clone(),
-                                            env,
-                                            alpha,
-                                            energy_error: ee,
-                                            load_error: le,
-                                            seed,
-                                            strategy,
-                                        });
                                     }
                                 }
                             }
@@ -344,6 +371,10 @@ pub struct CellResult {
     pub fairness_domain_std: f64,
     pub fairness_jain: f64,
     pub train_steps: u64,
+    /// epoch-fenced stale submissions rejected by the round FSM
+    pub rejected_updates: usize,
+    /// rounds closed by their deadline's `Timeout` event
+    pub timeout_rounds: usize,
 }
 
 impl CellResult {
@@ -365,6 +396,8 @@ impl CellResult {
             fairness_domain_std: between_std,
             fairness_jain: stats::jain(&shares),
             train_steps: report.steps_executed,
+            rejected_updates: m.rejected_updates,
+            timeout_rounds: m.timeout_rounds(),
         }
     }
 
@@ -379,6 +412,7 @@ impl CellResult {
             ("load_error", s(error_level_name(self.cell.load_error))),
             ("battery_wh", num(self.cell.env.battery_of(0))),
             ("churn", Json::Bool(self.cell.env.churn.is_some())),
+            ("chaos", Json::Bool(self.cell.env.chaos.is_some())),
             ("seed", num(self.cell.seed as f64)),
             ("strategy", s(self.cell.strategy.name())),
             ("rounds", num(self.rounds as f64)),
@@ -392,6 +426,8 @@ impl CellResult {
             ("fairness_domain_std", num(self.fairness_domain_std)),
             ("fairness_jain", num(self.fairness_jain)),
             ("train_steps", num(self.train_steps as f64)),
+            ("rejected_updates", num(self.rejected_updates as f64)),
+            ("timeout_rounds", num(self.timeout_rounds as f64)),
         ])
     }
 }
@@ -571,20 +607,27 @@ mod tests {
         spec.battery_axis = vec![0.0, 500.0];
         spec.churn_axis =
             vec![None, Some(ChurnSpec { outages_per_day: 2.0, mean_outage_min: 30.0 })];
+        spec.chaos_axis = vec![None, Some(ChaosSpec::default())];
         spec.seeds = vec![0, 1, 2];
         let cells = spec.expand();
-        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3 * 2);
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 2 * 3 * 2);
         // fixed nesting: strategy is the innermost axis, env the outermost
         assert_eq!(cells[0].strategy, StrategyKind::FedZero);
         assert_eq!(cells[1].strategy, StrategyKind::Random);
         assert_eq!(cells[0].env_name, "global");
         assert_eq!(cells.last().unwrap().env_name, "colocated");
-        // battery/churn overrides resolved into the cell envs
+        // battery/churn/chaos overrides resolved into the cell envs
         assert_eq!(cells[0].env.battery_of(0), 0.0);
         assert!(cells[0].env.churn.is_none());
+        assert!(cells[0].env.chaos.is_none());
         let last = cells.last().unwrap();
         assert_eq!(last.env.battery_of(0), 500.0);
         assert!(last.env.churn.is_some());
+        assert!(last.env.chaos.is_some());
+        // chaos nests between churn and seed: with 3 seeds × 2 strategies
+        // inside it, consecutive 6-cell blocks alternate the chaos flag
+        assert!(cells[..6].iter().all(|c| c.env.chaos.is_none()));
+        assert!(cells[6..12].iter().all(|c| c.env.chaos.is_some()));
         // indices are dense and ordered
         for (k, c) in cells.iter().enumerate() {
             assert_eq!(c.index, k);
@@ -604,6 +647,7 @@ mod tests {
             "energy_error": ["perfect", "realistic"],
             "battery_wh_axis": [0, 250],
             "churn_axis": [null, {"outages_per_day": 1, "mean_outage_min": 30}],
+            "chaos_axis": [null, {"dropout_per_round": 0.2}],
             "strategies": ["FedZero"],
             "seeds": [7]
         }"#;
@@ -615,7 +659,10 @@ mod tests {
         assert_eq!(spec.battery_axis, vec![0.0, 250.0]);
         assert_eq!(spec.churn_axis.len(), 2);
         assert!(spec.churn_axis[0].is_none());
-        assert_eq!(spec.expand().len(), 2 * 2 * 2 * 2 * 2);
+        assert_eq!(spec.chaos_axis.len(), 2);
+        assert!(spec.chaos_axis[0].is_none());
+        assert_eq!(spec.chaos_axis[1].unwrap().dropout_per_round, 0.2);
+        assert_eq!(spec.expand().len(), 2 * 2 * 2 * 2 * 2 * 2);
         // bad specs are rejected
         assert!(CampaignSpec::from_json(&Json::parse(r#"{"strategies": []}"#).unwrap()).is_err());
         assert!(
@@ -657,5 +704,32 @@ mod tests {
         let parsed = Json::parse(&text).unwrap();
         assert_eq!(parsed.get("n_cells").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chaos_cells_share_one_environment_build() {
+        let mut spec = CampaignSpec::smoke();
+        spec.strategies = vec![StrategyKind::FedZero];
+        spec.chaos_axis = vec![
+            None,
+            Some(ChaosSpec { dropout_per_round: 0.5, ..ChaosSpec::default() }),
+        ];
+        let run = run_campaign(&spec, 1).unwrap();
+        assert_eq!(run.results.len(), 2);
+        // chaos is a sim-time knob: both cells must hit one shared build
+        assert_eq!(run.memo_misses, 1);
+        assert_eq!(run.memo_hits, 1);
+        for r in &run.results {
+            assert!(r.rounds > 0, "{} did no rounds", r.cell.label);
+        }
+        // the chaos flag and robustness counters land in the report
+        let parsed = Json::parse(&run.report_json().to_string_pretty()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("chaos").unwrap().as_bool(), Some(false));
+        assert_eq!(cells[1].get("chaos").unwrap().as_bool(), Some(true));
+        for c in cells {
+            assert!(c.get("rejected_updates").unwrap().as_f64().is_some());
+            assert!(c.get("timeout_rounds").unwrap().as_f64().is_some());
+        }
     }
 }

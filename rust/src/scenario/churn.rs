@@ -18,14 +18,21 @@
 //! traces, and a spec without churn is bit-identical to the legacy
 //! builder (the equivalence gate in `scenario::tests` relies on this).
 //!
-//! Enforcement lives in `sim::engine::execute_round`: an offline client
-//! is excluded from the active set before power requests are built, so
-//! it is granted **no energy and no batches** for the step — the unit
-//! tests below pin that down end to end. Selection intentionally stays
-//! unaware of future outages (the server cannot forecast churn); a
-//! selected client that drops mid-round simply stalls and, if it misses
-//! `m_min`, is discarded as a straggler, feeding the campaign's waste
-//! metric.
+//! Enforcement: under the event-driven engine (the default,
+//! `sim::ExecMode::Fsm`) each window overlapping a round is translated
+//! into `Dropout`/`Rejoin` events on the coordinator's queue — churn is
+//! just one event source among several ([`crate::sim::chaos`] is
+//! another), and the round state machine composes overlapping windows
+//! via per-client offline depth. The legacy loop checks windows
+//! directly (`online_at`); both paths exclude an offline client from
+//! the active set before power requests are built, so it is granted
+//! **no energy and no batches** for the step — the unit tests below pin
+//! that down end to end. Selection intentionally stays unaware of
+//! future outages (the server cannot forecast churn); a selected client
+//! that drops mid-round simply stalls and, if it misses `m_min`, is
+//! discarded as a straggler, feeding the campaign's waste metric. The
+//! `FedZero ca` / `SemiSync ca` strategies react to the *observed*
+//! dropout rate by over-selecting ([`crate::selection::adaptive`]).
 
 use anyhow::{bail, Result};
 

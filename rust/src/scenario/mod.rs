@@ -27,14 +27,18 @@
 //!   "device_mix": [0.7, 0.2, 0.1],     // [small, mid, large] weights
 //!   "energy_error_params": {"sigma0": 0.2, "sigma_max": 0.35,
 //!                           "bias": 0.02},
-//!   "churn": {"outages_per_day": 1.5, "mean_outage_min": 45}
+//!   "churn": {"outages_per_day": 1.5, "mean_outage_min": 45},
+//!   "chaos": {"dropout_per_round": 0.1, "stale_prob": 0.05, ...}
 //! }
 //! ```
 //!
 //! Every field is optional; the empty object is the paper's global
-//! scenario. See [`campaign`] for the campaign schema that wraps this
-//! with sweep axes (site sets, Dirichlet α grids, forecast-error
-//! regimes, batteries, churn, strategies, seeds).
+//! scenario. `"chaos"` (schema in [`crate::sim::chaos`]) is the only
+//! sim-time field: it injects round-scoped faults through the event
+//! queue and never touches the environment build. See [`campaign`] for
+//! the campaign schema that wraps this with sweep axes (site sets,
+//! Dirichlet α grids, forecast-error regimes, batteries, churn, chaos,
+//! strategies, seeds).
 //!
 //! ## Bit-equivalence contract
 //!

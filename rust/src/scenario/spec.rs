@@ -5,6 +5,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::Scenario;
+use crate::sim::ChaosSpec;
 use crate::trace::forecast::ErrorLevel;
 use crate::trace::solar::{self, Site};
 use crate::util::json::Json;
@@ -98,6 +99,11 @@ pub struct EnvSpec {
     pub energy_error_params: Option<ErrorParams>,
     /// client-churn model (None = full availability, the paper's setting)
     pub churn: Option<ChurnSpec>,
+    /// round-scoped fault injection (None = no faults, the paper's
+    /// setting). Applied at simulation time, NOT during the environment
+    /// build — deliberately excluded from [`EnvSpec::cache_key`] so
+    /// campaign cells differing only in chaos share a memoised build.
+    pub chaos: Option<ChaosSpec>,
 }
 
 impl EnvSpec {
@@ -121,6 +127,7 @@ impl EnvSpec {
             device_mix: None,
             energy_error_params: None,
             churn: None,
+            chaos: None,
         }
     }
 
@@ -249,13 +256,19 @@ impl EnvSpec {
         if let Some(v) = j.get("churn") {
             spec.churn = Some(ChurnSpec::from_json(v)?);
         }
+        if let Some(v) = j.get("chaos") {
+            spec.chaos = Some(ChaosSpec::from_json(v)?);
+        }
         spec.validate()?;
         Ok(spec)
     }
 
     /// Deterministic memoization key over every trace-shaping field (the
     /// campaign runner builds one environment per distinct key+seed and
-    /// shares it immutably across cells).
+    /// shares it immutably across cells). `chaos` is deliberately NOT part
+    /// of the key: fault injection happens at simulation time and leaves
+    /// the built environment untouched, so cells that differ only in
+    /// chaos must share one build.
     pub fn cache_key(&self) -> String {
         use std::fmt::Write as _;
         let mut k = String::new();
@@ -442,5 +455,19 @@ mod tests {
         assert_ne!(a.cache_key(), b.cache_key());
         assert_ne!(a.cache_key(), c.cache_key());
         assert_eq!(a.cache_key(), EnvSpec::global().cache_key());
+    }
+
+    #[test]
+    fn chaos_parses_but_does_not_split_the_build_cache() {
+        let j = Json::parse(r#"{"chaos": {"dropout_per_round": 0.3}}"#).unwrap();
+        let spec = EnvSpec::from_json(&j).unwrap();
+        let chaos = spec.chaos.expect("chaos key should parse");
+        assert_eq!(chaos.dropout_per_round, 0.3);
+        assert_eq!(chaos.stale_prob, ChaosSpec::default().stale_prob);
+        // sim-time knob: same environment build → same cache key
+        assert_eq!(spec.cache_key(), EnvSpec::global().cache_key());
+        // invalid chaos is rejected at parse time
+        let j = Json::parse(r#"{"chaos": {"slow_factor": 2.0}}"#).unwrap();
+        assert!(EnvSpec::from_json(&j).is_err());
     }
 }

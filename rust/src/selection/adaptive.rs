@@ -1,0 +1,298 @@
+//! Churn-aware reactive over-selection (satellite of the robustness PR).
+//!
+//! The paper's over-selection baselines (`Random 1.3n`, `Oort 1.3n`) pad
+//! the cohort by a FIXED factor, paid on every round whether clients
+//! actually drop or not. This wrapper instead tracks the *observed*
+//! per-round dropout rate `p̂` (EWMA over `1 − participants/selected`)
+//! and asks the inner strategy for
+//!
+//! ```text
+//! n' = min( ceil(n · 1/(1 − min(p̂, 0.9))), MAX_FACTOR·n, |clients| )
+//! ```
+//!
+//! clients — no churn observed ⇒ no padding ⇒ bit-identical to the
+//! inner strategy; heavy churn ⇒ up to `MAX_FACTOR`× over-selection.
+//! It is the first *reactive* strategy in the repo and is evaluated on
+//! the campaign's churn/chaos axes as `FedZero ca` / `SemiSync ca`.
+//!
+//! Quorum semantics differ by inner strategy:
+//!
+//! * wrapping an as-soon-as-quorum policy (FedZero), `override_quorum`
+//!   pins `n_required` back to the original `n` — the padding exists
+//!   purely to absorb dropouts, not to demand more completions;
+//! * wrapping SemiSync (`override_quorum = false`), the inner wrapper
+//!   already sets `n_required = |clients|` with a fixed deadline, and
+//!   the round closes on the deadline's `Timeout` event regardless.
+//!
+//! If the inner strategy cannot fill the boosted cohort (`wait`), we
+//! fall back to the un-boosted request rather than stalling the round.
+
+use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
+use crate::util::rng::Rng;
+
+/// EWMA weight for the newest round's observed dropout rate.
+const EMA_ALPHA: f64 = 0.3;
+/// Over-selection never exceeds this multiple of the requested n.
+const MAX_FACTOR: f64 = 2.0;
+
+pub struct ChurnAware<S: Strategy> {
+    pub inner: S,
+    name: &'static str,
+    /// EWMA of the observed per-round dropout rate, in [0, 1)
+    p_hat: f64,
+    /// pin `n_required` back to the un-boosted n (see module docs)
+    override_quorum: bool,
+    /// cohort size of the last non-wait decision (EWMA denominator)
+    last_selected: usize,
+}
+
+impl<S: Strategy> ChurnAware<S> {
+    pub fn new(inner: S, name: &'static str, override_quorum: bool) -> Self {
+        ChurnAware { inner, name, p_hat: 0.0, override_quorum, last_selected: 0 }
+    }
+
+    /// current dropout-rate estimate (exposed for tests/reporting)
+    pub fn p_hat(&self) -> f64 {
+        self.p_hat
+    }
+
+    fn boosted_n(&self, ctx: &SelectionContext) -> usize {
+        let factor = (1.0 / (1.0 - self.p_hat.min(0.9))).min(MAX_FACTOR);
+        let boosted = ((ctx.n as f64) * factor).ceil() as usize;
+        boosted.max(ctx.n).min(ctx.clients.len())
+    }
+}
+
+impl<S: Strategy> Strategy for ChurnAware<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn needs_forecasts(&self) -> bool {
+        self.inner.needs_forecasts()
+    }
+
+    fn needs_spare_now(&self) -> bool {
+        self.inner.needs_spare_now()
+    }
+
+    fn uses_selection_state(&self) -> bool {
+        self.inner.uses_selection_state()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> SelectionDecision {
+        let boosted = self.boosted_n(ctx);
+        let mut d = if boosted > ctx.n {
+            let boosted_ctx = SelectionContext {
+                now: ctx.now,
+                n: boosted,
+                d_max: ctx.d_max,
+                clients: ctx.clients,
+                states: ctx.states,
+                domains: ctx.domains,
+                fc: ctx.fc,
+                incr: ctx.incr,
+                spare_now: ctx.spare_now,
+            };
+            let d = self.inner.select(&boosted_ctx, rng);
+            if d.wait {
+                // the environment can't feed the padded cohort right now —
+                // degrade to the plain request instead of stalling
+                self.inner.select(ctx, rng)
+            } else {
+                d
+            }
+        } else {
+            self.inner.select(ctx, rng)
+        };
+        if d.wait {
+            return d;
+        }
+        if self.override_quorum {
+            d.n_required = ctx.n.min(d.clients.len());
+        }
+        self.last_selected = d.clients.len();
+        d
+    }
+
+    fn on_round_end(
+        &mut self,
+        participants: &[usize],
+        states: &mut [ClientRoundState],
+        rng: &mut Rng,
+    ) {
+        if self.last_selected > 0 {
+            let observed =
+                1.0 - (participants.len() as f64 / self.last_selected as f64);
+            self.p_hat = (1.0 - EMA_ALPHA) * self.p_hat + EMA_ALPHA * observed;
+        }
+        self.inner.on_round_end(participants, states, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+    use crate::energy::PowerDomain;
+    use crate::selection::baselines::Baseline;
+    use crate::selection::fedzero::{FedZero, SolverKind};
+    use crate::trace::forecast::SeriesForecaster;
+
+    fn fixture() -> (
+        Vec<ClientInfo>,
+        Vec<ClientRoundState>,
+        Vec<PowerDomain>,
+        Vec<Vec<f64>>,
+        Vec<Vec<f64>>,
+        Vec<f64>,
+    ) {
+        let clients: Vec<ClientInfo> = (0..8)
+            .map(|i| {
+                let p = ClientProfile::new(
+                    DeviceType::Mid,
+                    ModelKind::Vision,
+                    10,
+                    1.0,
+                );
+                ClientInfo::new(i, i % 2, p, (0..50).collect(), 10)
+            })
+            .collect();
+        let domains: Vec<PowerDomain> = (0..2)
+            .map(|i| {
+                let series = vec![700.0; 120];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let states = vec![ClientRoundState::default(); 8];
+        let energy_fc =
+            domains.iter().map(|d| d.forecast_window_wh(0, 60)).collect();
+        let spare_fc =
+            clients.iter().map(|c| vec![c.capacity(); 60]).collect();
+        let spare_now = clients.iter().map(|c| c.capacity()).collect();
+        (clients, states, domains, energy_fc, spare_fc, spare_now)
+    }
+
+    fn ctx<'a>(
+        n: usize,
+        clients: &'a [ClientInfo],
+        states: &'a [ClientRoundState],
+        domains: &'a [PowerDomain],
+        fcb: &'a crate::selection::ring::FcBuffers,
+        snow: &'a [f64],
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            now: 0,
+            n,
+            d_max: 60,
+            clients,
+            states,
+            domains,
+            fc: fcb.view(),
+            incr: None,
+            spare_now: snow,
+        }
+    }
+
+    #[test]
+    fn no_observed_churn_means_no_boost() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
+        let c = ctx(3, &clients, &states, &domains, &fcb, &snow);
+        let mut plain = Baseline::random();
+        let mut wrapped = ChurnAware::new(Baseline::random(), "ca", true);
+        // same rng stream, p_hat = 0 → bit-identical decisions
+        let d0 = plain.select(&c, &mut Rng::new(7));
+        let d1 = wrapped.select(&c, &mut Rng::new(7));
+        assert_eq!(d0, d1);
+        assert_eq!(wrapped.p_hat(), 0.0);
+    }
+
+    #[test]
+    fn observed_dropouts_grow_the_cohort_with_pinned_quorum() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
+        let c = ctx(3, &clients, &states, &domains, &fcb, &snow);
+        let mut rng = Rng::new(7);
+        let mut s = ChurnAware::new(Baseline::random(), "ca", true);
+        // several rounds where 2 of 3 selected clients drop
+        let mut states_mut = states.clone();
+        for _ in 0..8 {
+            let d = s.select(&c, &mut rng);
+            assert!(!d.wait);
+            s.on_round_end(&d.clients[..1], &mut states_mut, &mut rng);
+        }
+        assert!(s.p_hat() > 0.3, "EWMA should have converged upward");
+        let d = s.select(&c, &mut rng);
+        assert!(d.clients.len() > 3, "cohort should be over-selected");
+        assert_eq!(d.n_required, 3, "quorum stays at the requested n");
+    }
+
+    #[test]
+    fn boost_is_capped_by_factor_and_population() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
+        let c = ctx(5, &clients, &states, &domains, &fcb, &snow);
+        let mut s = ChurnAware::new(Baseline::random(), "ca", true);
+        s.p_hat = 0.99; // extreme churn: rate clamps to 0.9, factor to 2.0
+        assert_eq!(s.boosted_n(&c), 8); // ceil(5·2) = 10 → capped to 8 clients
+        s.p_hat = 0.5; // factor 2.0 → ceil(5·2)=10 → capped to 8 clients
+        assert_eq!(s.boosted_n(&c), 8);
+        s.p_hat = 0.25; // factor 4/3 → ceil(5·4/3) = 7
+        assert_eq!(s.boosted_n(&c), 7);
+    }
+
+    #[test]
+    fn composes_with_fedzero_and_recovers_downward() {
+        let (clients, states, domains, efc, sfc, snow) = fixture();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
+        let c = ctx(2, &clients, &states, &domains, &fcb, &snow);
+        let mut rng = Rng::new(1);
+        let mut s =
+            ChurnAware::new(FedZero::new(SolverKind::Greedy), "FedZero ca", true);
+        s.p_hat = 0.5;
+        let d = s.select(&c, &mut rng);
+        assert!(!d.wait);
+        assert!(d.clients.len() > 2);
+        assert_eq!(d.n_required, 2);
+        // churn subsides: full participation decays p_hat toward 0
+        let mut states_mut = states.clone();
+        let before = s.p_hat();
+        s.on_round_end(&d.clients.clone(), &mut states_mut, &mut rng);
+        assert!(s.p_hat() < before);
+    }
+
+    #[test]
+    fn wait_passes_through_untouched() {
+        let (clients, states, _domains, _efc, sfc, snow) = fixture();
+        let domains: Vec<PowerDomain> = (0..2)
+            .map(|i| {
+                let series = vec![0.0; 120];
+                PowerDomain::new(
+                    i,
+                    "d",
+                    800.0,
+                    series.clone(),
+                    SeriesForecaster::perfect(series),
+                    1.0,
+                )
+            })
+            .collect();
+        let efc: Vec<Vec<f64>> =
+            domains.iter().map(|d| d.forecast_window_wh(0, 60)).collect();
+        let fcb = crate::selection::ring::FcBuffers::from_rows(&efc, &sfc, 60);
+        let c = ctx(2, &clients, &states, &domains, &fcb, &snow);
+        let mut rng = Rng::new(2);
+        let mut s =
+            ChurnAware::new(FedZero::new(SolverKind::Greedy), "FedZero ca", true);
+        s.p_hat = 0.5;
+        assert!(s.select(&c, &mut rng).wait);
+    }
+}

@@ -9,6 +9,7 @@
 //! * [`baselines`] — Random / Oort (±1.3n over-selection, ±forecast
 //!   filtering) and the unconstrained Upper Bound.
 
+pub mod adaptive;
 pub mod arena;
 pub mod baselines;
 pub mod fairness;

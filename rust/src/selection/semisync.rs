@@ -7,6 +7,13 @@
 //! straggler tolerance for potentially discarded work. Implemented as a
 //! wrapper so it composes with any underlying selection policy (FedZero,
 //! Random, Oort).
+//!
+//! The deadline is enforced through `max_duration`: under the
+//! event-driven engine ([`crate::coordinator::fsm`]) it becomes the
+//! round's `Timeout` event, so a semi-sync round closes exactly like any
+//! timed-out round — gracefully, with whatever participants finished —
+//! and late submissions are epoch-fenced and metered rather than
+//! silently aggregated.
 
 use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
 use crate::util::rng::Rng;

@@ -1,0 +1,283 @@
+//! Chaos engine: seeded fault injection for round execution.
+//!
+//! Where `scenario::churn` models *availability* (clients vanish on
+//! their own schedule, horizon-wide, independent of rounds), chaos
+//! models *round-scoped faults* — the failure modes the FedZero paper
+//! argues a coordinator must tolerate but which a batch simulator never
+//! exercises: a selected client dying mid-round, an update arriving
+//! after the round closed (stale epoch token), a device silently
+//! running at a fraction of its profiled speed. Each fault becomes an
+//! event (`Dropout`/`Rejoin`, a delayed `UpdateSubmitted`) or a
+//! capacity scale fed to the round state machine
+//! ([`crate::coordinator::fsm`]); nothing here touches the engine's
+//! numeric state directly.
+//!
+//! # Determinism rules
+//!
+//! A client's fault plan for a round is a **pure function** of
+//! `(experiment seed, client id, round start step)` — the draw happens
+//! in [`ChaosSpec::round_plan`] on a freshly seeded [`Rng`] with a
+//! dedicated stream tag, in a fixed draw order (drop? → offset →
+//! duration → delay? → slow?). Consequences:
+//!
+//! * two runs with the same seed produce byte-identical fault
+//!   schedules — the two-run gate in `ci.sh` / `benches/chaos.rs`;
+//! * plans are independent of evaluation order, so campaign reports
+//!   are byte-identical at any worker count;
+//! * adding chaos to a spec cannot perturb churn, partitioning, or any
+//!   other seeded stream (independent stream tags, same idiom as
+//!   `CHURN_STREAM`).
+//!
+//! Chaos requires the FSM execution path (`ExecMode::Fsm`); the legacy
+//! loop has no event vocabulary to express these faults and the engine
+//! refuses the combination rather than silently ignoring it.
+//!
+//! # JSON schema (an `EnvSpec`'s optional `"chaos"` key)
+//!
+//! ```json
+//! {
+//!   "dropout_per_round": 0.1,   // P(mid-round fault) per selected client per round
+//!   "mean_drop_min":     15.0,  // mean fault duration, minutes (exponential)
+//!   "stale_prob":        0.05,  // P(update submission is delayed)
+//!   "mean_delay_min":    10.0,  // mean submission delay, minutes (exponential)
+//!   "slow_prob":         0.1,   // P(client runs slow this round)
+//!   "slow_factor":       0.5    // capacity multiplier when slow, in (0, 1]
+//! }
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Stream tag separating chaos draws from churn and every other
+/// consumer of the experiment seed.
+const CHAOS_STREAM: u64 = 0x43_48_41_4F_53; // "CHAOS"
+
+/// Fault-injection axis of an [`crate::scenario::EnvSpec`]. Applied at
+/// simulation time (it does not affect the environment build, so
+/// campaign cells differing only in chaos share a memoised build).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// probability a selected client suffers a mid-round dropout fault
+    pub dropout_per_round: f64,
+    /// mean fault duration in minutes (exponential, floored to 1 step)
+    pub mean_drop_min: f64,
+    /// probability a client's update submission is delayed past the
+    /// step it finishes in (stale if the round closes first)
+    pub stale_prob: f64,
+    /// mean submission delay in minutes (exponential, floored to 1 step)
+    pub mean_delay_min: f64,
+    /// probability a client runs slow for the whole round
+    pub slow_prob: f64,
+    /// effective-capacity multiplier for a slow client, in (0, 1]
+    pub slow_factor: f64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            dropout_per_round: 0.1,
+            mean_drop_min: 15.0,
+            stale_prob: 0.05,
+            mean_delay_min: 10.0,
+            slow_prob: 0.1,
+            slow_factor: 0.5,
+        }
+    }
+}
+
+/// One client's fault plan for one round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlotChaos {
+    /// offline window relative to round start: `(offset, len)` steps.
+    /// `offset == 0` means the fault is already open at round start.
+    pub drop_window: Option<(usize, usize)>,
+    /// steps between finishing `m_min` and the update actually
+    /// arriving (0 = same step, the no-fault behavior)
+    pub submit_delay: usize,
+    /// effective-capacity multiplier for this round (1.0 = nominal)
+    pub slow: f64,
+}
+
+impl SlotChaos {
+    pub const NONE: SlotChaos =
+        SlotChaos { drop_window: None, submit_delay: 0, slow: 1.0 };
+}
+
+impl ChaosSpec {
+    pub fn from_json(j: &Json) -> Result<ChaosSpec> {
+        let d = ChaosSpec::default();
+        let spec = ChaosSpec {
+            dropout_per_round: j
+                .get("dropout_per_round")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.dropout_per_round),
+            mean_drop_min: j
+                .get("mean_drop_min")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.mean_drop_min),
+            stale_prob: j.get("stale_prob").and_then(|v| v.as_f64()).unwrap_or(d.stale_prob),
+            mean_delay_min: j
+                .get("mean_delay_min")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.mean_delay_min),
+            slow_prob: j.get("slow_prob").and_then(|v| v.as_f64()).unwrap_or(d.slow_prob),
+            slow_factor: j.get("slow_factor").and_then(|v| v.as_f64()).unwrap_or(d.slow_factor),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("dropout_per_round", self.dropout_per_round),
+            ("stale_prob", self.stale_prob),
+            ("slow_prob", self.slow_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("chaos {name} must be a probability in [0, 1], got {p}");
+            }
+        }
+        if self.mean_drop_min <= 0.0 || self.mean_delay_min <= 0.0 {
+            bail!(
+                "chaos mean_drop_min / mean_delay_min must be > 0, got {} / {}",
+                self.mean_drop_min,
+                self.mean_delay_min
+            );
+        }
+        if !(self.slow_factor > 0.0 && self.slow_factor <= 1.0) {
+            bail!("chaos slow_factor must be in (0, 1], got {}", self.slow_factor);
+        }
+        Ok(())
+    }
+
+    /// Draw client `client`'s fault plan for the round starting at step
+    /// `t0` with duration cap `round_cap`. Pure in `(self, seed,
+    /// client, t0, round_cap, step_minutes)` — see the module docs for
+    /// why that purity is the determinism guarantee.
+    pub fn round_plan(
+        &self,
+        seed: u64,
+        client: usize,
+        t0: usize,
+        round_cap: usize,
+        step_minutes: f64,
+    ) -> SlotChaos {
+        let mut rng = Rng::new(
+            seed ^ CHAOS_STREAM
+                ^ (client as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (t0 as u64).wrapping_mul(0xA24BAED4963EE407),
+        );
+        // fixed draw order: drop? → offset → duration → delay? → slow?
+        let drop_window = if rng.bool(self.dropout_per_round) {
+            let off = rng.below(round_cap.max(1));
+            let mean_steps = (self.mean_drop_min / step_minutes).max(1.0);
+            let len = (rng.exponential(1.0 / mean_steps).ceil() as usize).max(1);
+            Some((off, len))
+        } else {
+            None
+        };
+        let submit_delay = if rng.bool(self.stale_prob) {
+            let mean_steps = (self.mean_delay_min / step_minutes).max(1.0);
+            (rng.exponential(1.0 / mean_steps).ceil() as usize).max(1)
+        } else {
+            0
+        };
+        let slow = if rng.bool(self.slow_prob) { self.slow_factor } else { 1.0 };
+        SlotChaos { drop_window, submit_delay, slow }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_plan_is_a_pure_function_of_its_inputs() {
+        let spec = ChaosSpec {
+            dropout_per_round: 0.5,
+            stale_prob: 0.5,
+            slow_prob: 0.5,
+            ..ChaosSpec::default()
+        };
+        for client in 0..50 {
+            for t0 in [0usize, 17, 240] {
+                let a = spec.round_plan(7, client, t0, 30, 1.0);
+                let b = spec.round_plan(7, client, t0, 30, 1.0);
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn plans_differ_across_clients_rounds_and_seeds() {
+        let spec = ChaosSpec { dropout_per_round: 1.0, ..ChaosSpec::default() };
+        let base = spec.round_plan(7, 0, 0, 30, 1.0);
+        let mut distinct = 0;
+        for (seed, client, t0) in [(7u64, 1usize, 0usize), (7, 0, 30), (8, 0, 0)] {
+            if spec.round_plan(seed, client, t0, 30, 1.0) != base {
+                distinct += 1;
+            }
+        }
+        assert!(distinct >= 2, "independent streams should decorrelate plans");
+    }
+
+    #[test]
+    fn zero_probability_spec_injects_nothing() {
+        let spec = ChaosSpec {
+            dropout_per_round: 0.0,
+            stale_prob: 0.0,
+            slow_prob: 0.0,
+            ..ChaosSpec::default()
+        };
+        for client in 0..20 {
+            assert_eq!(spec.round_plan(3, client, 100, 30, 1.0), SlotChaos::NONE);
+        }
+    }
+
+    #[test]
+    fn certain_faults_always_fire_within_bounds() {
+        let spec = ChaosSpec {
+            dropout_per_round: 1.0,
+            stale_prob: 1.0,
+            slow_prob: 1.0,
+            slow_factor: 0.25,
+            ..ChaosSpec::default()
+        };
+        for client in 0..20 {
+            let p = spec.round_plan(11, client, 60, 30, 1.0);
+            let (off, len) = p.drop_window.expect("dropout_per_round = 1");
+            assert!(off < 30);
+            assert!(len >= 1);
+            assert!(p.submit_delay >= 1);
+            assert_eq!(p.slow, 0.25);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let j = Json::parse(
+            r#"{"dropout_per_round": 0.3, "mean_drop_min": 5.0, "stale_prob": 1.0,
+                "mean_delay_min": 2.0, "slow_prob": 0.2, "slow_factor": 0.8}"#,
+        )
+        .unwrap();
+        let spec = ChaosSpec::from_json(&j).unwrap();
+        assert_eq!(spec.dropout_per_round, 0.3);
+        assert_eq!(spec.slow_factor, 0.8);
+        // defaults fill missing keys
+        let spec = ChaosSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(spec, ChaosSpec::default());
+        // validation rejects nonsense
+        assert!(ChaosSpec::from_json(
+            &Json::parse(r#"{"dropout_per_round": 1.5}"#).unwrap()
+        )
+        .is_err());
+        assert!(
+            ChaosSpec::from_json(&Json::parse(r#"{"slow_factor": 0.0}"#).unwrap()).is_err()
+        );
+        assert!(
+            ChaosSpec::from_json(&Json::parse(r#"{"mean_drop_min": -1}"#).unwrap()).is_err()
+        );
+    }
+}

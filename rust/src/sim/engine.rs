@@ -50,10 +50,29 @@
 //!   client states (no per-round model copies), and total train steps
 //!   are a deterministic per-client reduction (`Simulation::steps_executed`)
 //!   instead of a shared mutable counter.
+//!
+//! §Robustness — round execution is event-driven by default
+//! ([`ExecMode::Fsm`]): each round runs through the coordinator state
+//! machine ([`crate::coordinator::fsm`]) with liveness (churn windows,
+//! chaos faults), update submission, and the round deadline all
+//! delivered as epoch-tagged events from a deterministic queue
+//! ([`crate::coordinator::events`]). Stale-token updates are rejected
+//! and metered (`MetricsLog::rejected_updates`), never aggregated;
+//! malformed decisions are rejected at the FSM boundary with a
+//! structured [`crate::coordinator::fsm::DecisionError`] instead of a
+//! panic. The historical batch loop survives as [`ExecMode::Legacy`] —
+//! the bit-for-bit oracle: with no chaos injected, the FSM path
+//! executes the identical float-op sequence (same grant computation,
+//! same serial apply order, same quorum checkpoint), so `MetricsLog`,
+//! the energy meter, and the global model are bitwise equal between
+//! the two modes (tests below and the `benches/endtoend.rs` gate).
+//! Chaos ([`crate::sim::chaos`]) requires the FSM path.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::client::ClientInfo;
+use crate::coordinator::events::{ClientEvent, EventQueue};
+use crate::coordinator::fsm::{self, EventOutcome, RoundFsm};
 use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
 use crate::fl::{fedavg_weights, ClientTrainState, TrainBackend, TrainJob};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
@@ -65,6 +84,19 @@ use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
 use crate::util::par;
 use crate::util::par::thresholds;
 use crate::util::rng::Rng;
+
+use super::chaos::ChaosSpec;
+
+/// Which round-execution path the engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The historical batch loop — kept as the bit-for-bit oracle for
+    /// the FSM path. Cannot express chaos faults.
+    Legacy,
+    /// Event-driven execution through the coordinator state machine
+    /// (the default). With no chaos, bitwise-equal to `Legacy`.
+    Fsm,
+}
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -105,6 +137,9 @@ pub struct RoundOutcome {
     pub energy_wh: f64,
     /// the stragglers' share of `energy_wh` — spent on discarded work
     pub wasted_wh: f64,
+    /// the round closed on its deadline/horizon with fewer than
+    /// `n_required` updates (instead of on its quorum)
+    pub timed_out: bool,
 }
 
 /// Everything needed to simulate one experiment configuration.
@@ -141,6 +176,18 @@ pub struct Simulation<'a, B: TrainBackend> {
     /// cannot forecast outages); a client that drops mid-round stalls
     /// and, if it misses m_min, is discarded as a straggler.
     pub outages: Vec<Vec<(usize, usize)>>,
+    /// which round-execution path to use (default [`ExecMode::Fsm`];
+    /// the legacy loop is kept as the bitwise oracle)
+    pub exec: ExecMode,
+    /// optional fault injection (FSM path only): per-round dropout /
+    /// stale-update / slow-client schedules, seeded pure draws
+    pub chaos: Option<ChaosSpec>,
+    /// the coordinator round state machine — persistent so the epoch
+    /// counter is monotone across rounds (stale fencing)
+    pub fsm: RoundFsm,
+    /// the deterministic event queue — persistent so delayed updates
+    /// can surface (and be rejected) after their round ended
+    pub events: EventQueue,
     // --- state ---
     pub states: Vec<ClientRoundState>,
     /// persistent per-client train state (local params, data cursor,
@@ -228,12 +275,21 @@ impl FcSource for EngineFcSource<'_> {
 /// and emit `(slot, batch_steps)` grants. Domains never share slots, so
 /// the snapshot equals the live value and parallel == serial, bit for
 /// bit. The caller applies grants (progress/meter/training) serially.
+///
+/// Liveness comes either from the outage-window scan (`liveness:
+/// None`, the legacy path) or from per-slot flags maintained by the
+/// round state machine (`Some` — the FSM path, where churn AND chaos
+/// both feed the same depth counter). `slow` optionally scales a
+/// slot's effective compute capacity (chaos slow-client faults); the
+/// no-fault paths pass `None`, leaving the float sequence untouched.
 #[allow(clippy::too_many_arguments)]
 fn compute_domain_grants(
     clients: &[ClientInfo],
     domains: &[PowerDomain],
     load_actual: &[Vec<f64>],
     outages: &[Vec<(usize, usize)>],
+    liveness: Option<&[bool]>,
+    slow: Option<&[f64]>,
     sel: &[usize],
     progress: &[f64],
     unconstrained: bool,
@@ -246,16 +302,20 @@ fn compute_domain_grants(
 ) {
     out.clear();
     active.clear();
-    // an offline (churned-out) client is dropped BEFORE requests are
-    // built, so it is granted neither energy nor batches this step —
-    // on either the constrained or the unconstrained (Upper Bound) path
+    // an offline (churned-out or chaos-dropped) client is dropped
+    // BEFORE requests are built, so it is granted neither energy nor
+    // batches this step — on either the constrained or the
+    // unconstrained (Upper Bound) path
     active.extend(
         slots
             .iter()
             .copied()
             .filter(|&s| {
                 progress[s] < clients[sel[s]].m_max - 1e-9
-                    && online_at(outages, sel[s], tt)
+                    && match liveness {
+                        Some(lv) => lv[s],
+                        None => online_at(outages, sel[s], tt),
+                    }
             }),
     );
     if active.is_empty() {
@@ -265,7 +325,11 @@ fn compute_domain_grants(
         // Upper bound: full capacity, grid energy
         for &s in active.iter() {
             let c = &clients[sel[s]];
-            out.push((s, c.capacity().min(c.m_max - progress[s])));
+            let cap = match slow {
+                Some(sl) => c.capacity() * sl[s],
+                None => c.capacity(),
+            };
+            out.push((s, cap.min(c.m_max - progress[s])));
         }
         return;
     }
@@ -273,7 +337,10 @@ fn compute_domain_grants(
     reqs.extend(active.iter().map(|&s| {
         let c = &clients[sel[s]];
         let delta = c.delta();
-        let spare = spare_actual_raw(clients, load_actual, sel[s], tt);
+        let spare = match slow {
+            Some(sl) => spare_actual_raw(clients, load_actual, sel[s], tt) * sl[s],
+            None => spare_actual_raw(clients, load_actual, sel[s], tt),
+        };
         PowerRequest {
             need_min_wh: delta * (c.m_min - progress[s]).max(0.0),
             need_max_wh: delta * (c.m_max - progress[s]).max(0.0),
@@ -328,6 +395,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             par_domains_min: thresholds::ROUND_DOMAINS,
             par_slots_min: thresholds::ROUND_SLOTS,
             outages: Vec::new(),
+            exec: ExecMode::Fsm,
+            chaos: None,
+            fsm: RoundFsm::new(),
+            events: EventQueue::new(),
             states: vec![ClientRoundState::default(); n_clients],
             train_states,
             utility: UtilityTracker::new(n_clients),
@@ -355,8 +426,27 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         spare_actual_raw(&self.clients, &self.load_actual, i, t)
     }
 
+    /// Deliver every queued event due at or before `now` to the state
+    /// machine. Between rounds the machine is `Idle`, so the only
+    /// event that *does* anything here is a late `UpdateSubmitted` —
+    /// rejected as stale and metered. No-op when the queue is empty
+    /// (every no-chaos run).
+    fn drain_due_events(&mut self, now: usize) {
+        while let Some(ev) = self.events.pop_due(now) {
+            if self.fsm.apply(&ev) == EventOutcome::StaleUpdate {
+                self.metrics.rejected_updates += 1;
+            }
+        }
+    }
+
     /// Run the full simulation: returns the metrics log (also stored).
     pub fn run(&mut self) -> Result<()> {
+        if self.exec == ExecMode::Legacy && self.chaos.is_some() {
+            bail!(
+                "chaos fault injection requires ExecMode::Fsm — the legacy \
+                 loop has no event vocabulary to express faults"
+            );
+        }
         let mut global = self.backend.init_params(self.cfg.seed as i32)?;
         let mut t = 0usize;
         let mut round = 0usize;
@@ -373,6 +463,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut samples: Vec<usize> = Vec::with_capacity(self.clients.len());
         let mut spare_now: Vec<f64> = Vec::with_capacity(self.clients.len());
         while t < self.cfg.horizon {
+            // late updates from closed rounds surface here (the queue
+            // persists across rounds) and are fenced off by their stale
+            // epoch token — rejected and metered, never aggregated
+            if !self.events.is_empty() {
+                self.drain_due_events(t);
+            }
             // §Perf: σ/participation/blocklist only mutate when a round
             // executes, and the utility refresh is a pure function of
             // them — consecutive idle polls skip the O(C) refresh
@@ -442,20 +538,33 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             }
             last_was_wait = false;
 
-            let (out, losses) = self.execute_round(&decision, t, &global)?;
+            // FSM boundary: malformed decisions (duplicate or
+            // out-of-range clients) are rejected with a structured
+            // error and metered — the historical path panicked deep
+            // inside execute_round
+            if let Err(e) = fsm::validate_decision(&decision, self.clients.len()) {
+                self.metrics.rejected_decisions += 1;
+                return Err(anyhow::Error::new(e));
+            }
+
+            let (out, losses) = match self.exec {
+                ExecMode::Legacy => self.execute_round(&decision, t, &global)?,
+                ExecMode::Fsm => self.execute_round_fsm(&decision, t, &global)?,
+            };
 
             // aggregate participant updates (weights = sample counts),
             // reading the params straight out of the returned client
-            // states — no per-round model copies
-            let participants = out.participants.clone();
-            if !participants.is_empty() {
+            // states — no per-round model copies. An empty-participant
+            // round degrades to a no-op aggregation.
+            if !out.participants.is_empty() {
                 let weights = fedavg_weights(
-                    &participants
+                    &out.participants
                         .iter()
                         .map(|&c| self.clients[c].num_samples())
                         .collect::<Vec<_>>(),
                 );
-                let updates: Vec<&[f32]> = participants
+                let updates: Vec<&[f32]> = out
+                    .participants
                     .iter()
                     .map(|&c| {
                         self.train_states[c]
@@ -467,14 +576,17 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     .collect();
                 global = self.backend.aggregate(&updates, &weights)?;
             }
+            if self.exec == ExecMode::Fsm {
+                self.fsm.round_end(); // Aggregating → RoundEnd
+            }
 
             // bookkeeping: utility, participation, blocklist
-            for (&c, &loss) in participants.iter().zip(&losses) {
+            for (&c, &loss) in out.participants.iter().zip(&losses) {
                 self.states[c].participation += 1;
                 self.utility.update(c, loss, self.clients[c].num_samples());
             }
             self.strategy.on_round_end(
-                &participants,
+                &out.participants,
                 &mut self.states,
                 &mut self.rng,
             );
@@ -484,19 +596,26 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             } else {
                 losses.iter().sum::<f64>() / losses.len() as f64
             };
+            let duration = out.duration;
+            // the selected/participant vectors move straight into the
+            // record — they used to be cloned twice per round
             self.metrics.rounds.push(RoundRecord {
                 round,
                 start_step: t,
-                duration_steps: out.duration,
-                selected: decision.clients.clone(),
-                participants: participants.clone(),
+                duration_steps: duration,
+                selected: decision.clients,
+                participants: out.participants,
                 batches: out.total_batches,
                 energy_wh: out.energy_wh,
                 wasted_wh: out.wasted_wh,
                 mean_loss,
+                timed_out: out.timed_out,
             });
+            if self.exec == ExecMode::Fsm {
+                self.fsm.finish(); // RoundEnd → Idle
+            }
 
-            t += out.duration.max(1);
+            t += duration.max(1);
             round += 1;
 
             if round % self.cfg.eval_every == 0 || t >= self.cfg.horizon {
@@ -510,6 +629,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 });
             }
         }
+        // updates still in flight when the horizon ends are stale by
+        // definition — drain and meter them so waste accounting is
+        // complete (no-op without chaos: the queue is empty)
+        self.drain_due_events(usize::MAX);
         self.final_global = global;
         Ok(())
     }
@@ -533,12 +656,13 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut round_states: Vec<ClientTrainState<B::Cursor>> =
             Vec::with_capacity(k);
         for &c in sel.iter() {
-            let mut st = self.train_states[c].take().unwrap_or_else(|| {
-                panic!(
-                    "SelectionDecision lists client {c} more than once \
-                     (decisions must select distinct clients)"
-                )
-            });
+            // decisions are validated at the FSM boundary before any
+            // round executes (distinct, in-range clients), so the
+            // state is always present — the historical code panicked
+            // here on duplicates
+            let mut st = self.train_states[c]
+                .take()
+                .expect("decision validated: clients are distinct and in range");
             st.reset_params(global);
             round_states.push(st);
         }
@@ -623,17 +747,18 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                          row: &mut [Vec<(usize, f64)>],
                          (active, reqs): &mut (Vec<usize>, Vec<PowerRequest>)| {
                             compute_domain_grants(
-                                clients, domains, load_actual, outages, sel,
-                                progress_ro, unconstrained, groups[g].0,
-                                &groups[g].1, tt, active, reqs, &mut row[0],
+                                clients, domains, load_actual, outages, None,
+                                None, sel, progress_ro, unconstrained,
+                                groups[g].0, &groups[g].1, tt, active, reqs,
+                                &mut row[0],
                             );
                         },
                     );
                 } else {
                     for (g, (dom, slots)) in groups.iter().enumerate() {
                         compute_domain_grants(
-                            clients, domains, load_actual, outages, sel,
-                            progress_ro, unconstrained, *dom, slots, tt,
+                            clients, domains, load_actual, outages, None, None,
+                            sel, progress_ro, unconstrained, *dom, slots, tt,
                             &mut active, &mut reqs, &mut grants[g],
                         );
                     }
@@ -730,6 +855,309 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 total_batches,
                 energy_wh,
                 wasted_wh,
+                timed_out: done < decision.n_required,
+            },
+            losses,
+        ))
+    }
+
+    /// Execute one round through the coordinator state machine
+    /// ([`crate::coordinator::fsm`]): churn windows and chaos faults
+    /// arrive as epoch-tagged `Dropout`/`Rejoin` events, a slot
+    /// crossing `m_min` *submits* an `UpdateSubmitted` event (possibly
+    /// delayed by chaos), and the round deadline is a `Timeout` event
+    /// scheduled at `t0 + max_duration`. With no chaos injected the
+    /// float-op sequence — grant computation, serial (domain, slot)
+    /// apply order, the quorum checkpoint after the train phase — is
+    /// identical to [`Self::execute_round`], which the bitwise
+    /// equality tests and the endtoend bench gate pin down.
+    fn execute_round_fsm(
+        &mut self,
+        decision: &SelectionDecision,
+        t0: usize,
+        global: &[f32],
+    ) -> Result<(RoundOutcome, Vec<f64>)> {
+        self.meter.begin_round();
+        let sel = &decision.clients;
+        let k = sel.len();
+        let round_cap = decision.max_duration.max(1).min(self.cfg.d_max);
+
+        // Idle → Selecting: validate (already done upstream; the FSM
+        // boundary re-checks its own invariant), mint the epoch, and
+        // schedule the CheckIns plus the round Timeout
+        self.fsm
+            .begin_round(decision, self.clients.len(), t0, round_cap, &mut self.events)
+            .map_err(anyhow::Error::new)?;
+        let epoch = self.fsm.epoch();
+
+        // Translate churn windows overlapping the round span into
+        // Dropout/Rejoin events (windows already open at t0 become
+        // initial offline depth — the queue only carries in-round
+        // transitions), and draw each slot's chaos fault plan (a pure
+        // function of (seed, client, t0) — see sim::chaos).
+        let mut submit_delay = vec![0usize; k];
+        let mut slow = vec![1.0f64; k];
+        let mut any_slow = false;
+        for (s, &c) in sel.iter().enumerate() {
+            if let Some(ws) = self.outages.get(c) {
+                for &(start, end) in ws {
+                    if end <= t0 || start >= t0 + round_cap {
+                        continue;
+                    }
+                    if start <= t0 {
+                        self.fsm.add_initial_offline(s);
+                    } else {
+                        self.events
+                            .push(start, ClientEvent::Dropout { client: c, epoch });
+                    }
+                    if end < t0 + round_cap {
+                        self.events.push(end, ClientEvent::Rejoin { client: c, epoch });
+                    }
+                }
+            }
+            if let Some(ch) = &self.chaos {
+                let plan =
+                    ch.round_plan(self.cfg.seed, c, t0, round_cap, self.cfg.step_minutes);
+                if let Some((off, len)) = plan.drop_window {
+                    if off == 0 {
+                        self.fsm.add_initial_offline(s);
+                    } else {
+                        self.events
+                            .push(t0 + off, ClientEvent::Dropout { client: c, epoch });
+                    }
+                    let end = t0 + off + len;
+                    if end < t0 + round_cap {
+                        self.events.push(end, ClientEvent::Rejoin { client: c, epoch });
+                    }
+                }
+                submit_delay[s] = plan.submit_delay;
+                if plan.slow < 1.0 {
+                    any_slow = true;
+                }
+                slow[s] = plan.slow;
+            }
+        }
+        self.fsm.start_training(); // Selecting → Training
+
+        // round-scoped numeric state, identical to the legacy loop
+        let mut round_states: Vec<ClientTrainState<B::Cursor>> = Vec::with_capacity(k);
+        for &c in sel.iter() {
+            let mut st = self.train_states[c]
+                .take()
+                .expect("decision validated: clients are distinct and in range");
+            st.reset_params(global);
+            round_states.push(st);
+        }
+        let mut progress = vec![0.0f64; k];
+        let mut executed = vec![0usize; k];
+        let mut n_new = vec![0usize; k];
+        let mut loss_acc = vec![0.0f64; k];
+        let mut loss_batches = vec![0usize; k];
+        let mut slot_wh = vec![0.0f64; k];
+        // slots with m_min <= 0 submit an (empty) update immediately —
+        // their event lands before step 0 executes, matching the
+        // legacy preseed that counted them toward the quorum up front
+        let mut reached = vec![false; k];
+        for s in 0..k {
+            if 0.0 >= self.clients[sel[s]].m_min - 1e-9 {
+                reached[s] = true;
+                self.events.push(
+                    t0 + submit_delay[s],
+                    ClientEvent::UpdateSubmitted { client: sel[s], epoch },
+                );
+            }
+        }
+        let mut jobs: Vec<TrainJob> = Vec::with_capacity(k);
+        let mut duration = 0usize;
+
+        let mut by_domain: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (slot, &c) in sel.iter().enumerate() {
+            by_domain.entry(self.clients[c].domain).or_default().push(slot);
+        }
+        let groups: Vec<(usize, Vec<usize>)> = by_domain.into_iter().collect();
+
+        let mut grants: Vec<Vec<(usize, f64)>> = vec![Vec::new(); groups.len()];
+        let mut active: Vec<usize> = Vec::new();
+        let mut reqs: Vec<PowerRequest> = Vec::new();
+        let mut online = vec![true; k];
+        let mut timeout_fired = false;
+
+        loop {
+            let tt = t0 + duration;
+            // deliver everything due by now: liveness transitions and
+            // delayed submissions land before this step's grants; a
+            // due Timeout closes the round before the step executes
+            // (≡ the legacy loop bound). Once the Timeout fires, the
+            // rest of the queue stays put — anything still pending is
+            // stale by construction and is metered after close.
+            while let Some(ev) = self.events.pop_due(tt) {
+                match self.fsm.apply(&ev) {
+                    EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
+                    EventOutcome::TimeoutFired => {
+                        timeout_fired = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            if timeout_fired || tt >= self.cfg.horizon || duration >= round_cap {
+                break;
+            }
+            duration += 1;
+
+            // compute phase: identical to the legacy loop except that
+            // liveness comes from the state machine's depth counters
+            // (boolean-identical to the window scan when chaos is off)
+            for (s, o) in online.iter_mut().enumerate() {
+                *o = self.fsm.online(s);
+            }
+            {
+                let clients = &self.clients;
+                let domains = &self.domains;
+                let load_actual = &self.load_actual;
+                let outages: &[Vec<(usize, usize)>] = &self.outages;
+                let progress_ro: &[f64] = &progress;
+                let liveness: Option<&[bool]> = Some(&online);
+                let slow_ro: Option<&[f64]> =
+                    if any_slow { Some(&slow) } else { None };
+                let unconstrained = decision.unconstrained;
+                let use_par = groups.len() >= self.par_domains_min
+                    && k >= self.par_slots_min
+                    && par::threads() > 1;
+                if use_par {
+                    let groups = &groups;
+                    par::par_fill_rows_scratch(
+                        &mut grants,
+                        1,
+                        0,
+                        || (Vec::new(), Vec::new()),
+                        |g,
+                         row: &mut [Vec<(usize, f64)>],
+                         (active, reqs): &mut (Vec<usize>, Vec<PowerRequest>)| {
+                            compute_domain_grants(
+                                clients, domains, load_actual, outages,
+                                liveness, slow_ro, sel, progress_ro,
+                                unconstrained, groups[g].0, &groups[g].1, tt,
+                                active, reqs, &mut row[0],
+                            );
+                        },
+                    );
+                } else {
+                    for (g, (dom, slots)) in groups.iter().enumerate() {
+                        compute_domain_grants(
+                            clients, domains, load_actual, outages, liveness,
+                            slow_ro, sel, progress_ro, unconstrained, *dom,
+                            slots, tt, &mut active, &mut reqs, &mut grants[g],
+                        );
+                    }
+                }
+            }
+
+            // apply/meter phase: the exact legacy serial (domain,
+            // slot) sequence; a slot crossing m_min SUBMITS its update
+            // as an event (chaos may delay it past the round's close)
+            for v in n_new.iter_mut() {
+                *v = 0;
+            }
+            for (g, (dom, _slots)) in groups.iter().enumerate() {
+                for &(s, b) in &grants[g] {
+                    if b <= 0.0 {
+                        continue;
+                    }
+                    progress[s] += b;
+                    let wh = b * self.clients[sel[s]].delta();
+                    self.meter.record(sel[s], *dom, wh);
+                    slot_wh[s] += wh;
+                    let want = progress[s].floor() as usize;
+                    if want > executed[s] {
+                        n_new[s] = want - executed[s];
+                        executed[s] = want;
+                    }
+                    if !reached[s]
+                        && progress[s] >= self.clients[sel[s]].m_min - 1e-9
+                    {
+                        reached[s] = true;
+                        self.events.push(
+                            tt + submit_delay[s],
+                            ClientEvent::UpdateSubmitted { client: sel[s], epoch },
+                        );
+                    }
+                }
+            }
+
+            // train phase: unchanged (see execute_round)
+            jobs.clear();
+            for s in 0..k {
+                if n_new[s] > 0 {
+                    jobs.push(TrainJob::new(sel[s], n_new[s], s));
+                }
+            }
+            if !jobs.is_empty() {
+                self.backend.train_shard(global, &mut jobs, &mut round_states)?;
+            }
+            for j in &jobs {
+                loss_acc[j.slot] += j.stats.mean_loss * j.n_batches as f64;
+                loss_batches[j.slot] += j.n_batches;
+            }
+
+            // deliver this step's zero-delay submissions, then check
+            // the quorum exactly where the legacy loop checks `done`
+            while let Some(ev) = self.events.pop_due(tt) {
+                match self.fsm.apply(&ev) {
+                    EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
+                    EventOutcome::TimeoutFired => {
+                        timeout_fired = true;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            if timeout_fired || self.fsm.quorum() {
+                break;
+            }
+        }
+
+        // Training → Aggregating. A round that closed with zero
+        // submissions (everyone dropped, or the horizon hit first)
+        // degrades to an empty participant set — no error, no panic.
+        let timed_out = !self.fsm.quorum();
+        self.fsm.close(timed_out);
+
+        let mut participants = Vec::new();
+        let mut stragglers = Vec::new();
+        let mut losses = Vec::new();
+        let mut wasted_wh = 0.0f64;
+        for s in 0..k {
+            // a participant must have SUBMITTED in time — a slot that
+            // reached m_min but whose update is still in flight when
+            // the round closes is a straggler, and its energy is waste
+            if self.fsm.submitted(s) && executed[s] > 0 {
+                participants.push(sel[s]);
+                losses.push(if loss_batches[s] > 0 {
+                    loss_acc[s] / loss_batches[s] as f64
+                } else {
+                    0.0
+                });
+            } else {
+                stragglers.push(sel[s]);
+                wasted_wh += slot_wh[s];
+            }
+        }
+        let total_batches: f64 = progress.iter().sum();
+        let energy_wh = self.meter.round_wh(self.meter.rounds() - 1);
+        for (s, st) in round_states.into_iter().enumerate() {
+            self.train_states[sel[s]] = Some(st);
+        }
+        Ok((
+            RoundOutcome {
+                duration,
+                participants,
+                stragglers,
+                total_batches,
+                energy_wh,
+                wasted_wh,
+                timed_out,
             },
             losses,
         ))
@@ -1100,5 +1528,407 @@ mod tests {
             (steps as f64) <= credit + m.rounds.len() as f64,
             "steps {steps} exceed batch credit {credit}"
         );
+    }
+
+    // ---- robustness: FSM path, chaos engine, malformed decisions ----
+
+    /// Run the standard 9-client/3-domain fixture with an explicit
+    /// execution mode, outage table and chaos spec. Serial everywhere
+    /// (both fan-out gates pinned off) so runs are comparable bit for
+    /// bit across modes.
+    fn run_sim_exec(
+        strategy: &mut dyn Strategy,
+        power_w: f64,
+        exec: ExecMode,
+        outages: Option<Vec<Vec<(usize, usize)>>>,
+        chaos: Option<ChaosSpec>,
+    ) -> (MetricsLog, f64, Vec<f32>, u64) {
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, power_w, horizon);
+        let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        backend.par_min_jobs = usize::MAX;
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            strategy,
+        );
+        sim.par_domains_min = usize::MAX;
+        sim.par_slots_min = usize::MAX;
+        sim.exec = exec;
+        if let Some(o) = outages {
+            sim.outages = o;
+        }
+        sim.chaos = chaos;
+        sim.run().unwrap();
+        let kwh = sim.meter.total_kwh();
+        let steps = sim.steps_executed();
+        let global = std::mem::take(&mut sim.final_global);
+        (sim.metrics, kwh, global, steps)
+    }
+
+    /// THE determinism gate of the PR: with no chaos injected, the
+    /// event-driven path must reproduce the legacy batch loop bit for
+    /// bit — MetricsLog equality (every f64 energy/loss included), same
+    /// meter total, same final global model bits, same step counts —
+    /// across quorum-closing, over-selecting and deadline-closing
+    /// strategies at abundant, constrained and scarce power.
+    #[test]
+    fn fsm_matches_legacy_loop_bitwise() {
+        let mk: [(&str, fn() -> Box<dyn Strategy>); 3] = [
+            ("fedzero", || Box::new(FedZero::new(SolverKind::Greedy))),
+            ("random_over", || Box::new(Baseline::random_over())),
+            ("semisync", || {
+                Box::new(crate::selection::semisync::SemiSync::new(
+                    FedZero::new(SolverKind::Greedy),
+                    15,
+                ))
+            }),
+        ];
+        for (name, make) in mk {
+            for power in [800.0, 100.0, 60.0] {
+                let mut s_legacy = make();
+                let (m_l, kwh_l, g_l, st_l) = run_sim_exec(
+                    s_legacy.as_mut(), power, ExecMode::Legacy, None, None,
+                );
+                let mut s_fsm = make();
+                let (m_f, kwh_f, g_f, st_f) = run_sim_exec(
+                    s_fsm.as_mut(), power, ExecMode::Fsm, None, None,
+                );
+                assert_eq!(m_f, m_l, "{name}@{power}: metrics diverged");
+                assert_eq!(kwh_f, kwh_l, "{name}@{power}: energy diverged");
+                assert_eq!(st_f, st_l, "{name}@{power}: steps diverged");
+                assert_eq!(
+                    g_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    g_l.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{name}@{power}: global model diverged"
+                );
+                // no faults → nothing may have been fenced or rejected
+                assert_eq!(m_f.rejected_updates, 0);
+                assert_eq!(m_f.rejected_decisions, 0);
+            }
+        }
+    }
+
+    /// Mid-round churn goes through the event translation (windows →
+    /// Dropout/Rejoin, open windows → initial offline depth) on the FSM
+    /// path and through the direct window scan on the legacy path —
+    /// they must still agree bit for bit, including a client offline
+    /// for the entire horizon and outages opening mid-round.
+    #[test]
+    fn fsm_matches_legacy_with_mid_round_churn() {
+        let mut outages = vec![Vec::new(); 9];
+        outages[0] = vec![(0, 600)]; // offline the whole run
+        outages[1] = vec![(0, 100), (300, 400)]; // overlaps round starts
+        outages[2] = vec![(50, 80), (90, 95)]; // opens mid-round
+        for power in [800.0, 100.0] {
+            let mut s_legacy = Baseline::random();
+            let (m_l, kwh_l, g_l, st_l) = run_sim_exec(
+                &mut s_legacy,
+                power,
+                ExecMode::Legacy,
+                Some(outages.clone()),
+                None,
+            );
+            let mut s_fsm = Baseline::random();
+            let (m_f, kwh_f, g_f, st_f) = run_sim_exec(
+                &mut s_fsm,
+                power,
+                ExecMode::Fsm,
+                Some(outages.clone()),
+                None,
+            );
+            assert_eq!(m_f, m_l, "churn@{power}: metrics diverged");
+            assert_eq!(kwh_f, kwh_l, "churn@{power}: energy diverged");
+            assert_eq!(st_f, st_l, "churn@{power}: steps diverged");
+            assert_eq!(
+                g_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                g_l.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(m_f.rejected_updates, 0);
+        }
+    }
+
+    /// A strategy that emits a fixed, possibly malformed decision.
+    struct FixedDecision {
+        clients: Vec<usize>,
+    }
+
+    impl Strategy for FixedDecision {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+
+        fn needs_forecasts(&self) -> bool {
+            false
+        }
+
+        fn needs_spare_now(&self) -> bool {
+            false
+        }
+
+        fn select(&mut self, _ctx: &SelectionContext, _rng: &mut Rng) -> SelectionDecision {
+            SelectionDecision {
+                clients: self.clients.clone(),
+                expected_duration: 10,
+                n_required: self.clients.len(),
+                max_duration: 10,
+                wait: false,
+                unconstrained: false,
+            }
+        }
+    }
+
+    /// Satellite 1: a duplicate (or out-of-range) client in a decision
+    /// used to panic deep inside `execute_round` when the second
+    /// `take()` found an empty slot. Both execution modes must now
+    /// reject it at the FSM boundary with a structured error and meter
+    /// the rejection.
+    #[test]
+    fn malformed_decisions_are_rejected_not_a_panic() {
+        for bad in [vec![2usize, 5, 2], vec![0usize, 99]] {
+            for exec in [ExecMode::Legacy, ExecMode::Fsm] {
+                let horizon = 200;
+                let (clients, domains, load, load_fc) = build(9, 3, 800.0, horizon);
+                let backend = MockBackend::new(9, 8, 0.2, 7);
+                let mut s = FixedDecision { clients: bad.clone() };
+                let cfg = SimConfig {
+                    horizon,
+                    n_per_round: 3,
+                    d_max: 30,
+                    eval_every: 2,
+                    seed: 1,
+                    step_minutes: 1.0,
+                };
+                let mut sim = Simulation::new(
+                    cfg,
+                    clients,
+                    domains,
+                    load,
+                    load_fc,
+                    ErrorLevel::Realistic,
+                    &backend,
+                    &mut s,
+                );
+                sim.exec = exec;
+                let err = sim.run().expect_err("malformed decision must error");
+                assert!(
+                    err.downcast_ref::<fsm::DecisionError>().is_some(),
+                    "{exec:?}: expected a DecisionError, got {err}"
+                );
+                assert_eq!(sim.metrics.rejected_decisions, 1);
+                // no round half-executed: the meter never opened a round
+                assert!(sim.metrics.rounds.is_empty());
+                assert!(sim.train_states.iter().all(|s| s.is_some()));
+            }
+        }
+    }
+
+    /// Satellite 3: every selected client offline for the whole run —
+    /// rounds must close EMPTY on their deadline (no participants, no
+    /// energy, flagged timed-out) without panicking and without
+    /// advancing participation or utility state.
+    #[test]
+    fn all_selected_dropping_closes_round_empty() {
+        let outages: Vec<Vec<(usize, usize)>> = (0..9).map(|_| vec![(0, 600)]).collect();
+        let mut s = Baseline::random();
+        let (m, kwh, _, steps) = run_sim_exec(
+            &mut s,
+            800.0,
+            ExecMode::Fsm,
+            Some(outages),
+            None,
+        );
+        assert!(!m.rounds.is_empty(), "rounds should still open and close");
+        for r in &m.rounds {
+            assert!(r.participants.is_empty());
+            assert!(r.timed_out, "an empty round must be a timeout close");
+            assert_eq!(r.energy_wh, 0.0);
+        }
+        assert_eq!(kwh, 0.0);
+        assert_eq!(steps, 0);
+        assert_eq!(m.timeout_rounds(), m.rounds.len());
+        assert!(m.participation_counts(9).iter().all(|&c| c == 0));
+    }
+
+    /// Tentpole invariant: updates delayed past their round's close are
+    /// REJECTED by the epoch fence and metered as waste — never
+    /// silently aggregated — and the whole chaotic run is byte-
+    /// identical when repeated with the same seed.
+    #[test]
+    fn stale_updates_after_round_end_are_rejected_and_metered() {
+        let chaos = ChaosSpec {
+            dropout_per_round: 0.0,
+            stale_prob: 1.0,
+            mean_delay_min: 40.0, // far beyond the 15-step deadline
+            slow_prob: 0.0,
+            ..ChaosSpec::default()
+        };
+        let run = || {
+            let mut s = crate::selection::semisync::SemiSync::new(
+                FedZero::new(SolverKind::Greedy),
+                15,
+            );
+            run_sim_exec(&mut s, 800.0, ExecMode::Fsm, None, Some(chaos))
+        };
+        let (m1, kwh1, g1, st1) = run();
+        assert!(!m1.rounds.is_empty());
+        assert!(
+            m1.rejected_updates > 0,
+            "long-delayed submissions must be fenced and metered"
+        );
+        assert!(m1.timeout_rounds() > 0, "delayed rounds must close by deadline");
+        // a submission in flight at close means its slot is a straggler
+        // whose energy counts as waste
+        assert!(m1.total_wasted_kwh() > 0.0);
+        // determinism gate: the same seed reproduces the chaotic run
+        // byte for byte (fault plans are pure draws)
+        let (m2, kwh2, g2, st2) = run();
+        assert_eq!(m1, m2, "chaos run not reproducible");
+        assert_eq!(kwh1, kwh2);
+        assert_eq!(st1, st2);
+        assert_eq!(
+            g1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            g2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            m1.to_json().to_string_pretty(),
+            m2.to_json().to_string_pretty()
+        );
+    }
+
+    /// Chaos dropout faults flow through the same depth counters as
+    /// churn; a seeded dropout-heavy run is reproducible and differs
+    /// from the fault-free run.
+    #[test]
+    fn chaos_dropouts_are_deterministic_and_perturb_the_run() {
+        let chaos = ChaosSpec {
+            dropout_per_round: 0.8,
+            mean_drop_min: 20.0,
+            stale_prob: 0.0,
+            slow_prob: 0.0,
+            ..ChaosSpec::default()
+        };
+        let run = |c: Option<ChaosSpec>| {
+            let mut s = Baseline::random_over();
+            run_sim_exec(&mut s, 100.0, ExecMode::Fsm, None, c)
+        };
+        let (m_chaos, _, _, _) = run(Some(chaos));
+        let (m_chaos2, _, _, _) = run(Some(chaos));
+        let (m_clean, _, _, _) = run(None);
+        assert_eq!(m_chaos, m_chaos2, "chaos run not reproducible");
+        assert_ne!(
+            m_chaos, m_clean,
+            "a 0.8 dropout rate must perturb the run"
+        );
+        // faults never corrupt the validation path
+        assert_eq!(m_chaos.rejected_decisions, 0);
+    }
+
+    /// Slow-client faults scale effective capacity down, stretching
+    /// rounds — and never speed anything up.
+    #[test]
+    fn slow_clients_stretch_rounds() {
+        let chaos = ChaosSpec {
+            dropout_per_round: 0.0,
+            stale_prob: 0.0,
+            slow_prob: 1.0,
+            slow_factor: 0.5,
+            ..ChaosSpec::default()
+        };
+        let run = |c: Option<ChaosSpec>| {
+            let mut s = Baseline::random();
+            run_sim_exec(&mut s, 800.0, ExecMode::Fsm, None, c)
+        };
+        let (m_slow, _, _, _) = run(Some(chaos));
+        let (m_clean, _, _, _) = run(None);
+        assert!(!m_slow.rounds.is_empty());
+        // Random never waits here (constant power, zero load), so round
+        // j selects the same cohort in both runs — slow round j can only
+        // take at least as long as its clean twin
+        for (rs, rc) in m_slow.rounds.iter().zip(&m_clean.rounds) {
+            assert_eq!(rs.selected, rc.selected, "selection sequences drifted");
+            assert!(
+                rs.duration_steps >= rc.duration_steps,
+                "halving capacity shortened round {}: {} < {}",
+                rs.round,
+                rs.duration_steps,
+                rc.duration_steps
+            );
+        }
+        assert_ne!(m_slow, m_clean);
+    }
+
+    /// The legacy loop has no event vocabulary: combining it with chaos
+    /// must be refused up front, not silently ignored.
+    #[test]
+    fn chaos_requires_fsm_mode() {
+        let horizon = 100;
+        let (clients, domains, load, load_fc) = build(9, 3, 800.0, horizon);
+        let backend = MockBackend::new(9, 8, 0.2, 7);
+        let mut s = Baseline::random();
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut s,
+        );
+        sim.exec = ExecMode::Legacy;
+        sim.chaos = Some(ChaosSpec::default());
+        let err = sim.run().expect_err("legacy + chaos must be refused");
+        assert!(err.to_string().contains("ExecMode::Fsm"), "got: {err}");
+        assert!(sim.metrics.rounds.is_empty());
+    }
+
+    /// The churn-aware wrapper runs end to end through the engine and
+    /// pads its cohort once dropouts are observed.
+    #[test]
+    fn churn_aware_overselection_reacts_to_dropouts() {
+        use crate::selection::adaptive::ChurnAware;
+        let chaos = ChaosSpec {
+            dropout_per_round: 0.7,
+            mean_drop_min: 30.0,
+            stale_prob: 0.0,
+            slow_prob: 0.0,
+            ..ChaosSpec::default()
+        };
+        let mut ca = ChurnAware::new(Baseline::random(), "Random ca", true);
+        let (m, _, _, _) =
+            run_sim_exec(&mut ca, 800.0, ExecMode::Fsm, None, Some(chaos));
+        assert!(!m.rounds.is_empty());
+        assert!(ca.p_hat() > 0.0, "dropouts were observed but p_hat stayed 0");
+        assert!(
+            m.rounds.iter().any(|r| r.selected.len() > 3),
+            "no round was over-selected despite sustained dropouts"
+        );
+        // quorum stays pinned at n: a padded round that reaches 3
+        // submissions closes without waiting for the padding
+        for r in &m.rounds {
+            assert!(r.selected.len() <= 6, "padding exceeded MAX_FACTOR");
+        }
     }
 }

@@ -11,6 +11,15 @@
 //! work is discarded (but their energy was still spent — the over-
 //! selection waste the paper measures).
 
+//!
+//! Round execution is event-driven by default ([`engine::ExecMode`]):
+//! the coordinator state machine ([`crate::coordinator::fsm`]) fences
+//! stale updates by epoch token and closes rounds on `Timeout` events;
+//! [`chaos`] injects seeded dropout / stale-update / slow-client
+//! faults through that same event vocabulary.
+
+pub mod chaos;
 pub mod engine;
 
-pub use engine::{RoundOutcome, SimConfig, Simulation};
+pub use chaos::ChaosSpec;
+pub use engine::{ExecMode, RoundOutcome, SimConfig, Simulation};
