@@ -3,11 +3,12 @@
 # regressions fail loudly.
 #
 #   ./ci.sh          tier-1 (build + tests) + quick bench smokes
-#   ./ci.sh --quick  tier-1 + the campaign and chaos smokes (fastest
-#                    gates: report-schema validation, worker-count
-#                    determinism, the builtin-spec-vs-legacy
-#                    Scenario::Global diff, and the seeded
-#                    fault-injection determinism/visibility gates —
+#   ./ci.sh --quick  tier-1 + the campaign, chaos and tree smokes
+#                    (fastest gates: report-schema validation,
+#                    worker-count determinism, the builtin-spec-vs-legacy
+#                    Scenario::Global diff, the seeded fault-injection
+#                    determinism/visibility gates, and the 1M-client
+#                    hierarchical-aggregation flat-vs-tree bitwise gate —
 #                    exit 1 on any divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
 #
@@ -28,11 +29,20 @@
 # injected faults leave no trace in the metrics, or a chaos-axis
 # campaign diverges across worker counts. The endtoend bench
 # additionally gates the event-driven round FSM against the legacy loop
-# (no-fault runs must be bit-identical).
+# (no-fault runs must be bit-identical) and the hierarchical two-tier
+# aggregator against flat FedAvg (full-sim AggMode::Tree vs
+# AggMode::Flat must be bit-identical). `--tree` runs ONLY the
+# 1M-client flat-vs-tree scaling series + bitwise divergence gate,
+# written to rust/BENCH_tree.json — fast enough for --quick.
 #
 # When a committed baseline (BENCH_<name>.baseline.json) exists next to a
 # freshly written BENCH_<name>.json, the two are compared metric by
 # metric: regressions >10% warn, >50% fail the run.
+#
+# >>> STILL OUTSTANDING (now seven PRs of perf work with no recorded
+# >>> trajectory): no toolchain environment has ever run these benches,
+# >>> so NO baseline is committed and the ratchet below is wired but
+# >>> UNARMED. First CI run in a cargo environment must do this:
 #
 # ARMING / RE-RATCHETING THE BASELINES (run in a toolchain environment —
 # the authoring container has no cargo, so the first arming must happen
@@ -42,6 +52,7 @@
 #      cp rust/BENCH_endtoend.json  rust/BENCH_endtoend.baseline.json
 #      cp rust/BENCH_campaign.json  rust/BENCH_campaign.baseline.json
 #      cp rust/BENCH_chaos.json     rust/BENCH_chaos.baseline.json
+#      cp rust/BENCH_tree.json      rust/BENCH_tree.baseline.json
 #   3. git add rust/BENCH_*.baseline.json && git commit
 # Baselines are mode-tagged: a quick-mode baseline only gates quick-mode
 # runs (the comparator skips mismatched modes), so arm with the mode CI
@@ -146,6 +157,10 @@ compare_bench BENCH_campaign.json BENCH_campaign.baseline.json
 echo "== chaos smoke (--quick: seeded fault-injection determinism + visibility gates) =="
 cargo bench --bench chaos -- --quick
 compare_bench BENCH_chaos.json BENCH_chaos.baseline.json
+
+echo "== tree aggregation gate (--tree: 1M-client flat-vs-tree bitwise + scaling) =="
+cargo bench --bench endtoend -- --tree
+compare_bench BENCH_tree.json BENCH_tree.baseline.json
 
 if [[ "${1:-}" == "--quick" ]]; then
     echo "CI OK (quick)"

@@ -179,6 +179,15 @@ fn main() {
         parallel.memo_hits + parallel.memo_misses,
         parallel.memo_hit_rate() * 100.0,
     );
+    println!(
+        "dataset memoization: serial {}/{} hits ({:.0}%), parallel {}/{} ({:.0}%)",
+        serial.dataset_hits,
+        serial.dataset_hits + serial.dataset_misses,
+        serial.dataset_hit_rate() * 100.0,
+        parallel.dataset_hits,
+        parallel.dataset_hits + parallel.dataset_misses,
+        parallel.dataset_hit_rate() * 100.0,
+    );
 
     // --- gates -------------------------------------------------------------
     let report = serial.report_json();
@@ -217,6 +226,10 @@ fn main() {
         Json::Num(cells_per_s_parallel / cells_per_s_serial.max(1e-9)),
     );
     root.insert("memo_hit_rate".into(), Json::Num(serial.memo_hit_rate()));
+    root.insert(
+        "dataset_memo_hit_rate".into(),
+        Json::Num(serial.dataset_hit_rate()),
+    );
     root.insert(
         "schema_failures".into(),
         Json::Num(schema_err.is_some() as usize as f64),

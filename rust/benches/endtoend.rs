@@ -16,12 +16,19 @@
 //!    **FSM-vs-legacy round-loop gate** (ns/round through the
 //!    event-driven state machine vs the legacy batch loop; with no
 //!    faults injected the two must be bit-identical in `MetricsLog`,
-//!    step totals and final global model), and the f32-ring vs
-//!    historical-f64 window footprint.
+//!    step totals and final global model), the **hierarchical
+//!    aggregation layer** — a 1M-client synthetic round reduced flat vs
+//!    through the per-domain tree across domain counts (ns/round,
+//!    arena-bytes peak-RSS proxy, bitwise divergence gate) plus a
+//!    full-sim `AggMode::Flat` vs `AggMode::Tree` run gate — and the
+//!    f32-ring vs historical-f64 window footprint.
 //!
 //! Results go to rust/BENCH_endtoend.json for cross-PR tracking.
 //!
 //! Flags: --quick  CI smoke (small points, mock only)
+//!        --tree   ONLY the 1M-client flat-vs-tree scaling + divergence
+//!                 gate, written to rust/BENCH_tree.json (fast enough
+//!                 for `ci.sh --quick`; exits 1 on any bit divergence)
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -30,7 +37,7 @@ use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
 use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
 use fedzero::energy::PowerDomain;
-use fedzero::fl::MockBackend;
+use fedzero::fl::{AggMode, MockBackend, TreeAggregator};
 use fedzero::selection::arena::SelArena;
 use fedzero::selection::baselines::Baseline;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
@@ -224,6 +231,7 @@ fn train_phase_cost(
 /// machine must reproduce the legacy `MetricsLog` exactly).
 fn fsm_phase_cost(
     exec: ExecMode,
+    agg: AggMode,
     quick: bool,
 ) -> (f64, usize, u64, fedzero::metrics::MetricsLog, Vec<f32>) {
     let n_clients = 36;
@@ -252,6 +260,14 @@ fn fsm_phase_cost(
         &mut fz,
     );
     sim.exec = exec;
+    sim.agg = agg;
+    if agg == AggMode::Tree {
+        // the 9-domain fixture sits below the real fan-out gates; pin
+        // them open so the tree run genuinely exercises the parallel
+        // leaf tier (results are bit-identical either way)
+        sim.tree.par_groups_min = 1;
+        sim.tree.par_work_min = 0;
+    }
     let t0 = Instant::now();
     sim.run().unwrap();
     let dt = t0.elapsed().as_nanos() as f64;
@@ -477,8 +493,106 @@ fn window_footprint(clients: usize, domains: usize, d_max: usize) -> (u64, u64) 
     (ring_f32, historical_f64)
 }
 
+/// Hierarchical-aggregation scaling: one synthetic round of `n_clients`
+/// updates (dim `dim`) reduced flat (serial oracle schedule) and through
+/// the per-domain tree, across domain counts. Updates live in ONE flat
+/// backing buffer (1M × dim f32) with a deterministic hash fill, so the
+/// point measures aggregation, not setup. Returns the JSON scaling
+/// points, the bitwise flat-vs-tree mismatch count (0 = green) and the
+/// tree's peak arena bytes (the peak-RSS proxy — the only memory the
+/// tree layer adds over flat). Domain counts below the real
+/// `TREE_GROUPS`/`TREE_WORK` gates honestly stay serial (speedup ~1).
+fn tree_scaling(
+    n_clients: usize,
+    dim: usize,
+    domain_counts: &[usize],
+    reps: usize,
+) -> (Vec<Json>, usize, usize) {
+    let mut buf = vec![0.0f32; n_clients * dim];
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40) as f32 * 1e-4;
+    }
+    let updates: Vec<&[f32]> = buf.chunks_exact(dim).collect();
+    let weights: Vec<f32> =
+        (0..n_clients).map(|i| ((i * 37) % 100 + 1) as f32).collect();
+
+    let mut flat = TreeAggregator::new();
+    let mut tree = TreeAggregator::new();
+    let mut out_f = Vec::new();
+    let mut out_t = Vec::new();
+    let mut points = Vec::new();
+    let mut mismatches = 0usize;
+    for &d in domain_counts {
+        let domains: Vec<usize> = (0..n_clients).map(|i| i % d.max(1)).collect();
+        let mut best_f = f64::MAX;
+        let mut best_t = f64::MAX;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            flat.aggregate_into(AggMode::Flat, &domains, &updates, &weights, &mut out_f)
+                .unwrap();
+            best_f = best_f.min(t0.elapsed().as_nanos() as f64);
+            let t1 = Instant::now();
+            tree.aggregate_into(AggMode::Tree, &domains, &updates, &weights, &mut out_t)
+                .unwrap();
+            best_t = best_t.min(t1.elapsed().as_nanos() as f64);
+        }
+        if out_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            != out_t.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        {
+            eprintln!("TREE DIVERGENCE: tree != flat at {d} domains");
+            mismatches += 1;
+        }
+        let speedup = best_f / best_t.max(1.0);
+        println!(
+            "tree/{n_clients}c_d{d:<6} flat {:>12}  tree {:>12} per round (speedup {speedup:.2}x, arena {:.1} MB)",
+            fmt_ns(best_f),
+            fmt_ns(best_t),
+            tree.arena_bytes() as f64 / 1e6
+        );
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(format!("tree_d{d}")));
+        m.insert("clients".into(), Json::Num(n_clients as f64));
+        m.insert("dim".into(), Json::Num(dim as f64));
+        m.insert("domains".into(), Json::Num(d as f64));
+        m.insert("ns_per_round_flat".into(), Json::Num(best_f));
+        m.insert("ns_per_round_tree".into(), Json::Num(best_t));
+        m.insert("speedup".into(), Json::Num(speedup));
+        m.insert("arena_bytes".into(), Json::Num(tree.arena_bytes() as f64));
+        points.push(Json::Obj(m));
+    }
+    (points, mismatches, tree.peak_arena_bytes())
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    if std::env::args().any(|a| a == "--tree") {
+        // fast standalone mode for `ci.sh --quick`: ONLY the 1M-client
+        // flat-vs-tree scaling series + bitwise divergence gate
+        println!("== hierarchical aggregation [tree] ==");
+        let (points, mismatches, peak) =
+            tree_scaling(1_000_000, 8, &[1, 64, 4_096], 2);
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("tree".into()));
+        root.insert("mode".into(), Json::Str("tree".into()));
+        root.insert("tree".into(), Json::Arr(points));
+        root.insert(
+            "tree_divergence_mismatches".into(),
+            Json::Num(mismatches as f64),
+        );
+        root.insert("peak_arena_bytes".into(), Json::Num(peak as f64));
+        let out = Json::Obj(root).to_string_pretty();
+        let path = "BENCH_tree.json";
+        match std::fs::write(path, &out) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+        if mismatches > 0 {
+            eprintln!("tree-vs-flat equivalence FAILED ({mismatches} mismatches)");
+            std::process::exit(1);
+        }
+        println!("== done ==");
+        return;
+    }
     let mode = if quick { "quick" } else { "default" };
     println!("== end-to-end benches [{mode}] ==");
 
@@ -595,9 +709,9 @@ fn main() {
     // gated below like the ring and train divergences)
     println!("\n== round-loop cost (36c/9p, legacy vs event-driven FSM) ==");
     let (ns_loop_leg, loop_rounds, loop_steps_leg, m_leg, g_leg) =
-        fsm_phase_cost(ExecMode::Legacy, quick);
+        fsm_phase_cost(ExecMode::Legacy, AggMode::Tree, quick);
     let (ns_loop_fsm, _, loop_steps_fsm, m_fsm, g_fsm) =
-        fsm_phase_cost(ExecMode::Fsm, quick);
+        fsm_phase_cost(ExecMode::Fsm, AggMode::Tree, quick);
     println!(
         "round_loop/legacy           {:>12} per round ({loop_rounds} rounds, {loop_steps_leg} steps)",
         fmt_ns(ns_loop_leg)
@@ -613,6 +727,25 @@ fn main() {
             != g_fsm.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     if fsm_diverged {
         eprintln!("FSM DIVERGENCE: event-driven round loop != legacy loop");
+    }
+
+    // --- hierarchical aggregation: 1M-client flat-vs-tree scaling +
+    // bitwise gate, and a full-sim Flat-vs-Tree run gate ---
+    println!("\n== hierarchical aggregation (1M-client synthetic round) ==");
+    let tree_domains: &[usize] =
+        if quick { &[1, 64, 4_096] } else { &[1, 64, 4_096, 65_536] };
+    let (tree_points, tree_mismatches, tree_peak) =
+        tree_scaling(1_000_000, 8, tree_domains, if quick { 2 } else { 3 });
+    let (_, _, run_steps_fl, m_run_fl, g_run_fl) =
+        fsm_phase_cost(ExecMode::Fsm, AggMode::Flat, quick);
+    let (_, _, run_steps_tr, m_run_tr, g_run_tr) =
+        fsm_phase_cost(ExecMode::Fsm, AggMode::Tree, quick);
+    let tree_run_diverged = m_run_fl != m_run_tr
+        || run_steps_fl != run_steps_tr
+        || g_run_fl.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            != g_run_tr.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    if tree_run_diverged {
+        eprintln!("TREE RUN DIVERGENCE: AggMode::Tree sim != AggMode::Flat sim");
     }
 
     // --- ring-vs-fresh divergence gate ---
@@ -687,6 +820,16 @@ fn main() {
         "ring_divergence_mismatches".into(),
         Json::Num(mismatches as f64),
     );
+    root.insert("tree".into(), Json::Arr(tree_points));
+    root.insert(
+        "tree_divergence_mismatches".into(),
+        Json::Num(tree_mismatches as f64),
+    );
+    root.insert(
+        "tree_run_divergence".into(),
+        Json::Num(if tree_run_diverged { 1.0 } else { 0.0 }),
+    );
+    root.insert("tree_peak_arena_bytes".into(), Json::Num(tree_peak as f64));
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_endtoend.json";
     match std::fs::write(path, &out) {
@@ -704,6 +847,14 @@ fn main() {
     }
     if fsm_diverged {
         eprintln!("FSM-vs-legacy round-loop equivalence FAILED");
+        std::process::exit(1);
+    }
+    if tree_mismatches > 0 {
+        eprintln!("tree-vs-flat equivalence FAILED ({tree_mismatches} mismatches)");
+        std::process::exit(1);
+    }
+    if tree_run_diverged {
+        eprintln!("tree-vs-flat full-sim equivalence FAILED");
         std::process::exit(1);
     }
     println!("== done ==");

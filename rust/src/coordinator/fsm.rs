@@ -152,6 +152,14 @@ pub struct RoundFsm {
     done: usize,
     n_required: usize,
     timed_out: bool,
+    /// slot index → domain-shard group (index into the round's sorted
+    /// distinct-domain list — the hierarchical aggregator's canonical
+    /// group order); empty when no domains were assigned
+    shard_group_of_slot: Vec<usize>,
+    /// per-group count of slots still owing an update; a group hitting
+    /// zero means its domain sub-aggregator could reduce its shard now
+    shard_pending: Vec<usize>,
+    shards_complete: usize,
 }
 
 impl Default for RoundFsm {
@@ -172,6 +180,9 @@ impl RoundFsm {
             done: 0,
             n_required: 0,
             timed_out: false,
+            shard_group_of_slot: Vec::new(),
+            shard_pending: Vec::new(),
+            shards_complete: 0,
         }
     }
 
@@ -211,8 +222,36 @@ impl RoundFsm {
         self.done = 0;
         self.n_required = decision.n_required;
         self.timed_out = false;
+        self.shard_group_of_slot.clear();
+        self.shard_pending.clear();
+        self.shards_complete = 0;
         queue.push(t0 + round_cap, ClientEvent::Timeout { epoch: self.epoch });
         Ok(())
+    }
+
+    /// Declare each slot's energy domain so the machine can track
+    /// domain-shard completion: a shard is complete the moment its last
+    /// in-epoch `UpdateSubmitted` lands — the hook for eager per-domain
+    /// sub-aggregation (`fl::tree`), where a sub-aggregator reduces its
+    /// shard without barriering on the whole round. Groups are indexed
+    /// by ascending distinct domain id, matching the tree's canonical
+    /// composition order. Optional: without a call, submission tracking
+    /// behaves exactly as before.
+    pub fn assign_domains(&mut self, domain_of_slot: &[usize]) {
+        debug_assert_eq!(self.phase, RoundPhase::Selecting);
+        debug_assert_eq!(domain_of_slot.len(), self.submitted.len());
+        let mut doms: Vec<usize> = domain_of_slot.to_vec();
+        doms.sort_unstable();
+        doms.dedup();
+        self.shard_pending.clear();
+        self.shard_pending.resize(doms.len(), 0);
+        self.shard_group_of_slot.clear();
+        for &d in domain_of_slot {
+            let g = doms.binary_search(&d).expect("domain in dedup list");
+            self.shard_group_of_slot.push(g);
+            self.shard_pending[g] += 1;
+        }
+        self.shards_complete = 0;
     }
 
     /// Record an offline window already open at round start (the event
@@ -267,6 +306,14 @@ impl RoundFsm {
                         if !self.submitted[s] {
                             self.submitted[s] = true;
                             self.done += 1;
+                            // domain-shard accounting (no-op unless
+                            // `assign_domains` declared groups)
+                            if let Some(&g) = self.shard_group_of_slot.get(s) {
+                                self.shard_pending[g] -= 1;
+                                if self.shard_pending[g] == 0 {
+                                    self.shards_complete += 1;
+                                }
+                            }
                             return EventOutcome::Accepted;
                         }
                     }
@@ -314,6 +361,22 @@ impl RoundFsm {
         self.timed_out
     }
 
+    /// Domain-shard groups declared by `assign_domains` (0 if unused).
+    pub fn shard_groups(&self) -> usize {
+        self.shard_pending.len()
+    }
+
+    /// Is domain-shard group `g` fully submitted (its sub-aggregator
+    /// could reduce now)?
+    pub fn shard_complete(&self, g: usize) -> bool {
+        self.shard_pending.get(g) == Some(&0)
+    }
+
+    /// Shards whose last in-epoch update has landed this round.
+    pub fn shards_complete(&self) -> usize {
+        self.shards_complete
+    }
+
     /// `Training → Aggregating`: the round stops executing steps.
     pub fn close(&mut self, timed_out: bool) {
         debug_assert_eq!(self.phase, RoundPhase::Training);
@@ -340,6 +403,9 @@ impl RoundFsm {
         self.submitted.clear();
         self.done = 0;
         self.n_required = 0;
+        self.shard_group_of_slot.clear();
+        self.shard_pending.clear();
+        self.shards_complete = 0;
     }
 }
 
@@ -492,6 +558,61 @@ mod tests {
             fsm.apply(&ClientEvent::Timeout { epoch: fsm.epoch() }),
             EventOutcome::Ignored
         );
+    }
+
+    #[test]
+    fn shard_completion_tracks_last_in_epoch_update_per_domain() {
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        // slots 0..4 = clients [3, 1, 4, 0]; domains 9/2/9/2 → groups
+        // in canonical ascending-domain order: g0 = {1, 0}, g1 = {3, 4}
+        fsm.begin_round(&decision(vec![3, 1, 4, 0], 4), 5, 0, 10, &mut q).unwrap();
+        fsm.assign_domains(&[9, 2, 9, 2]);
+        fsm.start_training();
+        let e = fsm.epoch();
+        assert_eq!(fsm.shard_groups(), 2);
+        assert_eq!(fsm.shards_complete(), 0);
+
+        fsm.apply(&ClientEvent::UpdateSubmitted { client: 3, epoch: e });
+        assert!(!fsm.shard_complete(1), "domain 9 still owes client 4");
+        fsm.apply(&ClientEvent::UpdateSubmitted { client: 4, epoch: e });
+        assert!(fsm.shard_complete(1));
+        assert!(!fsm.shard_complete(0));
+        assert_eq!(fsm.shards_complete(), 1);
+
+        // a stale re-submission must not decrement the shard again
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 4, epoch: e }),
+            EventOutcome::StaleUpdate
+        );
+        assert_eq!(fsm.shards_complete(), 1);
+
+        fsm.apply(&ClientEvent::UpdateSubmitted { client: 1, epoch: e });
+        fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: e });
+        assert_eq!(fsm.shards_complete(), 2);
+        fsm.close(false);
+        fsm.round_end();
+        fsm.finish();
+        assert_eq!(fsm.shard_groups(), 0, "finish drops shard state");
+        assert_eq!(fsm.shards_complete(), 0);
+    }
+
+    #[test]
+    fn shard_tracking_is_optional() {
+        // no assign_domains call: submissions behave exactly as before
+        let mut fsm = RoundFsm::new();
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![0, 1], 2), 3, 0, 10, &mut q).unwrap();
+        fsm.start_training();
+        let e = fsm.epoch();
+        assert_eq!(fsm.shard_groups(), 0);
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: e }),
+            EventOutcome::Accepted
+        );
+        assert_eq!(fsm.submissions(), 1);
+        assert_eq!(fsm.shards_complete(), 0);
+        assert!(!fsm.shard_complete(0));
     }
 
     #[test]

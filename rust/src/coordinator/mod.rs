@@ -346,14 +346,32 @@ pub fn run_built_mock(spec: &ExperimentSpec, built: BuiltScenario) -> Result<Run
     run_with_backend(spec, built, &backend)
 }
 
+/// The mock fixture's dataset partition for a spec (input dim 16 —
+/// the same constant [`build_mock_env`] uses). Split out so the
+/// campaign runner can memoize the synthetic dataset separately from
+/// the environment build: the partition depends only on
+/// (preset, seed, α, n_clients, dataset_scale), not on the env axes.
+pub fn build_mock_partition(spec: &ExperimentSpec) -> Partition {
+    build_dataset(spec, 16).1
+}
+
+/// [`build_mock_env`] with a caller-supplied (possibly memoized)
+/// partition. `env_spec`/`env_cfg` are private to this module, so the
+/// env build over an external partition has to live here too.
+pub fn build_mock_env_with(
+    spec: &ExperimentSpec,
+    partition: &Partition,
+) -> Result<BuiltScenario> {
+    let model = ModelKind::from_preset(&spec.preset);
+    build_env(&env_spec(spec), &env_cfg(spec), model, 10, partition)
+}
+
 /// Build the mock fixture's environment for a spec (partition at input
 /// dim 16, batch size 10, spec-driven env). ONE definition shared by
 /// [`run_experiment`]'s mock arm and the campaign runner, so the two
 /// cannot drift apart on the fixture constants.
 pub fn build_mock_env(spec: &ExperimentSpec) -> Result<BuiltScenario> {
-    let model = ModelKind::from_preset(&spec.preset);
-    let (_, partition) = build_dataset(spec, 16);
-    build_env(&env_spec(spec), &env_cfg(spec), model, 10, &partition)
+    build_mock_env_with(spec, &build_mock_partition(spec))
 }
 
 /// Does this preset's partition scheme read `partition_alpha`? The

@@ -177,15 +177,25 @@ impl TrainBackend for XlaBackend {
             return self.runtime.aggregate(updates, weights);
         }
         // chunked aggregation for > K participants: combine partial
-        // weighted means with their weight masses
-        let mut partials: Vec<Vec<f32>> = Vec::new();
+        // weighted means with their weight masses (one pre-sized
+        // `chunk_masses` pass — the same helper the hierarchical tree
+        // composition uses, so partial-mass math cannot drift). The
+        // composition recurses so > K² participants reduce in as many
+        // levels as needed instead of overflowing the runtime's K cap.
+        if k < 2 {
+            return Err(anyhow!(
+                "agg_k={k} cannot compose {} updates",
+                updates.len()
+            ));
+        }
         let mut masses: Vec<f32> = Vec::new();
+        super::tree::chunk_masses(weights, k, &mut masses);
+        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(masses.len());
         for (chunk_u, chunk_w) in updates.chunks(k).zip(weights.chunks(k)) {
             partials.push(self.runtime.aggregate(chunk_u, chunk_w)?);
-            masses.push(chunk_w.iter().sum());
         }
         let refs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
-        self.runtime.aggregate(&refs, &masses)
+        self.aggregate(&refs, &masses)
     }
 
     fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)> {

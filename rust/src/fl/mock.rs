@@ -148,22 +148,17 @@ impl TrainBackend for MockBackend {
         let total: f32 = weights.iter().sum();
         // zero total mass (all-zero sample counts) historically fell into
         // a silent `max(1e-12)` division that returned near-zero params,
-        // destroying the model; fall back to the unweighted mean instead
+        // destroying the model; `weighted_sum_into` falls back to the
+        // unweighted mean instead
         let n = updates.len() as f32;
-        let scale_of =
-            move |w: f32| if total > 0.0 { w / total } else { 1.0 / n };
         let mut out = vec![0.0f32; self.dim];
         // chunked parallel FedAvg: every output coordinate is computed by
-        // exactly one worker, with the per-update `scale` hoisted out of
-        // the coordinate loop and the same update-order accumulation as
-        // the serial loop ⇒ byte-equal to the serial result
+        // exactly one worker running the shared weighted-merge kernel
+        // (`fl::tree::weighted_sum_into` — same per-update scale hoist and
+        // update-order accumulation as the serial loop, and the same bits
+        // the hierarchical aggregator produces) ⇒ byte-equal to serial
         par::par_fill_slice(&mut out, self.par_agg_min, |start, seg: &mut [f32]| {
-            for (u, &w) in updates.iter().zip(weights) {
-                let scale = scale_of(w);
-                for (o, &v) in seg.iter_mut().zip(&u[start..start + seg.len()]) {
-                    *o += v * scale;
-                }
-            }
+            super::tree::weighted_sum_into(seg, start, updates, weights, total, n);
         });
         Ok(out)
     }

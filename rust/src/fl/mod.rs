@@ -33,9 +33,11 @@
 
 pub mod backend;
 pub mod mock;
+pub mod tree;
 
 pub use backend::{XlaBackend, XlaCursor};
 pub use mock::MockBackend;
+pub use tree::{AggMode, TreeAggregator};
 
 use anyhow::Result;
 

@@ -1,0 +1,546 @@
+//! Two-tier (hierarchical) FedAvg: one sub-aggregator per energy
+//! domain, a serial root composer — the unit boundary for multi-process
+//! aggregation at millions of clients.
+//!
+//! Flat FedAvg funnels every participant through one O(C·P) reduction
+//! on a single thread-pool. Here each domain's sub-aggregator reduces
+//! its own members into one `(partial_params, weight_mass)` pair, the
+//! partials are filled *in parallel* (one `util::par` worker per
+//! contiguous block of domain rows, per-worker gather scratch), and the
+//! root composes them serially. The per-round arenas (CSR grouping,
+//! masses, the g×P partial matrix) are reused across rounds, so the
+//! steady state is allocation-free.
+//!
+//! # The canonical reduction order (the determinism invariant)
+//!
+//! f32 addition is not associative, so "tree == flat" can only be
+//! *bitwise* if both sides execute the **same nested reduction** and
+//! differ only in schedule. That canonical order is:
+//!
+//! 1. **Global scaling.** `total = Σ weights` (participant order, one
+//!    left fold over ALL weights) and every update is scaled by
+//!    `w / total` — or `1 / n` when the total mass is zero, matching
+//!    the flat fold's unweighted-mean fallback. Scales are global, not
+//!    per-domain: a domain partial is already in final units.
+//! 2. **Leaf tier.** For each domain shard, in ascending domain-id
+//!    order: accumulate `Σ scale_i · update_i` over the shard's members
+//!    in ascending participant order (one row of the partial matrix,
+//!    accumulated left to right exactly like the flat fold would).
+//! 3. **Root tier.** `out = partial_0; out += partial_1; …` serially in
+//!    ascending domain-id order, regardless of which shard finished
+//!    first.
+//!
+//! [`AggMode::Flat`] executes that reduction serially (the oracle);
+//! [`AggMode::Tree`] fills the leaf rows in parallel. Each row is
+//! written by exactly one worker evaluating the same serial expression,
+//! and the root compose is serial in both modes, so the two schedules
+//! write identical bytes — property-tested here over random partitions
+//! and gated end to end (engine test matrix, `benches/endtoend.rs
+//! --tree`, `ci.sh --quick`). With a single domain the whole reduction
+//! degenerates to the historical flat fold of `fl::mock`, bit for bit.
+//!
+//! [`weighted_sum_into`] is the ONE weighted-merge kernel: the mock
+//! backend's chunked flat FedAvg and the leaf tier here both call it,
+//! and `fl::backend`'s >agg_k composition shares [`chunk_masses`] — so
+//! a scaling or fallback change cannot drift between implementations.
+//!
+//! # In-process eager shards
+//!
+//! In a multi-process deployment each domain shard would aggregate the
+//! moment its last member's `UpdateSubmitted` lands (the coordinator
+//! FSM tracks exactly that — `RoundFsm::assign_domains` /
+//! `shards_complete`). In-process we *record* shard completion for
+//! observability but compute the partials at round close: submitted
+//! slots keep training until their progress cap, so params mutate after
+//! submission and an eagerly-materialised partial would diverge from
+//! the legacy loop. The scheduling freedom is the multi-process hook;
+//! the algebra (and the bits) are fixed by the canonical order above.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::par;
+use crate::util::par::thresholds;
+
+/// Which aggregation schedule the engine uses. Both execute the
+/// canonical reduction of the module docs and are bitwise-identical;
+/// `Flat` is the serial oracle, `Tree` the parallel default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggMode {
+    /// Serial schedule of the canonical two-tier reduction (the
+    /// oracle the property tests and bench gates compare against).
+    Flat,
+    /// Per-domain partial rows filled in parallel (the default).
+    Tree,
+}
+
+/// The ONE weighted-merge kernel: accumulate `Σ scale_i · update_i`
+/// into `seg` (= coordinates `start..start + seg.len()` of the output),
+/// where `scale_i = w_i / total`, or `1 / n_total` when the total mass
+/// is zero (unweighted-mean fallback — all-zero sample counts must not
+/// zero the model). The per-update scale is hoisted out of the
+/// coordinate loop and updates accumulate left to right, so every
+/// caller — the mock backend's chunked flat FedAvg, the tree's leaf
+/// tier — produces the same bits for the same (updates, weights) slice.
+#[inline]
+pub fn weighted_sum_into(
+    seg: &mut [f32],
+    start: usize,
+    updates: &[&[f32]],
+    weights: &[f32],
+    total: f32,
+    n_total: f32,
+) {
+    for (u, &w) in updates.iter().zip(weights) {
+        let scale = if total > 0.0 { w / total } else { 1.0 / n_total };
+        for (o, &v) in seg.iter_mut().zip(&u[start..start + seg.len()]) {
+            *o += v * scale;
+        }
+    }
+}
+
+/// Per-chunk weight masses for composed (multi-level) FedAvg: one
+/// pre-sized pass pushing `Σ chunk` for each `k`-sized chunk of
+/// `weights` into `out` (cleared first). Shared by the XLA backend's
+/// >agg_k composition so partial-mass bookkeeping cannot drift from the
+/// tree's per-domain masses.
+pub fn chunk_masses(weights: &[f32], k: usize, out: &mut Vec<f32>) {
+    out.clear();
+    if weights.is_empty() {
+        return;
+    }
+    let k = k.max(1);
+    out.reserve((weights.len() + k - 1) / k);
+    for chunk in weights.chunks(k) {
+        out.push(chunk.iter().sum());
+    }
+}
+
+/// The two-tier aggregator. One instance lives on the simulation for
+/// its whole run: every buffer below is an arena that keeps its
+/// capacity across rounds, so steady-state aggregation allocates
+/// nothing (gated by the `arena_bytes` plateau in the endtoend bench).
+pub struct TreeAggregator {
+    /// distinct participant domain ids, ascending — the canonical
+    /// composition order of the root tier
+    group_doms: Vec<usize>,
+    /// CSR offsets into `members` (`group_doms.len() + 1` entries)
+    offsets: Vec<u32>,
+    /// participant indices grouped by domain, ascending within a group
+    members: Vec<u32>,
+    /// counting-sort scratch, indexed by domain id (dense path)
+    counts: Vec<u32>,
+    /// per-group weight mass — the `weight_mass` half of the
+    /// `(partial_params, weight_mass)` a sub-aggregator would ship
+    masses: Vec<f32>,
+    /// g × dim partial-parameter matrix (row = one domain partial)
+    partials: Vec<f32>,
+    /// fan the leaf tier out once a round spans at least this many
+    /// domain groups… (tests pin 1 / usize::MAX to force both paths)
+    pub par_groups_min: usize,
+    /// …AND the participants × parameters product reaches this (a
+    /// handful of tiny rows is cheaper to fill inline than to spawn
+    /// for); both gates must pass
+    pub par_work_min: usize,
+    /// rounds aggregated through this instance
+    pub rounds: u64,
+    /// domain shards reduced across all rounds
+    pub shards_aggregated: u64,
+    peak_arena: usize,
+}
+
+impl Default for TreeAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TreeAggregator {
+    pub fn new() -> Self {
+        TreeAggregator {
+            group_doms: Vec::new(),
+            offsets: Vec::new(),
+            members: Vec::new(),
+            counts: Vec::new(),
+            masses: Vec::new(),
+            partials: Vec::new(),
+            par_groups_min: thresholds::TREE_GROUPS,
+            par_work_min: thresholds::TREE_WORK,
+            rounds: 0,
+            shards_aggregated: 0,
+            peak_arena: 0,
+        }
+    }
+
+    /// Domain groups of the most recent `aggregate_into` call.
+    pub fn groups(&self) -> usize {
+        self.group_doms.len()
+    }
+
+    /// Distinct domain ids of the most recent call, ascending (the
+    /// canonical composition order).
+    pub fn group_domains(&self) -> &[usize] {
+        &self.group_doms
+    }
+
+    /// Per-group weight masses of the most recent call, in
+    /// `group_domains` order.
+    pub fn group_masses(&self) -> &[f32] {
+        &self.masses
+    }
+
+    /// Current arena footprint (capacity, not length — what the
+    /// allocator actually holds between rounds). The endtoend bench
+    /// uses this as its peak-RSS proxy.
+    pub fn arena_bytes(&self) -> usize {
+        self.partials.capacity() * 4
+            + self.masses.capacity() * 4
+            + self.members.capacity() * 4
+            + self.offsets.capacity() * 4
+            + self.counts.capacity() * 4
+            + self.group_doms.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// High-water arena footprint across all rounds so far.
+    pub fn peak_arena_bytes(&self) -> usize {
+        self.peak_arena
+    }
+
+    /// Group participants by domain into the CSR arenas. Canonical
+    /// structure either way: distinct domains ascending, members in
+    /// ascending participant order within each group. Dense domain ids
+    /// take an O(n + max_id) counting sort; wildly sparse ids (beyond
+    /// ~4·n) fall back to an ordered map.
+    fn build_groups(&mut self, domains: &[usize]) {
+        let n = domains.len();
+        self.group_doms.clear();
+        self.offsets.clear();
+        self.members.clear();
+        let max_d = domains.iter().copied().max().unwrap_or(0);
+        if max_d < n.saturating_mul(4).saturating_add(1024) {
+            self.counts.clear();
+            self.counts.resize(max_d + 1, 0);
+            for &d in domains {
+                self.counts[d] += 1;
+            }
+            let mut cum = 0u32;
+            for d in 0..=max_d {
+                let c = self.counts[d];
+                if c > 0 {
+                    self.group_doms.push(d);
+                    self.offsets.push(cum);
+                }
+                self.counts[d] = cum; // becomes the domain's write cursor
+                cum += c;
+            }
+            self.offsets.push(cum);
+            self.members.clear();
+            self.members.resize(n, 0);
+            for (p, &d) in domains.iter().enumerate() {
+                let pos = self.counts[d] as usize;
+                self.members[pos] = p as u32;
+                self.counts[d] += 1;
+            }
+        } else {
+            let mut map: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+            for (p, &d) in domains.iter().enumerate() {
+                map.entry(d).or_default().push(p as u32);
+            }
+            let mut cum = 0u32;
+            for (d, mem) in map {
+                self.group_doms.push(d);
+                self.offsets.push(cum);
+                cum += mem.len() as u32;
+                self.members.extend_from_slice(&mem);
+            }
+            self.offsets.push(cum);
+        }
+    }
+
+    /// Aggregate `updates` (weighted by `weights`, sharded by
+    /// `domains`) into `out`, replacing its contents. Both modes
+    /// execute the canonical reduction of the module docs; `Tree` fills
+    /// the per-domain partial rows in parallel (subject to the
+    /// `par_groups_min` / `par_work_min` gates), `Flat` serially.
+    pub fn aggregate_into(
+        &mut self,
+        mode: AggMode,
+        domains: &[usize],
+        updates: &[&[f32]],
+        weights: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = updates.len();
+        if n != weights.len() || n != domains.len() {
+            return Err(anyhow!(
+                "aggregate: {} updates vs {} weights vs {} domains",
+                n,
+                weights.len(),
+                domains.len()
+            ));
+        }
+        if n == 0 {
+            return Err(anyhow!("aggregate called with no updates"));
+        }
+        let dim = updates[0].len();
+        for (i, u) in updates.iter().enumerate() {
+            if u.len() != dim {
+                return Err(anyhow!(
+                    "update {i} has {} params, update 0 has {dim}",
+                    u.len()
+                ));
+            }
+        }
+        debug_assert!(n < u32::MAX as usize);
+
+        self.build_groups(domains);
+        let g = self.group_doms.len();
+
+        // canonical step 1: ONE global total over all weights in
+        // participant order (identical expression to the flat fold),
+        // unweighted-mean fallback on zero mass
+        let total: f32 = weights.iter().sum();
+        let n_total = n as f32;
+
+        // the weight_mass half of each domain's emission (members in
+        // participant order, like the partial itself)
+        self.masses.clear();
+        for gi in 0..g {
+            let lo = self.offsets[gi] as usize;
+            let hi = self.offsets[gi + 1] as usize;
+            let mut m = 0.0f32;
+            for &p in &self.members[lo..hi] {
+                m += weights[p as usize];
+            }
+            self.masses.push(m);
+        }
+
+        // canonical step 2, the leaf tier: Flat pins the row fill
+        // serial; Tree fans rows out once both gates pass. Either way
+        // each row is one worker running the same serial expression.
+        let min_rows = match mode {
+            AggMode::Flat => usize::MAX,
+            AggMode::Tree => {
+                if g >= self.par_groups_min
+                    && n.saturating_mul(dim) >= self.par_work_min
+                {
+                    1
+                } else {
+                    usize::MAX
+                }
+            }
+        };
+        self.partials.clear();
+        self.partials.resize(g * dim, 0.0);
+        let offsets = &self.offsets;
+        let members = &self.members;
+        par::par_fill_rows_scratch(
+            &mut self.partials,
+            dim,
+            min_rows,
+            || (Vec::new(), Vec::new()),
+            |gi, row, scratch: &mut (Vec<_>, Vec<_>)| {
+                let (gu, gw) = scratch;
+                gu.clear();
+                gw.clear();
+                let lo = offsets[gi] as usize;
+                let hi = offsets[gi + 1] as usize;
+                for &p in &members[lo..hi] {
+                    gu.push(updates[p as usize]);
+                    gw.push(weights[p as usize]);
+                }
+                weighted_sum_into(row, 0, gu, gw, total, n_total);
+            },
+        );
+
+        // canonical step 3, the root tier: serial compose in ascending
+        // domain-id order on both schedules (copy-then-add so a single
+        // domain reproduces the flat fold exactly, -0.0 bits included)
+        out.clear();
+        out.extend_from_slice(&self.partials[..dim]);
+        for gi in 1..g {
+            let row = &self.partials[gi * dim..(gi + 1) * dim];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+
+        self.rounds += 1;
+        self.shards_aggregated += g as u64;
+        let bytes = self.arena_bytes();
+        if bytes > self.peak_arena {
+            self.peak_arena = bytes;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::{MockBackend, TrainBackend};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn random_instance(rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<f32>, Vec<usize>) {
+        let n = 1 + rng.below(40);
+        let dim = 1 + rng.below(64);
+        let updates: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let weights: Vec<f32> = if rng.f64() < 0.1 {
+            vec![0.0; n] // zero-mass edge: unweighted-mean fallback
+        } else {
+            (0..n).map(|_| rng.range_f64(0.0, 9.0) as f32).collect()
+        };
+        let domains: Vec<usize> = match rng.below(4) {
+            0 => vec![rng.below(5); n],             // one domain
+            1 => (0..n).collect(),                  // all singleton
+            2 => {
+                let d = 1 + rng.below(8);
+                (0..n).map(|p| (p * 7 + 3) % d).collect() // dense, gappy
+            }
+            _ => (0..n).map(|p| (p % 5) * 1_000_003).collect(), // sparse ids
+        };
+        (updates, weights, domains)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// THE tentpole property: the parallel tree schedule is bitwise
+    /// equal to the serial flat oracle across random domain partitions
+    /// — one-domain, all-singleton, gappy (empty-domain) and sparse-id
+    /// edges included, zero-mass weights included.
+    #[test]
+    fn tree_equals_flat_bitwise_over_random_partitions() {
+        forall(60, |rng| {
+            let (updates, weights, domains) = random_instance(rng);
+            let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+            let mut flat = TreeAggregator::new();
+            let mut tree = TreeAggregator::new();
+            tree.par_groups_min = 1; // force the parallel schedule
+            tree.par_work_min = 0;
+            let mut out_f = Vec::new();
+            let mut out_t = Vec::new();
+            flat.aggregate_into(AggMode::Flat, &domains, &refs, &weights, &mut out_f)
+                .unwrap();
+            tree.aggregate_into(AggMode::Tree, &domains, &refs, &weights, &mut out_t)
+                .unwrap();
+            assert_eq!(
+                bits(&out_f),
+                bits(&out_t),
+                "tree != flat for domains {domains:?}"
+            );
+            assert_eq!(flat.groups(), tree.groups());
+            assert_eq!(flat.group_domains(), tree.group_domains());
+            assert_eq!(bits(flat.group_masses()), bits(tree.group_masses()));
+        });
+    }
+
+    /// With one domain the canonical reduction degenerates to the
+    /// historical flat fold — bitwise equal to `MockBackend::aggregate`
+    /// (which routes through the same `weighted_sum_into` kernel).
+    #[test]
+    fn single_domain_reproduces_mock_flat_fold_bitwise() {
+        forall(25, |rng| {
+            let n = 1 + rng.below(12);
+            let dim = 1 + rng.below(48);
+            let backend = MockBackend::new(n, dim, 0.3, 11);
+            let updates: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+            let weights: Vec<f32> =
+                (0..n).map(|_| rng.range_f64(0.0, 9.0) as f32).collect();
+            let expected = backend.aggregate(&refs, &weights).unwrap();
+            let domains = vec![7usize; n];
+            let mut agg = TreeAggregator::new();
+            for mode in [AggMode::Flat, AggMode::Tree] {
+                let mut out = Vec::new();
+                agg.aggregate_into(mode, &domains, &refs, &weights, &mut out)
+                    .unwrap();
+                assert_eq!(bits(&expected), bits(&out), "{mode:?} != mock flat");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_total_mass_falls_back_to_unweighted_mean() {
+        let updates: [&[f32]; 2] = [&[2.0, 0.0], &[4.0, 2.0]];
+        let mut agg = TreeAggregator::new();
+        let mut out = Vec::new();
+        agg.aggregate_into(AggMode::Tree, &[0, 1], &updates, &[0.0, 0.0], &mut out)
+            .unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-6);
+        assert!((out[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn malformed_inputs_are_structured_errors() {
+        let mut agg = TreeAggregator::new();
+        let mut out = Vec::new();
+        let u: [&[f32]; 2] = [&[1.0, 2.0], &[3.0]];
+        assert!(agg
+            .aggregate_into(AggMode::Tree, &[], &[], &[], &mut out)
+            .is_err());
+        assert!(agg
+            .aggregate_into(AggMode::Tree, &[0], &[&[1.0][..]], &[1.0, 2.0], &mut out)
+            .is_err());
+        assert!(agg
+            .aggregate_into(AggMode::Tree, &[0, 1], &u, &[1.0, 1.0], &mut out)
+            .is_err());
+    }
+
+    /// Gappy domain ids (groups 2/5/9, nothing in between) keep the
+    /// canonical ascending order and participant-order members.
+    #[test]
+    fn gappy_domains_compose_in_ascending_id_order() {
+        let updates: [&[f32]; 4] = [&[1.0], &[2.0], &[4.0], &[8.0]];
+        let weights = [1.0f32, 1.0, 1.0, 1.0];
+        let domains = [9usize, 2, 2, 5];
+        let mut agg = TreeAggregator::new();
+        let mut out = Vec::new();
+        agg.aggregate_into(AggMode::Flat, &domains, &updates, &weights, &mut out)
+            .unwrap();
+        assert_eq!(agg.group_domains(), &[2, 5, 9]);
+        assert_eq!(agg.group_masses(), &[2.0, 1.0, 1.0]);
+        assert!((out[0] - 15.0 / 4.0).abs() < 1e-6);
+    }
+
+    /// Arenas are reused: a second identical round leaves the footprint
+    /// unchanged (allocation-free steady state) and the stats advance.
+    #[test]
+    fn arena_plateaus_and_stats_accumulate() {
+        let updates: [&[f32]; 3] = [&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]];
+        let weights = [1.0f32, 2.0, 3.0];
+        let domains = [0usize, 1, 0];
+        let mut agg = TreeAggregator::new();
+        let mut out = Vec::new();
+        agg.aggregate_into(AggMode::Tree, &domains, &updates, &weights, &mut out)
+            .unwrap();
+        let first = agg.arena_bytes();
+        assert!(first > 0);
+        let mut out2 = Vec::new();
+        agg.aggregate_into(AggMode::Tree, &domains, &updates, &weights, &mut out2)
+            .unwrap();
+        assert_eq!(agg.arena_bytes(), first, "steady state reallocated");
+        assert_eq!(agg.peak_arena_bytes(), first);
+        assert_eq!(agg.rounds, 2);
+        assert_eq!(agg.shards_aggregated, 4);
+        assert_eq!(bits(&out), bits(&out2));
+    }
+
+    #[test]
+    fn chunk_masses_sums_per_chunk() {
+        let mut out = vec![99.0f32];
+        chunk_masses(&[1.0, 2.0, 3.0, 4.0, 5.0], 2, &mut out);
+        assert_eq!(out, vec![3.0, 7.0, 5.0]);
+        chunk_masses(&[1.0, 2.0], 0, &mut out); // k clamps to 1
+        assert_eq!(out, vec![1.0, 2.0]);
+        chunk_masses(&[], 4, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -25,6 +25,11 @@ pub struct RoundRecord {
     /// the round closed on its deadline/horizon with fewer than
     /// `n_required` submitted updates (instead of on its quorum)
     pub timed_out: bool,
+    /// distinct energy domains among the participants — the domain
+    /// shards the hierarchical aggregator reduced (0 when the round
+    /// produced no participants). A pure function of `participants`,
+    /// identical under flat and tree aggregation.
+    pub agg_domains: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -190,6 +195,7 @@ impl MetricsLog {
                             ("wasted_wh", num(r.wasted_wh)),
                             ("mean_loss", num(r.mean_loss)),
                             ("timed_out", Json::Bool(r.timed_out)),
+                            ("agg_domains", num(r.agg_domains as f64)),
                         ])
                     })
                     .collect()),
@@ -244,6 +250,7 @@ impl MetricsLog {
                 wasted_wh: 60.0,
                 mean_loss: 1.0,
                 timed_out: round == 3,
+                agg_domains: 1,
             });
             m.evals.push(EvalRecord {
                 round,

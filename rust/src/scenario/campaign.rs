@@ -41,14 +41,29 @@
 //! `tests/integration_campaign.rs` at 1/2/8 workers). Wall-clock
 //! numbers live only in [`CampaignRun`], never in the report.
 //!
-//! ## Trace memoization
+//! ## Trace + dataset memoization
 //!
 //! Cells differing only in strategy share one environment build: the
 //! runner keys [`crate::scenario::build_env`] outputs by
 //! (env cache key, alpha, errors, seed, run shape) and hands each cell
 //! a clone of the shared immutable build — regenerating a 7-day solar +
 //! load trace set per strategy would otherwise dominate small-model
-//! campaigns. Hit/miss counts are reported by `benches/campaign.rs`.
+//! campaigns. The synthetic dataset partition is memoized separately
+//! (per preset/seed/α/clients/scale — it is env-axis-blind, so env
+//! cells share it even when their trace builds miss). Both caches use
+//! the same `Arc` + build-outside-the-lock pattern; hit/miss counts for
+//! both are reported by `benches/campaign.rs`.
+//!
+//! ## Cost-ordered drain
+//!
+//! Per-cell wall-clock varies ~10x across a grid (exact solver vs
+//! random baseline, churn/chaos on vs off). The parallel drain hands
+//! cells out longest-first by a static cost model
+//! ([`CampaignCell::cost`]: days × clients × d_max, scaled by strategy
+//! class and churn/chaos presence) so no worker starts a monster cell
+//! while the others idle at the tail. Results are still stored by cell
+//! index, so the report stays byte-identical at any worker count — the
+//! schedule changes *when* a cell runs, never what it computes.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -58,8 +73,10 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{
-    build_mock_env, preset_uses_alpha, run_built_mock, ExperimentSpec, RunReport, StrategyKind,
+    build_mock_env_with, build_mock_partition, preset_uses_alpha, run_built_mock,
+    ExperimentSpec, RunReport, StrategyKind,
 };
+use crate::data::Partition;
 use crate::trace::forecast::ErrorLevel;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::stats;
@@ -353,6 +370,34 @@ impl CampaignCell {
             ..Default::default()
         }
     }
+
+    /// Static drain-scheduling cost estimate (arbitrary units; only the
+    /// ORDER matters — see the module docs). Base is the sim volume
+    /// days × clients × d_max, scaled up for solver-heavy strategy
+    /// classes and for churn/chaos cells (event translation + fault
+    /// plans per round). Deterministic per cell, so the longest-first
+    /// order is identical on every run and worker count.
+    pub fn cost(&self, spec: &CampaignSpec) -> u64 {
+        let base = (spec.days.max(1) as u64)
+            * (spec.n_clients.max(1) as u64)
+            * (spec.d_max.max(1) as u64);
+        let strategy = match self.strategy {
+            StrategyKind::FedZeroExact => 8,
+            StrategyKind::FedZero
+            | StrategyKind::FedZeroCa
+            | StrategyKind::SemiSync
+            | StrategyKind::SemiSyncCa => 4,
+            _ => 1,
+        };
+        let mut cost = base * strategy;
+        if self.env.churn.is_some() {
+            cost *= 2;
+        }
+        if self.env.chaos.is_some() {
+            cost *= 2;
+        }
+        cost
+    }
 }
 
 /// Deterministic summary of one finished cell (everything that goes
@@ -439,6 +484,10 @@ pub struct CampaignRun {
     pub results: Vec<CellResult>,
     pub memo_hits: usize,
     pub memo_misses: usize,
+    /// synthetic-dataset partition cache hits/misses (separate from the
+    /// environment cache: the partition is env-axis-blind)
+    pub dataset_hits: usize,
+    pub dataset_misses: usize,
     pub wall_s: f64,
 }
 
@@ -467,18 +516,30 @@ impl CampaignRun {
             self.memo_hits as f64 / total as f64
         }
     }
+
+    /// Memoization hit rate over all dataset-partition lookups.
+    pub fn dataset_hit_rate(&self) -> f64 {
+        let total = self.dataset_hits + self.dataset_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.dataset_hits as f64 / total as f64
+        }
+    }
 }
 
-/// Shared immutable environment cache (see the module docs).
-struct EnvCache {
-    map: Mutex<HashMap<String, Arc<crate::config::BuiltScenario>>>,
+/// Shared immutable memo cache (see the module docs) — one instance
+/// caches [`crate::config::BuiltScenario`] environment builds, another
+/// the synthetic dataset [`Partition`]s.
+struct MemoCache<T> {
+    map: Mutex<HashMap<String, Arc<T>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
 
-impl EnvCache {
+impl<T> MemoCache<T> {
     fn new() -> Self {
-        EnvCache {
+        MemoCache {
             map: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -488,8 +549,8 @@ impl EnvCache {
     fn get_or_build(
         &self,
         key: &str,
-        build: impl FnOnce() -> Result<crate::config::BuiltScenario>,
-    ) -> Result<Arc<crate::config::BuiltScenario>> {
+        build: impl FnOnce() -> Result<T>,
+    ) -> Result<Arc<T>> {
         if let Some(hit) = self.map.lock().unwrap().get(key).cloned() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(hit);
@@ -504,10 +565,28 @@ impl EnvCache {
     }
 }
 
-/// Run one cell: (memoized) environment build through the coordinator's
-/// shared mock fixture, mock simulation, deterministic summary.
-fn run_cell(spec: &CampaignSpec, cell: &CampaignCell, cache: &EnvCache) -> Result<CellResult> {
+type EnvCache = MemoCache<crate::config::BuiltScenario>;
+type DatasetCache = MemoCache<Partition>;
+
+/// Run one cell: (memoized) dataset partition, (memoized) environment
+/// build over it through the coordinator's shared mock fixture, mock
+/// simulation, deterministic summary.
+fn run_cell(
+    spec: &CampaignSpec,
+    cell: &CampaignCell,
+    envs: &EnvCache,
+    datasets: &DatasetCache,
+) -> Result<CellResult> {
     let xspec = cell.experiment(spec);
+    // the partition is env-axis-blind: key it by the dataset inputs only
+    // so env/error cells share one synthetic dataset generation
+    let ds_key = format!(
+        "preset={}|seed={}|alpha={:?}|nc={}|scale={:?}",
+        spec.preset, cell.seed, cell.alpha, spec.n_clients, spec.dataset_scale,
+    );
+    let partition = datasets
+        .get_or_build(&ds_key, || Ok(build_mock_partition(&xspec)))
+        .with_context(|| format!("cell {} ({})", cell.index, cell.label))?;
     // key over every build input except the strategy — the axis cells
     // share builds across
     let key = format!(
@@ -522,8 +601,8 @@ fn run_cell(spec: &CampaignSpec, cell: &CampaignCell, cache: &EnvCache) -> Resul
         spec.days,
         spec.dataset_scale,
     );
-    let built = cache
-        .get_or_build(&key, || build_mock_env(&xspec))
+    let built = envs
+        .get_or_build(&key, || build_mock_env_with(&xspec, &partition))
         .with_context(|| format!("cell {} ({})", cell.index, cell.label))?;
     let report = run_built_mock(&xspec, (*built).clone())
         .with_context(|| format!("cell {} ({})", cell.index, cell.label))?;
@@ -546,23 +625,33 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> 
     if cells.is_empty() {
         bail!("campaign expands to zero cells");
     }
-    let cache = EnvCache::new();
+    let envs = EnvCache::new();
+    let datasets = DatasetCache::new();
     let t0 = Instant::now();
     let n = cells.len();
     let results: Vec<Option<Result<CellResult>>> = if workers <= 1 {
-        cells.iter().map(|c| Some(run_cell(spec, c, &cache))).collect()
+        cells
+            .iter()
+            .map(|c| Some(run_cell(spec, c, &envs, &datasets)))
+            .collect()
     } else {
+        // longest-first drain order (cost model; module docs). Storage
+        // stays by cell INDEX, so the report is byte-identical to the
+        // serial natural-order drain at any worker count.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(cells[i].cost(spec)), i));
         let slots: Mutex<Vec<Option<Result<CellResult>>>> =
             Mutex::new((0..n).map(|_| None).collect());
         let next = AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for _ in 0..workers.min(n) {
                 scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
                         break;
                     }
-                    let r = run_cell(spec, &cells[i], &cache);
+                    let i = order[k];
+                    let r = run_cell(spec, &cells[i], &envs, &datasets);
                     slots.lock().unwrap()[i] = Some(r);
                 });
             }
@@ -576,8 +665,10 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> 
     Ok(CampaignRun {
         spec: spec.clone(),
         results: out,
-        memo_hits: cache.hits.load(Ordering::Relaxed),
-        memo_misses: cache.misses.load(Ordering::Relaxed),
+        memo_hits: envs.hits.load(Ordering::Relaxed),
+        memo_misses: envs.misses.load(Ordering::Relaxed),
+        dataset_hits: datasets.hits.load(Ordering::Relaxed),
+        dataset_misses: datasets.misses.load(Ordering::Relaxed),
         wall_s: t0.elapsed().as_secs_f64(),
     })
 }
@@ -685,6 +776,47 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_orders_longest_first_with_stable_ties() {
+        let mut spec = CampaignSpec::smoke();
+        spec.strategies = vec![
+            StrategyKind::Random,       // 1x
+            StrategyKind::FedZero,      // 4x
+            StrategyKind::FedZeroExact, // 8x
+            StrategyKind::RandomOver,   // 1x (ties with Random)
+        ];
+        spec.chaos_axis = vec![
+            None,
+            Some(ChaosSpec { dropout_per_round: 0.1, ..ChaosSpec::default() }),
+        ];
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 8);
+        // chaos doubles, exact solver is the heaviest class
+        let base = (spec.days.max(1) * spec.n_clients.max(1) * spec.d_max.max(1)) as u64;
+        for c in &cells {
+            let want = match c.strategy {
+                StrategyKind::FedZeroExact => 8,
+                StrategyKind::FedZero => 4,
+                _ => 1,
+            } * if c.env.chaos.is_some() { 2 } else { 1 };
+            assert_eq!(c.cost(&spec), base * want, "cell {}", c.label);
+        }
+        // the drain order: longest first, index-ascending on ties —
+        // a permutation of all cells
+        let mut order: Vec<usize> = (0..cells.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(cells[i].cost(&spec)), i));
+        let costs: Vec<u64> = order.iter().map(|&i| cells[i].cost(&spec)).collect();
+        assert!(costs.windows(2).all(|w| w[0] >= w[1]), "not longest-first: {costs:?}");
+        for w in order.windows(2) {
+            if cells[w[0]].cost(&spec) == cells[w[1]].cost(&spec) {
+                assert!(w[0] < w[1], "tie broke descending: {w:?}");
+            }
+        }
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..cells.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn smoke_campaign_runs_and_reports() {
         let spec = CampaignSpec::smoke();
         let run = run_campaign(&spec, 1).unwrap();
@@ -696,9 +828,11 @@ mod tests {
             assert!(r.fairness_jain > 0.0 && r.fairness_jain <= 1.0 + 1e-12);
         }
         // both cells share one environment build (same env+seed, only
-        // the strategy differs)
+        // the strategy differs) — and one dataset partition
         assert_eq!(run.memo_misses, 1);
         assert_eq!(run.memo_hits, 1);
+        assert_eq!(run.dataset_misses, 1);
+        assert_eq!(run.dataset_hits, 1);
         // the report parses back and carries every cell
         let text = run.report_json().to_string_pretty();
         let parsed = Json::parse(&text).unwrap();
@@ -719,6 +853,8 @@ mod tests {
         // chaos is a sim-time knob: both cells must hit one shared build
         assert_eq!(run.memo_misses, 1);
         assert_eq!(run.memo_hits, 1);
+        assert_eq!(run.dataset_misses, 1);
+        assert_eq!(run.dataset_hits, 1);
         for r in &run.results {
             assert!(r.rounds > 0, "{} did no rounds", r.cell.label);
         }

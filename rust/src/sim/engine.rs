@@ -74,7 +74,7 @@ use crate::client::ClientInfo;
 use crate::coordinator::events::{ClientEvent, EventQueue};
 use crate::coordinator::fsm::{self, EventOutcome, RoundFsm};
 use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
-use crate::fl::{fedavg_weights, ClientTrainState, TrainBackend, TrainJob};
+use crate::fl::{fedavg_weights, AggMode, ClientTrainState, TrainBackend, TrainJob, TreeAggregator};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
 use crate::selection::incr::IncrSelState;
 use crate::selection::oort::UtilityTracker;
@@ -205,6 +205,15 @@ pub struct Simulation<'a, B: TrainBackend> {
     /// the global model after `run` finishes (equality fixture for the
     /// serial-vs-sharded train-path tests and the bench gate)
     pub final_global: Vec<f32>,
+    /// aggregation schedule: hierarchical per-domain tree (default) or
+    /// the serial flat oracle — bitwise identical (`fl::tree` docs)
+    pub agg: AggMode,
+    /// the two-tier aggregator; persistent so its CSR/partial arenas are
+    /// reused across rounds (allocation-free steady state)
+    pub tree: TreeAggregator,
+    /// domain shards whose last in-epoch update landed before round
+    /// close, across all FSM rounds (eager sub-aggregation visibility)
+    pub shard_completions: u64,
 }
 
 /// Actual spare capacity of client `i` at step `t` (batches/step) — free
@@ -407,6 +416,9 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             rng: Rng::new(seed ^ 0x51D),
             select_time: std::time::Duration::ZERO,
             final_global: Vec::new(),
+            agg: AggMode::Tree,
+            tree: TreeAggregator::new(),
+            shard_completions: 0,
         }
     }
 
@@ -552,10 +564,14 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 ExecMode::Fsm => self.execute_round_fsm(&decision, t, &global)?,
             };
 
-            // aggregate participant updates (weights = sample counts),
-            // reading the params straight out of the returned client
-            // states — no per-round model copies. An empty-participant
-            // round degrades to a no-op aggregation.
+            // aggregate participant updates (weights = sample counts)
+            // through the two-tier domain aggregator — `self.agg` picks
+            // the parallel tree schedule or the serial flat oracle, both
+            // bitwise identical (`fl::tree` docs) — reading the params
+            // straight out of the returned client states: no per-round
+            // model copies. An empty-participant round degrades to a
+            // no-op aggregation.
+            let mut agg_domains = 0usize;
             if !out.participants.is_empty() {
                 let weights = fedavg_weights(
                     &out.participants
@@ -563,6 +579,11 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                         .map(|&c| self.clients[c].num_samples())
                         .collect::<Vec<_>>(),
                 );
+                let part_domains: Vec<usize> = out
+                    .participants
+                    .iter()
+                    .map(|&c| self.clients[c].domain)
+                    .collect();
                 let updates: Vec<&[f32]> = out
                     .participants
                     .iter()
@@ -574,7 +595,14 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                             .as_slice()
                     })
                     .collect();
-                global = self.backend.aggregate(&updates, &weights)?;
+                self.tree.aggregate_into(
+                    self.agg,
+                    &part_domains,
+                    &updates,
+                    &weights,
+                    &mut global,
+                )?;
+                agg_domains = self.tree.groups();
             }
             if self.exec == ExecMode::Fsm {
                 self.fsm.round_end(); // Aggregating → RoundEnd
@@ -610,6 +638,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 wasted_wh: out.wasted_wh,
                 mean_loss,
                 timed_out: out.timed_out,
+                agg_domains,
             });
             if self.exec == ExecMode::Fsm {
                 self.fsm.finish(); // RoundEnd → Idle
@@ -889,6 +918,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             .begin_round(decision, self.clients.len(), t0, round_cap, &mut self.events)
             .map_err(anyhow::Error::new)?;
         let epoch = self.fsm.epoch();
+        // declare each slot's energy domain so the FSM tracks when a
+        // domain shard's last in-epoch update lands — the eager
+        // sub-aggregation point of the two-tier tree (`fl::tree` docs)
+        let domain_of_slot: Vec<usize> =
+            sel.iter().map(|&c| self.clients[c].domain).collect();
+        self.fsm.assign_domains(&domain_of_slot);
 
         // Translate churn windows overlapping the round span into
         // Dropout/Rejoin events (windows already open at t0 become
@@ -1123,6 +1158,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         // degrades to an empty participant set — no error, no panic.
         let timed_out = !self.fsm.quorum();
         self.fsm.close(timed_out);
+        self.shard_completions += self.fsm.shards_complete() as u64;
 
         let mut participants = Vec::new();
         let mut stragglers = Vec::new();
@@ -1543,6 +1579,21 @@ mod tests {
         outages: Option<Vec<Vec<(usize, usize)>>>,
         chaos: Option<ChaosSpec>,
     ) -> (MetricsLog, f64, Vec<f32>, u64) {
+        run_sim_agg(strategy, power_w, exec, outages, chaos, AggMode::Tree)
+    }
+
+    /// `run_sim_exec` plus an explicit aggregation schedule. Tree runs
+    /// force the per-domain fan-out on (the 3-domain fixture is below
+    /// the real `TREE_GROUPS` gate) so tree-vs-flat tests genuinely
+    /// exercise the parallel leaf tier.
+    fn run_sim_agg(
+        strategy: &mut dyn Strategy,
+        power_w: f64,
+        exec: ExecMode,
+        outages: Option<Vec<Vec<(usize, usize)>>>,
+        chaos: Option<ChaosSpec>,
+        agg: AggMode,
+    ) -> (MetricsLog, f64, Vec<f32>, u64) {
         let horizon = 600;
         let (clients, domains, load, load_fc) = build(9, 3, power_w, horizon);
         let mut backend = MockBackend::new(9, 8, 0.2, 7);
@@ -1568,6 +1619,11 @@ mod tests {
         sim.par_domains_min = usize::MAX;
         sim.par_slots_min = usize::MAX;
         sim.exec = exec;
+        sim.agg = agg;
+        if agg == AggMode::Tree {
+            sim.tree.par_groups_min = 1;
+            sim.tree.par_work_min = 0;
+        }
         if let Some(o) = outages {
             sim.outages = o;
         }
@@ -1620,6 +1676,129 @@ mod tests {
                 assert_eq!(m_f.rejected_decisions, 0);
             }
         }
+    }
+
+    /// THE hierarchical-aggregation gate: the parallel tree schedule
+    /// must reproduce the serial flat oracle bit for bit — MetricsLog
+    /// (agg_domains included), meter total, final global model bits and
+    /// step counts — across strategies × power regimes × both exec
+    /// modes. The fixture pins the tree's fan-out gates open, so the
+    /// leaf tier genuinely runs parallel per-domain fills.
+    #[test]
+    fn tree_aggregation_matches_flat_bitwise() {
+        let mk: [(&str, fn() -> Box<dyn Strategy>); 3] = [
+            ("fedzero", || Box::new(FedZero::new(SolverKind::Greedy))),
+            ("random_over", || Box::new(Baseline::random_over())),
+            ("semisync", || {
+                Box::new(crate::selection::semisync::SemiSync::new(
+                    FedZero::new(SolverKind::Greedy),
+                    15,
+                ))
+            }),
+        ];
+        for (name, make) in mk {
+            for power in [800.0, 100.0, 60.0] {
+                for exec in [ExecMode::Legacy, ExecMode::Fsm] {
+                    let mut s_flat = make();
+                    let (m_fl, kwh_fl, g_fl, st_fl) = run_sim_agg(
+                        s_flat.as_mut(), power, exec, None, None, AggMode::Flat,
+                    );
+                    let mut s_tree = make();
+                    let (m_tr, kwh_tr, g_tr, st_tr) = run_sim_agg(
+                        s_tree.as_mut(), power, exec, None, None, AggMode::Tree,
+                    );
+                    assert_eq!(m_tr, m_fl, "{name}@{power}/{exec:?}: metrics diverged");
+                    assert_eq!(kwh_tr, kwh_fl, "{name}@{power}/{exec:?}: energy diverged");
+                    assert_eq!(st_tr, st_fl, "{name}@{power}/{exec:?}: steps diverged");
+                    assert_eq!(
+                        g_tr.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        g_fl.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "{name}@{power}/{exec:?}: global model diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Tree ≡ flat must survive chaos faults: dropped and stale shard
+    /// members shrink (or empty) domain shards mid-round, and the two
+    /// schedules must still agree bit for bit.
+    #[test]
+    fn tree_aggregation_matches_flat_under_chaos() {
+        let chaos = ChaosSpec {
+            dropout_per_round: 0.5,
+            mean_drop_min: 20.0,
+            stale_prob: 0.3,
+            mean_delay_min: 10.0,
+            slow_prob: 0.3,
+            slow_factor: 0.5,
+            ..ChaosSpec::default()
+        };
+        for power in [800.0, 100.0] {
+            let mut s_flat = Baseline::random_over();
+            let (m_fl, kwh_fl, g_fl, st_fl) = run_sim_agg(
+                &mut s_flat, power, ExecMode::Fsm, None,
+                Some(chaos.clone()), AggMode::Flat,
+            );
+            let mut s_tree = Baseline::random_over();
+            let (m_tr, kwh_tr, g_tr, st_tr) = run_sim_agg(
+                &mut s_tree, power, ExecMode::Fsm, None,
+                Some(chaos.clone()), AggMode::Tree,
+            );
+            assert_eq!(m_tr, m_fl, "chaos@{power}: metrics diverged");
+            assert_eq!(kwh_tr, kwh_fl, "chaos@{power}: energy diverged");
+            assert_eq!(st_tr, st_fl, "chaos@{power}: steps diverged");
+            assert_eq!(
+                g_tr.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                g_fl.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "chaos@{power}: global model diverged"
+            );
+        }
+    }
+
+    /// The round records expose the shard structure: every round with
+    /// participants reports 1 ≤ agg_domains ≤ min(participants, domains),
+    /// and the FSM path counts completed domain shards.
+    #[test]
+    fn agg_domains_and_shard_completions_are_recorded() {
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, 800.0, horizon);
+        let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        backend.par_min_jobs = usize::MAX;
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut strategy = FedZero::new(SolverKind::Greedy);
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut strategy,
+        );
+        sim.run().unwrap();
+        assert!(!sim.metrics.rounds.is_empty());
+        for r in &sim.metrics.rounds {
+            if r.participants.is_empty() {
+                assert_eq!(r.agg_domains, 0);
+            } else {
+                assert!(r.agg_domains >= 1);
+                assert!(r.agg_domains <= r.participants.len().min(3));
+            }
+        }
+        assert!(sim.tree.rounds > 0, "tree aggregator never ran");
+        assert!(sim.tree.peak_arena_bytes() > 0);
+        // no churn/chaos: every selected slot submits, so every round's
+        // shards all complete before close
+        assert!(sim.shard_completions > 0, "no shard completions recorded");
     }
 
     /// Mid-round churn goes through the event translation (windows →

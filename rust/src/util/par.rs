@@ -55,6 +55,12 @@ pub mod thresholds {
     /// …AND minimum selected clients (both gates must pass; water-filling
     /// a few slots is cheaper than a spawn).
     pub const ROUND_SLOTS: usize = 256;
+    /// Hierarchical aggregation: minimum domain groups in a round before
+    /// the per-domain partial fills fan out…
+    pub const TREE_GROUPS: usize = 8;
+    /// …AND minimum total work (participants × parameters; both gates
+    /// must pass — a few small partial rows fill faster inline).
+    pub const TREE_WORK: usize = 1 << 15;
 }
 
 /// Number of worker threads to fan out to (>= 1).
