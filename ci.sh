@@ -3,19 +3,28 @@
 # regressions fail loudly.
 #
 #   ./ci.sh          tier-1 (build + tests) + quick bench smokes
-#   ./ci.sh --quick  tier-1 + the campaign, chaos and tree smokes
+#   ./ci.sh --quick  tier-1 + the campaign, chaos, tree and steal smokes
 #                    (fastest gates: report-schema validation,
 #                    worker-count determinism, the builtin-spec-vs-legacy
 #                    Scenario::Global diff, the seeded fault-injection
-#                    determinism/visibility gates, and the 1M-client
-#                    hierarchical-aggregation flat-vs-tree bitwise gate —
-#                    exit 1 on any divergence)
+#                    determinism/visibility gates, the 1M-client
+#                    hierarchical-aggregation flat-vs-tree bitwise gate,
+#                    and the work-stealing B&B drain gate
+#                    (Serial/Chunked/Steal × 1/2/8 pinned workers must
+#                    agree bitwise) — exit 1 on any divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
+#   ./ci.sh --arm    default run, then copy every fresh BENCH_*.json
+#                    over its .baseline.json (commit them afterwards)
 #
 # The selection bench writes rust/BENCH_selection.json (median ns per
-# Fig-8 point plus speedup vs the retained reference greedy) and exits
-# non-zero if the arena-based solver's chosen sets diverge from the
-# reference. The endtoend bench writes rust/BENCH_endtoend.json (ns per
+# Fig-8 point plus speedup vs the retained reference greedy, and the
+# skewed-tree B&B drain comparison: node throughput under the serial,
+# uniform-chunked and work-stealing frontier drains plus the steal
+# telemetry proving subtrees redistributed) and exits non-zero if the
+# arena-based solver's chosen sets diverge from the reference or any
+# completed B&B search differs across drains or worker counts. Its
+# `--steal` mode runs ONLY the drain comparison (fast enough for
+# --quick; mode-tagged "steal"). The endtoend bench writes rust/BENCH_endtoend.json (ns per
 # idle/round sim step, train-phase ns/round serial vs sharded, ring
 # footprint) and exits non-zero if the incrementally-advanced forecast
 # ring diverges from fresh-built windows OR sharded training diverges
@@ -32,14 +41,20 @@
 # (no-fault runs must be bit-identical) and the hierarchical two-tier
 # aggregator against flat FedAvg (full-sim AggMode::Tree vs
 # AggMode::Flat must be bit-identical). `--tree` runs ONLY the
-# 1M-client flat-vs-tree scaling series + bitwise divergence gate,
-# written to rust/BENCH_tree.json — fast enough for --quick.
+# 1M-client flat-vs-tree scaling series + the skewed-domain stolen
+# leaf-fill series (one giant domain, 1/2/8 pinned workers, steal
+# counts recorded) + bitwise divergence gates, written to
+# rust/BENCH_tree.json — fast enough for --quick.
+#
+# Worker counts everywhere honour FEDZERO_THREADS (see util::par); the
+# determinism gates pin 1/2/8 workers explicitly, so they hold under
+# any override.
 #
 # When a committed baseline (BENCH_<name>.baseline.json) exists next to a
 # freshly written BENCH_<name>.json, the two are compared metric by
 # metric: regressions >10% warn, >50% fail the run.
 #
-# >>> STILL OUTSTANDING (now seven PRs of perf work with no recorded
+# >>> STILL OUTSTANDING (now eight PRs of perf work with no recorded
 # >>> trajectory): no toolchain environment has ever run these benches,
 # >>> so NO baseline is committed and the ratchet below is wired but
 # >>> UNARMED. First CI run in a cargo environment must do this:
@@ -47,16 +62,12 @@
 # ARMING / RE-RATCHETING THE BASELINES (run in a toolchain environment —
 # the authoring container has no cargo, so the first arming must happen
 # wherever CI actually runs):
-#   1. ./ci.sh                  # green build/tests + fresh quick-mode JSON
-#   2. cp rust/BENCH_selection.json rust/BENCH_selection.baseline.json
-#      cp rust/BENCH_endtoend.json  rust/BENCH_endtoend.baseline.json
-#      cp rust/BENCH_campaign.json  rust/BENCH_campaign.baseline.json
-#      cp rust/BENCH_chaos.json     rust/BENCH_chaos.baseline.json
-#      cp rust/BENCH_tree.json      rust/BENCH_tree.baseline.json
-#   3. git add rust/BENCH_*.baseline.json && git commit
+#   1. ./ci.sh --arm            # green build/tests + fresh JSON, then
+#                               # copies BENCH_*.json -> *.baseline.json
+#   2. git add rust/BENCH_*.baseline.json && git commit
 # Baselines are mode-tagged: a quick-mode baseline only gates quick-mode
 # runs (the comparator skips mismatched modes), so arm with the mode CI
-# uses. After an INTENTIONAL perf change, repeat 1–3 in the same
+# uses. After an INTENTIONAL perf change, repeat 1–2 in the same
 # environment; never copy a baseline produced on different hardware over
 # an existing one — the ratchet compares absolute numbers.
 set -euo pipefail
@@ -158,9 +169,13 @@ echo "== chaos smoke (--quick: seeded fault-injection determinism + visibility g
 cargo bench --bench chaos -- --quick
 compare_bench BENCH_chaos.json BENCH_chaos.baseline.json
 
-echo "== tree aggregation gate (--tree: 1M-client flat-vs-tree bitwise + scaling) =="
+echo "== tree aggregation gate (--tree: 1M-client flat-vs-tree bitwise + skewed stolen fill) =="
 cargo bench --bench endtoend -- --tree
 compare_bench BENCH_tree.json BENCH_tree.baseline.json
+
+echo "== steal scheduler gate (--steal: skewed-tree B&B drains, bitwise at 1/2/8 workers) =="
+cargo bench --bench selection -- --steal
+compare_bench BENCH_selection.json BENCH_selection.baseline.json
 
 if [[ "${1:-}" == "--quick" ]]; then
     echo "CI OK (quick)"
@@ -179,6 +194,17 @@ if [[ "${1:-}" == "--bench" ]]; then
     echo "== selection bench (default points) =="
     cargo bench --bench selection
     compare_bench BENCH_selection.json BENCH_selection.baseline.json
+fi
+
+if [[ "${1:-}" == "--arm" ]]; then
+    echo "== arming bench baselines from this run =="
+    for b in campaign chaos tree selection endtoend; do
+        if [[ -f "BENCH_$b.json" ]]; then
+            cp "BENCH_$b.json" "BENCH_$b.baseline.json"
+            echo "  armed BENCH_$b.baseline.json"
+        fi
+    done
+    echo "now commit them: git add rust/BENCH_*.baseline.json && git commit"
 fi
 
 echo "CI OK"

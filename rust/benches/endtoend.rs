@@ -27,8 +27,11 @@
 //!
 //! Flags: --quick  CI smoke (small points, mock only)
 //!        --tree   ONLY the 1M-client flat-vs-tree scaling + divergence
-//!                 gate, written to rust/BENCH_tree.json (fast enough
-//!                 for `ci.sh --quick`; exits 1 on any bit divergence)
+//!                 gate PLUS the skewed-domain stolen-leaf-fill series
+//!                 (one giant domain, work-stealing fill at 1/2/8
+//!                 pinned workers, steal counts recorded), written to
+//!                 rust/BENCH_tree.json (fast enough for
+//!                 `ci.sh --quick`; exits 1 on any bit divergence)
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -563,21 +566,112 @@ fn tree_scaling(
     (points, mismatches, tree.peak_arena_bytes())
 }
 
+/// Skewed-domain leaf fill: one giant domain holds ~90% of the round's
+/// updates, the rest are singletons. A static per-worker group split
+/// would pin the singleton tail behind whichever worker also drew the
+/// giant row; the work-stealing fill (`util::par::steal`) lets idle
+/// workers drain the tail while one owns the monster. The giant row
+/// itself is a single work unit, so the tail (~10% of the mass) bounds
+/// the speedup — the load-bearing claims are (a) flat vs stolen tree
+/// stays bit-identical at 1/2/8 pinned workers and (b) the recorded
+/// steal counts prove rows actually moved. Returns the JSON points and
+/// the bitwise mismatch count (0 = green).
+fn tree_skew(n_clients: usize, dim: usize, reps: usize) -> (Vec<Json>, usize) {
+    let mut buf = vec![0.0f32; n_clients * dim];
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40) as f32 * 1e-4;
+    }
+    let updates: Vec<&[f32]> = buf.chunks_exact(dim).collect();
+    let weights: Vec<f32> =
+        (0..n_clients).map(|i| ((i * 37) % 100 + 1) as f32).collect();
+    let giant = n_clients * 9 / 10;
+    let domains: Vec<usize> = (0..n_clients)
+        .map(|i| if i < giant { 0 } else { i - giant + 1 })
+        .collect();
+
+    let mut flat = TreeAggregator::new();
+    let mut out_f = Vec::new();
+    let mut best_f = f64::MAX;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        flat.aggregate_into(AggMode::Flat, &domains, &updates, &weights, &mut out_f)
+            .unwrap();
+        best_f = best_f.min(t0.elapsed().as_nanos() as f64);
+    }
+    let flat_bits: Vec<u32> = out_f.iter().map(|x| x.to_bits()).collect();
+
+    let mut points = Vec::new();
+    let mut mismatches = 0usize;
+    let mut ns_1w = f64::MAX;
+    for workers in [1usize, 2, 8] {
+        let mut tree = TreeAggregator::new();
+        tree.par_groups_min = 1;
+        tree.par_work_min = 0;
+        tree.par_workers = workers;
+        let mut out_t = Vec::new();
+        let mut best_t = f64::MAX;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            tree.aggregate_into(AggMode::Tree, &domains, &updates, &weights, &mut out_t)
+                .unwrap();
+            best_t = best_t.min(t0.elapsed().as_nanos() as f64);
+        }
+        if out_t.iter().map(|x| x.to_bits()).collect::<Vec<_>>() != flat_bits {
+            eprintln!("TREE-SKEW DIVERGENCE: stolen tree != flat at {workers} workers");
+            mismatches += 1;
+        }
+        if workers == 1 {
+            ns_1w = best_t;
+        }
+        let speedup = ns_1w / best_t.max(1.0);
+        println!(
+            "tree_skew/{n_clients}c_giant90_{workers}w flat {:>12}  tree {:>12} per round \
+             (vs 1w {speedup:.2}x, {} steals / {} rows moved)",
+            fmt_ns(best_f),
+            fmt_ns(best_t),
+            tree.steal_stats.steals,
+            tree.steal_stats.stolen_items,
+        );
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(format!("tree_skew_{workers}w")));
+        m.insert("clients".into(), Json::Num(n_clients as f64));
+        m.insert("dim".into(), Json::Num(dim as f64));
+        m.insert("giant_domain_clients".into(), Json::Num(giant as f64));
+        m.insert("workers".into(), Json::Num(workers as f64));
+        m.insert("ns_per_round_flat".into(), Json::Num(best_f));
+        m.insert("ns_per_round_tree".into(), Json::Num(best_t));
+        m.insert("speedup_vs_1w".into(), Json::Num(speedup));
+        // schedule-dependent telemetry (no ns_/per_s suffix → reported,
+        // never gated by the ci.sh ratchet)
+        m.insert("steal_count".into(), Json::Num(tree.steal_stats.steals as f64));
+        m.insert(
+            "stolen_rows".into(),
+            Json::Num(tree.steal_stats.stolen_items as f64),
+        );
+        points.push(Json::Obj(m));
+    }
+    (points, mismatches)
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if std::env::args().any(|a| a == "--tree") {
         // fast standalone mode for `ci.sh --quick`: ONLY the 1M-client
-        // flat-vs-tree scaling series + bitwise divergence gate
+        // flat-vs-tree scaling series + the skewed-domain stolen-fill
+        // series, each with a bitwise divergence gate
         println!("== hierarchical aggregation [tree] ==");
         let (points, mismatches, peak) =
             tree_scaling(1_000_000, 8, &[1, 64, 4_096], 2);
+        println!("\n== skewed-domain stolen leaf fill ==");
+        let (skew_points, skew_mismatches) = tree_skew(1_000_000, 8, 2);
         let mut root = BTreeMap::new();
         root.insert("bench".into(), Json::Str("tree".into()));
         root.insert("mode".into(), Json::Str("tree".into()));
         root.insert("tree".into(), Json::Arr(points));
+        root.insert("tree_skew".into(), Json::Arr(skew_points));
         root.insert(
             "tree_divergence_mismatches".into(),
-            Json::Num(mismatches as f64),
+            Json::Num((mismatches + skew_mismatches) as f64),
         );
         root.insert("peak_arena_bytes".into(), Json::Num(peak as f64));
         let out = Json::Obj(root).to_string_pretty();
@@ -586,8 +680,11 @@ fn main() {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
-        if mismatches > 0 {
-            eprintln!("tree-vs-flat equivalence FAILED ({mismatches} mismatches)");
+        if mismatches + skew_mismatches > 0 {
+            eprintln!(
+                "tree-vs-flat equivalence FAILED ({} mismatches)",
+                mismatches + skew_mismatches
+            );
             std::process::exit(1);
         }
         println!("== done ==");

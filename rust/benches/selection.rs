@@ -17,8 +17,19 @@
 //! fan-out) and fails the run if completed searches disagree — the
 //! serial/parallel identity guarantee of `solver::mip`.
 //!
+//! A second B&B point runs a deliberately SKEWED tree (one contended
+//! domain full of exact score ties → one frontier subtree dwarfs the
+//! rest) under all three drains (`BnbDrain::Serial` / `Chunked` /
+//! `Steal`), recording node throughput per drain plus the stealing
+//! telemetry (steal count, stolen subtrees) that shows redistribution
+//! actually happened. Completed searches must agree bitwise across
+//! drains AND across 1/2/8 pinned workers — exit 1 on divergence.
+//!
 //! Flags: --quick  CI smoke (small points only, few samples)
 //!        --full   add the 100k-scale paper-envelope points
+//!        --steal  ONLY the skewed-tree drain comparison + its bitwise
+//!                 gate (fast enough for `ci.sh --quick`; writes
+//!                 BENCH_selection.json with mode "steal")
 
 use std::collections::BTreeMap;
 use std::hint::black_box;
@@ -26,8 +37,8 @@ use std::time::Instant;
 
 use fedzero::solver::alloc::AllocWorkspace;
 use fedzero::solver::mip::{
-    branch_and_bound_view_forced, greedy, reference_greedy, SelClient, SelInstance,
-    SelSolution,
+    branch_and_bound_view_drained, branch_and_bound_view_forced, greedy,
+    reference_greedy, BnbDrain, SelClient, SelInstance, SelSolution,
 };
 use fedzero::util::json::Json;
 use fedzero::util::rng::Rng;
@@ -273,9 +284,152 @@ fn bnb_point(budget: usize) -> (Json, bool) {
     (Json::Obj(m), mismatch)
 }
 
+/// Adversarially skewed B&B instance: a contended low-energy domain full
+/// of exact score ties (identical sigma/delta, spare jittered only in
+/// the last float bits) makes pruning ineffective inside ONE frontier
+/// subtree, which then dwarfs every other subtree — the shape where a
+/// uniform frontier split leaves most workers idle at the join and
+/// stealing should win.
+fn skewed_bnb_instance(seed: u64) -> SelInstance {
+    let mut rng = Rng::new(seed);
+    let t_n = 4usize;
+    let mut clients = Vec::new();
+    for i in 0..12 {
+        let m_min = 1.0;
+        clients.push(SelClient {
+            domain: 0,
+            sigma: 1.0,
+            delta: 1.0,
+            m_min,
+            m_max: m_min + 4.0,
+            spare: (0..t_n)
+                .map(|t| (1.0 + ((i + t) % 3) as f64 * 1e-6) as f32)
+                .collect(),
+        });
+    }
+    for p in 1..4 {
+        let m_min = rng.range_f64(0.5, 1.0);
+        clients.push(SelClient {
+            domain: p,
+            sigma: rng.range_f64(0.5, 1.5),
+            delta: 1.0,
+            m_min,
+            m_max: m_min + 3.0,
+            spare: (0..t_n).map(|_| rng.range_f64(0.5, 1.5) as f32).collect(),
+        });
+    }
+    let energy = (0..4)
+        .map(|p| {
+            let base = if p == 0 { 1.5 } else { 4.0 };
+            (0..t_n).map(|_| base as f32).collect()
+        })
+        .collect();
+    SelInstance { n: 4, clients, energy }
+}
+
+/// Skewed-tree node throughput under all three frontier drains, plus
+/// the determinism gate: completed searches must return bit-identical
+/// solutions across drains and across 1/2/8 pinned steal workers.
+/// Returns (json, mismatch).
+fn steal_bnb_point(budget: usize) -> (Json, bool) {
+    let inst = skewed_bnb_instance(11);
+    let vs = inst.view_storage();
+    let run = |drain: BnbDrain, workers: usize| {
+        let mut ws = AllocWorkspace::default();
+        let t0 = Instant::now();
+        let (sol, nodes, stats) =
+            branch_and_bound_view_drained(vs.view(), budget, &mut ws, drain, workers);
+        (sol, nodes, stats, t0.elapsed().as_secs_f64())
+    };
+    let (ser, nodes_ser, _, dt_ser) = run(BnbDrain::Serial, 1);
+    let (chk, nodes_chk, _, dt_chk) = run(BnbDrain::Chunked, 0);
+    let (stl, nodes_stl, stats, dt_stl) = run(BnbDrain::Steal, 0);
+
+    let mut mismatch = false;
+    let mut check = |name: &str, sol: &SelSolution| {
+        if ser.optimal
+            && sol.optimal
+            && (sol.chosen != ser.chosen
+                || sol.objective.to_bits() != ser.objective.to_bits())
+        {
+            eprintln!("STEAL DIVERGENCE: {name} differs from serial drain");
+            mismatch = true;
+        }
+    };
+    check("chunked", &chk);
+    check("steal(auto)", &stl);
+    // pinned worker counts — the schedule changes, the bits must not
+    for workers in [1usize, 2, 8] {
+        let (sol, _, _, _) = run(BnbDrain::Steal, workers);
+        check(&format!("steal({workers}w)"), &sol);
+    }
+
+    let nps_ser = nodes_ser as f64 / dt_ser.max(1e-9);
+    let nps_chk = nodes_chk as f64 / dt_chk.max(1e-9);
+    let nps_stl = nodes_stl as f64 / dt_stl.max(1e-9);
+    println!(
+        "bnb_skew/15c_4p_4t serial {nodes_ser} nodes ({nps_ser:.0}/s), \
+         chunked {nodes_chk} ({nps_chk:.0}/s), \
+         steal {nodes_stl} ({nps_stl:.0}/s, {} steals / {} subtrees moved, \
+         speedup vs chunked {:.2}x){}",
+        stats.steals,
+        stats.stolen_items,
+        dt_chk / dt_stl.max(1e-9),
+        if mismatch { " MISMATCH" } else { "" },
+    );
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str("bnb_skew".into()));
+    m.insert("clients".into(), Json::Num(15.0));
+    m.insert("domains".into(), Json::Num(4.0));
+    m.insert("steps".into(), Json::Num(4.0));
+    m.insert("node_budget".into(), Json::Num(budget as f64));
+    m.insert("nodes_serial".into(), Json::Num(nodes_ser as f64));
+    m.insert("nodes_chunked".into(), Json::Num(nodes_chk as f64));
+    m.insert("nodes_steal".into(), Json::Num(nodes_stl as f64));
+    m.insert("nodes_per_s_serial".into(), Json::Num(nps_ser));
+    m.insert("nodes_per_s_chunked".into(), Json::Num(nps_chk));
+    m.insert("nodes_per_s_steal".into(), Json::Num(nps_stl));
+    m.insert(
+        "wallclock_speedup_steal_vs_chunked".into(),
+        Json::Num(dt_chk / dt_stl.max(1e-9)),
+    );
+    // schedule-dependent telemetry (no ns_/per_s suffix → the ci.sh
+    // ratchet reports but never gates on these)
+    m.insert("steal_workers".into(), Json::Num(stats.workers as f64));
+    m.insert("steal_count".into(), Json::Num(stats.steals as f64));
+    m.insert("stolen_subtrees".into(), Json::Num(stats.stolen_items as f64));
+    m.insert("complete_serial".into(), Json::Bool(ser.optimal));
+    m.insert("complete_chunked".into(), Json::Bool(chk.optimal));
+    m.insert("complete_steal".into(), Json::Bool(stl.optimal));
+    m.insert("chosen_match".into(), Json::Bool(!mismatch));
+    (Json::Obj(m), mismatch)
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let full = std::env::args().any(|a| a == "--full");
+    if std::env::args().any(|a| a == "--steal") {
+        // fast standalone mode for `ci.sh --quick`: ONLY the skewed-tree
+        // drain comparison + its cross-drain/cross-worker bitwise gate
+        println!("== branch-and-bound drain comparison [steal] ==");
+        let (steal_json, steal_mismatch) = steal_bnb_point(400_000);
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("selection".into()));
+        root.insert("mode".into(), Json::Str("steal".into()));
+        root.insert("bnb_steal".into(), steal_json);
+        let out = Json::Obj(root).to_string_pretty();
+        let path = "BENCH_selection.json";
+        match std::fs::write(path, &out) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+        if steal_mismatch {
+            eprintln!("branch-and-bound drain/worker equivalence FAILED");
+            std::process::exit(1);
+        }
+        println!("== done ==");
+        return;
+    }
     let mode = if full {
         "full"
     } else if quick {
@@ -322,6 +476,12 @@ fn main() {
     println!("\n== branch-and-bound serial vs parallel ==");
     let (bnb_json, bnb_mismatch) = bnb_point(if quick { 200_000 } else { 2_000_000 });
 
+    // --- skewed-tree drain comparison: uniform frontier split vs work
+    // stealing on a tree where one subtree dwarfs the rest
+    println!("\n== branch-and-bound skewed-tree drains ==");
+    let (steal_json, steal_mismatch) =
+        steal_bnb_point(if quick { 400_000 } else { 2_000_000 });
+
     // all reference-checked points must have matched
     let mismatches: Vec<&str> = points
         .iter()
@@ -339,6 +499,7 @@ fn main() {
         Json::Arr(points.iter().map(|p| p.to_json()).collect()),
     );
     root.insert("bnb".into(), bnb_json);
+    root.insert("bnb_steal".into(), steal_json);
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_selection.json";
     match std::fs::write(path, &out) {
@@ -352,6 +513,10 @@ fn main() {
     }
     if bnb_mismatch {
         eprintln!("branch-and-bound serial/parallel equivalence FAILED");
+        std::process::exit(1);
+    }
+    if steal_mismatch {
+        eprintln!("branch-and-bound drain/worker equivalence FAILED");
         std::process::exit(1);
     }
     println!("== done ==");

@@ -10,16 +10,17 @@
 //!
 //! The core is immutable after construction (`optima`/`target`/`lr`), so
 //! the backend is `Sync` and opts into the shard fan-out: `train_shard`
-//! delegates to [`train_shard_parallel`] once a shard has at least
-//! `par_min_jobs` jobs, and `aggregate` chunks the parameter vector
-//! across workers once the model has at least `par_agg_min` coordinates
-//! — both bit-identical to their serial paths (each client state /
-//! output coordinate is touched by exactly one worker running the same
-//! serial expression).
+//! delegates to [`train_shard_stealing`] once a shard has at least
+//! `par_min_jobs` jobs (workers steal queued jobs, so uneven batch
+//! counts don't serialise behind one monster job), and `aggregate`
+//! chunks the parameter vector across workers once the model has at
+//! least `par_agg_min` coordinates — both bit-identical to their serial
+//! paths (each client state / output coordinate is touched by exactly
+//! one worker running the same serial expression).
 
 use anyhow::{anyhow, Result};
 
-use super::{train_shard_parallel, BatchStats, ClientTrainState, TrainBackend, TrainJob};
+use super::{train_shard_stealing, BatchStats, ClientTrainState, TrainBackend, TrainJob};
 use crate::util::par;
 use crate::util::rng::Rng;
 
@@ -38,6 +39,9 @@ pub struct MockBackend {
     /// chunk `aggregate` across workers once the model has at least this
     /// many coordinates (same force-both-paths convention)
     pub par_agg_min: usize,
+    /// worker count for the shard fan-out (`0` = auto); determinism
+    /// tests pin 1/2/8 to prove the schedule never moves a bit
+    pub par_workers: usize,
 }
 
 impl MockBackend {
@@ -64,6 +68,7 @@ impl MockBackend {
             lr: 0.2,
             par_min_jobs: 16,
             par_agg_min: 1 << 16,
+            par_workers: 0,
         }
     }
 
@@ -122,7 +127,7 @@ impl TrainBackend for MockBackend {
         jobs: &mut [TrainJob],
         states: &mut [ClientTrainState<()>],
     ) -> Result<()> {
-        train_shard_parallel(self, global, jobs, states, self.par_min_jobs)
+        train_shard_stealing(self, global, jobs, states, self.par_min_jobs, self.par_workers)
     }
 
     fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
@@ -301,6 +306,43 @@ mod tests {
                 assert_eq!(ab, bb, "params diverged");
             }
         });
+    }
+
+    /// Adversarial skew: one monster job (1000 batches) among trivial
+    /// ones. The stolen shard must produce bitwise-identical params,
+    /// stats and step counters at 1, 2 and 8 workers — and they must
+    /// equal the serial loop.
+    #[test]
+    fn monster_job_shard_is_bitwise_stable_across_worker_counts() {
+        let n_clients = 12usize;
+        let dim = 16usize;
+        let run = |par_min: usize, workers: usize| -> (Vec<Vec<u32>>, Vec<u64>, Vec<u64>) {
+            let mut b = MockBackend::new(n_clients, dim, 0.3, 77);
+            b.par_min_jobs = par_min;
+            b.par_workers = workers;
+            let global = b.init_params(7).unwrap();
+            let mut states: Vec<ClientTrainState<()>> =
+                (0..n_clients).map(|c| fresh_state(&b, c, &global)).collect();
+            let mut jobs: Vec<TrainJob> = (0..n_clients)
+                .map(|c| TrainJob::new(c, if c == 2 { 1000 } else { 1 + c % 3 }, c))
+                .collect();
+            b.train_shard(&global, &mut jobs, &mut states).unwrap();
+            (
+                states
+                    .iter()
+                    .map(|s| s.params.iter().map(|x| x.to_bits()).collect())
+                    .collect(),
+                states.iter().map(|s| s.steps).collect(),
+                jobs.iter().map(|j| j.stats.mean_loss.to_bits()).collect(),
+            )
+        };
+        let serial = run(usize::MAX, 0);
+        for workers in [1usize, 2, 8] {
+            let stolen = run(1, workers);
+            assert_eq!(serial.0, stolen.0, "params diverged at {workers} workers");
+            assert_eq!(serial.1, stolen.1, "steps diverged at {workers} workers");
+            assert_eq!(serial.2, stolen.2, "stats diverged at {workers} workers");
+        }
     }
 
     #[test]

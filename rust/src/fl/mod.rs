@@ -10,8 +10,10 @@
 //! [`TrainBackend::train_batches`] by `&mut`. Because the core is never
 //! mutably borrowed by training, a `Sync` backend can train whole power
 //! domains concurrently: the simulator fans a step's train jobs out over
-//! `util::par` workers via [`TrainBackend::train_shard`], each worker
-//! driving a disjoint block of [`TrainJob`]s.
+//! `util::par::steal` workers via [`TrainBackend::train_shard`], each
+//! [`TrainJob`] claimed by exactly one worker (batch counts differ
+//! wildly per client, so idle workers steal queued jobs instead of
+//! waiting behind a monster one).
 //!
 //! §Determinism invariant — the shard fan-out must be unobservable:
 //! `train_batches` may depend only on `(client, state, global, n)`, and
@@ -166,15 +168,10 @@ pub trait TrainBackend {
     fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)>;
 }
 
-/// Fork-join shard training for `Sync` backends: fans contiguous job
-/// blocks out across `util::par` workers once the shard has at least
-/// `min_par` jobs. Jobs carry strictly increasing `slot` indices, so the
-/// state arena is split at block boundaries into disjoint `&mut` chunks
-/// — each job still exclusively owns its client's state and the result
-/// is bit-identical to the serial default of
-/// [`TrainBackend::train_shard`]; on failure the error with the smallest
-/// job index is reported regardless of chunking (blocks are joined in
-/// ascending job order and each block stops at its first error).
+/// Work-stealing shard training for `Sync` backends
+/// ([`train_shard_stealing`] with the auto worker count): bit-identical
+/// to the serial default of [`TrainBackend::train_shard`] on success,
+/// same (smallest-job-index) error on failure.
 pub fn train_shard_parallel<B>(
     backend: &B,
     global: &[f32],
@@ -186,70 +183,92 @@ where
     B: TrainBackend + Sync + ?Sized,
     B::Cursor: Send,
 {
+    train_shard_stealing(backend, global, jobs, states, min_par, 0)
+}
+
+/// Shard training over `util::par::steal` for `Sync` backends: workers
+/// (`0` = auto) claim job indices dynamically once the shard has at
+/// least `min_par` jobs, so one monster job (`TrainJob::n_batches` is
+/// wildly uneven across clients) no longer pins a whole contiguous
+/// block behind it — the historical uniform split left every other
+/// worker idle at the join.
+///
+/// Job `j` touches exactly `jobs[j]` and `states[jobs[j].slot]`; slots
+/// are strictly increasing across a shard, so both are exclusive to
+/// whichever worker claims index `j` and the result is bit-identical to
+/// the serial loop at any worker count. On failure the stealing path
+/// still runs the remaining jobs (a thief may already be past the
+/// failing index) and reports the error with the *smallest job index*
+/// after the join — the same error the serial short-circuit reports.
+/// State beyond a failing job is unspecified either way; callers abort
+/// the run on error.
+pub fn train_shard_stealing<B>(
+    backend: &B,
+    global: &[f32],
+    jobs: &mut [TrainJob],
+    states: &mut [ClientTrainState<B::Cursor>],
+    min_par: usize,
+    workers: usize,
+) -> Result<()>
+where
+    B: TrainBackend + Sync + ?Sized,
+    B::Cursor: Send,
+{
     debug_assert!(
         jobs.windows(2).all(|w| w[0].slot < w[1].slot),
         "train_shard jobs must reference strictly increasing slots"
     );
     debug_assert!(jobs.last().map_or(true, |j| j.slot < states.len()));
 
-    fn run_block<B>(
-        backend: &B,
-        global: &[f32],
-        jobs: &mut [TrainJob],
-        states: &mut [ClientTrainState<B::Cursor>],
-        base: usize,
-    ) -> Result<()>
-    where
-        B: TrainBackend + ?Sized,
-    {
+    let n_jobs = jobs.len();
+    if n_jobs < min_par.max(1) || par::steal::resolve_workers(workers) <= 1 {
+        // identical to the serial default (first error short-circuits —
+        // in index order, so it IS the smallest-index error)
         for j in jobs.iter_mut() {
-            let st = &mut states[j.slot - base];
+            let st = &mut states[j.slot];
             j.stats = backend.train_batches(j.client, st, global, j.n_batches)?;
             st.steps += j.n_batches as u64;
         }
-        Ok(())
+        return Ok(());
     }
-
-    let n_jobs = jobs.len();
-    let workers = par::threads();
-    if n_jobs < min_par.max(1) || workers <= 1 {
-        return run_block(backend, global, jobs, states, 0);
-    }
-    let per = (n_jobs + workers - 1) / workers;
-    let results: Vec<Result<()>> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut jobs_rest: &mut [TrainJob] = jobs;
-        let mut states_rest: &mut [ClientTrainState<B::Cursor>] = states;
-        let mut base = 0usize;
-        let mut j0 = 0usize;
-        while j0 < n_jobs {
-            let take = per.min(n_jobs - j0);
-            let tmp = std::mem::take(&mut jobs_rest);
-            let (jb, jr) = tmp.split_at_mut(take);
-            jobs_rest = jr;
-            // every slot below the NEXT block's first slot belongs to
-            // this block (slots strictly increase)
-            let split = match jobs_rest.first() {
-                Some(next) => next.slot - base,
-                None => states_rest.len(),
-            };
-            let tmp_s = std::mem::take(&mut states_rest);
-            let (sb, sr) = tmp_s.split_at_mut(split);
-            states_rest = sr;
-            let this_base = base;
-            base += split;
-            handles.push(s.spawn(move || run_block(backend, global, jb, sb, this_base)));
-            j0 += take;
+    let jobs_shared = par::steal::SharedUnits::new(jobs, 1);
+    let states_shared = par::steal::SharedUnits::new(states, 1);
+    let (jobs_shared, states_shared) = (&jobs_shared, &states_shared);
+    let (locals, _stats) = par::steal::steal_exec(
+        n_jobs,
+        workers,
+        |_| None::<(usize, anyhow::Error)>,
+        |ji, first_err| {
+            // SAFETY: the scheduler hands job index `ji` to exactly one
+            // worker, and distinct jobs carry distinct slots (strictly
+            // increasing, asserted above), so both views are exclusive.
+            let job = unsafe { &mut jobs_shared.unit(ji)[0] };
+            let st = unsafe { &mut states_shared.unit(job.slot)[0] };
+            match backend.train_batches(job.client, st, global, job.n_batches) {
+                Ok(stats) => {
+                    job.stats = stats;
+                    st.steps += job.n_batches as u64;
+                }
+                Err(e) => {
+                    if first_err.as_ref().map_or(true, |(fj, _)| ji < *fj) {
+                        *first_err = Some((ji, e));
+                    }
+                }
+            }
+        },
+    );
+    // canonical error reduction: every job ran exactly once, so the
+    // smallest failing index was observed by whichever worker ran it
+    let mut first: Option<(usize, anyhow::Error)> = None;
+    for local in locals.into_iter().flatten() {
+        if first.as_ref().map_or(true, |(fj, _)| local.0 < *fj) {
+            first = Some(local);
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("train shard worker panicked"))
-            .collect()
-    });
-    for r in results {
-        r?;
     }
-    Ok(())
+    match first {
+        Some((_, e)) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// FedAvg weights from sample counts (the standard weighting the paper's

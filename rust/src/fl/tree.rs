@@ -5,11 +5,13 @@
 //! Flat FedAvg funnels every participant through one O(C·P) reduction
 //! on a single thread-pool. Here each domain's sub-aggregator reduces
 //! its own members into one `(partial_params, weight_mass)` pair, the
-//! partials are filled *in parallel* (one `util::par` worker per
-//! contiguous block of domain rows, per-worker gather scratch), and the
-//! root composes them serially. The per-round arenas (CSR grouping,
-//! masses, the g×P partial matrix) are reused across rounds, so the
-//! steady state is allocation-free.
+//! partials are filled *in parallel* with **work stealing**
+//! (`util::par::steal` — domain populations are wildly uneven, so one
+//! giant domain's row would pin a static contiguous split while the
+//! other workers idled; per-worker gather scratch rides in the stealing
+//! state), and the root composes them serially. The per-round arenas
+//! (CSR grouping, masses, the g×P partial matrix) are reused across
+//! rounds, so the steady state is allocation-free.
 //!
 //! # The canonical reduction order (the determinism invariant)
 //!
@@ -143,10 +145,18 @@ pub struct TreeAggregator {
     /// handful of tiny rows is cheaper to fill inline than to spawn
     /// for); both gates must pass
     pub par_work_min: usize,
+    /// worker count for the leaf-tier fill (`0` = auto, i.e.
+    /// `par::threads()`); tests and benches pin 1/2/8 to prove the
+    /// schedule never moves a bit
+    pub par_workers: usize,
     /// rounds aggregated through this instance
     pub rounds: u64,
     /// domain shards reduced across all rounds
     pub shards_aggregated: u64,
+    /// cumulative leaf-tier scheduling telemetry (steal counts are the
+    /// bench's evidence that skewed rows actually redistribute; never
+    /// correctness-bearing)
+    pub steal_stats: par::steal::StealStats,
     peak_arena: usize,
 }
 
@@ -167,8 +177,10 @@ impl TreeAggregator {
             partials: Vec::new(),
             par_groups_min: thresholds::TREE_GROUPS,
             par_work_min: thresholds::TREE_WORK,
+            par_workers: 0,
             rounds: 0,
             shards_aggregated: 0,
+            steal_stats: par::steal::StealStats::default(),
             peak_arena: 0,
         }
     }
@@ -317,8 +329,9 @@ impl TreeAggregator {
         }
 
         // canonical step 2, the leaf tier: Flat pins the row fill
-        // serial; Tree fans rows out once both gates pass. Either way
-        // each row is one worker running the same serial expression.
+        // serial; Tree fans rows out (with stealing — domain
+        // populations are skewed) once both gates pass. Either way each
+        // row is one worker running the same serial expression.
         let min_rows = match mode {
             AggMode::Flat => usize::MAX,
             AggMode::Tree => {
@@ -335,10 +348,11 @@ impl TreeAggregator {
         self.partials.resize(g * dim, 0.0);
         let offsets = &self.offsets;
         let members = &self.members;
-        par::par_fill_rows_scratch(
+        let fill_stats = par::steal::steal_fill_rows_scratch(
             &mut self.partials,
             dim,
             min_rows,
+            self.par_workers,
             || (Vec::new(), Vec::new()),
             |gi, row, scratch: &mut (Vec<_>, Vec<_>)| {
                 let (gu, gw) = scratch;
@@ -353,6 +367,7 @@ impl TreeAggregator {
                 weighted_sum_into(row, 0, gu, gw, total, n_total);
             },
         );
+        self.steal_stats.absorb(fill_stats);
 
         // canonical step 3, the root tier: serial compose in ascending
         // domain-id order on both schedules (copy-then-add so a single
@@ -438,6 +453,46 @@ mod tests {
             assert_eq!(flat.group_domains(), tree.group_domains());
             assert_eq!(bits(flat.group_masses()), bits(tree.group_masses()));
         });
+    }
+
+    /// Adversarial skew: one giant domain holds ~90% of participants,
+    /// the rest are singletons — the stolen row fill must still write
+    /// exactly the flat oracle's bytes (partial matrix AND composed
+    /// output) at 1, 2 and 8 workers.
+    #[test]
+    fn giant_domain_skew_is_bitwise_stable_across_worker_counts() {
+        let mut rng = Rng::new(0xD00D);
+        let n = 400usize;
+        let dim = 24usize;
+        let updates: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+        let weights: Vec<f32> = (0..n).map(|_| rng.range_f64(0.1, 5.0) as f32).collect();
+        // participants 0..360 pile into domain 0; the rest get their own
+        let domains: Vec<usize> =
+            (0..n).map(|p| if p < 360 { 0 } else { p - 359 }).collect();
+        let mut flat = TreeAggregator::new();
+        let mut out_flat = Vec::new();
+        flat.aggregate_into(AggMode::Flat, &domains, &refs, &weights, &mut out_flat)
+            .unwrap();
+        let oracle_partials = bits(&flat.partials);
+        for workers in [1usize, 2, 8] {
+            let mut tree = TreeAggregator::new();
+            tree.par_groups_min = 1;
+            tree.par_work_min = 0;
+            tree.par_workers = workers;
+            let mut out = Vec::new();
+            tree.aggregate_into(AggMode::Tree, &domains, &refs, &weights, &mut out)
+                .unwrap();
+            assert_eq!(bits(&out_flat), bits(&out), "out diverged at {workers} workers");
+            assert_eq!(
+                oracle_partials,
+                bits(&tree.partials),
+                "partial matrix diverged at {workers} workers"
+            );
+            assert_eq!(tree.steal_stats.workers, workers.min(tree.groups()).max(1));
+        }
     }
 
     /// With one domain the canonical reduction degenerates to the

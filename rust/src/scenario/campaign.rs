@@ -33,8 +33,9 @@
 //!
 //! ## Determinism
 //!
-//! Cells are drained by a work-stealing pool of `workers` threads
-//! (1 = inline), but every cell is a pure function of (spec, cell axes)
+//! Cells are drained by the shared work-stealing scheduler
+//! (`util::par::steal`) over `workers` threads (1 = inline), but every
+//! cell is a pure function of (spec, cell axes)
 //! — mock backend, seeded RNG, bit-identical parallel sim paths — and
 //! results are stored by cell index, so `report_json()` is
 //! **byte-identical for any worker count** (gated by
@@ -57,13 +58,15 @@
 //! ## Cost-ordered drain
 //!
 //! Per-cell wall-clock varies ~10x across a grid (exact solver vs
-//! random baseline, churn/chaos on vs off). The parallel drain hands
-//! cells out longest-first by a static cost model
+//! random baseline, churn/chaos on vs off). The parallel drain seeds
+//! the scheduler longest-first by a static cost model
 //! ([`CampaignCell::cost`]: days × clients × d_max, scaled by strategy
-//! class and churn/chaos presence) so no worker starts a monster cell
-//! while the others idle at the tail. Results are still stored by cell
-//! index, so the report stays byte-identical at any worker count — the
-//! schedule changes *when* a cell runs, never what it computes.
+//! class and churn/chaos presence) so the heavy prefix spreads across
+//! the seed ranges, and work stealing covers what the static model
+//! can't predict: a worker that finishes its range steals queued cells
+//! from a worker stuck on a monster one. Results are still stored by
+//! cell index, so the report stays byte-identical at any worker count —
+//! the schedule changes *when* a cell runs, never what it computes.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -79,6 +82,7 @@ use crate::coordinator::{
 use crate::data::Partition;
 use crate::trace::forecast::ErrorLevel;
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::par;
 use crate::util::stats;
 
 use super::churn::ChurnSpec;
@@ -635,28 +639,31 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> 
             .map(|c| Some(run_cell(spec, c, &envs, &datasets)))
             .collect()
     } else {
-        // longest-first drain order (cost model; module docs). Storage
-        // stays by cell INDEX, so the report is byte-identical to the
-        // serial natural-order drain at any worker count.
+        // longest-first drain seeded into the shared work-stealing
+        // scheduler (cost model; module docs): scheduler position p
+        // holds the p-th most expensive cell, so the per-worker seed
+        // ranges split the heavy prefix evenly and an idle worker
+        // steals the queued tail instead of watching a monster cell
+        // finish. Results accumulate per worker tagged by cell INDEX
+        // and are scattered after the join, so the report is
+        // byte-identical to the serial natural-order drain at any
+        // worker count.
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| (std::cmp::Reverse(cells[i].cost(spec)), i));
-        let slots: Mutex<Vec<Option<Result<CellResult>>>> =
-            Mutex::new((0..n).map(|_| None).collect());
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..workers.min(n) {
-                scope.spawn(|| loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    if k >= n {
-                        break;
-                    }
-                    let i = order[k];
-                    let r = run_cell(spec, &cells[i], &envs, &datasets);
-                    slots.lock().unwrap()[i] = Some(r);
-                });
-            }
-        });
-        slots.into_inner().unwrap()
+        let (locals, _stats) = par::steal::steal_exec(
+            n,
+            workers,
+            |_| Vec::<(usize, Result<CellResult>)>::new(),
+            |p, local| {
+                let i = order[p];
+                local.push((i, run_cell(spec, &cells[i], &envs, &datasets)));
+            },
+        );
+        let mut slots: Vec<Option<Result<CellResult>>> = (0..n).map(|_| None).collect();
+        for (i, r) in locals.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
+        slots
     };
     let mut out = Vec::with_capacity(n);
     for (i, slot) in results.into_iter().enumerate() {

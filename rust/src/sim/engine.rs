@@ -767,9 +767,13 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     && par::threads() > 1;
                 if use_par {
                     let groups = &groups;
-                    par::par_fill_rows_scratch(
+                    // stolen fill: domain slot counts are skewed, so an
+                    // idle worker steals queued domain rows instead of
+                    // waiting behind one giant domain
+                    par::steal::steal_fill_rows_scratch(
                         &mut grants,
                         1,
+                        0,
                         0,
                         || (Vec::new(), Vec::new()),
                         |g,
@@ -1062,9 +1066,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     && par::threads() > 1;
                 if use_par {
                     let groups = &groups;
-                    par::par_fill_rows_scratch(
+                    // stolen fill — same skewed-domain rationale as the
+                    // legacy loop above
+                    par::steal::steal_fill_rows_scratch(
                         &mut grants,
                         1,
+                        0,
                         0,
                         || (Vec::new(), Vec::new()),
                         |g,

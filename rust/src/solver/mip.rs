@@ -839,14 +839,19 @@ fn bnb_dfs(
 ///    path (no float drift across siblings).
 ///
 /// §Perf — parallel subtree fan-out (ROADMAP "Parallel branch-and-
-/// bound"): above `thresholds::BNB_MIN_CLIENTS` the root is expanded
-/// breadth-first into a deterministic frontier of independent subtrees
-/// (uniform depth, feasibility-pruned), which `util::par` workers drain
-/// with a SHARED atomic incumbent — bound reads are monotone, so a stale
-/// incumbent only prunes less and pruning stays admissible. Results are
-/// IDENTICAL serial vs parallel on completed searches: pruning is strict
-/// (`bound < incumbent`), so every leaf achieving the global maximum is
-/// explored regardless of schedule, and the final reduction picks the
+/// bound" + "Deeper B&B work stealing"): above
+/// `thresholds::BNB_MIN_CLIENTS` the root is expanded breadth-first
+/// into a deterministic frontier of independent subtrees (uniform
+/// depth, feasibility-pruned), which workers drain by **work stealing**
+/// (`util::par::steal` — frontier subtrees have wildly uneven node
+/// counts, so the historical fixed uniform split, kept as
+/// [`BnbDrain::Chunked`] for the bench baseline, left workers idle
+/// behind one deep subtree) with a SHARED atomic incumbent — bound
+/// reads are monotone, so a stale incumbent only prunes less and
+/// pruning stays admissible. Results are IDENTICAL serial vs parallel
+/// on completed searches: pruning is strict (`bound < incumbent`), so
+/// every leaf achieving the global maximum is explored regardless of
+/// schedule, and the final reduction picks the
 /// maximum objective with exact ties broken to the lexicographically
 /// smallest selection (greedy seed included) — a schedule-independent
 /// canonical winner (property-tested, and load-tested in
@@ -872,12 +877,31 @@ pub fn branch_and_bound_view(
 ) -> SelSolution {
     let parallel =
         inst.clients.len() >= PAR_MIN_BNB_CLIENTS && par::threads() > 1;
-    bnb_run(inst, node_budget, ws, parallel).0
+    let drain = if parallel { BnbDrain::Steal } else { BnbDrain::Serial };
+    bnb_run(inst, node_budget, ws, drain, 0).0
+}
+
+/// How the frontier of independent subtrees is drained. The chosen
+/// drain never changes the returned solution — only node throughput —
+/// so this is exposed (hidden) purely for the equivalence tests and the
+/// steal-vs-uniform bench point.
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BnbDrain {
+    /// One DFS over the whole tree, no frontier.
+    Serial,
+    /// The historical fixed uniform split: contiguous frontier ranges,
+    /// one per worker, no redistribution — a skewed subtree leaves the
+    /// other workers idle at the join.
+    Chunked,
+    /// Work stealing over frontier subtrees (`util::par::steal`): an
+    /// idle worker steals unexplored subtrees from a busy one.
+    Steal,
 }
 
 /// [`branch_and_bound_view`] with the parallel fan-out forced on or off,
 /// returning the visited node count — the serial/parallel equivalence
-/// tests and the selection bench's node-throughput point use this.
+/// tests use this. Forced-parallel means the stealing drain.
 #[doc(hidden)]
 pub fn branch_and_bound_view_forced(
     inst: InstanceView<'_>,
@@ -885,15 +909,33 @@ pub fn branch_and_bound_view_forced(
     ws: &mut AllocWorkspace,
     parallel: bool,
 ) -> (SelSolution, usize) {
-    bnb_run(inst, node_budget, ws, parallel)
+    let drain = if parallel { BnbDrain::Steal } else { BnbDrain::Serial };
+    let (sol, nodes, _) = bnb_run(inst, node_budget, ws, drain, 0);
+    (sol, nodes)
+}
+
+/// [`branch_and_bound_view`] with the drain and worker count pinned
+/// (`workers = 0` means auto), additionally returning visited node
+/// count and scheduling telemetry — the steal-vs-uniform bench point
+/// and the worker-count determinism tests use this.
+#[doc(hidden)]
+pub fn branch_and_bound_view_drained(
+    inst: InstanceView<'_>,
+    node_budget: usize,
+    ws: &mut AllocWorkspace,
+    drain: BnbDrain,
+    workers: usize,
+) -> (SelSolution, usize, par::steal::StealStats) {
+    bnb_run(inst, node_budget, ws, drain, workers)
 }
 
 fn bnb_run(
     inst: InstanceView<'_>,
     node_budget: usize,
     ws: &mut AllocWorkspace,
-    parallel: bool,
-) -> (SelSolution, usize) {
+    drain: BnbDrain,
+    workers: usize,
+) -> (SelSolution, usize, par::steal::StealStats) {
     let scores = standalone_scores_view(&inst);
     let mut order: Vec<usize> = (0..inst.clients.len()).collect();
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
@@ -935,7 +977,8 @@ fn bnb_run(
     };
 
     let mut candidates: Vec<(f64, Vec<usize>, Vec<f64>)> = Vec::new();
-    if !parallel {
+    let mut steal_stats = par::steal::StealStats::default();
+    if drain == BnbDrain::Serial {
         let mut local = BnbLocal {
             rem_score_sum: rem_root,
             ws: std::mem::take(ws),
@@ -957,7 +1000,8 @@ fn bnb_run(
             chosen: Vec<usize>,
             score: f64,
         }
-        let target = par::threads().saturating_mul(8).max(16);
+        let n_workers = par::steal::resolve_workers(workers);
+        let target = n_workers.saturating_mul(8).max(16);
         let mut frontier = vec![Root { chosen: Vec::new(), score: 0.0 }];
         let mut depth = 0usize;
         while frontier.len() < target && depth < order.len() && !frontier.is_empty() {
@@ -992,24 +1036,66 @@ fn bnb_run(
             let p = inst.clients[order[pos]].domain;
             rem_at[p] -= sorted_scores[pos].max(0.0);
         }
-        let results: Vec<Option<(f64, Vec<usize>, Vec<f64>)>> =
-            par::par_ranges(frontier.len(), 1, |a, b| {
-                let mut local = BnbLocal {
-                    rem_score_sum: rem_at.clone(),
-                    ws: AllocWorkspace::default(),
-                    best: None,
-                };
-                let mut chosen = Vec::new();
-                for node in &frontier[a..b] {
-                    chosen.clear();
-                    chosen.extend_from_slice(&node.chosen);
-                    // save/restore-exact: rem returns to rem_at after
-                    // every subtree, so one vector serves all nodes
-                    bnb_dfs(&shared, &mut local, &mut chosen, node.score, depth);
-                }
-                local.best
-            });
-        candidates.extend(results.into_iter().flatten());
+        match drain {
+            BnbDrain::Serial => unreachable!(),
+            BnbDrain::Chunked => {
+                // fixed uniform split, kept as the bench baseline the
+                // stealing drain is measured against
+                let results: Vec<Option<(f64, Vec<usize>, Vec<f64>)>> =
+                    par::par_ranges(frontier.len(), 1, |a, b| {
+                        let mut local = BnbLocal {
+                            rem_score_sum: rem_at.clone(),
+                            ws: AllocWorkspace::default(),
+                            best: None,
+                        };
+                        let mut chosen = Vec::new();
+                        for node in &frontier[a..b] {
+                            chosen.clear();
+                            chosen.extend_from_slice(&node.chosen);
+                            // save/restore-exact: rem returns to rem_at
+                            // after every subtree, so one vector serves
+                            // all nodes
+                            bnb_dfs(&shared, &mut local, &mut chosen, node.score, depth);
+                        }
+                        local.best
+                    });
+                candidates.extend(results.into_iter().flatten());
+            }
+            BnbDrain::Steal => {
+                // a deep subtree pins one worker; the others steal the
+                // unexplored frontier nodes instead of idling at the
+                // join. The shared incumbent and the strict prune make
+                // the search exact under any schedule; the final
+                // canonical reduction below makes the RESULT identical.
+                let shared = &shared;
+                let frontier = &frontier;
+                let (locals, stats) = par::steal::steal_exec(
+                    frontier.len(),
+                    n_workers,
+                    |_| {
+                        (
+                            BnbLocal {
+                                rem_score_sum: rem_at.clone(),
+                                ws: AllocWorkspace::default(),
+                                best: None,
+                            },
+                            Vec::<usize>::new(),
+                        )
+                    },
+                    |i, (local, chosen)| {
+                        let node = &frontier[i];
+                        chosen.clear();
+                        chosen.extend_from_slice(&node.chosen);
+                        // save/restore-exact: rem returns to rem_at
+                        // after every subtree, so one vector serves all
+                        // nodes this worker claims
+                        bnb_dfs(shared, local, chosen, node.score, depth);
+                    },
+                );
+                steal_stats = stats;
+                candidates.extend(locals.into_iter().filter_map(|(l, _)| l.best));
+            }
+        }
     }
 
     let nodes = shared.nodes.load(Ordering::Relaxed);
@@ -1032,15 +1118,17 @@ fn bnb_run(
         }
     }
     match best {
-        Some((objective, chosen, totals)) => {
-            (SelSolution { chosen, objective, totals, optimal: complete }, nodes)
-        }
+        Some((objective, chosen, totals)) => (
+            SelSolution { chosen, objective, totals, optimal: complete },
+            nodes,
+            steal_stats,
+        ),
         None => {
             // No feasible size-n selection exists: return the (possibly
             // shorter) greedy solution, marked exact if search completed.
             let mut s = seed;
             s.optimal = complete;
-            (s, nodes)
+            (s, nodes, steal_stats)
         }
     }
 }
@@ -1196,6 +1284,102 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: totals diverged");
             }
         });
+    }
+
+    /// A deliberately skewed instance: one contended domain holds most
+    /// candidates with near-tied standalone scores (tie-dense → one
+    /// deep frontier subtree), the rest are easy singletons. The
+    /// stealing drain redistributes exactly this shape.
+    fn skewed_instance(seed: u64) -> SelInstance {
+        let mut rng = Rng::new(seed);
+        let t_n = 4usize;
+        let mut clients = Vec::new();
+        for i in 0..10 {
+            // contended domain 0: identical sigma/delta (exact score
+            // ties), spare jittered only in the last bits
+            let m_min = 1.0;
+            clients.push(SelClient {
+                domain: 0,
+                sigma: 1.0,
+                delta: 1.0,
+                m_min,
+                m_max: m_min + 4.0,
+                spare: (0..t_n)
+                    .map(|t| (1.0 + ((i + t) % 3) as f64 * 1e-6) as f32)
+                    .collect(),
+            });
+        }
+        for p in 1..4 {
+            let m_min = rng.range_f64(0.5, 1.0);
+            clients.push(SelClient {
+                domain: p,
+                sigma: rng.range_f64(0.5, 1.5),
+                delta: 1.0,
+                m_min,
+                m_max: m_min + 3.0,
+                spare: (0..t_n).map(|_| rng.range_f64(0.5, 1.5) as f32).collect(),
+            });
+        }
+        let energy = (0..4)
+            .map(|p| {
+                let base = if p == 0 { 1.5 } else { 4.0 };
+                (0..t_n).map(|_| base as f32).collect()
+            })
+            .collect();
+        SelInstance { n: 4, clients, energy }
+    }
+
+    #[test]
+    fn stolen_bnb_is_bitwise_identical_across_drains_and_worker_counts() {
+        // skewed trees are where stealing changes the SCHEDULE the
+        // most; the solution must not move a bit: Serial ≡ Chunked ≡
+        // Steal at 1, 2 and 8 workers
+        for seed in 0..6u64 {
+            let inst = skewed_instance(seed);
+            let vs = inst.view_storage();
+            let mut ws = AllocWorkspace::default();
+            let (reference, ref_nodes, _) = branch_and_bound_view_drained(
+                vs.view(),
+                4_000_000,
+                &mut ws,
+                BnbDrain::Serial,
+                1,
+            );
+            assert!(reference.optimal, "seed {seed}: budget exhausted");
+            assert!(
+                ref_nodes > 100,
+                "seed {seed}: instance too easy to exercise the drains ({ref_nodes} nodes)"
+            );
+            for drain in [BnbDrain::Chunked, BnbDrain::Steal] {
+                for workers in [1usize, 2, 8] {
+                    let mut ws = AllocWorkspace::default();
+                    let (got, _, _) = branch_and_bound_view_drained(
+                        vs.view(),
+                        4_000_000,
+                        &mut ws,
+                        drain,
+                        workers,
+                    );
+                    assert!(got.optimal, "seed {seed} {drain:?} w={workers}");
+                    assert_eq!(
+                        reference.chosen, got.chosen,
+                        "seed {seed} {drain:?} w={workers}: chosen diverged"
+                    );
+                    assert_eq!(
+                        reference.objective.to_bits(),
+                        got.objective.to_bits(),
+                        "seed {seed} {drain:?} w={workers}: objective diverged"
+                    );
+                    for (a, b) in reference.totals.iter().zip(&got.totals) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "seed {seed} {drain:?} w={workers}: totals diverged"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

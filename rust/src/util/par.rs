@@ -1,21 +1,52 @@
-//! Minimal fork-join parallelism on `std::thread::scope`.
+//! Deterministic parallelism on `std::thread::scope`: static fork-join
+//! splits plus a work-stealing scheduler, both bit-identical to serial.
 //!
 //! The offline vendor set has no `rayon`, so the selection pipeline's
 //! data-parallel stages (arena construction, standalone scoring, swap
-//! candidate scanning, per-domain round execution) use this instead:
-//! deterministic chunked fan-out with results merged in index order, so
-//! parallel and sequential execution produce bit-identical output. Every
-//! entry point takes a `min_serial` threshold below which it runs inline
-//! — the unit-test and evaluation-scale instances never pay thread-spawn
-//! overhead.
+//! candidate scanning, per-domain round execution) use this instead.
+//! Every entry point takes a `min_serial` threshold below which it runs
+//! inline — the unit-test and evaluation-scale instances never pay
+//! thread-spawn overhead.
 //!
-//! Two internals own the fan-out policy — `chunking` (how many units per
-//! worker) and `spawn_blocks` (the split-and-spawn walk every in-place
-//! fill funnels through); [`par_ranges`] owns the collect-style maps.
-//! Everything else ([`par_map`], [`par_fill_rows`], [`try_par_fill_rows`],
-//! [`par_fill_slice`], ...) is a thin wrapper, so a change to the
-//! worker/chunk computation cannot silently diverge between callers.
+//! Two families live here:
+//!
+//! * **Static splits** — `chunking` (how many units per worker) and
+//!   `spawn_blocks` (the split-and-spawn walk every in-place fill
+//!   funnels through); [`par_ranges`] owns the collect-style maps.
+//!   Everything else ([`par_map`], [`par_fill_rows`],
+//!   [`try_par_fill_rows`], [`par_fill_slice`], ...) is a thin wrapper,
+//!   so a change to the worker/chunk computation cannot silently diverge
+//!   between callers. Right for near-uniform per-item cost.
+//! * **Work stealing** — the [`steal`] submodule. Same split arithmetic
+//!   to *seed* per-worker deques, but an idle worker steals chunks from
+//!   a busy one instead of waiting at the join, so wall-clock tracks
+//!   total work instead of the slowest uniform slice. Right for skewed
+//!   per-item cost (deep B&B subtrees, one giant energy domain, a
+//!   monster campaign cell).
+//!
+//! # Why determinism survives stealing
+//!
+//! The schedule (who runs item `i`, and when) is timing-dependent under
+//! stealing — but no output ever depends on the schedule:
+//!
+//! 1. **Results are index-addressed.** Every item writes only slots
+//!    owned by its index (a row, a `TrainJob`, a campaign cell slot),
+//!    and the scheduler hands each index to exactly one worker (a
+//!    single CAS claims it — see [`steal`]). The bytes written for item
+//!    `i` are the same serial expression of `i` regardless of which
+//!    worker runs it.
+//! 2. **Reductions are canonical.** Anything folded *across* items
+//!    (FedAvg partials, B&B incumbents, smallest-failing-index errors)
+//!    is reduced in a fixed order — index order, ascending domain id,
+//!    or `(objective, lex-smallest)` — after the join, never in
+//!    completion order. f32/f64 addition is non-associative, so this is
+//!    what makes the guarantee *bitwise*, not just approximate.
+//!
+//! Together: output at any worker count, including 1, is bit-identical.
+//! Thread count itself is overridable via `FEDZERO_THREADS` (see
+//! [`threads`]) — a performance knob only, never a correctness one.
 
+use std::sync::OnceLock;
 use std::thread;
 
 /// The ONE table of fan-out thresholds for every parallel stage in the
@@ -24,7 +55,9 @@ use std::thread;
 /// `solver::mip` — and could drift apart silently). Below a threshold
 /// the stage runs inline; results are bit-identical either way, so these
 /// are pure performance knobs: thread spawn/join costs a few µs, which
-/// only pays off once a stage has enough independent work.
+/// only pays off once a stage has enough independent work. The worker
+/// count itself is the remaining knob: `FEDZERO_THREADS=<n>` overrides
+/// [`threads`](super::threads) without code edits.
 pub mod thresholds {
     /// Rows below which in-place row fills stay single-threaded (ring
     /// rebuild/advance/catch-up, arena reachability fills). One row is a
@@ -64,8 +97,27 @@ pub mod thresholds {
 }
 
 /// Number of worker threads to fan out to (>= 1).
+///
+/// Defaults to [`std::thread::available_parallelism`]. The
+/// `FEDZERO_THREADS` environment variable overrides it (any integer
+/// >= 1; unset, empty, `0` or unparsable values fall back to the
+/// default) so bench runs can pin worker counts without code edits —
+/// like every knob in [`thresholds`], this is a pure performance
+/// setting: output is bit-identical at any worker count.
 pub fn threads() -> usize {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    let forced = OVERRIDE
+        .get_or_init(|| std::env::var("FEDZERO_THREADS").ok().as_deref().and_then(parse_threads_override));
+    if let Some(n) = *forced {
+        return n;
+    }
     thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// `FEDZERO_THREADS` value parsing (split out of [`threads`] so it can
+/// be unit-tested — the env read itself is cached process-wide).
+fn parse_threads_override(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().filter(|&n| n >= 1)
 }
 
 /// The shared chunking policy: ceil-split `n` items over the available
@@ -312,6 +364,479 @@ where
     spawn_blocks(out, 1, chunk, |start, head| f(start, head));
 }
 
+/// Chunked work-stealing over index ranges — deterministic output at
+/// any worker count.
+///
+/// # Deque layout
+///
+/// The item set `0..n` is ceil-split into one contiguous range per
+/// worker (the same arithmetic as [`chunking`](super::chunking), so the
+/// *seed* assignment matches the static splits exactly). Each worker
+/// owns a [`RangeDeque`]: its `(head, tail)` pair packed into a single
+/// `AtomicU64` (head in the high 32 bits, tail in the low 32). The
+/// deque never grows — there is no dynamic spawning, items only drain —
+/// which is what makes both the termination check and the exclusivity
+/// argument trivial.
+///
+/// # Steal order
+///
+/// The owner claims chunks of `grain` items from the **front** of its
+/// own deque (preserving ascending index order on the common path, which
+/// keeps cache behaviour close to the static split). When its deque is
+/// empty it becomes a thief and sweeps the other deques in a fixed ring
+/// order (`me+1, me+2, …` mod workers), taking chunks from the **back**
+/// of the first non-empty victim — the two ends only collide on the
+/// last chunk, where the CAS arbitrates. A worker exits after one full
+/// sweep in which every deque (its own included) was empty: ranges only
+/// ever shrink, so an all-empty sweep proves there is no work left
+/// anywhere.
+///
+/// Every claim — owner or thief — is a single compare-exchange on the
+/// packed word, so **each index in `0..n` is handed to exactly one
+/// worker**. That exclusivity is the soundness contract
+/// [`SharedUnits`] builds on, and (with canonical reductions — see the
+/// [module docs](super)) the reason output is bit-identical at any
+/// worker count: *which* worker runs item `i` is timing-dependent,
+/// *what* item `i` computes and where it lands is not.
+pub mod steal {
+    use std::marker::PhantomData;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::thread;
+
+    /// Scheduling telemetry from one fan-out. The *output* of a stolen
+    /// fan-out is schedule-independent; these counters are not — they
+    /// vary run to run with OS timing. Bench JSON records them as the
+    /// mechanism evidence (a skewed workload with zero steals means the
+    /// scheduler never engaged); nothing correctness-bearing may read
+    /// them.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct StealStats {
+        /// Workers that actually ran (1 on the inline path).
+        pub workers: usize,
+        /// Successful steal operations (chunks taken from another
+        /// worker's deque).
+        pub steals: u64,
+        /// Items acquired through those steals.
+        pub stolen_items: u64,
+    }
+
+    impl StealStats {
+        fn serial() -> Self {
+            StealStats { workers: 1, steals: 0, stolen_items: 0 }
+        }
+
+        /// Fold another fan-out's stats into cumulative telemetry
+        /// (per-round counters accumulated across a simulation).
+        pub fn absorb(&mut self, other: StealStats) {
+            self.workers = self.workers.max(other.workers);
+            self.steals += other.steals;
+            self.stolen_items += other.stolen_items;
+        }
+    }
+
+    /// One worker's claimable range: `(head, tail)` packed into a
+    /// single atomic word, head high, tail low. `head == tail` means
+    /// empty. Indices are `u32` internally — fan-outs are bounded far
+    /// below 2^32 items (debug-asserted at the entry point).
+    struct RangeDeque {
+        ht: AtomicU64,
+    }
+
+    fn pack(head: u64, tail: u64) -> u64 {
+        (head << 32) | tail
+    }
+
+    impl RangeDeque {
+        fn new(start: usize, end: usize) -> Self {
+            RangeDeque { ht: AtomicU64::new(pack(start as u64, end as u64)) }
+        }
+
+        /// Owner side: claim up to `chunk` items from the front.
+        fn claim_front(&self, chunk: u64) -> Option<(usize, usize)> {
+            let mut cur = self.ht.load(Ordering::Acquire);
+            loop {
+                let (head, tail) = (cur >> 32, cur & 0xFFFF_FFFF);
+                if head >= tail {
+                    return None;
+                }
+                let take = chunk.min(tail - head);
+                match self.ht.compare_exchange_weak(
+                    cur,
+                    pack(head + take, tail),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => return Some((head as usize, (head + take) as usize)),
+                    Err(now) => cur = now,
+                }
+            }
+        }
+
+        /// Thief side: claim up to `chunk` items from the back.
+        fn steal_back(&self, chunk: u64) -> Option<(usize, usize)> {
+            let mut cur = self.ht.load(Ordering::Acquire);
+            loop {
+                let (head, tail) = (cur >> 32, cur & 0xFFFF_FFFF);
+                if head >= tail {
+                    return None;
+                }
+                let take = chunk.min(tail - head);
+                match self.ht.compare_exchange_weak(
+                    cur,
+                    pack(head, tail - take),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => return Some(((tail - take) as usize, tail as usize)),
+                    Err(now) => cur = now,
+                }
+            }
+        }
+    }
+
+    /// Resolve a caller-supplied worker count: `0` means "auto"
+    /// ([`threads`](super::threads), which honours `FEDZERO_THREADS`).
+    pub fn resolve_workers(workers: usize) -> usize {
+        if workers == 0 {
+            super::threads()
+        } else {
+            workers
+        }
+    }
+
+    /// Chunk size for a fan-out: small enough that a skewed tail can be
+    /// redistributed (~8 chunks per worker), large enough to keep CAS
+    /// traffic negligible, capped so huge `n` still steals at a fine
+    /// grain relative to per-item cost.
+    fn grain(n: usize, workers: usize) -> u64 {
+        (n / (workers * 8)).clamp(1, 256) as u64
+    }
+
+    /// Run `f(i, &mut state)` for every `i in 0..n` across `workers`
+    /// threads (`0` = auto) with work stealing, and return the
+    /// per-worker states in worker order plus scheduling telemetry.
+    ///
+    /// `init(w)` builds worker `w`'s state (scratch buffers, local
+    /// reduction accumulators). `f` must be index-deterministic given
+    /// any state history: the caller either writes index-owned slots
+    /// (via [`SharedUnits`]) or folds into its local state and reduces
+    /// canonically after the join — see the [module docs](self) for why
+    /// that makes output schedule-independent.
+    ///
+    /// With `workers <= 1` (or `n <= 1`) this degenerates to the plain
+    /// serial loop — same code path the bit-identity tests pin against.
+    pub fn steal_exec<S, I, F>(n: usize, workers: usize, init: I, f: F) -> (Vec<S>, StealStats)
+    where
+        S: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let w = resolve_workers(workers).min(n).max(1);
+        if n == 0 {
+            return (Vec::new(), StealStats::serial());
+        }
+        if w <= 1 {
+            let mut state = init(0);
+            for i in 0..n {
+                f(i, &mut state);
+            }
+            return (vec![state], StealStats::serial());
+        }
+        debug_assert!(n < u32::MAX as usize, "steal_exec index range exceeds u32");
+        let chunk = grain(n, w);
+        // seed: the same ceil-split as the static `chunking` policy
+        let per = (n + w - 1) / w;
+        let deques: Vec<RangeDeque> = (0..w)
+            .map(|k| RangeDeque::new((k * per).min(n), ((k + 1) * per).min(n)))
+            .collect();
+        let steals = AtomicU64::new(0);
+        let stolen_items = AtomicU64::new(0);
+        let states: Vec<S> = thread::scope(|scope| {
+            let (deques, init, f) = (&deques, &init, &f);
+            let (steals, stolen_items) = (&steals, &stolen_items);
+            let handles: Vec<_> = (0..w)
+                .map(|me| {
+                    scope.spawn(move || {
+                        let mut state = init(me);
+                        'work: loop {
+                            // drain own deque front-to-back
+                            while let Some((a, b)) = deques[me].claim_front(chunk) {
+                                for i in a..b {
+                                    f(i, &mut state);
+                                }
+                            }
+                            // sweep victims in ring order; one full
+                            // empty sweep (deques only shrink) == done
+                            for d in 1..w {
+                                let victim = (me + d) % w;
+                                if let Some((a, b)) = deques[victim].steal_back(chunk) {
+                                    steals.fetch_add(1, Ordering::Relaxed);
+                                    stolen_items.fetch_add((b - a) as u64, Ordering::Relaxed);
+                                    for i in a..b {
+                                        f(i, &mut state);
+                                    }
+                                    continue 'work;
+                                }
+                            }
+                            break;
+                        }
+                        state
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("steal_exec worker panicked"))
+                .collect()
+        });
+        let stats = StealStats {
+            workers: w,
+            steals: steals.load(Ordering::Relaxed),
+            stolen_items: stolen_items.load(Ordering::Relaxed),
+        };
+        (states, stats)
+    }
+
+    /// Shared mutable view of `out` as disjoint fixed-size units, for
+    /// in-place fills where unit *ownership* is decided dynamically by
+    /// the scheduler instead of by a static contiguous split (which is
+    /// what `spawn_blocks` handles safely with `split_at_mut`).
+    ///
+    /// This is the one `unsafe` construct in the crate, and its entire
+    /// soundness rests on the scheduler's exclusivity guarantee: a
+    /// single CAS hands each index to exactly one worker, so no two
+    /// threads ever hold `unit(u)` for the same `u`, and no unit is
+    /// read while another thread writes it (results are only read after
+    /// the scope join, which synchronises via the thread handles).
+    pub struct SharedUnits<'a, T> {
+        ptr: *mut T,
+        n_units: usize,
+        unit: usize,
+        _marker: PhantomData<&'a mut [T]>,
+    }
+
+    // SAFETY: `SharedUnits` only hands out disjoint `&mut [T]` views
+    // (caller contract on `unit`), so sharing the wrapper across
+    // threads is sound whenever moving the elements themselves would
+    // be, i.e. `T: Send`.
+    unsafe impl<T: Send> Sync for SharedUnits<'_, T> {}
+    unsafe impl<T: Send> Send for SharedUnits<'_, T> {}
+
+    impl<'a, T> SharedUnits<'a, T> {
+        /// View `out` as `out.len() / unit` units of `unit` elements.
+        pub fn new(out: &'a mut [T], unit: usize) -> Self {
+            assert!(unit > 0, "unit must be non-empty");
+            debug_assert_eq!(out.len() % unit, 0, "out is not a whole number of units");
+            SharedUnits {
+                ptr: out.as_mut_ptr(),
+                n_units: out.len() / unit,
+                unit,
+                _marker: PhantomData,
+            }
+        }
+
+        /// Number of units in the view.
+        pub fn len(&self) -> usize {
+            self.n_units
+        }
+
+        /// Whether the view holds no units.
+        pub fn is_empty(&self) -> bool {
+            self.n_units == 0
+        }
+
+        /// Exclusive view of unit `u`.
+        ///
+        /// # Safety
+        ///
+        /// For the lifetime of the returned slice no other call to
+        /// `unit(u)` with the same `u` may be live on any thread. Under
+        /// [`steal_exec`] this holds by construction when `u` is the
+        /// claimed item index (or an injective function of it, e.g. a
+        /// `TrainJob`'s strictly-increasing slot): each index is
+        /// claimed by exactly one worker, exactly once.
+        #[allow(clippy::mut_from_ref)]
+        pub unsafe fn unit(&self, u: usize) -> &mut [T] {
+            debug_assert!(u < self.n_units, "unit index out of range");
+            std::slice::from_raw_parts_mut(self.ptr.add(u * self.unit), self.unit)
+        }
+    }
+
+    /// Work-stealing counterpart of
+    /// [`par_fill_rows_scratch`](super::par_fill_rows_scratch): fill
+    /// `out` (length = rows × `row_len`) row by row via
+    /// `f(row_index, row_slice, scratch)`, stealing rows across
+    /// `workers` threads (`0` = auto) when there are at least
+    /// `min_serial_rows` rows. Rows are disjoint and each row index is
+    /// claimed exactly once, so parallel and serial fills write
+    /// identical bytes; only the telemetry differs. Use where row costs
+    /// are skewed (per-domain fills over uneven domain populations).
+    pub fn steal_fill_rows_scratch<T, S, I, F>(
+        out: &mut [T],
+        row_len: usize,
+        min_serial_rows: usize,
+        workers: usize,
+        init: I,
+        f: F,
+    ) -> StealStats
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(usize, &mut [T], &mut S) + Sync,
+    {
+        if row_len == 0 || out.is_empty() {
+            return StealStats::serial();
+        }
+        debug_assert_eq!(out.len() % row_len, 0, "out is not a whole number of rows");
+        let n_rows = out.len() / row_len;
+        if n_rows < min_serial_rows || resolve_workers(workers) <= 1 {
+            let mut scratch = init();
+            for (r, row) in out.chunks_mut(row_len).enumerate() {
+                f(r, row, &mut scratch);
+            }
+            return StealStats::serial();
+        }
+        let shared = SharedUnits::new(out, row_len);
+        let shared = &shared;
+        let (_, stats) = steal_exec(n_rows, workers, |_| init(), |r, scratch| {
+            // SAFETY: steal_exec hands row index `r` to exactly one
+            // worker, so this is the only live view of row `r`.
+            let row = unsafe { shared.unit(r) };
+            f(r, row, scratch);
+        });
+        stats
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn steal_exec_runs_every_index_exactly_once() {
+            for &workers in &[1usize, 2, 3, 8, 64] {
+                for &n in &[0usize, 1, 7, 1_000, 10_001] {
+                    let (locals, stats) =
+                        steal_exec(n, workers, |_| Vec::new(), |i, seen: &mut Vec<usize>| {
+                            seen.push(i)
+                        });
+                    let mut all: Vec<usize> = locals.into_iter().flatten().collect();
+                    all.sort_unstable();
+                    assert_eq!(all, (0..n).collect::<Vec<_>>(), "w={workers} n={n}");
+                    assert!(stats.workers >= 1);
+                }
+            }
+        }
+
+        #[test]
+        fn steal_exec_reduction_matches_serial_under_skew() {
+            // skewed per-item cost (quadratic spin on a few indices) +
+            // order-sensitive float folding: the canonical reduction
+            // (index order after the join) must be bit-identical at
+            // every worker count
+            let n = 4_096usize;
+            let work = |i: usize| -> f32 {
+                let spin = if i % 511 == 0 { 20_000 } else { 10 };
+                let mut acc = i as u64;
+                for _ in 0..spin {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+                }
+                ((acc >> 33) as f32) * 1e-9 + (i as f32).sin()
+            };
+            let run = |workers: usize| -> f32 {
+                let (locals, _) = steal_exec(
+                    n,
+                    workers,
+                    |_| Vec::<(usize, f32)>::new(),
+                    |i, acc| acc.push((i, work(i))),
+                );
+                // canonical: scatter by index, then fold ascending
+                let mut by_index = vec![0f32; n];
+                for (i, v) in locals.into_iter().flatten() {
+                    by_index[i] = v;
+                }
+                by_index.iter().fold(0f32, |s, &v| s + v)
+            };
+            let serial = run(1);
+            for &w in &[2usize, 3, 8] {
+                assert_eq!(serial.to_bits(), run(w).to_bits(), "workers={w}");
+            }
+        }
+
+        #[test]
+        fn steal_fill_rows_matches_serial_bytes_with_skewed_rows() {
+            let rows = 1_537usize;
+            let row_len = 5usize;
+            let fill = |r: usize, row: &mut [u64], buf: &mut Vec<u64>| {
+                // row cost skew: one monster row, the rest trivial
+                let reps = if r == 3 { 50_000 } else { r % 7 + 1 };
+                buf.clear();
+                buf.extend((0..reps as u64).map(|k| k.wrapping_mul(0x9E37) ^ r as u64));
+                let tag = buf.iter().fold(0u64, |a, &b| a.wrapping_add(b));
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = tag ^ ((r * 31 + j) as u64);
+                }
+            };
+            let mut serial = vec![0u64; rows * row_len];
+            {
+                let mut buf = Vec::new();
+                for (r, row) in serial.chunks_mut(row_len).enumerate() {
+                    fill(r, row, &mut buf);
+                }
+            }
+            for &w in &[1usize, 2, 8] {
+                let mut stolen = vec![0u64; rows * row_len];
+                let stats =
+                    steal_fill_rows_scratch(&mut stolen, row_len, 0, w, Vec::new, fill);
+                assert_eq!(serial, stolen, "workers={w}");
+                assert_eq!(stats.workers, w.min(rows).max(1));
+            }
+        }
+
+        #[test]
+        fn steal_fill_rows_serial_threshold_and_empty() {
+            let mut out: Vec<u32> = vec![0; 12];
+            let stats = steal_fill_rows_scratch(&mut out, 3, usize::MAX, 8, || (), |r, row, _| {
+                for v in row.iter_mut() {
+                    *v = r as u32;
+                }
+            });
+            assert_eq!(out, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+            assert_eq!(stats, StealStats::serial());
+            let mut empty: Vec<u32> = Vec::new();
+            let stats = steal_fill_rows_scratch(&mut empty, 4, 0, 8, || (), |_, _, _| {});
+            assert_eq!(stats, StealStats::serial());
+        }
+
+        #[test]
+        fn deque_claim_and_steal_partition_the_range() {
+            let d = RangeDeque::new(10, 50);
+            let mut got = Vec::new();
+            // interleave owner claims and thief steals
+            loop {
+                let a = d.claim_front(3);
+                let b = d.steal_back(5);
+                if a.is_none() && b.is_none() {
+                    break;
+                }
+                for (x, y) in a.into_iter().chain(b) {
+                    assert!(x < y);
+                    got.extend(x..y);
+                }
+            }
+            got.sort_unstable();
+            assert_eq!(got, (10..50).collect::<Vec<_>>());
+        }
+
+        #[test]
+        fn stats_absorb_accumulates() {
+            let mut total = StealStats::serial();
+            total.absorb(StealStats { workers: 4, steals: 3, stolen_items: 17 });
+            total.absorb(StealStats { workers: 2, steals: 1, stolen_items: 2 });
+            assert_eq!(total, StealStats { workers: 4, steals: 4, stolen_items: 19 });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,6 +990,17 @@ mod tests {
         let mut inline = vec![0u64; n];
         par_fill_slice(&mut inline, usize::MAX, fill);
         assert_eq!(serial, inline);
+    }
+
+    #[test]
+    fn threads_override_parses_only_positive_integers() {
+        assert_eq!(parse_threads_override("4"), Some(4));
+        assert_eq!(parse_threads_override(" 16 "), Some(16));
+        assert_eq!(parse_threads_override("1"), Some(1));
+        assert_eq!(parse_threads_override("0"), None);
+        assert_eq!(parse_threads_override(""), None);
+        assert_eq!(parse_threads_override("auto"), None);
+        assert_eq!(parse_threads_override("-2"), None);
     }
 
     #[test]

@@ -1,0 +1,84 @@
+//! Work-stealing scheduler integration gates (ISSUE 8): every fan-out
+//! adopted by `util::par::steal` must produce bit-identical output at
+//! 1, 2 and 8 workers on *adversarially skewed* inputs — the shapes
+//! where stealing changes the schedule the most.
+//!
+//! Layer-local skew gates live next to their subjects (`solver::mip`:
+//! one deep subtree; `fl::tree`: one giant domain; `fl::mock`: one
+//! monster train job). This file covers the cross-layer paths: a full
+//! campaign with one monster cell, and a full simulation run driven
+//! through every stolen stage at once.
+
+use fedzero::config::Scenario;
+use fedzero::coordinator::{run_experiment, ExperimentSpec, StrategyKind};
+use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::sim::ChaosSpec;
+
+/// One monster cell (exact solver × chaos: 16× the cost of the Random
+/// baseline cells) among cheap ones — the static longest-first order
+/// seeds it first, and stealing drains the cheap tail around it. The
+/// report must stay byte-identical at 1, 2 and 8 workers.
+#[test]
+fn monster_cell_campaign_report_is_byte_identical_across_worker_counts() {
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "monster-cell-fixture".into();
+    spec.n_clients = 14;
+    spec.n_per_round = 3;
+    spec.dataset_scale = 0.15;
+    spec.strategies = vec![StrategyKind::FedZeroExact, StrategyKind::Random];
+    spec.chaos_axis = vec![
+        None,
+        Some(ChaosSpec { dropout_per_round: 0.2, ..ChaosSpec::default() }),
+    ];
+    let reference = run_campaign(&spec, 1).unwrap();
+    let ref_text = reference.report_json().to_string_pretty();
+    assert_eq!(reference.results.len(), 4);
+    for workers in [2usize, 8] {
+        let run = run_campaign(&spec, workers).unwrap();
+        let text = run.report_json().to_string_pretty();
+        assert_eq!(
+            text, ref_text,
+            "monster-cell report diverged at {workers} workers"
+        );
+    }
+}
+
+/// End-to-end: a full simulation (selection → grant water-filling →
+/// sharded training → tree aggregation, all stolen fan-outs engaged by
+/// the auto thread count) is a pure function of its spec — two
+/// identical runs produce bit-identical metrics, so none of the stolen
+/// stages leaks schedule into the output.
+#[test]
+fn full_sim_is_reproducible_with_stolen_fanouts_engaged() {
+    let run = || {
+        let spec = ExperimentSpec {
+            preset: "tiny".into(),
+            scenario: Scenario::Global,
+            strategy: StrategyKind::FedZero,
+            days: 1,
+            n_clients: 20,
+            n_per_round: 4,
+            d_max: 60,
+            dataset_scale: 0.1,
+            eval_every: 10,
+            eval_subset: 200,
+            seed: 3,
+            use_mock: true,
+            ..Default::default()
+        };
+        run_experiment(&spec).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.metrics.rounds.len(), b.metrics.rounds.len());
+    assert_eq!(a.steps_executed, b.steps_executed);
+    for (ra, rb) in a.metrics.rounds.iter().zip(&b.metrics.rounds) {
+        assert_eq!(ra.batches.to_bits(), rb.batches.to_bits());
+        assert_eq!(ra.mean_loss.to_bits(), rb.mean_loss.to_bits());
+        assert_eq!(ra.energy_wh.to_bits(), rb.energy_wh.to_bits());
+        assert_eq!(ra.participants, rb.participants);
+    }
+    let acc_a: Vec<u64> = a.metrics.evals.iter().map(|e| e.accuracy.to_bits()).collect();
+    let acc_b: Vec<u64> = b.metrics.evals.iter().map(|e| e.accuracy.to_bits()).collect();
+    assert_eq!(acc_a, acc_b);
+}
