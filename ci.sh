@@ -3,15 +3,20 @@
 # regressions fail loudly.
 #
 #   ./ci.sh          tier-1 (build + tests) + quick bench smokes
-#   ./ci.sh --quick  tier-1 + the campaign, chaos, tree and steal smokes
-#                    (fastest gates: report-schema validation,
-#                    worker-count determinism, the builtin-spec-vs-legacy
-#                    Scenario::Global diff, the seeded fault-injection
-#                    determinism/visibility gates, the 1M-client
-#                    hierarchical-aggregation flat-vs-tree bitwise gate,
-#                    and the work-stealing B&B drain gate
+#   ./ci.sh --quick  tier-1 + the campaign, chaos, tree, steal and
+#                    journal smokes (fastest gates: report-schema
+#                    validation, worker-count determinism, the
+#                    builtin-spec-vs-legacy Scenario::Global diff, the
+#                    seeded fault-injection determinism/visibility gates,
+#                    the 1M-client hierarchical-aggregation flat-vs-tree
+#                    bitwise gate, the work-stealing B&B drain gate
 #                    (Serial/Chunked/Steal × 1/2/8 pinned workers must
-#                    agree bitwise) — exit 1 on any divergence)
+#                    agree bitwise), and the crash-resume gate (a run
+#                    killed by a chaos crash and resumed from its
+#                    journal + snapshot must be bit-identical to an
+#                    uninterrupted run, and a durable campaign resume
+#                    byte-identical at 1/2/8 workers) — exit 1 on any
+#                    divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
 #   ./ci.sh --arm    default run, then copy every fresh BENCH_*.json
 #                    over its .baseline.json (commit them afterwards)
@@ -36,7 +41,12 @@
 # rust/BENCH_chaos.json (ns/step with the fault injector on vs off) and
 # exits non-zero if two identically seeded chaos runs differ, the
 # injected faults leave no trace in the metrics, or a chaos-axis
-# campaign diverges across worker counts. The endtoend bench
+# campaign diverges across worker counts. The journal bench writes
+# rust/BENCH_journal.json (ns per write-ahead append, recovery cost of
+# open + torn-tail scan + replay) and exits non-zero if a crashed-and-
+# resumed run diverges — metrics or journal bytes — from an
+# uninterrupted one, or a durable campaign resume diverges from a fresh
+# single-pass report. The endtoend bench
 # additionally gates the event-driven round FSM against the legacy loop
 # (no-fault runs must be bit-identical) and the hierarchical two-tier
 # aggregator against flat FedAvg (full-sim AggMode::Tree vs
@@ -177,6 +187,10 @@ echo "== steal scheduler gate (--steal: skewed-tree B&B drains, bitwise at 1/2/8
 cargo bench --bench selection -- --steal
 compare_bench BENCH_selection.json BENCH_selection.baseline.json
 
+echo "== journal smoke (--quick: crash-resume bit-identity + campaign-resume gates) =="
+cargo bench --bench journal -- --quick
+compare_bench BENCH_journal.json BENCH_journal.baseline.json
+
 if [[ "${1:-}" == "--quick" ]]; then
     echo "CI OK (quick)"
     exit 0
@@ -198,7 +212,7 @@ fi
 
 if [[ "${1:-}" == "--arm" ]]; then
     echo "== arming bench baselines from this run =="
-    for b in campaign chaos tree selection endtoend; do
+    for b in campaign chaos tree selection endtoend journal; do
         if [[ -f "BENCH_$b.json" ]]; then
             cp "BENCH_$b.json" "BENCH_$b.baseline.json"
             echo "  armed BENCH_$b.baseline.json"

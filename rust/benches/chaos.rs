@@ -235,7 +235,7 @@ fn main() {
     root.insert("schema_failures".into(), Json::Num(schema_failures as f64));
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_chaos.json";
-    match std::fs::write(path, &out) {
+    match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

@@ -676,7 +676,7 @@ fn main() {
         root.insert("peak_arena_bytes".into(), Json::Num(peak as f64));
         let out = Json::Obj(root).to_string_pretty();
         let path = "BENCH_tree.json";
-        match std::fs::write(path, &out) {
+        match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
@@ -929,7 +929,7 @@ fn main() {
     root.insert("tree_peak_arena_bytes".into(), Json::Num(tree_peak as f64));
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_endtoend.json";
-    match std::fs::write(path, &out) {
+    match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

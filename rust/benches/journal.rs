@@ -1,0 +1,285 @@
+//! Durable-coordinator (write-ahead journal) benches + CI gates.
+//!
+//! Gates two recovery properties of the crash-tolerant coordinator:
+//!
+//! 1. **crash-resume bit-identity** — a run killed by a certain chaos
+//!    crash fault and resumed from its journal + latest snapshot
+//!    finishes with `MetricsLog`, step totals AND journal bytes
+//!    identical to an uninterrupted run, across seeds (the resumed
+//!    journal re-appends exactly the suffix the crash destroyed);
+//! 2. **campaign-resume byte-identity** — a chaos campaign (crash
+//!    faults on an axis) resumed over per-cell completion records
+//!    produces a report byte-identical to a fresh single-pass run at
+//!    1, 2 and 8 workers, including after a record file is deleted.
+//!
+//! Plus throughput: ns per journal append (length-prefixed, checksummed,
+//! eagerly flushed frames) and recovery cost — open + torn-tail scan +
+//! `verify_replay` — on the real journal the gate runs produce.
+//!
+//! Results go to rust/BENCH_journal.json; any gate failure exits
+//! non-zero (wired into ci.sh --quick beside the chaos gates).
+//!
+//! Flags: --quick  CI smoke (short horizon, one seed)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use fedzero::client::{ClientInfo, ClientProfile, DeviceType, ModelKind};
+use fedzero::coordinator::events::ClientEvent;
+use fedzero::coordinator::journal::{verify_replay, Journal, JournalRecord};
+use fedzero::coordinator::StrategyKind;
+use fedzero::energy::PowerDomain;
+use fedzero::fl::MockBackend;
+use fedzero::metrics::MetricsLog;
+use fedzero::scenario::campaign::{run_campaign, run_campaign_durable, CampaignSpec};
+use fedzero::selection::fedzero::{FedZero, SolverKind};
+use fedzero::selection::semisync::SemiSync;
+use fedzero::sim::{ChaosSpec, CrashFault, DurableConfig, SimConfig, Simulation};
+use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
+use fedzero::util::bench::fmt_ns;
+use fedzero::util::json::Json;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fedzero_bench_journal_{}_{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Constant-power mock fixture (same shape as the chaos bench).
+fn sim_parts(
+    n_clients: usize,
+    n_domains: usize,
+    power_w: f64,
+    horizon: usize,
+) -> (Vec<ClientInfo>, Vec<PowerDomain>, Vec<Vec<f64>>, Vec<SeriesForecaster>) {
+    let clients: Vec<ClientInfo> = (0..n_clients)
+        .map(|i| {
+            let p = ClientProfile::new(
+                DeviceType::ALL[i % 3],
+                ModelKind::Vision,
+                10,
+                1.0,
+            );
+            ClientInfo::new(i, i % n_domains, p, (0..60).collect(), 10)
+        })
+        .collect();
+    let domains: Vec<PowerDomain> = (0..n_domains)
+        .map(|i| {
+            let series = vec![power_w; horizon];
+            let fc = SeriesForecaster::realistic(series.clone(), i as u64, 60.0);
+            PowerDomain::new(i, "d", 800.0, series, fc, 1.0)
+        })
+        .collect();
+    let load: Vec<Vec<f64>> = (0..n_clients).map(|_| vec![0.0; horizon]).collect();
+    let load_fc: Vec<SeriesForecaster> = clients
+        .iter()
+        .map(|c| {
+            SeriesForecaster::realistic(vec![c.capacity(); horizon], 7, 60.0)
+        })
+        .collect();
+    (clients, domains, load, load_fc)
+}
+
+/// One durable FSM run over the fixture (SemiSync deadline so injected
+/// delays have a deadline to miss — same strategy as the chaos bench).
+/// `resume` continues from the journal in `dir` instead of starting
+/// fresh. The snapshot cadence must match between the original and the
+/// resumed run (it shapes the journal bytes).
+fn durable_run(
+    seed: u64,
+    chaos: ChaosSpec,
+    dir: &Path,
+    resume: bool,
+    horizon: usize,
+) -> anyhow::Result<(MetricsLog, u64)> {
+    let n_clients = 24;
+    let (clients, domains, load, load_fc) = sim_parts(n_clients, 6, 800.0, horizon);
+    let backend = MockBackend::new(n_clients, 2_048, 0.2, 7);
+    let mut strat = SemiSync::new(FedZero::new(SolverKind::Greedy), 15);
+    let cfg = SimConfig {
+        horizon,
+        n_per_round: 6,
+        d_max: 30,
+        eval_every: 50,
+        seed,
+        step_minutes: 1.0,
+    };
+    let mut sim = Simulation::new(
+        cfg,
+        clients,
+        domains,
+        load,
+        load_fc,
+        ErrorLevel::Realistic,
+        &backend,
+        &mut strat,
+    );
+    sim.chaos = Some(chaos);
+    sim.durable = Some(DurableConfig {
+        dir: dir.to_path_buf(),
+        snapshot_every: 5,
+    });
+    if resume {
+        sim.resume_from(dir)?;
+    } else {
+        sim.run()?;
+    }
+    let steps = sim.steps_executed();
+    Ok((std::mem::take(&mut sim.metrics), steps))
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mode = if quick { "quick" } else { "default" };
+    println!("== journal benches [{mode}] ==");
+    let horizon = if quick { 400 } else { 1_200 };
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 5] };
+
+    // the same fault mix as the chaos bench, with/without a certain crash
+    let chaos_calm = ChaosSpec {
+        dropout_per_round: 0.2,
+        stale_prob: 0.5,
+        mean_delay_min: 40.0,
+        ..ChaosSpec::default()
+    };
+    let chaos_crash = ChaosSpec { crash_prob: 1.0, ..chaos_calm };
+
+    // --- crash-resume bit-identity across seeds ------------------------
+    let mut resume_mismatch = 0usize;
+    let mut crash_missing = 0usize;
+    let mut recovery_ms = 0.0f64;
+    let mut journal_records = 0usize;
+    let mut journal_bytes = 0u64;
+    let mut closed_rounds = 0usize;
+    for &seed in seeds {
+        let dir_a = scratch(&format!("ref_{seed}"));
+        let dir_b = scratch(&format!("crash_{seed}"));
+        let (m_ref, steps_ref) = durable_run(seed, chaos_calm, &dir_a, false, horizon)
+            .expect("uninterrupted durable run failed");
+        match durable_run(seed, chaos_crash, &dir_b, false, horizon) {
+            Err(e) if e.downcast_ref::<CrashFault>().is_some() => {}
+            Err(e) => panic!("crashed run died for the wrong reason: {e:#}"),
+            Ok(_) => {
+                eprintln!("JOURNAL GATE FAILED: certain crash did not fire (seed {seed})");
+                crash_missing += 1;
+            }
+        }
+        let (m_res, steps_res) = durable_run(seed, chaos_crash, &dir_b, true, horizon)
+            .expect("resume from crashed run failed");
+        let wal_a = std::fs::read(dir_a.join("journal.wal")).unwrap();
+        let wal_b = std::fs::read(dir_b.join("journal.wal")).unwrap();
+        if m_ref != m_res
+            || steps_ref != steps_res
+            || m_ref.to_json().to_string_pretty() != m_res.to_json().to_string_pretty()
+            || wal_a != wal_b
+        {
+            eprintln!(
+                "JOURNAL GATE FAILED: resume diverged from the uninterrupted run (seed {seed})"
+            );
+            resume_mismatch += 1;
+        }
+        // recovery cost on the real journal: open (torn-tail scan) + replay
+        let t0 = Instant::now();
+        let (wal, records) = Journal::open(&dir_a.join("journal.wal"))
+            .expect("reopening the reference journal failed");
+        closed_rounds = verify_replay(&records).expect("reference journal does not replay");
+        recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+        journal_records = records.len();
+        journal_bytes = wal.len_bytes();
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+    if resume_mismatch + crash_missing == 0 {
+        println!(
+            "crash-resume: ok ({} seeds bit-identical, {closed_rounds} closed rounds replayed)",
+            seeds.len()
+        );
+    }
+    println!(
+        "journal_recover/{journal_records}rec {recovery_ms:>9.2} ms ({journal_bytes} bytes)"
+    );
+
+    // --- append throughput ---------------------------------------------
+    let adir = scratch("append");
+    let mut wal = Journal::create(&adir.join("journal.wal")).unwrap();
+    let appends = if quick { 2_000usize } else { 20_000 };
+    let t0 = Instant::now();
+    for i in 0..appends {
+        wal.append(&JournalRecord::Event {
+            at: i,
+            ev: ClientEvent::UpdateSubmitted { client: i % 24, epoch: 7 },
+        })
+        .unwrap();
+    }
+    let ns_append = t0.elapsed().as_nanos() as f64 / appends as f64;
+    println!(
+        "journal_append/{appends}rec {:>12} per record ({} bytes)",
+        fmt_ns(ns_append),
+        wal.len_bytes()
+    );
+    drop(wal);
+    let _ = std::fs::remove_dir_all(&adir);
+
+    // --- campaign-resume byte-identity at 1/2/8 workers -----------------
+    let mut spec = CampaignSpec::smoke();
+    spec.name = "journal-bench".into();
+    spec.strategies = vec![StrategyKind::FedZero];
+    spec.chaos_axis = vec![None, Some(chaos_crash)];
+    let reference = run_campaign(&spec, 1).expect("serial campaign failed");
+    let ref_text = reference.report_json().to_string_pretty();
+    let cdir = scratch("campaign");
+    let mut campaign_divergence = 0usize;
+    for (i, &workers) in [1usize, 2, 8].iter().enumerate() {
+        if i == 1 {
+            // a lost record must be recomputed, not break the report
+            let _ = std::fs::remove_file(cdir.join("cells").join("cell_0.json"));
+        }
+        let run = run_campaign_durable(&spec, workers, &cdir)
+            .expect("durable campaign failed");
+        if run.report_json().to_string_pretty() != ref_text {
+            eprintln!("JOURNAL GATE FAILED: durable campaign diverged at {workers} workers");
+            campaign_divergence += 1;
+        }
+    }
+    if campaign_divergence == 0 {
+        println!(
+            "campaign resume: ok ({} cells byte-identical at 1/2/8 workers)",
+            reference.results.len()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&cdir);
+
+    // --- machine-readable results --------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("journal".into()));
+    root.insert("mode".into(), Json::Str(mode.into()));
+    root.insert("ns_per_append".into(), Json::Num(ns_append));
+    root.insert("recovery_ms".into(), Json::Num(recovery_ms));
+    root.insert("journal_records".into(), Json::Num(journal_records as f64));
+    root.insert("journal_bytes".into(), Json::Num(journal_bytes as f64));
+    root.insert("closed_rounds".into(), Json::Num(closed_rounds as f64));
+    root.insert("resume_mismatch".into(), Json::Num(resume_mismatch as f64));
+    root.insert("crash_missing".into(), Json::Num(crash_missing as f64));
+    root.insert(
+        "campaign_divergence".into(),
+        Json::Num(campaign_divergence as f64),
+    );
+    let out = Json::Obj(root).to_string_pretty();
+    let path = "BENCH_journal.json";
+    match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if resume_mismatch + crash_missing + campaign_divergence > 0 {
+        eprintln!("journal gates FAILED");
+        std::process::exit(1);
+    }
+    println!("== done ==");
+}

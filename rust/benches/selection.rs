@@ -419,7 +419,7 @@ fn main() {
         root.insert("bnb_steal".into(), steal_json);
         let out = Json::Obj(root).to_string_pretty();
         let path = "BENCH_selection.json";
-        match std::fs::write(path, &out) {
+        match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
@@ -502,7 +502,7 @@ fn main() {
     root.insert("bnb_steal".into(), steal_json);
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_selection.json";
-    match std::fs::write(path, &out) {
+    match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

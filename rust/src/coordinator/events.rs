@@ -138,6 +138,17 @@ impl EventQueue {
     pub fn clear(&mut self) {
         self.heap.clear();
     }
+
+    /// Every pending event in delivery order (`(at, seq)` ascending) —
+    /// the checkpointing view. Re-pushing the returned pairs into a
+    /// fresh queue (in order) reproduces the exact delivery sequence:
+    /// fresh `seq` counters are re-minted monotonically, so relative
+    /// order within a timestep is preserved bit for bit.
+    pub fn to_sorted_vec(&self) -> Vec<(usize, ClientEvent)> {
+        let mut v: Vec<&TimedEvent> = self.heap.iter().collect();
+        v.sort_by_key(|te| (te.at, te.seq));
+        v.into_iter().map(|te| (te.at, te.ev)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +179,29 @@ mod tests {
         assert_eq!(q.peek_at(), Some(7));
         assert!(q.pop_due(7).is_some());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sorted_snapshot_rebuilds_identical_delivery_order() {
+        let mut q = EventQueue::new();
+        q.push(5, ClientEvent::Timeout { epoch: 2 });
+        q.push(2, ClientEvent::Dropout { client: 3, epoch: 2 });
+        q.push(2, ClientEvent::Rejoin { client: 3, epoch: 2 });
+        q.push(9, ClientEvent::UpdateSubmitted { client: 1, epoch: 2 });
+        let snap = q.to_sorted_vec();
+        assert_eq!(snap.len(), 4);
+        let mut rebuilt = EventQueue::new();
+        for (at, ev) in snap {
+            rebuilt.push(at, ev);
+        }
+        loop {
+            let a = q.pop_due(usize::MAX);
+            let b = rebuilt.pop_due(usize::MAX);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

@@ -195,6 +195,22 @@ impl RoundFsm {
         self.epoch
     }
 
+    /// Restore the monotone epoch counter from a checkpoint. Only legal
+    /// while `Idle` (between rounds — the only phase a snapshot is ever
+    /// taken in); the next `begin_round` mints `epoch + 1`, so after a
+    /// resume the re-executed round reuses the exact token the
+    /// interrupted run minted, and every stale event journaled or queued
+    /// before the crash stays fenced identically.
+    pub fn restore_epoch(&mut self, epoch: u64) {
+        debug_assert_eq!(
+            self.phase,
+            RoundPhase::Idle,
+            "restore_epoch from {:?}",
+            self.phase
+        );
+        self.epoch = epoch;
+    }
+
     /// `Idle → Selecting`: validate the decision, mint a fresh epoch,
     /// initialise per-slot state, and schedule the ceremonial
     /// `CheckIn` events plus the round's `Timeout` at `t0 + cap`.
@@ -613,6 +629,26 @@ mod tests {
         assert_eq!(fsm.submissions(), 1);
         assert_eq!(fsm.shards_complete(), 0);
         assert!(!fsm.shard_complete(0));
+    }
+
+    #[test]
+    fn restored_epoch_keeps_pre_crash_events_fenced() {
+        // a machine resumed at epoch 7 mints 8 for its next round, so a
+        // stale update carrying a pre-crash token can never count
+        let mut fsm = RoundFsm::new();
+        fsm.restore_epoch(7);
+        let mut q = EventQueue::new();
+        fsm.begin_round(&decision(vec![0, 1], 2), 3, 0, 10, &mut q).unwrap();
+        assert_eq!(fsm.epoch(), 8);
+        fsm.start_training();
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: 7 }),
+            EventOutcome::StaleUpdate
+        );
+        assert_eq!(
+            fsm.apply(&ClientEvent::UpdateSubmitted { client: 0, epoch: 8 }),
+            EventOutcome::Accepted
+        );
     }
 
     #[test]

@@ -1,0 +1,746 @@
+//! Write-ahead event journal for the durable coordinator.
+//!
+//! Every round decision and every applied [`ClientEvent`] is appended
+//! here *before* it takes effect on simulation state, so a crash at any
+//! timestep loses at most the record being written. On reopen the torn
+//! tail is detected and truncated, and the surviving prefix is replayed
+//! through a scratch [`RoundFsm`] — the same `apply`/epoch-fencing
+//! machinery that produced it — to prove the log is internally
+//! consistent before the engine trusts it.
+//!
+//! # Framing
+//!
+//! Records are length-prefixed JSON with a checksum header — no new
+//! dependencies, human-inspectable payloads, torn writes detectable at
+//! any byte offset:
+//!
+//! ```text
+//! ┌────────────────┬──────────────────────┬──────────────────┐
+//! │ u32 LE len     │ u32 LE FNV-1a(bytes) │ len payload bytes │
+//! └────────────────┴──────────────────────┴──────────────────┘
+//! ```
+//!
+//! A record is durable iff its full frame is present, its checksum
+//! matches, and its payload parses as a known [`JournalRecord`]. The
+//! first record failing any of those checks marks the torn tail:
+//! everything from there on is dropped (`Journal::open` truncates the
+//! file back to the durable prefix). Appends flush eagerly.
+//!
+//! # Record vocabulary
+//!
+//! * [`JournalRecord::RoundStart`] — the validated selection decision
+//!   plus the epoch token the round minted.
+//! * [`JournalRecord::Event`] — one applied client event, journaled at
+//!   application time (journal order = application order, which is what
+//!   makes replay exact).
+//! * [`JournalRecord::RoundClose`] — the round's outcome: submitted
+//!   slots and participants, cross-checked on replay.
+//! * [`JournalRecord::SnapshotMark`] — a snapshot checkpoint was
+//!   persisted at this round boundary. Resume truncates the journal
+//!   back to the mark matching the snapshot it loads, then re-executed
+//!   rounds re-append byte-identical records — so after a crash +
+//!   resume, the final journal is byte-identical to an uninterrupted
+//!   durable run's.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::selection::SelectionDecision;
+use crate::util::fsx;
+use crate::util::json::{num, obj, parse_u64_hex, s, u64_hex, Json};
+
+use super::events::{ClientEvent, EventQueue};
+use super::fsm::RoundFsm;
+
+/// Hard sanity cap on one record's payload (a RoundStart listing every
+/// client of a 1M-client round stays far below this; anything larger in
+/// a length header means the header bytes are garbage).
+const MAX_RECORD_BYTES: usize = 64 << 20;
+
+/// 32-bit FNV-1a over the payload bytes.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// -- ClientEvent codec -------------------------------------------------------
+
+/// Encode one event (epoch tokens as lossless hex — see
+/// [`crate::util::json::u64_hex`]).
+pub fn event_to_json(ev: &ClientEvent) -> Json {
+    let (kind, client, epoch) = match *ev {
+        ClientEvent::CheckIn { client, epoch } => ("check_in", Some(client), epoch),
+        ClientEvent::UpdateSubmitted { client, epoch } => ("update", Some(client), epoch),
+        ClientEvent::Dropout { client, epoch } => ("dropout", Some(client), epoch),
+        ClientEvent::Rejoin { client, epoch } => ("rejoin", Some(client), epoch),
+        ClientEvent::Timeout { epoch } => ("timeout", None, epoch),
+    };
+    let mut pairs = vec![("kind", s(kind)), ("epoch", u64_hex(epoch))];
+    if let Some(c) = client {
+        pairs.push(("client", num(c as f64)));
+    }
+    obj(pairs)
+}
+
+pub fn event_from_json(j: &Json) -> Result<ClientEvent, String> {
+    let kind = j
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or("event missing kind")?;
+    let epoch = parse_u64_hex(j.get("epoch").ok_or("event missing epoch")?)?;
+    let client = || -> Result<usize, String> {
+        j.get("client")
+            .and_then(|c| c.as_usize())
+            .ok_or_else(|| format!("{kind} event missing client"))
+    };
+    Ok(match kind {
+        "check_in" => ClientEvent::CheckIn { client: client()?, epoch },
+        "update" => ClientEvent::UpdateSubmitted { client: client()?, epoch },
+        "dropout" => ClientEvent::Dropout { client: client()?, epoch },
+        "rejoin" => ClientEvent::Rejoin { client: client()?, epoch },
+        "timeout" => ClientEvent::Timeout { epoch },
+        other => return Err(format!("unknown event kind {other:?}")),
+    })
+}
+
+fn usize_arr(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn parse_usize_arr(j: &Json, what: &str) -> Result<Vec<usize>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what} is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| format!("{what} holds a non-integer")))
+        .collect()
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("record missing {key}"))
+}
+
+// -- records -----------------------------------------------------------------
+
+/// One durable entry in the write-ahead log.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalRecord {
+    /// A validated decision started a round (journaled before the first
+    /// training step executes).
+    RoundStart {
+        round: usize,
+        /// the epoch token `begin_round` minted for this round
+        epoch: u64,
+        t0: usize,
+        round_cap: usize,
+        n_clients: usize,
+        clients: Vec<usize>,
+        n_required: usize,
+        unconstrained: bool,
+    },
+    /// One client event, journaled at the step it was applied.
+    Event { at: usize, ev: ClientEvent },
+    /// The round closed; replay cross-checks the submitted slots.
+    RoundClose {
+        round: usize,
+        timed_out: bool,
+        /// slot indices (into the round's client list) that submitted
+        submitted: Vec<usize>,
+        /// client ids whose work entered the aggregate
+        participants: Vec<usize>,
+    },
+    /// A snapshot checkpoint covering everything up to `round` was
+    /// persisted; resume truncates back to here.
+    SnapshotMark { round: usize, t: usize },
+}
+
+impl JournalRecord {
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::RoundStart {
+                round,
+                epoch,
+                t0,
+                round_cap,
+                n_clients,
+                clients,
+                n_required,
+                unconstrained,
+            } => obj(vec![
+                ("type", s("round_start")),
+                ("round", num(*round as f64)),
+                ("epoch", u64_hex(*epoch)),
+                ("t0", num(*t0 as f64)),
+                ("round_cap", num(*round_cap as f64)),
+                ("n_clients", num(*n_clients as f64)),
+                ("clients", usize_arr(clients)),
+                ("n_required", num(*n_required as f64)),
+                ("unconstrained", Json::Bool(*unconstrained)),
+            ]),
+            JournalRecord::Event { at, ev } => obj(vec![
+                ("type", s("event")),
+                ("at", num(*at as f64)),
+                ("ev", event_to_json(ev)),
+            ]),
+            JournalRecord::RoundClose { round, timed_out, submitted, participants } => {
+                obj(vec![
+                    ("type", s("round_close")),
+                    ("round", num(*round as f64)),
+                    ("timed_out", Json::Bool(*timed_out)),
+                    ("submitted", usize_arr(submitted)),
+                    ("participants", usize_arr(participants)),
+                ])
+            }
+            JournalRecord::SnapshotMark { round, t } => obj(vec![
+                ("type", s("snapshot_mark")),
+                ("round", num(*round as f64)),
+                ("t", num(*t as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<JournalRecord, String> {
+        let ty = j
+            .get("type")
+            .and_then(|t| t.as_str())
+            .ok_or("record missing type")?;
+        Ok(match ty {
+            "round_start" => JournalRecord::RoundStart {
+                round: get_usize(j, "round")?,
+                epoch: parse_u64_hex(j.get("epoch").ok_or("record missing epoch")?)?,
+                t0: get_usize(j, "t0")?,
+                round_cap: get_usize(j, "round_cap")?,
+                n_clients: get_usize(j, "n_clients")?,
+                clients: parse_usize_arr(
+                    j.get("clients").ok_or("record missing clients")?,
+                    "clients",
+                )?,
+                n_required: get_usize(j, "n_required")?,
+                unconstrained: j
+                    .get("unconstrained")
+                    .and_then(|b| b.as_bool())
+                    .ok_or("record missing unconstrained")?,
+            },
+            "event" => JournalRecord::Event {
+                at: get_usize(j, "at")?,
+                ev: event_from_json(j.get("ev").ok_or("record missing ev")?)?,
+            },
+            "round_close" => JournalRecord::RoundClose {
+                round: get_usize(j, "round")?,
+                timed_out: j
+                    .get("timed_out")
+                    .and_then(|b| b.as_bool())
+                    .ok_or("record missing timed_out")?,
+                submitted: parse_usize_arr(
+                    j.get("submitted").ok_or("record missing submitted")?,
+                    "submitted",
+                )?,
+                participants: parse_usize_arr(
+                    j.get("participants").ok_or("record missing participants")?,
+                    "participants",
+                )?,
+            },
+            "snapshot_mark" => JournalRecord::SnapshotMark {
+                round: get_usize(j, "round")?,
+                t: get_usize(j, "t")?,
+            },
+            other => return Err(format!("unknown record type {other:?}")),
+        })
+    }
+}
+
+// -- the journal file --------------------------------------------------------
+
+/// Append-only write-ahead log with torn-tail recovery.
+pub struct Journal {
+    path: PathBuf,
+    file: std::fs::File,
+    len: u64,
+    /// `(snapshot round, byte offset just past the mark record)` for
+    /// every durable [`JournalRecord::SnapshotMark`], append order
+    marks: Vec<(usize, u64)>,
+}
+
+impl Journal {
+    /// Start a fresh journal (truncating any existing file).
+    pub fn create(path: &Path) -> Result<Journal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        file.set_len(0)
+            .with_context(|| format!("truncating journal {}", path.display()))?;
+        Ok(Journal { path: path.to_path_buf(), file, len: 0, marks: Vec::new() })
+    }
+
+    /// Open an existing journal: scan every frame, stop at the first
+    /// torn/corrupt record, truncate the file back to the durable
+    /// prefix, and return the surviving records.
+    pub fn open(path: &Path) -> Result<(Journal, Vec<JournalRecord>)> {
+        let bytes = fsx::read(path)?;
+        let mut records = Vec::new();
+        let mut marks = Vec::new();
+        let mut off = 0usize;
+        while off + 8 <= bytes.len() {
+            let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            let sum = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+            if len > MAX_RECORD_BYTES || off + 8 + len > bytes.len() {
+                break; // torn mid-payload (or garbage length header)
+            }
+            let payload = &bytes[off + 8..off + 8 + len];
+            if fnv1a(payload) != sum {
+                break; // torn or corrupted payload
+            }
+            let Ok(text) = std::str::from_utf8(payload) else { break };
+            let Ok(doc) = Json::parse(text) else { break };
+            let Ok(rec) = JournalRecord::from_json(&doc) else { break };
+            off += 8 + len;
+            if let JournalRecord::SnapshotMark { round, .. } = rec {
+                marks.push((round, off as u64));
+            }
+            records.push(rec);
+        }
+        let file = OpenOptions::new()
+            .write(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        if off < bytes.len() {
+            file.set_len(off as u64).with_context(|| {
+                format!("truncating torn tail of {}", path.display())
+            })?;
+        }
+        Ok((
+            Journal { path: path.to_path_buf(), file, len: off as u64, marks },
+            records,
+        ))
+    }
+
+    /// Append one record (frame + eager flush). Returns the byte length
+    /// of the journal after the append.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<u64> {
+        let payload = rec.to_json().to_string_compact().into_bytes();
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.file
+            .flush()
+            .with_context(|| format!("flushing journal {}", self.path.display()))?;
+        self.len += frame.len() as u64;
+        if let JournalRecord::SnapshotMark { round, .. } = rec {
+            self.marks.push((*round, self.len));
+        }
+        Ok(self.len)
+    }
+
+    /// Truncate back to just past the [`JournalRecord::SnapshotMark`]
+    /// for `round` (the snapshot a resume loaded). Returns false if no
+    /// such mark is durable — the caller then resets and re-marks.
+    pub fn truncate_to_mark(&mut self, round: usize) -> Result<bool> {
+        let Some(pos) = self.marks.iter().rposition(|&(r, _)| r == round) else {
+            return Ok(false);
+        };
+        let off = self.marks[pos].1;
+        self.file.set_len(off).with_context(|| {
+            format!("truncating journal {} to snapshot mark", self.path.display())
+        })?;
+        self.len = off;
+        self.marks.truncate(pos + 1);
+        Ok(true)
+    }
+
+    /// Drop every record (the no-usable-mark fallback).
+    pub fn reset(&mut self) -> Result<()> {
+        self.file
+            .set_len(0)
+            .with_context(|| format!("resetting journal {}", self.path.display()))?;
+        self.len = 0;
+        self.marks.clear();
+        Ok(())
+    }
+
+    pub fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+// -- replay verification -----------------------------------------------------
+
+/// Replay a journal prefix through a scratch [`RoundFsm`] — the exact
+/// `begin_round`/`apply`/epoch-fencing machinery that produced it — and
+/// check internal consistency: every `RoundStart` must mint the epoch
+/// the journal recorded, and every `RoundClose` must agree with the
+/// machine's submitted set. A trailing `RoundStart` group without its
+/// `RoundClose` is legal (the crash-mid-round case) and left open.
+/// Returns the number of fully verified rounds.
+pub fn verify_replay(records: &[JournalRecord]) -> Result<usize> {
+    let mut fsm = RoundFsm::new();
+    let mut queue = EventQueue::new();
+    let mut in_round = false;
+    let mut rounds = 0usize;
+    for (i, rec) in records.iter().enumerate() {
+        match rec {
+            JournalRecord::RoundStart {
+                epoch,
+                t0,
+                round_cap,
+                n_clients,
+                clients,
+                n_required,
+                unconstrained,
+                ..
+            } => {
+                if in_round {
+                    bail!("journal record {i}: RoundStart inside an open round");
+                }
+                if *epoch == 0 {
+                    bail!("journal record {i}: RoundStart with epoch 0");
+                }
+                // the machine mints epoch+1, so seed it one behind
+                fsm.restore_epoch(epoch - 1);
+                let decision = SelectionDecision {
+                    clients: clients.clone(),
+                    expected_duration: 0,
+                    n_required: *n_required,
+                    max_duration: *round_cap,
+                    wait: false,
+                    unconstrained: *unconstrained,
+                };
+                queue.clear();
+                fsm.begin_round(&decision, *n_clients, *t0, *round_cap, &mut queue)
+                    .map_err(|e| anyhow!("journal record {i}: {e}"))?;
+                if fsm.epoch() != *epoch {
+                    bail!(
+                        "journal record {i}: replay minted epoch {} but the \
+                         journal recorded {}",
+                        fsm.epoch(),
+                        epoch
+                    );
+                }
+                fsm.start_training();
+                in_round = true;
+            }
+            JournalRecord::Event { ev, .. } => {
+                // journal order = application order; outside a round the
+                // machine fences/ignores exactly as the live engine did
+                fsm.apply(ev);
+            }
+            JournalRecord::RoundClose { timed_out, submitted, .. } => {
+                if !in_round {
+                    bail!("journal record {i}: RoundClose without a RoundStart");
+                }
+                if fsm.submissions() != submitted.len() {
+                    bail!(
+                        "journal record {i}: replay saw {} submissions, \
+                         RoundClose recorded {}",
+                        fsm.submissions(),
+                        submitted.len()
+                    );
+                }
+                for &slot in submitted {
+                    if !fsm.submitted(slot) {
+                        bail!(
+                            "journal record {i}: RoundClose lists slot {slot} \
+                             but replay never saw its update"
+                        );
+                    }
+                }
+                fsm.close(*timed_out);
+                fsm.round_end();
+                fsm.finish();
+                in_round = false;
+                rounds += 1;
+            }
+            JournalRecord::SnapshotMark { .. } => {
+                if in_round {
+                    bail!("journal record {i}: SnapshotMark inside an open round");
+                }
+            }
+        }
+    }
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fedzero_journal_{}_{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_records() -> Vec<JournalRecord> {
+        let epoch = 1u64;
+        vec![
+            JournalRecord::SnapshotMark { round: 0, t: 0 },
+            JournalRecord::RoundStart {
+                round: 0,
+                epoch,
+                t0: 3,
+                round_cap: 10,
+                n_clients: 5,
+                clients: vec![2, 0, 4],
+                n_required: 2,
+                unconstrained: false,
+            },
+            JournalRecord::Event {
+                at: 3,
+                ev: ClientEvent::CheckIn { client: 2, epoch },
+            },
+            JournalRecord::Event {
+                at: 3,
+                ev: ClientEvent::CheckIn { client: 0, epoch },
+            },
+            JournalRecord::Event {
+                at: 4,
+                ev: ClientEvent::Dropout { client: 4, epoch },
+            },
+            JournalRecord::Event {
+                at: 6,
+                ev: ClientEvent::UpdateSubmitted { client: 2, epoch },
+            },
+            JournalRecord::Event {
+                at: 7,
+                ev: ClientEvent::UpdateSubmitted { client: 0, epoch },
+            },
+            JournalRecord::RoundClose {
+                round: 0,
+                timed_out: false,
+                submitted: vec![0, 1],
+                participants: vec![2, 0],
+            },
+            JournalRecord::SnapshotMark { round: 1, t: 9 },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip_through_json() {
+        for rec in sample_records() {
+            let text = rec.to_json().to_string_compact();
+            let parsed = JournalRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, rec);
+        }
+        // full-range epoch tokens survive (the hex encoding's reason)
+        let rec = JournalRecord::Event {
+            at: 1,
+            ev: ClientEvent::Timeout { epoch: u64::MAX },
+        };
+        let text = rec.to_json().to_string_compact();
+        assert_eq!(
+            JournalRecord::from_json(&Json::parse(&text).unwrap()).unwrap(),
+            rec
+        );
+    }
+
+    #[test]
+    fn append_then_open_returns_identical_records() {
+        let dir = scratch("roundtrip");
+        let path = dir.join("wal.log");
+        let recs = sample_records();
+        {
+            let mut j = Journal::create(&path).unwrap();
+            for r in &recs {
+                j.append(r).unwrap();
+            }
+        }
+        let (j, loaded) = Journal::open(&path).unwrap();
+        assert_eq!(loaded, recs);
+        assert_eq!(j.len_bytes(), std::fs::metadata(&path).unwrap().len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: truncating an in-flight record at EVERY byte offset
+    /// still opens cleanly, drops only the torn tail, and replays to
+    /// the last durable state.
+    #[test]
+    fn torn_write_recovery_at_every_byte_offset() {
+        let dir = scratch("torn");
+        let path = dir.join("wal.log");
+        let recs = sample_records();
+        let mut j = Journal::create(&path).unwrap();
+        let mut prefix_len = 0u64;
+        for r in &recs[..recs.len() - 1] {
+            prefix_len = j.append(r).unwrap();
+        }
+        let full_len = j.append(&recs[recs.len() - 1]).unwrap();
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        assert_eq!(full.len() as u64, full_len);
+
+        let torn_path = dir.join("torn.log");
+        for cut in prefix_len..full_len {
+            std::fs::write(&torn_path, &full[..cut as usize]).unwrap();
+            let (tj, loaded) = Journal::open(&torn_path).unwrap();
+            assert_eq!(
+                loaded,
+                recs[..recs.len() - 1],
+                "cut at byte {cut} of {full_len}"
+            );
+            assert_eq!(tj.len_bytes(), prefix_len, "cut at byte {cut}");
+            drop(tj);
+            // the torn tail was physically truncated
+            assert_eq!(
+                std::fs::metadata(&torn_path).unwrap().len(),
+                prefix_len,
+                "cut at byte {cut}"
+            );
+            // the durable prefix still replays cleanly
+            assert_eq!(verify_replay(&loaded).unwrap(), 1);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_payload_byte_drops_only_the_tail() {
+        let dir = scratch("corrupt");
+        let path = dir.join("wal.log");
+        let recs = sample_records();
+        let mut j = Journal::create(&path).unwrap();
+        let mut prefix_len = 0u64;
+        for r in &recs[..recs.len() - 1] {
+            prefix_len = j.append(r).unwrap();
+        }
+        j.append(&recs[recs.len() - 1]).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let flip = prefix_len as usize + 12; // inside the last payload
+        bytes[flip] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, loaded) = Journal::open(&path).unwrap();
+        assert_eq!(loaded, recs[..recs.len() - 1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn appends_after_torn_open_continue_the_durable_prefix() {
+        let dir = scratch("reappend");
+        let path = dir.join("wal.log");
+        let recs = sample_records();
+        let mut j = Journal::create(&path).unwrap();
+        let mut prefix_len = 0u64;
+        for r in &recs[..recs.len() - 1] {
+            prefix_len = j.append(r).unwrap();
+        }
+        j.append(&recs[recs.len() - 1]).unwrap();
+        drop(j);
+        // tear mid-way through the final record
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..(prefix_len as usize + 5)]).unwrap();
+        let (mut j, _) = Journal::open(&path).unwrap();
+        // re-append the same record: bytes must equal the untorn file
+        j.append(&recs[recs.len() - 1]).unwrap();
+        drop(j);
+        assert_eq!(std::fs::read(&path).unwrap(), full);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncate_to_mark_drops_post_snapshot_records() {
+        let dir = scratch("marks");
+        let path = dir.join("wal.log");
+        let recs = sample_records();
+        let mut j = Journal::create(&path).unwrap();
+        let mut len_after_first_mark = 0;
+        for r in &recs {
+            let len = j.append(r).unwrap();
+            if matches!(r, JournalRecord::SnapshotMark { round: 0, .. }) {
+                len_after_first_mark = len;
+            }
+        }
+        assert!(j.truncate_to_mark(0).unwrap());
+        assert_eq!(j.len_bytes(), len_after_first_mark);
+        assert!(!j.truncate_to_mark(9).unwrap(), "unknown mark");
+        drop(j);
+        let (_, loaded) = Journal::open(&path).unwrap();
+        assert_eq!(loaded, recs[..1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_replay_accepts_history_and_rejects_tampering() {
+        let recs = sample_records();
+        assert_eq!(verify_replay(&recs).unwrap(), 1);
+
+        // crash-mid-round: trailing open round group is tolerated
+        let mut open_round = recs.clone();
+        open_round.truncate(recs.len() - 2); // drop RoundClose + mark
+        assert_eq!(verify_replay(&open_round).unwrap(), 0);
+
+        // tamper: RoundClose claims a slot that never submitted
+        let mut tampered = recs.clone();
+        if let JournalRecord::RoundClose { submitted, .. } = &mut tampered[7] {
+            submitted.push(2);
+        }
+        assert!(verify_replay(&tampered).is_err());
+
+        // tamper: drop an update event the close depends on
+        let mut missing = recs.clone();
+        missing.remove(6);
+        assert!(verify_replay(&missing).is_err());
+
+        // tamper: journal claims a different epoch than replay mints
+        let mut wrong_epoch = recs;
+        if let JournalRecord::RoundStart { epoch, .. } = &mut wrong_epoch[1] {
+            *epoch = 3;
+        }
+        // events still carry epoch 1 → close sees zero submissions
+        assert!(verify_replay(&wrong_epoch).is_err());
+    }
+
+    #[test]
+    fn stale_events_outside_rounds_replay_harmlessly() {
+        // a delayed update surfacing between rounds (fsm Idle) is fenced
+        // on replay exactly as it was live
+        let epoch = 1u64;
+        let recs = vec![
+            JournalRecord::RoundStart {
+                round: 0,
+                epoch,
+                t0: 0,
+                round_cap: 5,
+                n_clients: 3,
+                clients: vec![0, 1],
+                n_required: 1,
+                unconstrained: false,
+            },
+            JournalRecord::Event {
+                at: 2,
+                ev: ClientEvent::UpdateSubmitted { client: 0, epoch },
+            },
+            JournalRecord::RoundClose {
+                round: 0,
+                timed_out: false,
+                submitted: vec![0],
+                participants: vec![0],
+            },
+            // late straggler from the closed round, applied while Idle
+            JournalRecord::Event {
+                at: 9,
+                ev: ClientEvent::UpdateSubmitted { client: 1, epoch },
+            },
+        ];
+        assert_eq!(verify_replay(&recs).unwrap(), 1);
+    }
+}

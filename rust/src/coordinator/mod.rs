@@ -5,10 +5,13 @@
 //!
 //! The round lifecycle itself lives in [`fsm`] (the event-driven state
 //! machine the engine executes rounds through) and [`events`] (the
-//! deterministic client-event queue feeding it).
+//! deterministic client-event queue feeding it). [`journal`] makes that
+//! lifecycle durable: a write-ahead log of decisions and events plus
+//! snapshot marks, giving the engine its crash-fault `resume_from` path.
 
 pub mod events;
 pub mod fsm;
+pub mod journal;
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -27,7 +30,7 @@ use crate::selection::baselines::{Baseline, UpperBound};
 use crate::selection::fedzero::{FedZero, SolverKind};
 use crate::selection::semisync::SemiSync;
 use crate::selection::Strategy;
-use crate::sim::{SimConfig, Simulation};
+use crate::sim::{DurableConfig, SimConfig, Simulation};
 use crate::trace::forecast::ErrorLevel;
 use crate::util::rng::Rng;
 
@@ -169,6 +172,17 @@ pub struct ExperimentSpec {
     /// cap eval to this many test samples (0 = all)
     pub eval_subset: usize,
     pub artifact_dir: PathBuf,
+    /// durable-coordinator checkpoint directory: when set the run keeps a
+    /// write-ahead journal + periodic snapshots there
+    /// ([`crate::sim::DurableConfig`]), and `resume` continues a killed
+    /// run from it bit-identically
+    pub checkpoint_dir: Option<PathBuf>,
+    /// snapshot cadence in rounds (only read when `checkpoint_dir` is
+    /// set). The cadence shapes the journal byte stream, so a resumed run
+    /// must use the same value as the original.
+    pub snapshot_every: usize,
+    /// resume from `checkpoint_dir` instead of starting fresh
+    pub resume: bool,
 }
 
 impl Default for ExperimentSpec {
@@ -194,6 +208,9 @@ impl Default for ExperimentSpec {
             eval_every: 5,
             eval_subset: 512,
             artifact_dir: PathBuf::from("artifacts"),
+            checkpoint_dir: None,
+            snapshot_every: 5,
+            resume: false,
         }
     }
 }
@@ -311,7 +328,20 @@ fn run_with_backend<B: TrainBackend>(
     );
     sim.outages = built.outages;
     sim.chaos = env_spec(spec).chaos;
-    sim.run()?;
+    match &spec.checkpoint_dir {
+        Some(dir) => {
+            sim.durable = Some(DurableConfig {
+                dir: dir.clone(),
+                snapshot_every: spec.snapshot_every,
+            });
+            if spec.resume {
+                sim.resume_from(dir)?;
+            } else {
+                sim.run()?;
+            }
+        }
+        None => sim.run()?,
+    }
     let wallclock_s = t0.elapsed().as_secs_f64();
     let select_time_ms = sim.select_time.as_secs_f64() * 1e3;
     // deterministic per-client reduction over the engine-owned train
@@ -561,6 +591,52 @@ mod tests {
         assert_eq!(report.n_domains, 2);
         assert!(report.client_domains.iter().all(|&d| d < 2));
         assert!(!report.metrics.rounds.is_empty());
+    }
+
+    /// The CLI-facing plumbing of the durable coordinator: a spec with
+    /// `checkpoint_dir` + a certain crash chaos dies with [`CrashFault`],
+    /// and the same spec re-run with `resume` finishes with metrics
+    /// bit-identical to a run that never crashed. (The engine- and
+    /// campaign-level equivalents live in `sim::engine` /
+    /// `scenario::campaign`; this one guards the `ExperimentSpec` path.)
+    #[test]
+    fn checkpointed_experiment_resumes_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("fedzero_coord_{}_ckpt", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = |crash: f64, ckpt: bool, resume: bool| ExperimentSpec {
+            use_mock: true,
+            days: 1,
+            n_clients: 20,
+            n_per_round: 4,
+            d_max: 30,
+            preset: "tiny".into(),
+            dataset_scale: 0.2,
+            seed: 11,
+            env: Some(EnvSpec {
+                chaos: Some(crate::sim::ChaosSpec {
+                    crash_prob: crash,
+                    ..Default::default()
+                }),
+                ..EnvSpec::global()
+            }),
+            checkpoint_dir: ckpt.then(|| dir.clone()),
+            snapshot_every: 3,
+            resume,
+            ..Default::default()
+        };
+        let reference = run_experiment(&spec(0.0, false, false)).unwrap();
+        let err = run_experiment(&spec(1.0, true, false)).unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::sim::CrashFault>().is_some(),
+            "expected CrashFault, got {err:#}"
+        );
+        // resume ignores the armed crash (a fault fires once per process
+        // life) and must land exactly where the uninterrupted run did
+        let resumed = run_experiment(&spec(1.0, true, true)).unwrap();
+        assert_eq!(reference.metrics, resumed.metrics);
+        assert_eq!(reference.steps_executed, resumed.steps_executed);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

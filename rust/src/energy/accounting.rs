@@ -54,6 +54,22 @@ impl EnergyMeter {
         self.per_round_wh.len()
     }
 
+    /// Checkpoint view of every tally (client Wh, domain Wh, round Wh,
+    /// total Wh) — [`EnergyMeter::restore`] rebuilds the meter exactly.
+    pub fn snapshot(&self) -> (&[f64], &[f64], &[f64], f64) {
+        (&self.per_client_wh, &self.per_domain_wh, &self.per_round_wh, self.total_wh)
+    }
+
+    /// Rebuild a meter from an [`EnergyMeter::snapshot`] capture.
+    pub fn restore(
+        per_client_wh: Vec<f64>,
+        per_domain_wh: Vec<f64>,
+        per_round_wh: Vec<f64>,
+        total_wh: f64,
+    ) -> Self {
+        EnergyMeter { per_client_wh, per_domain_wh, per_round_wh, total_wh }
+    }
+
     /// cumulative kWh up to and including `round`
     pub fn cumulative_kwh(&self, round: usize) -> f64 {
         self.per_round_wh[..=round.min(self.per_round_wh.len().saturating_sub(1))]

@@ -95,6 +95,20 @@ impl TrainBackend for MockBackend {
 
     fn make_cursor(&self, _client: usize) -> Self::Cursor {}
 
+    // the mock cursor is `()` — trivially checkpointable, so durable
+    // runs (snapshots + crash-resume) work against this backend
+    fn cursor_to_json(&self, _cursor: &Self::Cursor) -> Option<crate::util::json::Json> {
+        Some(crate::util::json::Json::Null)
+    }
+
+    fn cursor_from_json(
+        &self,
+        _client: usize,
+        _state: &crate::util::json::Json,
+    ) -> Result<Self::Cursor> {
+        Ok(())
+    }
+
     fn train_batches(
         &self,
         client: usize,

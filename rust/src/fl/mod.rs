@@ -166,6 +166,27 @@ pub trait TrainBackend {
 
     /// centralized test-set evaluation -> (accuracy, mean loss)
     fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)>;
+
+    /// Serialise one client's data cursor for a checkpoint. `None`
+    /// means the backend does not support cursor checkpointing — a
+    /// durable run then fails loudly at its first snapshot instead of
+    /// resuming with silently rewound data order. The mock backend's
+    /// `()` cursor trivially supports it; the PJRT epoch-shuffle cursor
+    /// is carried-forward work.
+    fn cursor_to_json(&self, _cursor: &Self::Cursor) -> Option<crate::util::json::Json> {
+        None
+    }
+
+    /// Rebuild a cursor from [`TrainBackend::cursor_to_json`] output.
+    fn cursor_from_json(
+        &self,
+        _client: usize,
+        _state: &crate::util::json::Json,
+    ) -> Result<Self::Cursor> {
+        Err(anyhow::anyhow!(
+            "this backend does not support cursor checkpointing"
+        ))
+    }
 }
 
 /// Work-stealing shard training for `Sync` backends

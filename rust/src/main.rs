@@ -45,13 +45,20 @@ USAGE:
                     [--scenario global|colocated] [--strategy <name>]
                     [--days N] [--clients N] [--n N] [--dmax N]
                     [--seed N] [--scale X] [--mock] [--out FILE]
+                    [--checkpoint DIR [--snapshot-every N] [--resume]]
+                    --checkpoint keeps a write-ahead journal + snapshots
+                    in DIR; --resume continues a killed run from it,
+                    bit-identical to a run that never crashed
     fedzero selftest [--preset tiny] [--artifacts DIR]
     fedzero repro   fig1|fig2|fig4|table2|fig5|table3|fig6|table4|fig7|fig8
                     [--full] [--mock] [--preset ...] [--seed N]
     fedzero campaign <spec.json>|smoke [--workers N] [--out FILE]
+                    [--resume DIR]
                     declarative sweep grid (sites × α × errors × battery
                     × churn × strategy × seed); writes a deterministic
-                    CAMPAIGN_report.json — see README for the schema
+                    CAMPAIGN_report.json — see README for the schema.
+                    --resume records finished cells under DIR and skips
+                    them on rerun (same byte-identical report)
 
 Strategies: FedZero, FedZero-exact, Random, Random-1.3n, Random-fc,
             Oort, Oort-1.3n, Oort-fc, Upper-bound.

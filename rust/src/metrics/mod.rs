@@ -219,6 +219,108 @@ impl MetricsLog {
         ])
     }
 
+    /// Lossless checkpoint codec — unlike [`MetricsLog::to_json`] (a
+    /// report format that drops the per-round `selected`/`participants`
+    /// id lists), this serialises every field so a resumed run rebuilds
+    /// a `MetricsLog` that compares equal (`PartialEq`, f64 bits
+    /// included: the JSON writer prints shortest-roundtrip doubles).
+    pub fn snapshot_json(&self) -> Json {
+        let usize_arr =
+            |v: &[usize]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
+        obj(vec![
+            ("step_minutes", num(self.step_minutes)),
+            ("rejected_updates", num(self.rejected_updates as f64)),
+            ("rejected_decisions", num(self.rejected_decisions as f64)),
+            (
+                "rounds",
+                arr(self
+                    .rounds
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", num(r.round as f64)),
+                            ("start_step", num(r.start_step as f64)),
+                            ("duration_steps", num(r.duration_steps as f64)),
+                            ("selected", usize_arr(&r.selected)),
+                            ("participants", usize_arr(&r.participants)),
+                            ("batches", num(r.batches)),
+                            ("energy_wh", num(r.energy_wh)),
+                            ("wasted_wh", num(r.wasted_wh)),
+                            ("mean_loss", num(r.mean_loss)),
+                            ("timed_out", Json::Bool(r.timed_out)),
+                            ("agg_domains", num(r.agg_domains as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "evals",
+                arr(self
+                    .evals
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("round", num(e.round as f64)),
+                            ("step", num(e.step as f64)),
+                            ("accuracy", num(e.accuracy)),
+                            ("loss", num(e.loss)),
+                            ("cumulative_kwh", num(e.cumulative_kwh)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Parse a [`MetricsLog::snapshot_json`] document.
+    pub fn from_snapshot_json(j: &Json) -> Result<MetricsLog, String> {
+        let f = |j: &Json, k: &str| -> Result<f64, String> {
+            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("missing {k}"))
+        };
+        let u = |j: &Json, k: &str| -> Result<usize, String> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| format!("missing {k}"))
+        };
+        let b = |j: &Json, k: &str| -> Result<bool, String> {
+            j.get(k).and_then(|v| v.as_bool()).ok_or_else(|| format!("missing {k}"))
+        };
+        let ids = |j: &Json, k: &str| -> Result<Vec<usize>, String> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| format!("missing {k}"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| format!("bad id in {k}")))
+                .collect()
+        };
+        let mut log = MetricsLog::new(f(j, "step_minutes")?);
+        log.rejected_updates = u(j, "rejected_updates")?;
+        log.rejected_decisions = u(j, "rejected_decisions")?;
+        for r in j.get("rounds").and_then(|v| v.as_arr()).ok_or("missing rounds")? {
+            log.rounds.push(RoundRecord {
+                round: u(r, "round")?,
+                start_step: u(r, "start_step")?,
+                duration_steps: u(r, "duration_steps")?,
+                selected: ids(r, "selected")?,
+                participants: ids(r, "participants")?,
+                batches: f(r, "batches")?,
+                energy_wh: f(r, "energy_wh")?,
+                wasted_wh: f(r, "wasted_wh")?,
+                mean_loss: f(r, "mean_loss")?,
+                timed_out: b(r, "timed_out")?,
+                agg_domains: u(r, "agg_domains")?,
+            });
+        }
+        for e in j.get("evals").and_then(|v| v.as_arr()).ok_or("missing evals")? {
+            log.evals.push(EvalRecord {
+                round: u(e, "round")?,
+                step: u(e, "step")?,
+                accuracy: f(e, "accuracy")?,
+                loss: f(e, "loss")?,
+                cumulative_kwh: f(e, "cumulative_kwh")?,
+            });
+        }
+        Ok(log)
+    }
+
     /// one-line human summary
     pub fn summary(&self, name: &str) -> String {
         format!(
@@ -306,6 +408,24 @@ mod tests {
             0.5
         );
         assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrips_losslessly() {
+        let mut m = MetricsLog::dummy_for_tests();
+        m.rejected_updates = 5;
+        m.rejected_decisions = 2;
+        // adversarial f64s: shortest-roundtrip printing must survive
+        m.rounds[1].energy_wh = 0.1 + 0.2;
+        m.rounds[1].mean_loss = f64::MIN_POSITIVE;
+        m.evals[0].accuracy = 1.0 / 3.0;
+        let text = m.snapshot_json().to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let restored = MetricsLog::from_snapshot_json(&parsed).unwrap();
+        assert_eq!(restored, m, "snapshot codec must be lossless");
+        // unlike to_json, the id lists survive
+        assert_eq!(restored.rounds[0].selected, vec![0, 1]);
+        assert_eq!(restored.participation_counts(3), m.participation_counts(3));
     }
 
     #[test]

@@ -9,7 +9,8 @@ use fedzero::client::{ClientProfile, DeviceType, ModelKind};
 use fedzero::config::Scenario;
 use fedzero::coordinator::{run_experiment, ExperimentSpec, RunReport, StrategyKind};
 use fedzero::runtime::ModelRuntime;
-use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
+use fedzero::scenario::campaign::{run_campaign, run_campaign_durable, CampaignSpec};
+use fedzero::util::fsx;
 use fedzero::util::json::Json;
 use fedzero::util::par;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
@@ -79,6 +80,17 @@ fn fmt_opt_kwh(x: Option<f64>) -> String {
 pub fn cmd_train(args: &Args) -> Result<()> {
     let mut spec = spec_from_args(args);
     spec.strategy = StrategyKind::parse(args.get_str("strategy", "FedZero"))?;
+    // --checkpoint DIR keeps a write-ahead journal + snapshots there;
+    // --resume continues a killed run from the same directory. The
+    // snapshot cadence shapes the journal bytes, so pass the same
+    // --snapshot-every on resume as on the original run.
+    if let Some(dir) = args.get("checkpoint") {
+        spec.checkpoint_dir = Some(PathBuf::from(dir));
+        spec.snapshot_every = args.get_usize("snapshot-every", 5);
+        spec.resume = args.flag("resume");
+    } else if args.flag("resume") {
+        return Err(anyhow!("--resume needs --checkpoint DIR"));
+    }
     let report = run_and_summarize(&spec)?;
     if let Some(path) = args.get("out") {
         report.metrics.save(std::path::Path::new(path))?;
@@ -492,7 +504,7 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
         .ok_or_else(|| {
             anyhow!(
                 "campaign needs a spec file: fedzero repro campaign <spec.json> \
-                 [--workers N] [--out FILE] (builtin: pass 'smoke')"
+                 [--workers N] [--out FILE] [--resume DIR] (builtin: pass 'smoke')"
             )
         })?;
     let spec = if path.as_str() == "smoke" {
@@ -512,7 +524,13 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
         cells.len(),
         workers
     );
-    let run = run_campaign(&spec, workers)?;
+    // --resume DIR records each finished cell under DIR and, on a rerun,
+    // reloads the completed ones instead of recomputing — the report
+    // stays byte-identical to a fresh single-pass run
+    let run = match args.get("resume") {
+        Some(dir) => run_campaign_durable(&spec, workers, std::path::Path::new(dir))?,
+        None => run_campaign(&spec, workers)?,
+    };
     println!(
         "\n{:<52} {:>6} {:>9} {:>10} {:>10} {:>9} {:>7}",
         "cell", "rounds", "best acc", "tta (d)", "kWh", "waste", "jain"
@@ -541,8 +559,11 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
         run.memo_hit_rate() * 100.0,
     );
     let out = args.get_str("out", "CAMPAIGN_report.json");
-    std::fs::write(out, run.report_json().to_string_pretty())
-        .with_context(|| format!("writing {out}"))?;
+    // atomic (temp + rename): a crash mid-write can't leave a torn report
+    fsx::write_atomic(
+        std::path::Path::new(out),
+        run.report_json().to_string_pretty().as_bytes(),
+    )?;
     println!("wrote {out}");
     Ok(())
 }

@@ -67,8 +67,30 @@
 //! from a worker stuck on a monster one. Results are still stored by
 //! cell index, so the report stays byte-identical at any worker count —
 //! the schedule changes *when* a cell runs, never what it computes.
+//!
+//! ## Durable resume
+//!
+//! [`run_campaign_durable`] additionally persists one completion record
+//! per finished cell (`<dir>/cells/cell_<index>.json`, written
+//! atomically) carrying the full deterministic [`CellResult`] plus a
+//! fingerprint of the campaign identity (run shape + every cell label).
+//! A later invocation over the same directory reloads matching records
+//! and re-runs only the missing/stale cells — the final report is
+//! byte-identical to an uninterrupted run at any worker count, because
+//! every cell is a pure function of (spec, cell axes) and the record
+//! round-trips its numbers exactly (integers and shortest-roundtrip
+//! floats through `util::json`). Records from a different grid, a
+//! different schema version, or a torn write fail the match and are
+//! simply recomputed.
+//!
+//! Cell simulations always run with the chaos `crash_prob` knob
+//! disarmed: a coordinator death is a process-level fault handled by
+//! THIS resume layer (and per-run by `Simulation::resume_from`), not a
+//! per-cell outcome — a cell that deterministically re-crashed on every
+//! resume attempt would livelock the campaign forever.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -81,7 +103,8 @@ use crate::coordinator::{
 };
 use crate::data::Partition;
 use crate::trace::forecast::ErrorLevel;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::fsx;
+use crate::util::json::{arr, num, obj, parse_u64_hex, s, u64_hex, Json};
 use crate::util::par;
 use crate::util::stats;
 
@@ -479,6 +502,121 @@ impl CellResult {
             ("timeout_rounds", num(self.timeout_rounds as f64)),
         ])
     }
+
+    /// Durable completion record for campaign resume: every report
+    /// number, plus the campaign fingerprint and the cell identity so a
+    /// resume can refuse records from a different grid.
+    fn to_record_json(&self, fingerprint: u64) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("version", s(CELL_RECORD_VERSION)),
+            ("fingerprint", u64_hex(fingerprint)),
+            ("cell", num(self.cell.index as f64)),
+            ("label", s(&self.cell.label)),
+            ("rounds", num(self.rounds as f64)),
+            ("best_accuracy", num(self.best_accuracy)),
+            ("final_accuracy", num(self.final_accuracy)),
+            ("time_to_target_days", opt(self.time_to_target_days)),
+            ("energy_to_target_kwh", opt(self.energy_to_target_kwh)),
+            ("energy_kwh", num(self.energy_kwh)),
+            ("wasted_kwh", num(self.wasted_kwh)),
+            ("mean_round_min", num(self.mean_round_min)),
+            ("fairness_domain_std", num(self.fairness_domain_std)),
+            ("fairness_jain", num(self.fairness_jain)),
+            ("train_steps", u64_hex(self.train_steps)),
+            ("rejected_updates", num(self.rejected_updates as f64)),
+            ("timeout_rounds", num(self.timeout_rounds as f64)),
+        ])
+    }
+
+    /// Accept a completion record iff its version, fingerprint and cell
+    /// identity all match this expansion — anything else (older schema,
+    /// different grid, torn write, index/label drift) returns `None`
+    /// and the cell is recomputed.
+    fn from_record_json(
+        j: &Json,
+        cell: &CampaignCell,
+        fingerprint: u64,
+    ) -> Option<CellResult> {
+        if j.get("version").and_then(|v| v.as_str()) != Some(CELL_RECORD_VERSION) {
+            return None;
+        }
+        if parse_u64_hex(j.get("fingerprint")?).ok()? != fingerprint {
+            return None;
+        }
+        if j.get("cell").and_then(|v| v.as_usize()) != Some(cell.index) {
+            return None;
+        }
+        if j.get("label").and_then(|v| v.as_str()) != Some(cell.label.as_str()) {
+            return None;
+        }
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        let o = |k: &str| match j.get(k) {
+            Some(Json::Null) | None => Some(None),
+            Some(v) => v.as_f64().map(Some),
+        };
+        Some(CellResult {
+            cell: cell.clone(),
+            rounds: j.get("rounds").and_then(|v| v.as_usize())?,
+            best_accuracy: f("best_accuracy")?,
+            final_accuracy: f("final_accuracy")?,
+            time_to_target_days: o("time_to_target_days")?,
+            energy_to_target_kwh: o("energy_to_target_kwh")?,
+            energy_kwh: f("energy_kwh")?,
+            wasted_kwh: f("wasted_kwh")?,
+            mean_round_min: f("mean_round_min")?,
+            fairness_domain_std: f("fairness_domain_std")?,
+            fairness_jain: f("fairness_jain")?,
+            train_steps: parse_u64_hex(j.get("train_steps")?).ok()?,
+            rejected_updates: j.get("rejected_updates").and_then(|v| v.as_usize())?,
+            timeout_rounds: j.get("timeout_rounds").and_then(|v| v.as_usize())?,
+        })
+    }
+}
+
+/// Completion-record schema tag; bumped with [`CellResult`] layout
+/// changes so a resume never misreads an old record.
+const CELL_RECORD_VERSION: &str = "fedzero-campaign-cell-v1";
+
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 64-bit FNV-1a over the campaign identity: the run shape plus every
+/// expanded cell label in index order. Two specs that could produce
+/// different cell results never share a fingerprint (labels encode the
+/// full axis assignment; the shape covers the sim volume knobs).
+fn spec_fingerprint(spec: &CampaignSpec, cells: &[CampaignCell]) -> u64 {
+    let shape = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{:?}|{:?}",
+        spec.name,
+        spec.preset,
+        spec.days,
+        spec.n_clients,
+        spec.n_per_round,
+        spec.d_max,
+        spec.eval_every,
+        spec.dataset_scale,
+        spec.target_accuracy,
+    );
+    let mut h = fnv1a64(0xcbf2_9ce4_8422_2325, shape.as_bytes());
+    for c in cells {
+        h = fnv1a64(h, c.label.as_bytes());
+        h = fnv1a64(h, b"\x00");
+    }
+    h
+}
+
+/// Atomically persist one finished cell's completion record.
+fn write_cell_record(cell_dir: &Path, r: &CellResult, fingerprint: u64) -> Result<()> {
+    fsx::write_atomic(
+        &cell_dir.join(format!("cell_{}.json", r.cell.index)),
+        r.to_record_json(fingerprint).to_string_pretty().as_bytes(),
+    )
 }
 
 /// A finished campaign: ordered cell results plus runner statistics
@@ -581,7 +719,15 @@ fn run_cell(
     envs: &EnvCache,
     datasets: &DatasetCache,
 ) -> Result<CellResult> {
-    let xspec = cell.experiment(spec);
+    let mut xspec = cell.experiment(spec);
+    // coordinator crashes are a process-level fault handled by the
+    // campaign resume layer (module docs) — an armed crash_prob would
+    // deterministically kill the same cell on every resume attempt
+    if let Some(env) = xspec.env.as_mut() {
+        if let Some(chaos) = env.chaos.as_mut() {
+            chaos.crash_prob = 0.0;
+        }
+    }
     // the partition is env-axis-blind: key it by the dataset inputs only
     // so env/error cells share one synthetic dataset generation
     let ds_key = format!(
@@ -617,6 +763,26 @@ fn run_cell(
 /// Results are index-ordered; see the module docs for the determinism
 /// and memoization contracts.
 pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> {
+    run_campaign_with(spec, workers, None)
+}
+
+/// [`run_campaign`] with durable per-cell completion records under
+/// `dir` — an interrupted campaign re-invoked over the same directory
+/// reloads finished cells and re-runs only the rest, producing a
+/// byte-identical report (module docs, "Durable resume").
+pub fn run_campaign_durable(
+    spec: &CampaignSpec,
+    workers: usize,
+    dir: &Path,
+) -> Result<CampaignRun> {
+    run_campaign_with(spec, workers, Some(dir))
+}
+
+fn run_campaign_with(
+    spec: &CampaignSpec,
+    workers: usize,
+    durable: Option<&Path>,
+) -> Result<CampaignRun> {
     if spec.alphas.len() > 1 && !preset_uses_alpha(&spec.preset) {
         bail!(
             "preset {:?} uses an imbalanced partition with no α knob — an \
@@ -629,45 +795,69 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignRun> 
     if cells.is_empty() {
         bail!("campaign expands to zero cells");
     }
+    let n = cells.len();
+    let fingerprint = spec_fingerprint(spec, &cells);
+    let mut done: Vec<Option<CellResult>> = vec![None; n];
+    let cell_dir = durable.map(|d| d.join("cells"));
+    if let Some(cd) = &cell_dir {
+        fsx::create_dir_all(cd)?;
+        for c in &cells {
+            // any unreadable/unparseable/mismatched record is silently
+            // recomputed (and its file overwritten on completion)
+            let Ok(text) = fsx::read_to_string(&cd.join(format!("cell_{}.json", c.index)))
+            else {
+                continue;
+            };
+            let Ok(doc) = Json::parse(&text) else { continue };
+            done[c.index] = CellResult::from_record_json(&doc, c, fingerprint);
+        }
+    }
+    let pending: Vec<usize> = (0..n).filter(|&i| done[i].is_none()).collect();
+
     let envs = EnvCache::new();
     let datasets = DatasetCache::new();
     let t0 = Instant::now();
-    let n = cells.len();
-    let results: Vec<Option<Result<CellResult>>> = if workers <= 1 {
-        cells
-            .iter()
-            .map(|c| Some(run_cell(spec, c, &envs, &datasets)))
-            .collect()
+    // run one pending cell and, in durable mode, persist its record
+    // before reporting it finished — a crash right after leaves either
+    // a complete record or none (the write is atomic)
+    let run_one = |i: usize| -> Result<CellResult> {
+        let r = run_cell(spec, &cells[i], &envs, &datasets)?;
+        if let Some(cd) = &cell_dir {
+            write_cell_record(cd, &r, fingerprint)?;
+        }
+        Ok(r)
+    };
+    let results: Vec<(usize, Result<CellResult>)> = if workers <= 1 {
+        pending.iter().map(|&i| (i, run_one(i))).collect()
     } else {
         // longest-first drain seeded into the shared work-stealing
         // scheduler (cost model; module docs): scheduler position p
-        // holds the p-th most expensive cell, so the per-worker seed
-        // ranges split the heavy prefix evenly and an idle worker
+        // holds the p-th most expensive pending cell, so the per-worker
+        // seed ranges split the heavy prefix evenly and an idle worker
         // steals the queued tail instead of watching a monster cell
         // finish. Results accumulate per worker tagged by cell INDEX
         // and are scattered after the join, so the report is
         // byte-identical to the serial natural-order drain at any
         // worker count.
-        let mut order: Vec<usize> = (0..n).collect();
+        let mut order: Vec<usize> = pending.clone();
         order.sort_by_key(|&i| (std::cmp::Reverse(cells[i].cost(spec)), i));
         let (locals, _stats) = par::steal::steal_exec(
-            n,
+            order.len(),
             workers,
             |_| Vec::<(usize, Result<CellResult>)>::new(),
             |p, local| {
                 let i = order[p];
-                local.push((i, run_cell(spec, &cells[i], &envs, &datasets)));
+                local.push((i, run_one(i)));
             },
         );
-        let mut slots: Vec<Option<Result<CellResult>>> = (0..n).map(|_| None).collect();
-        for (i, r) in locals.into_iter().flatten() {
-            slots[i] = Some(r);
-        }
-        slots
+        locals.into_iter().flatten().collect()
     };
+    for (i, r) in results {
+        done[i] = Some(r.with_context(|| format!("cell {i} ({})", cells[i].label))?);
+    }
     let mut out = Vec::with_capacity(n);
-    for (i, slot) in results.into_iter().enumerate() {
-        out.push(slot.ok_or_else(|| anyhow!("cell {i} was never run"))??);
+    for (i, slot) in done.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| anyhow!("cell {i} was never run"))?);
     }
     Ok(CampaignRun {
         spec: spec.clone(),
@@ -874,5 +1064,79 @@ mod tests {
             assert!(c.get("rejected_updates").unwrap().as_f64().is_some());
             assert!(c.get("timeout_rounds").unwrap().as_f64().is_some());
         }
+    }
+
+    fn scratch_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fedzero_campaign_{}_{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// The campaign-level recovery gate: a chaos campaign (crash_prob
+    /// armed in the axis — stripped per cell, module docs) run durably,
+    /// interrupted by losing/corrupting completion records, resumes
+    /// over the same directory to a byte-identical report.
+    #[test]
+    fn durable_campaign_resumes_to_identical_report() {
+        let mut spec = CampaignSpec::smoke();
+        spec.chaos_axis = vec![
+            None,
+            Some(ChaosSpec {
+                dropout_per_round: 0.3,
+                stale_prob: 0.1,
+                crash_prob: 1.0, // must be disarmed per cell, or nothing completes
+                ..ChaosSpec::default()
+            }),
+        ];
+        let reference = run_campaign(&spec, 1).unwrap().report_json().to_string_pretty();
+
+        let dir = scratch_dir("resume");
+        let full = run_campaign_durable(&spec, 1, &dir).unwrap();
+        assert_eq!(
+            full.report_json().to_string_pretty(),
+            reference,
+            "durable run diverged from the plain run"
+        );
+        let n = full.results.len();
+        assert_eq!(n, 4);
+        for i in 0..n {
+            assert!(
+                dir.join(format!("cells/cell_{i}.json")).is_file(),
+                "cell {i} left no completion record"
+            );
+        }
+
+        // interrupt: lose one record, corrupt a second, tamper a third's
+        // fingerprint — all three must be recomputed, the fourth reloaded
+        std::fs::remove_file(dir.join("cells/cell_0.json")).unwrap();
+        std::fs::write(dir.join("cells/cell_1.json"), b"{ torn").unwrap();
+        let path2 = dir.join("cells/cell_2.json");
+        let tampered = std::fs::read_to_string(&path2)
+            .unwrap()
+            .replace("fedzero-campaign-cell-v1", "fedzero-campaign-cell-v0");
+        std::fs::write(&path2, tampered).unwrap();
+
+        for workers in [1usize, 2, 8] {
+            let resumed = run_campaign_durable(&spec, workers, &dir).unwrap();
+            assert_eq!(
+                resumed.report_json().to_string_pretty(),
+                reference,
+                "resume at {workers} workers diverged"
+            );
+        }
+        // the repaired records parse and match again: a final resume
+        // reloads everything (zero cells run → zero memo traffic)
+        let resumed = run_campaign_durable(&spec, 1, &dir).unwrap();
+        assert_eq!(resumed.memo_misses + resumed.memo_hits, 0, "cells were re-run");
+        assert_eq!(resumed.report_json().to_string_pretty(), reference);
+
+        // a different grid refuses the records wholesale
+        let mut other = spec.clone();
+        other.seeds = vec![1];
+        let other_run = run_campaign_durable(&other, 1, &dir).unwrap();
+        assert_ne!(other_run.report_json().to_string_pretty(), reference);
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

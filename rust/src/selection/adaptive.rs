@@ -28,6 +28,7 @@
 //! fall back to the un-boosted request rather than stalling the round.
 
 use super::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
+use crate::util::json::{num, obj, Json};
 use crate::util::rng::Rng;
 
 /// EWMA weight for the newest round's observed dropout rate.
@@ -127,6 +128,38 @@ impl<S: Strategy> Strategy for ChurnAware<S> {
             self.p_hat = (1.0 - EMA_ALPHA) * self.p_hat + EMA_ALPHA * observed;
         }
         self.inner.on_round_end(participants, states, rng);
+    }
+
+    fn snapshot_state(&self) -> Option<Json> {
+        // the EWMA and its denominator are the only cross-round state;
+        // the inner strategy may contribute its own (SemiSync delegates
+        // through, so nesting composes)
+        let mut pairs = vec![
+            ("p_hat", num(self.p_hat)),
+            ("last_selected", num(self.last_selected as f64)),
+        ];
+        let inner = self.inner.snapshot_state();
+        if let Some(st) = inner {
+            pairs.push(("inner", st));
+        }
+        Some(obj(pairs))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        self.p_hat = state
+            .get("p_hat")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("ChurnAware checkpoint missing p_hat"))?;
+        self.last_selected = state
+            .get("last_selected")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| {
+                anyhow::anyhow!("ChurnAware checkpoint missing last_selected")
+            })?;
+        if let Some(inner) = state.get("inner") {
+            self.inner.restore_state(inner)?;
+        }
+        Ok(())
     }
 }
 
@@ -267,6 +300,20 @@ mod tests {
         let before = s.p_hat();
         s.on_round_end(&d.clients.clone(), &mut states_mut, &mut rng);
         assert!(s.p_hat() < before);
+    }
+
+    #[test]
+    fn snapshot_state_roundtrips_the_estimator() {
+        let mut s = ChurnAware::new(Baseline::random(), "ca", true);
+        s.p_hat = 0.375;
+        s.last_selected = 6;
+        let snap = s.snapshot_state().expect("ChurnAware is stateful");
+        let mut restored = ChurnAware::new(Baseline::random(), "ca", true);
+        restored.restore_state(&snap).unwrap();
+        assert_eq!(restored.p_hat.to_bits(), s.p_hat.to_bits());
+        assert_eq!(restored.last_selected, 6);
+        // stateless strategies advertise no checkpoint state
+        assert!(Baseline::random().snapshot_state().is_none());
     }
 
     #[test]

@@ -192,4 +192,22 @@ pub trait Strategy {
         _rng: &mut Rng,
     ) {
     }
+    /// Cross-round internal state for checkpointing, if the strategy
+    /// carries any. Most strategies are pure functions of their config
+    /// plus the engine-owned `ClientRoundState`s (FedZero's blocklist ω
+    /// is recomputed from those every `on_round_end`) and return `None`;
+    /// reactive strategies (`adaptive::ChurnAware`) serialise their
+    /// estimators here so a resumed run continues bit-identically.
+    fn snapshot_state(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+    /// Restore state captured by [`Strategy::snapshot_state`]. Called
+    /// only when the snapshot recorded `Some`; the default errors so a
+    /// stateful strategy cannot silently skip restoration.
+    fn restore_state(&mut self, _state: &crate::util::json::Json) -> anyhow::Result<()> {
+        Err(anyhow::anyhow!(
+            "strategy {} recorded checkpoint state but does not implement restore_state",
+            self.name()
+        ))
+    }
 }

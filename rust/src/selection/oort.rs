@@ -42,6 +42,17 @@ impl UtilityTracker {
         }
     }
 
+    /// Checkpoint view: the last observed loss per client (the
+    /// tracker's only state).
+    pub fn snapshot(&self) -> &[Option<f64>] {
+        &self.last_loss
+    }
+
+    /// Rebuild a tracker from a [`UtilityTracker::snapshot`] capture.
+    pub fn restore(last_loss: Vec<Option<f64>>) -> Self {
+        UtilityTracker { last_loss }
+    }
+
     /// Refresh σ in the shared round state (respecting the blocklist,
     /// which forces σ_c = 0).
     pub fn refresh(

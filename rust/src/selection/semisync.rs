@@ -68,6 +68,17 @@ impl<S: Strategy> Strategy for SemiSync<S> {
     ) {
         self.inner.on_round_end(participants, states, rng);
     }
+
+    // the wrapper itself is config-only (deadline); checkpoint state, if
+    // any, belongs to the inner policy — delegate both hooks so nesting
+    // (e.g. ChurnAware<SemiSync<FedZero>>) composes
+    fn snapshot_state(&self) -> Option<crate::util::json::Json> {
+        self.inner.snapshot_state()
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.inner.restore_state(state)
+    }
 }
 
 #[cfg(test)]

@@ -41,9 +41,18 @@
 //!   "stale_prob":        0.05,  // P(update submission is delayed)
 //!   "mean_delay_min":    10.0,  // mean submission delay, minutes (exponential)
 //!   "slow_prob":         0.1,   // P(client runs slow this round)
-//!   "slow_factor":       0.5    // capacity multiplier when slow, in (0, 1]
+//!   "slow_factor":       0.5,   // capacity multiplier when slow, in (0, 1]
+//!   "crash_prob":        0.0    // P(the coordinator process dies mid-run)
 //! }
 //! ```
+//!
+//! The crash fault is a different beast from the per-client faults: it
+//! kills the *coordinator* at a seeded timestep (one Bernoulli draw per
+//! run on its own stream, then a uniform timestep), aborting `run()`
+//! with a downcastable [`CrashFault`]. It exists to exercise the
+//! durable-coordinator path — journal + snapshots + `resume_from` —
+//! whose gate asserts crash-then-resume is bit-identical to an
+//! uninterrupted run.
 
 use anyhow::{bail, Result};
 
@@ -53,6 +62,12 @@ use crate::util::rng::Rng;
 /// Stream tag separating chaos draws from churn and every other
 /// consumer of the experiment seed.
 const CHAOS_STREAM: u64 = 0x43_48_41_4F_53; // "CHAOS"
+
+/// Stream tag for the coordinator-crash draw. Separate from
+/// `CHAOS_STREAM` so arming `crash_prob` cannot perturb any per-client
+/// fault plan: a `crash_prob = 0` run and a crashing run are
+/// bit-identical up to the crash step.
+const CRASH_STREAM: u64 = 0x43_52_41_53_48; // "CRASH"
 
 /// Fault-injection axis of an [`crate::scenario::EnvSpec`]. Applied at
 /// simulation time (it does not affect the environment build, so
@@ -72,6 +87,9 @@ pub struct ChaosSpec {
     pub slow_prob: f64,
     /// effective-capacity multiplier for a slow client, in (0, 1]
     pub slow_factor: f64,
+    /// probability the coordinator process crashes at a seeded timestep
+    /// during the run (0 = never; requires the durable path to recover)
+    pub crash_prob: f64,
 }
 
 impl Default for ChaosSpec {
@@ -83,9 +101,28 @@ impl Default for ChaosSpec {
             mean_delay_min: 10.0,
             slow_prob: 0.1,
             slow_factor: 0.5,
+            crash_prob: 0.0,
         }
     }
 }
+
+/// Error type the engine aborts with when the seeded crash fault fires.
+/// Callers downcast (`err.downcast_ref::<CrashFault>()`) to tell a
+/// simulated coordinator death apart from a real failure, then recover
+/// via `Simulation::resume_from`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashFault {
+    /// the timestep at which the coordinator died
+    pub at: usize,
+}
+
+impl std::fmt::Display for CrashFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "chaos crash fault: coordinator died at step {}", self.at)
+    }
+}
+
+impl std::error::Error for CrashFault {}
 
 /// One client's fault plan for one round.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -124,6 +161,7 @@ impl ChaosSpec {
                 .unwrap_or(d.mean_delay_min),
             slow_prob: j.get("slow_prob").and_then(|v| v.as_f64()).unwrap_or(d.slow_prob),
             slow_factor: j.get("slow_factor").and_then(|v| v.as_f64()).unwrap_or(d.slow_factor),
+            crash_prob: j.get("crash_prob").and_then(|v| v.as_f64()).unwrap_or(d.crash_prob),
         };
         spec.validate()?;
         Ok(spec)
@@ -134,6 +172,7 @@ impl ChaosSpec {
             ("dropout_per_round", self.dropout_per_round),
             ("stale_prob", self.stale_prob),
             ("slow_prob", self.slow_prob),
+            ("crash_prob", self.crash_prob),
         ] {
             if !(0.0..=1.0).contains(&p) {
                 bail!("chaos {name} must be a probability in [0, 1], got {p}");
@@ -186,6 +225,23 @@ impl ChaosSpec {
         };
         let slow = if rng.bool(self.slow_prob) { self.slow_factor } else { 1.0 };
         SlotChaos { drop_window, submit_delay, slow }
+    }
+
+    /// Draw the coordinator-crash timestep for a run over `horizon`
+    /// steps: `None` when the Bernoulli draw spares the run (or
+    /// `crash_prob` is 0), else `Some(t)` with `t` in `[1, horizon)` —
+    /// never step 0, so every crashing run has at least one live step
+    /// to journal. Pure in `(self.crash_prob, seed, horizon)` and on a
+    /// dedicated stream, so arming it cannot move any other draw.
+    pub fn draw_crash(&self, seed: u64, horizon: usize) -> Option<usize> {
+        if self.crash_prob <= 0.0 || horizon < 2 {
+            return None;
+        }
+        let mut rng = Rng::new(seed ^ CRASH_STREAM);
+        if rng.f64() >= self.crash_prob {
+            return None;
+        }
+        Some(1 + rng.below(horizon - 1))
     }
 }
 
@@ -265,9 +321,11 @@ mod tests {
         let spec = ChaosSpec::from_json(&j).unwrap();
         assert_eq!(spec.dropout_per_round, 0.3);
         assert_eq!(spec.slow_factor, 0.8);
-        // defaults fill missing keys
+        // defaults fill missing keys — crash_prob included, so legacy
+        // specs without the key keep meaning "no coordinator crashes"
         let spec = ChaosSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(spec, ChaosSpec::default());
+        assert_eq!(spec.crash_prob, 0.0);
         // validation rejects nonsense
         assert!(ChaosSpec::from_json(
             &Json::parse(r#"{"dropout_per_round": 1.5}"#).unwrap()
@@ -279,5 +337,52 @@ mod tests {
         assert!(
             ChaosSpec::from_json(&Json::parse(r#"{"mean_drop_min": -1}"#).unwrap()).is_err()
         );
+        // crash_prob is bounds-checked like every other probability
+        let err = ChaosSpec::from_json(&Json::parse(r#"{"crash_prob": 1.5}"#).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("crash_prob"), "{err}");
+        assert!(
+            ChaosSpec::from_json(&Json::parse(r#"{"crash_prob": -0.1}"#).unwrap()).is_err()
+        );
+        let spec =
+            ChaosSpec::from_json(&Json::parse(r#"{"crash_prob": 0.5}"#).unwrap()).unwrap();
+        assert_eq!(spec.crash_prob, 0.5);
+    }
+
+    #[test]
+    fn crash_draw_is_pure_bounded_and_on_its_own_stream() {
+        let spec = ChaosSpec { crash_prob: 1.0, ..ChaosSpec::default() };
+        for seed in 0..40u64 {
+            let a = spec.draw_crash(seed, 600);
+            assert_eq!(a, spec.draw_crash(seed, 600), "draw must be pure");
+            let t = a.expect("crash_prob = 1 must always crash");
+            assert!((1..600).contains(&t), "crash step {t} out of [1, 600)");
+        }
+        // disarmed spec never crashes; degenerate horizons never crash
+        let off = ChaosSpec::default();
+        assert_eq!(off.crash_prob, 0.0);
+        assert_eq!(off.draw_crash(7, 600), None);
+        assert_eq!(spec.draw_crash(7, 1), None);
+        // arming the crash stream must not move any per-client plan
+        let armed = ChaosSpec { crash_prob: 1.0, ..ChaosSpec::default() };
+        for client in 0..20 {
+            assert_eq!(
+                off.round_plan(9, client, 60, 30, 1.0),
+                armed.round_plan(9, client, 60, 30, 1.0),
+                "crash draw leaked into the per-client chaos stream"
+            );
+        }
+        // a fractional probability crashes some seeds and spares others
+        let half = ChaosSpec { crash_prob: 0.5, ..ChaosSpec::default() };
+        let fired = (0..64u64).filter(|&s| half.draw_crash(s, 600).is_some()).count();
+        assert!((10..=54).contains(&fired), "crash_prob 0.5 fired {fired}/64");
+    }
+
+    #[test]
+    fn crash_fault_error_is_downcastable() {
+        let err: anyhow::Error = CrashFault { at: 42 }.into();
+        let cf = err.downcast_ref::<CrashFault>().expect("downcast");
+        assert_eq!(cf.at, 42);
+        assert!(err.to_string().contains("step 42"));
     }
 }

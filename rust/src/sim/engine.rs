@@ -67,12 +67,28 @@
 //! the energy meter, and the global model are bitwise equal between
 //! the two modes (tests below and the `benches/endtoend.rs` gate).
 //! Chaos ([`crate::sim::chaos`]) requires the FSM path.
+//!
+//! §Durability — setting [`Simulation::durable`] turns the FSM path
+//! into a crash-tolerant coordinator: every round decision and applied
+//! event goes through a write-ahead journal
+//! ([`crate::coordinator::journal`]) and a full-state snapshot is cut
+//! at every `snapshot_every`-th round boundary. A chaos `crash_prob`
+//! draw (or a real process death) aborts the run mid-step;
+//! [`Simulation::resume_from`] loads the latest valid snapshot,
+//! verifies the journal by replaying it through a scratch round FSM,
+//! truncates the journal back to the snapshot's mark, and continues —
+//! bit-identical to an uninterrupted run in `MetricsLog`, the final
+//! global model, the step totals, and the journal bytes themselves
+//! (re-executed rounds re-append the exact records the crash lost).
 
-use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::client::ClientInfo;
 use crate::coordinator::events::{ClientEvent, EventQueue};
 use crate::coordinator::fsm::{self, EventOutcome, RoundFsm};
+use crate::coordinator::journal::{self, Journal, JournalRecord};
 use crate::energy::{attribute_power, EnergyMeter, PowerDomain, PowerRequest};
 use crate::fl::{fedavg_weights, AggMode, ClientTrainState, TrainBackend, TrainJob, TreeAggregator};
 use crate::metrics::{EvalRecord, MetricsLog, RoundRecord};
@@ -81,11 +97,13 @@ use crate::selection::oort::UtilityTracker;
 use crate::selection::ring::{FcSource, FcView, ForecastRing};
 use crate::selection::{ClientRoundState, SelectionContext, SelectionDecision, Strategy};
 use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
+use crate::util::fsx;
+use crate::util::json::{num, obj, parse_u64_hex, s as jstr, u64_hex, Json};
 use crate::util::par;
 use crate::util::par::thresholds;
 use crate::util::rng::Rng;
 
-use super::chaos::ChaosSpec;
+use super::chaos::{ChaosSpec, CrashFault};
 
 /// Which round-execution path the engine uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -123,6 +141,83 @@ impl Default for SimConfig {
             seed: 0,
         }
     }
+}
+
+/// Durable-coordinator configuration: where the write-ahead journal and
+/// the snapshot checkpoints live, and how often snapshots are cut.
+/// Requires [`ExecMode::Fsm`] (the journal vocabulary IS the event
+/// vocabulary).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DurableConfig {
+    /// checkpoint directory (`journal.wal` + `snap_<round>.json`)
+    pub dir: PathBuf,
+    /// cut a snapshot every this many executed rounds (>= 1); the
+    /// cadence is part of the journal's byte stream (snapshot marks),
+    /// so a resume must use the same value as the original run
+    pub snapshot_every: usize,
+}
+
+impl DurableConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DurableConfig { dir: dir.into(), snapshot_every: 5 }
+    }
+
+    pub fn journal_path(&self) -> PathBuf {
+        self.dir.join("journal.wal")
+    }
+
+    pub fn snapshot_path(&self, round: usize) -> PathBuf {
+        self.dir.join(format!("snap_{round}.json"))
+    }
+}
+
+/// Snapshot schema tag; bumped on any layout change so a resume never
+/// misreads an old checkpoint.
+const SNAPSHOT_VERSION: &str = "fedzero-snapshot-v1";
+
+/// f32 params travel as their u32 bit patterns (exact integers ≤ 2^32,
+/// losslessly representable in a JSON f64) — immune to any float
+/// formatting concern, including negative zero.
+fn f32_bits_arr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|x| num(x.to_bits() as f64)).collect())
+}
+
+fn parse_f32_bits_arr(j: &Json, what: &str) -> Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("snapshot {what} is not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|v| v.fract() == 0.0 && *v >= 0.0 && *v <= u32::MAX as f64)
+                .map(|v| f32::from_bits(v as u32))
+                .ok_or_else(|| anyhow!("snapshot {what} holds a non-u32 entry"))
+        })
+        .collect()
+}
+
+/// f64 tallies (energy, losses) are non-negative sums whose shortest-
+/// roundtrip text form reparses exactly — they travel as plain numbers.
+fn f64_arr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x)).collect())
+}
+
+fn parse_f64_arr(j: &Json, what: &str) -> Result<Vec<f64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("snapshot {what} is not an array"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("snapshot {what} holds a non-number")))
+        .collect()
+}
+
+fn snap_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("snapshot missing {key}"))
+}
+
+fn snap_u64(j: &Json, key: &str) -> Result<u64> {
+    parse_u64_hex(j.get(key).ok_or_else(|| anyhow!("snapshot missing {key}"))?)
+        .map_err(|e| anyhow!("snapshot {key}: {e}"))
 }
 
 /// Outcome of one executed round.
@@ -214,6 +309,15 @@ pub struct Simulation<'a, B: TrainBackend> {
     /// domain shards whose last in-epoch update landed before round
     /// close, across all FSM rounds (eager sub-aggregation visibility)
     pub shard_completions: u64,
+    /// durable-coordinator configuration (FSM mode only): when set,
+    /// `run` journals every decision/event, cuts periodic snapshots,
+    /// and `resume_from` can continue a crashed run bit-exactly
+    pub durable: Option<DurableConfig>,
+    /// open write-ahead journal while a durable run is in flight
+    journal: Option<Journal>,
+    /// the seeded coordinator-death step (chaos `crash_prob` draw);
+    /// `resume_from` disarms it — a crash fires once per process life
+    crash_at: Option<usize>,
 }
 
 /// Actual spare capacity of client `i` at step `t` (batches/step) — free
@@ -419,6 +523,9 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             agg: AggMode::Tree,
             tree: TreeAggregator::new(),
             shard_completions: 0,
+            durable: None,
+            journal: None,
+            crash_at: None,
         }
     }
 
@@ -442,16 +549,30 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
     /// machine. Between rounds the machine is `Idle`, so the only
     /// event that *does* anything here is a late `UpdateSubmitted` —
     /// rejected as stale and metered. No-op when the queue is empty
-    /// (every no-chaos run).
-    fn drain_due_events(&mut self, now: usize) {
+    /// (every no-chaos run). Durable runs journal each event at
+    /// application time, fenced or not, so replay reproduces the
+    /// rejection accounting exactly.
+    fn drain_due_events(&mut self, now: usize) -> Result<()> {
         while let Some(ev) = self.events.pop_due(now) {
+            if let Some(j) = self.journal.as_mut() {
+                j.append(&JournalRecord::Event { at: now, ev })?;
+            }
             if self.fsm.apply(&ev) == EventOutcome::StaleUpdate {
                 self.metrics.rejected_updates += 1;
             }
         }
+        Ok(())
     }
 
     /// Run the full simulation: returns the metrics log (also stored).
+    ///
+    /// With [`Simulation::durable`] set, the run starts a fresh journal
+    /// (truncating any prior one in the directory — use
+    /// [`Simulation::resume_from`] to continue instead) and cuts an
+    /// initial snapshot before the first step. A chaos `crash_prob`
+    /// draw aborts with a downcastable [`CrashFault`] at the drawn
+    /// timestep; the journal and snapshots written up to that point are
+    /// exactly what `resume_from` needs.
     pub fn run(&mut self) -> Result<()> {
         if self.exec == ExecMode::Legacy && self.chaos.is_some() {
             bail!(
@@ -459,9 +580,446 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                  loop has no event vocabulary to express faults"
             );
         }
-        let mut global = self.backend.init_params(self.cfg.seed as i32)?;
-        let mut t = 0usize;
-        let mut round = 0usize;
+        if self.durable.is_some() && self.exec != ExecMode::Fsm {
+            bail!(
+                "the durable coordinator (journal + snapshots) requires \
+                 ExecMode::Fsm — only event-driven rounds are journalable"
+            );
+        }
+        let global = self.backend.init_params(self.cfg.seed as i32)?;
+        // one Bernoulli draw per run on a dedicated stream: arming it
+        // cannot move any other seeded draw (sim::chaos docs)
+        self.crash_at = self
+            .chaos
+            .as_ref()
+            .and_then(|c| c.draw_crash(self.cfg.seed, self.cfg.horizon));
+        if let Some(d) = self.durable.clone() {
+            if d.snapshot_every == 0 {
+                bail!("durable snapshot_every must be >= 1");
+            }
+            fsx::create_dir_all(&d.dir)?;
+            self.journal = Some(Journal::create(&d.journal_path())?);
+            // round-0 snapshot: a crash at any step ≥ 1 always has a
+            // checkpoint to fall back to
+            self.write_snapshot(&d, &global, 0, 0)?;
+        }
+        self.run_loop(global, 0, 0)
+    }
+
+    /// Continue a crashed durable run from `dir`: load the latest valid
+    /// snapshot, verify the surviving journal by replaying it through a
+    /// scratch round FSM, truncate the journal back to that snapshot's
+    /// mark, and re-enter the run loop with the crash fault disarmed.
+    /// Everything downstream — selection, training, aggregation,
+    /// metrics, and the re-appended journal records — is bit-identical
+    /// to the uninterrupted run.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<()> {
+        if self.exec != ExecMode::Fsm {
+            bail!(
+                "the durable coordinator (journal + snapshots) requires \
+                 ExecMode::Fsm — only event-driven rounds are journalable"
+            );
+        }
+        let d = match &self.durable {
+            Some(d) if d.dir == dir => d.clone(),
+            Some(d) => bail!(
+                "resume_from({}) conflicts with the configured durable dir {}",
+                dir.display(),
+                d.dir.display()
+            ),
+            None => {
+                let d = DurableConfig::new(dir);
+                self.durable = Some(d.clone());
+                d
+            }
+        };
+        if d.snapshot_every == 0 {
+            bail!("durable snapshot_every must be >= 1");
+        }
+        // latest snapshot that parses and carries the right version tag
+        let mut best: Option<(usize, Json)> = None;
+        let entries = std::fs::read_dir(&d.dir)
+            .with_context(|| format!("listing checkpoint dir {}", d.dir.display()))?;
+        for entry in entries {
+            let entry = entry
+                .with_context(|| format!("listing checkpoint dir {}", d.dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(stem) =
+                name.strip_prefix("snap_").and_then(|r| r.strip_suffix(".json"))
+            else {
+                continue;
+            };
+            let Ok(round) = stem.parse::<usize>() else { continue };
+            if best.as_ref().map_or(false, |(r, _)| *r >= round) {
+                continue;
+            }
+            let Ok(text) = fsx::read_to_string(&entry.path()) else { continue };
+            let Ok(doc) = Json::parse(&text) else { continue };
+            if doc.get("version").and_then(|v| v.as_str()) != Some(SNAPSHOT_VERSION) {
+                continue;
+            }
+            best = Some((round, doc));
+        }
+        let (round, doc) = best.ok_or_else(|| {
+            anyhow!("no valid snapshot checkpoint in {}", d.dir.display())
+        })?;
+        let (global, t, snap_round) = self.restore_snapshot(&doc)?;
+        if snap_round != round {
+            bail!(
+                "snapshot {} claims round {snap_round} (file name says {round})",
+                d.snapshot_path(round).display()
+            );
+        }
+        // journal: verify the durable prefix replays cleanly, then cut
+        // it back to the loaded snapshot's mark so re-executed rounds
+        // re-append their records (byte-identical to the untorn log)
+        let (mut wal, records) = match Journal::open(&d.journal_path()) {
+            Ok(x) => x,
+            // a lost journal is survivable: the snapshot alone resumes
+            // the run, and a fresh mark restarts the log from here
+            Err(_) => (Journal::create(&d.journal_path())?, Vec::new()),
+        };
+        journal::verify_replay(&records).with_context(|| {
+            format!("journal {} failed replay verification", d.journal_path().display())
+        })?;
+        if !wal.truncate_to_mark(round)? {
+            wal.reset()?;
+            wal.append(&JournalRecord::SnapshotMark { round, t })?;
+        }
+        self.journal = Some(wal);
+        // a chaos crash models one process death; the resumed process
+        // does not re-die at the same drawn step
+        self.crash_at = None;
+        self.run_loop(global, t, round)
+    }
+
+    /// Cut a snapshot checkpoint at an idle round boundary: atomic file
+    /// write, then the journal mark that resume truncates back to.
+    fn write_snapshot(
+        &mut self,
+        d: &DurableConfig,
+        global: &[f32],
+        t: usize,
+        round: usize,
+    ) -> Result<()> {
+        let doc = self.snapshot_json(global, t, round)?;
+        fsx::write_atomic(&d.snapshot_path(round), doc.to_string_pretty().as_bytes())?;
+        if let Some(j) = self.journal.as_mut() {
+            j.append(&JournalRecord::SnapshotMark { round, t })?;
+        }
+        Ok(())
+    }
+
+    /// Serialise every piece of state the run loop carries across round
+    /// boundaries. The config echo lets resume refuse a mismatched
+    /// reconstruction instead of silently diverging.
+    fn snapshot_json(&self, global: &[f32], t: usize, round: usize) -> Result<Json> {
+        let config = obj(vec![
+            ("seed", u64_hex(self.cfg.seed)),
+            ("horizon", num(self.cfg.horizon as f64)),
+            ("step_minutes", num(self.cfg.step_minutes)),
+            ("n_per_round", num(self.cfg.n_per_round as f64)),
+            ("d_max", num(self.cfg.d_max as f64)),
+            ("eval_every", num(self.cfg.eval_every as f64)),
+            ("n_clients", num(self.clients.len() as f64)),
+            ("n_domains", num(self.domains.len() as f64)),
+            ("param_count", num(self.backend.param_count() as f64)),
+            ("strategy", jstr(self.strategy.name())),
+        ]);
+        let (rng_s, rng_spare) = self.rng.state();
+        let rng = obj(vec![
+            ("s", Json::Arr(rng_s.iter().map(|&w| u64_hex(w)).collect())),
+            // the spare gaussian travels as f64 bits: it is the one
+            // snapshotted float that can be negative (±0.0 included)
+            (
+                "gauss_spare",
+                match rng_spare {
+                    Some(x) => u64_hex(x.to_bits()),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        let states = Json::Arr(
+            self.states
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("participation", num(s.participation as f64)),
+                        ("sigma", num(s.sigma)),
+                        ("blocked", Json::Bool(s.blocked)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut trains = Vec::with_capacity(self.train_states.len());
+        for (i, st) in self.train_states.iter().enumerate() {
+            let st = st
+                .as_ref()
+                .ok_or_else(|| anyhow!("client {i} train state missing at snapshot"))?;
+            let cursor = self.backend.cursor_to_json(&st.cursor).ok_or_else(|| {
+                anyhow!(
+                    "durable runs need cursor checkpointing, which this \
+                     backend does not support"
+                )
+            })?;
+            trains.push(obj(vec![
+                ("params", f32_bits_arr(&st.params)),
+                ("steps", u64_hex(st.steps)),
+                ("cursor", cursor),
+            ]));
+        }
+        let utility = Json::Arr(
+            self.utility
+                .snapshot()
+                .iter()
+                .map(|l| match l {
+                    Some(x) => num(*x),
+                    None => Json::Null,
+                })
+                .collect(),
+        );
+        let (m_client, m_domain, m_round, m_total) = self.meter.snapshot();
+        let meter = obj(vec![
+            ("per_client_wh", f64_arr(m_client)),
+            ("per_domain_wh", f64_arr(m_domain)),
+            ("per_round_wh", f64_arr(m_round)),
+            ("total_wh", num(m_total)),
+        ]);
+        let events = Json::Arr(
+            self.events
+                .to_sorted_vec()
+                .into_iter()
+                .map(|(at, ev)| {
+                    obj(vec![
+                        ("at", num(at as f64)),
+                        ("ev", journal::event_to_json(&ev)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("version", jstr(SNAPSHOT_VERSION)),
+            ("config", config),
+            ("t", num(t as f64)),
+            ("round", num(round as f64)),
+            ("global_bits", f32_bits_arr(global)),
+            ("rng", rng),
+            ("fsm_epoch", u64_hex(self.fsm.epoch())),
+            ("shard_completions", u64_hex(self.shard_completions)),
+            ("events", events),
+            ("states", states),
+            ("train", Json::Arr(trains)),
+            ("utility", utility),
+            ("meter", meter),
+            ("metrics", self.metrics.snapshot_json()),
+        ];
+        if let Some(st) = self.strategy.snapshot_state() {
+            pairs.push(("strategy_state", st));
+        }
+        Ok(obj(pairs))
+    }
+
+    /// Rebuild every engine-owned state field from a snapshot document.
+    /// Returns `(global params, t, round)` for the run loop.
+    fn restore_snapshot(&mut self, doc: &Json) -> Result<(Vec<f32>, usize, usize)> {
+        let cfgj = doc.get("config").ok_or_else(|| anyhow!("snapshot missing config"))?;
+        let expect = |key: &str, want: usize| -> Result<()> {
+            let got = snap_usize(cfgj, key)?;
+            if got != want {
+                bail!("snapshot config mismatch: {key} is {got}, this run has {want}");
+            }
+            Ok(())
+        };
+        let seed = snap_u64(cfgj, "seed")?;
+        if seed != self.cfg.seed {
+            bail!(
+                "snapshot config mismatch: seed is {seed:#x}, this run has {:#x}",
+                self.cfg.seed
+            );
+        }
+        expect("horizon", self.cfg.horizon)?;
+        expect("n_per_round", self.cfg.n_per_round)?;
+        expect("d_max", self.cfg.d_max)?;
+        expect("eval_every", self.cfg.eval_every)?;
+        expect("n_clients", self.clients.len())?;
+        expect("n_domains", self.domains.len())?;
+        expect("param_count", self.backend.param_count())?;
+        let sm = cfgj
+            .get("step_minutes")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("snapshot missing step_minutes"))?;
+        if sm.to_bits() != self.cfg.step_minutes.to_bits() {
+            bail!(
+                "snapshot config mismatch: step_minutes is {sm}, this run has {}",
+                self.cfg.step_minutes
+            );
+        }
+        let strat = cfgj
+            .get("strategy")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("snapshot missing strategy"))?;
+        if strat != self.strategy.name() {
+            bail!(
+                "snapshot config mismatch: strategy is {strat:?}, this run \
+                 has {:?}",
+                self.strategy.name()
+            );
+        }
+
+        let t = snap_usize(doc, "t")?;
+        let round = snap_usize(doc, "round")?;
+        let global = parse_f32_bits_arr(
+            doc.get("global_bits").ok_or_else(|| anyhow!("snapshot missing global_bits"))?,
+            "global_bits",
+        )?;
+        if global.len() != self.backend.param_count() {
+            bail!("snapshot global model has {} params, backend expects {}",
+                global.len(), self.backend.param_count());
+        }
+
+        let rngj = doc.get("rng").ok_or_else(|| anyhow!("snapshot missing rng"))?;
+        let words = rngj
+            .get("s")
+            .and_then(|v| v.as_arr())
+            .filter(|a| a.len() == 4)
+            .ok_or_else(|| anyhow!("snapshot rng.s must be 4 words"))?;
+        let mut s = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            s[i] = parse_u64_hex(w).map_err(|e| anyhow!("snapshot rng.s[{i}]: {e}"))?;
+        }
+        let spare = match rngj.get("gauss_spare") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(f64::from_bits(
+                parse_u64_hex(v).map_err(|e| anyhow!("snapshot gauss_spare: {e}"))?,
+            )),
+        };
+        self.rng = Rng::from_state(s, spare);
+
+        self.fsm = RoundFsm::new();
+        self.fsm.restore_epoch(snap_u64(doc, "fsm_epoch")?);
+        self.shard_completions = snap_u64(doc, "shard_completions")?;
+
+        self.events.clear();
+        for (i, e) in doc
+            .get("events")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("snapshot missing events"))?
+            .iter()
+            .enumerate()
+        {
+            let at = snap_usize(e, "at")?;
+            let ev = journal::event_from_json(
+                e.get("ev").ok_or_else(|| anyhow!("snapshot event {i} missing ev"))?,
+            )
+            .map_err(|err| anyhow!("snapshot event {i}: {err}"))?;
+            self.events.push(at, ev);
+        }
+
+        let statesj = doc
+            .get("states")
+            .and_then(|v| v.as_arr())
+            .filter(|a| a.len() == self.clients.len())
+            .ok_or_else(|| anyhow!("snapshot states must cover every client"))?;
+        self.states = statesj
+            .iter()
+            .map(|sj| {
+                Ok(ClientRoundState {
+                    participation: snap_usize(sj, "participation")?,
+                    sigma: sj
+                        .get("sigma")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow!("snapshot state missing sigma"))?,
+                    blocked: sj
+                        .get("blocked")
+                        .and_then(|v| v.as_bool())
+                        .ok_or_else(|| anyhow!("snapshot state missing blocked"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let trainj = doc
+            .get("train")
+            .and_then(|v| v.as_arr())
+            .filter(|a| a.len() == self.clients.len())
+            .ok_or_else(|| anyhow!("snapshot train states must cover every client"))?;
+        let mut train_states = Vec::with_capacity(trainj.len());
+        for (i, tj) in trainj.iter().enumerate() {
+            let cursor = self.backend.cursor_from_json(
+                i,
+                tj.get("cursor")
+                    .ok_or_else(|| anyhow!("snapshot train state {i} missing cursor"))?,
+            )?;
+            let mut st = ClientTrainState::new(cursor);
+            st.params = parse_f32_bits_arr(
+                tj.get("params")
+                    .ok_or_else(|| anyhow!("snapshot train state {i} missing params"))?,
+                "train params",
+            )?;
+            st.steps = snap_u64(tj, "steps")?;
+            train_states.push(Some(st));
+        }
+        self.train_states = train_states;
+
+        let utilj = doc
+            .get("utility")
+            .and_then(|v| v.as_arr())
+            .filter(|a| a.len() == self.clients.len())
+            .ok_or_else(|| anyhow!("snapshot utility must cover every client"))?;
+        self.utility = UtilityTracker::restore(
+            utilj
+                .iter()
+                .map(|v| match v {
+                    Json::Null => Ok(None),
+                    other => other
+                        .as_f64()
+                        .map(Some)
+                        .ok_or_else(|| anyhow!("snapshot utility holds a non-number")),
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
+
+        let meterj = doc.get("meter").ok_or_else(|| anyhow!("snapshot missing meter"))?;
+        self.meter = EnergyMeter::restore(
+            parse_f64_arr(
+                meterj.get("per_client_wh").ok_or_else(|| anyhow!("snapshot meter missing per_client_wh"))?,
+                "meter.per_client_wh",
+            )?,
+            parse_f64_arr(
+                meterj.get("per_domain_wh").ok_or_else(|| anyhow!("snapshot meter missing per_domain_wh"))?,
+                "meter.per_domain_wh",
+            )?,
+            parse_f64_arr(
+                meterj.get("per_round_wh").ok_or_else(|| anyhow!("snapshot meter missing per_round_wh"))?,
+                "meter.per_round_wh",
+            )?,
+            meterj
+                .get("total_wh")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("snapshot meter missing total_wh"))?,
+        );
+
+        self.metrics = MetricsLog::from_snapshot_json(
+            doc.get("metrics").ok_or_else(|| anyhow!("snapshot missing metrics"))?,
+        )
+        .map_err(|e| anyhow!("snapshot metrics: {e}"))?;
+
+        if let Some(st) = doc.get("strategy_state") {
+            self.strategy.restore_state(st)?;
+        }
+        Ok((global, t, round))
+    }
+
+    /// The simulation loop proper, entered at `(t, round)` — `(0, 0)`
+    /// for a fresh run, the loaded checkpoint for a resume. Everything
+    /// the loop consumes beyond its arguments is engine state that
+    /// `restore_snapshot` reconstructs exactly; the loop-local caches
+    /// (forecast ring, incremental selection state, idle-poll flag) are
+    /// rebuilt deterministically at the first iteration, which at a
+    /// round boundary is bit-identical to the uninterrupted run.
+    fn run_loop(&mut self, global: Vec<f32>, t: usize, round: usize) -> Result<()> {
+        let mut global = global;
+        let mut t = t;
+        let mut round = round;
         // §Perf: the forecast ring-arena AND the incremental selection
         // state persist across the whole run — see the module docs.
         // `last_was_wait` decides advance (same anchor, O(D) when dark)
@@ -475,11 +1033,18 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let mut samples: Vec<usize> = Vec::with_capacity(self.clients.len());
         let mut spare_now: Vec<f64> = Vec::with_capacity(self.clients.len());
         while t < self.cfg.horizon {
+            // armed chaos crash: the coordinator dies between rounds,
+            // leaving journal + snapshots as the only surviving state
+            if let Some(ca) = self.crash_at {
+                if t >= ca {
+                    return Err(CrashFault { at: ca }.into());
+                }
+            }
             // late updates from closed rounds surface here (the queue
             // persists across rounds) and are fenced off by their stale
             // epoch token — rejected and metered, never aggregated
             if !self.events.is_empty() {
-                self.drain_due_events(t);
+                self.drain_due_events(t)?;
             }
             // §Perf: σ/participation/blocklist only mutate when a round
             // executes, and the utility refresh is a pure function of
@@ -561,7 +1126,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
 
             let (out, losses) = match self.exec {
                 ExecMode::Legacy => self.execute_round(&decision, t, &global)?,
-                ExecMode::Fsm => self.execute_round_fsm(&decision, t, &global)?,
+                ExecMode::Fsm => self.execute_round_fsm(&decision, round, t, &global)?,
             };
 
             // aggregate participant updates (weights = sample counts)
@@ -657,11 +1222,27 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     cumulative_kwh: self.meter.total_kwh(),
                 });
             }
+
+            // periodic checkpoint at the idle round boundary (round has
+            // already advanced, so round 0's initial snapshot never
+            // collides with the cadence)
+            if let Some(d) = self.durable.clone() {
+                if round % d.snapshot_every == 0 {
+                    self.write_snapshot(&d, &global, t, round)?;
+                }
+            }
+        }
+        // backstop: if the final round's duration jumped t past both
+        // the crash step and the horizon, the crash still fires — an
+        // armed fault always kills the run, so crash_prob = 1.0 is a
+        // guarantee, not a likelihood
+        if let Some(ca) = self.crash_at {
+            return Err(CrashFault { at: ca }.into());
         }
         // updates still in flight when the horizon ends are stale by
         // definition — drain and meter them so waste accounting is
         // complete (no-op without chaos: the queue is empty)
-        self.drain_due_events(usize::MAX);
+        self.drain_due_events(usize::MAX)?;
         self.final_global = global;
         Ok(())
     }
@@ -907,6 +1488,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
     fn execute_round_fsm(
         &mut self,
         decision: &SelectionDecision,
+        round: usize,
         t0: usize,
         global: &[f32],
     ) -> Result<(RoundOutcome, Vec<f64>)> {
@@ -922,6 +1504,18 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             .begin_round(decision, self.clients.len(), t0, round_cap, &mut self.events)
             .map_err(anyhow::Error::new)?;
         let epoch = self.fsm.epoch();
+        if let Some(j) = self.journal.as_mut() {
+            j.append(&JournalRecord::RoundStart {
+                round,
+                epoch,
+                t0,
+                round_cap,
+                n_clients: self.clients.len(),
+                clients: sel.clone(),
+                n_required: decision.n_required,
+                unconstrained: decision.unconstrained,
+            })?;
+        }
         // declare each slot's energy domain so the FSM tracks when a
         // domain shard's last in-epoch update lands — the eager
         // sub-aggregation point of the two-tier tree (`fl::tree` docs)
@@ -1024,6 +1618,18 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
 
         loop {
             let tt = t0 + duration;
+            // armed chaos crash inside the round: the coordinator dies
+            // BEFORE this step's events are popped, so the journal ends
+            // as a legal open-round prefix (RoundStart + the events
+            // delivered so far) that replay verification tolerates
+            if let Some(ca) = self.crash_at {
+                if tt >= ca {
+                    for (s, st) in round_states.into_iter().enumerate() {
+                        self.train_states[sel[s]] = Some(st);
+                    }
+                    return Err(CrashFault { at: ca }.into());
+                }
+            }
             // deliver everything due by now: liveness transitions and
             // delayed submissions land before this step's grants; a
             // due Timeout closes the round before the step executes
@@ -1031,6 +1637,9 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // rest of the queue stays put — anything still pending is
             // stale by construction and is metered after close.
             while let Some(ev) = self.events.pop_due(tt) {
+                if let Some(j) = self.journal.as_mut() {
+                    j.append(&JournalRecord::Event { at: tt, ev })?;
+                }
                 match self.fsm.apply(&ev) {
                     EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
                     EventOutcome::TimeoutFired => {
@@ -1146,6 +1755,9 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // deliver this step's zero-delay submissions, then check
             // the quorum exactly where the legacy loop checks `done`
             while let Some(ev) = self.events.pop_due(tt) {
+                if let Some(j) = self.journal.as_mut() {
+                    j.append(&JournalRecord::Event { at: tt, ev })?;
+                }
                 match self.fsm.apply(&ev) {
                     EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
                     EventOutcome::TimeoutFired => {
@@ -1191,6 +1803,14 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         let energy_wh = self.meter.round_wh(self.meter.rounds() - 1);
         for (s, st) in round_states.into_iter().enumerate() {
             self.train_states[sel[s]] = Some(st);
+        }
+        if let Some(j) = self.journal.as_mut() {
+            j.append(&JournalRecord::RoundClose {
+                round,
+                timed_out,
+                submitted: (0..k).filter(|&s| self.fsm.submitted(s)).collect(),
+                participants: participants.clone(),
+            })?;
         }
         Ok((
             RoundOutcome {
@@ -2116,5 +2736,216 @@ mod tests {
         for r in &m.rounds {
             assert!(r.selected.len() <= 6, "padding exceeded MAX_FACTOR");
         }
+    }
+
+    // ---- durability: journal, snapshots, crash-fault recovery ----
+
+    fn scratch_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fedzero_engine_{}_{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Mixed-fault chaos (dropouts, stale delays, slow clients) with a
+    /// configurable coordinator-death probability — the non-crash draws
+    /// are identical regardless of `crash_prob` (own stream).
+    fn durable_chaos(crash_prob: f64) -> ChaosSpec {
+        ChaosSpec {
+            dropout_per_round: 0.4,
+            mean_drop_min: 20.0,
+            stale_prob: 0.2,
+            slow_prob: 0.2,
+            slow_factor: 0.5,
+            crash_prob,
+            ..ChaosSpec::default()
+        }
+    }
+
+    /// Run (or resume) the 9-client fixture under ChurnAware wrapping —
+    /// the one strategy with cross-round internal state, so the
+    /// snapshot's `strategy_state` round-trip is genuinely exercised.
+    /// `dir: Some` arms the durable coordinator with `snapshot_every=3`.
+    fn run_durable(
+        seed: u64,
+        crash_prob: f64,
+        dir: Option<&std::path::Path>,
+        resume: bool,
+    ) -> Result<(MetricsLog, f64, Vec<f32>, u64)> {
+        use crate::selection::adaptive::ChurnAware;
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, 200.0, horizon);
+        let mut backend = MockBackend::new(9, 8, 0.2, 7);
+        backend.par_min_jobs = usize::MAX;
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed,
+            step_minutes: 1.0,
+        };
+        let mut ca = ChurnAware::new(Baseline::random(), "Random ca", true);
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut ca,
+        );
+        sim.par_domains_min = usize::MAX;
+        sim.par_slots_min = usize::MAX;
+        sim.chaos = Some(durable_chaos(crash_prob));
+        if let Some(d) = dir {
+            // the cadence is part of the journal's byte stream, so the
+            // resume leg pins the same value as the original run
+            sim.durable =
+                Some(DurableConfig { dir: d.to_path_buf(), snapshot_every: 3 });
+        }
+        if resume {
+            sim.resume_from(dir.expect("resume needs a checkpoint dir"))?;
+        } else {
+            sim.run()?;
+        }
+        let kwh = sim.meter.total_kwh();
+        let steps = sim.steps_executed();
+        let global = std::mem::take(&mut sim.final_global);
+        Ok((sim.metrics, kwh, global, steps))
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// THE recovery gate of the PR: kill the coordinator at a seeded
+    /// chaos step, resume from the surviving journal + snapshots, and
+    /// demand the resumed run be indistinguishable from one that never
+    /// crashed — MetricsLog (every f64 included), total energy, step
+    /// counts, final global model bits, and the journal bytes
+    /// themselves. Also pins that journaling is a pure observer: the
+    /// durable run equals the non-durable run bit for bit.
+    #[test]
+    fn crash_then_resume_is_bit_identical() {
+        for seed in [1u64, 2, 5] {
+            let dir_a = scratch_dir(&format!("ref_{seed}"));
+            let dir_b = scratch_dir(&format!("crash_{seed}"));
+
+            // reference: durable, crash disarmed, runs to completion
+            let (m_ref, kwh_ref, g_ref, st_ref) =
+                run_durable(seed, 0.0, Some(&dir_a), false).unwrap();
+            assert!(!m_ref.rounds.is_empty(), "seed {seed}: fixture did no rounds");
+
+            // journaling must not perturb the simulation itself
+            let (m_plain, kwh_plain, g_plain, st_plain) =
+                run_durable(seed, 0.0, None, false).unwrap();
+            assert_eq!(m_plain, m_ref, "seed {seed}: journaling perturbed metrics");
+            assert_eq!(kwh_plain, kwh_ref);
+            assert_eq!(st_plain, st_ref);
+            assert_eq!(bits(&g_plain), bits(&g_ref));
+
+            // the completed journal replays cleanly and covers every round
+            let (_, records) = Journal::open(&dir_a.join("journal.wal")).unwrap();
+            assert_eq!(
+                journal::verify_replay(&records).unwrap(),
+                m_ref.rounds.len(),
+                "seed {seed}: journal round count diverged from metrics"
+            );
+
+            // crash_prob = 1.0 guarantees a coordinator death mid-run
+            let err = run_durable(seed, 1.0, Some(&dir_b), false)
+                .expect_err("crash_prob=1 must kill the run");
+            let fault = err
+                .downcast_ref::<CrashFault>()
+                .unwrap_or_else(|| panic!("seed {seed}: not a CrashFault: {err}"));
+            assert!(
+                fault.at >= 1 && fault.at < 600,
+                "seed {seed}: crash step {} out of range",
+                fault.at
+            );
+
+            // resume from the crash dir — same chaos spec (crash still
+            // armed in the spec; resume disarms the drawn fault)
+            let (m_res, kwh_res, g_res, st_res) =
+                run_durable(seed, 1.0, Some(&dir_b), true).unwrap();
+            assert_eq!(m_res, m_ref, "seed {seed}: resumed metrics diverged");
+            assert_eq!(kwh_res, kwh_ref, "seed {seed}: resumed energy diverged");
+            assert_eq!(st_res, st_ref, "seed {seed}: resumed steps diverged");
+            assert_eq!(
+                bits(&g_res),
+                bits(&g_ref),
+                "seed {seed}: resumed global model diverged"
+            );
+
+            // the resumed journal's bytes equal the never-crashed one's:
+            // truncate-to-mark plus deterministic re-execution re-appends
+            // exactly the records the crash lost
+            assert_eq!(
+                std::fs::read(dir_a.join("journal.wal")).unwrap(),
+                std::fs::read(dir_b.join("journal.wal")).unwrap(),
+                "seed {seed}: journal bytes diverged after resume"
+            );
+
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&dir_b);
+        }
+    }
+
+    #[test]
+    fn durable_requires_fsm_mode() {
+        let dir = scratch_dir("legacy");
+        let horizon = 600;
+        let (clients, domains, load, load_fc) = build(9, 3, 200.0, horizon);
+        let backend = MockBackend::new(9, 8, 0.2, 7);
+        let mut s = Baseline::random();
+        let cfg = SimConfig {
+            horizon,
+            n_per_round: 3,
+            d_max: 30,
+            eval_every: 2,
+            seed: 1,
+            step_minutes: 1.0,
+        };
+        let mut sim = Simulation::new(
+            cfg,
+            clients,
+            domains,
+            load,
+            load_fc,
+            ErrorLevel::Realistic,
+            &backend,
+            &mut s,
+        );
+        sim.exec = ExecMode::Legacy;
+        sim.durable = Some(DurableConfig::new(&dir));
+        let err = sim.run().expect_err("legacy + durable must be refused");
+        assert!(err.to_string().contains("ExecMode::Fsm"), "got: {err}");
+        let err = sim
+            .resume_from(&dir)
+            .expect_err("legacy + resume must be refused");
+        assert!(err.to_string().contains("ExecMode::Fsm"), "got: {err}");
+        assert!(sim.metrics.rounds.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config_and_empty_dirs() {
+        let dir = scratch_dir("mismatch");
+        run_durable(1, 0.0, Some(&dir), false).unwrap();
+        // a different seed is a different run — the snapshot's config
+        // echo refuses to graft its state onto this simulation
+        let err = run_durable(2, 0.0, Some(&dir), true)
+            .expect_err("mismatched seed must be refused");
+        assert!(err.to_string().contains("mismatch"), "got: {err}");
+        // no checkpoints at all -> a clear error, not a silent fresh run
+        let empty = scratch_dir("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        let err = run_durable(1, 0.0, Some(&empty), true)
+            .expect_err("empty checkpoint dir must be refused");
+        assert!(err.to_string().contains("no valid snapshot"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&empty);
     }
 }

@@ -15,11 +15,17 @@
 //! Round execution is event-driven by default ([`engine::ExecMode`]):
 //! the coordinator state machine ([`crate::coordinator::fsm`]) fences
 //! stale updates by epoch token and closes rounds on `Timeout` events;
-//! [`chaos`] injects seeded dropout / stale-update / slow-client
-//! faults through that same event vocabulary.
+//! [`chaos`] injects seeded dropout / stale-update / slow-client /
+//! coordinator-crash faults through that same event vocabulary.
+//!
+//! Setting [`engine::DurableConfig`] on a simulation makes the
+//! coordinator crash-tolerant: a write-ahead journal plus periodic
+//! snapshot checkpoints, and [`Simulation::resume_from`] continues a
+//! killed run bit-identically to one that never crashed (engine
+//! §Durability docs).
 
 pub mod chaos;
 pub mod engine;
 
-pub use chaos::ChaosSpec;
-pub use engine::{ExecMode, RoundOutcome, SimConfig, Simulation};
+pub use chaos::{ChaosSpec, CrashFault};
+pub use engine::{DurableConfig, ExecMode, RoundOutcome, SimConfig, Simulation};

@@ -1,0 +1,100 @@
+//! Filesystem helpers with crash-safety and error context.
+//!
+//! Every report/checkpoint the repo writes (`CAMPAIGN_report.json`,
+//! `BENCH_*.json`, snapshot checkpoints, campaign completion records)
+//! goes through [`write_atomic`]: write to a same-directory temp file,
+//! then rename over the target. On POSIX the rename is atomic, so a
+//! crash mid-write can never leave a torn file that a resumed campaign
+//! or the ci.sh ratchet then misreads — the target either holds the old
+//! bytes or the complete new ones.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Atomically replace `path` with `bytes` (temp file + rename). The
+/// temp file lives next to the target (`.{name}.tmp`) so the rename
+/// never crosses a filesystem boundary. Errors carry the path and the
+/// operation that failed.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .with_context(|| format!("atomic write: {} has no file name", path.display()))?;
+    let tmp = match dir {
+        Some(d) => d.join(format!(".{}.tmp", name.to_string_lossy())),
+        None => std::path::PathBuf::from(format!(".{}.tmp", name.to_string_lossy())),
+    };
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        // don't leave the orphan temp file behind on a failed rename
+        let _ = std::fs::remove_file(&tmp);
+        format!("renaming {} over {}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+/// `std::fs::read_to_string` with the path in the error message.
+pub fn read_to_string(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))
+}
+
+/// `std::fs::read` with the path in the error message.
+pub fn read(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).with_context(|| format!("reading {}", path.display()))
+}
+
+/// `std::fs::create_dir_all` with the path in the error message.
+pub fn create_dir_all(path: &Path) -> Result<()> {
+    std::fs::create_dir_all(path)
+        .with_context(|| format!("creating directory {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fedzero_fsx_{}_{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = scratch("replace");
+        let p = dir.join("out.json");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer payload");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_errors_carry_the_path() {
+        let missing = std::path::Path::new("/nonexistent/fedzero/spec.json");
+        let err = read_to_string(missing).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("/nonexistent/fedzero/spec.json"),
+            "error should name the file: {err:#}"
+        );
+    }
+
+    #[test]
+    fn atomic_write_into_missing_dir_names_the_temp_path() {
+        let p = std::path::Path::new("/nonexistent/fedzero/out.json");
+        let err = write_atomic(p, b"x").unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent/fedzero"));
+    }
+}

@@ -89,6 +89,14 @@ impl Json {
         out
     }
 
+    /// Single-line rendering (no indentation) — the journal's framed
+    /// payload format, where record size matters more than readability.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {
@@ -176,6 +184,30 @@ pub fn num(x: f64) -> Json {
 
 pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
+}
+
+/// Encode a u64 losslessly as a hex string. `Json::Num` is an f64, which
+/// silently rounds integers above 2^53 — epoch tokens, step counters and
+/// xoshiro state words in checkpoints use the full 64-bit range, so they
+/// travel as strings.
+pub fn u64_hex(x: u64) -> Json {
+    Json::Str(format!("{x:#x}"))
+}
+
+/// Decode a [`u64_hex`] value (also accepts a plain integer `Num` for
+/// hand-written documents, as long as it is exactly representable).
+pub fn parse_u64_hex(j: &Json) -> Result<u64, String> {
+    match j {
+        Json::Str(s) => {
+            let digits = s.strip_prefix("0x").unwrap_or(s);
+            u64::from_str_radix(digits, 16)
+                .map_err(|e| format!("bad hex u64 {s:?}: {e}"))
+        }
+        Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9.007199254740992e15 => {
+            Ok(*x as u64)
+        }
+        other => Err(format!("expected hex u64 string, got {other:?}")),
+    }
 }
 
 struct Parser<'a> {
@@ -440,5 +472,29 @@ mod tests {
     #[test]
     fn integers_print_without_fraction() {
         assert_eq!(num(42.0).to_string_pretty(), "42");
+    }
+
+    #[test]
+    fn compact_rendering_is_single_line_and_reparses() {
+        let doc = obj(vec![
+            ("a", num(1.5)),
+            ("b", arr(vec![Json::Null, s("x")])),
+        ]);
+        let text = doc.to_string_compact();
+        assert!(!text.contains('\n'));
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn u64_hex_roundtrips_full_range() {
+        for x in [0u64, 1, 42, u64::MAX, 0xDEAD_BEEF_CAFE_F00D, 1 << 53] {
+            assert_eq!(parse_u64_hex(&u64_hex(x)).unwrap(), x);
+        }
+        // plain small integers are accepted for hand-written docs
+        assert_eq!(parse_u64_hex(&num(7.0)).unwrap(), 7);
+        assert!(parse_u64_hex(&num(1.5)).is_err());
+        assert!(parse_u64_hex(&s("0xzz")).is_err());
+        // f64 can't hold u64::MAX — proving why the string encoding exists
+        assert_ne!(u64::MAX as f64 as u64, u64::MAX);
     }
 }

@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fsx;
 pub mod json;
 pub mod par;
 pub mod prop;

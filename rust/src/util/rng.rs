@@ -44,6 +44,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The full generator state — the four xoshiro words plus the cached
+    /// Box–Muller spare — for checkpointing. [`Rng::from_state`] with
+    /// these values resumes the exact output sequence.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator mid-sequence from a [`Rng::state`] capture.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Rng { s, gauss_spare }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -330,6 +342,22 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_capture_resumes_exact_sequence() {
+        let mut r = Rng::new(11);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        r.normal(); // leaves a gauss spare cached
+        let (s, spare) = r.state();
+        assert!(spare.is_some(), "normal() should cache its second output");
+        let mut resumed = Rng::from_state(s, spare);
+        for _ in 0..50 {
+            assert_eq!(r.normal().to_bits(), resumed.normal().to_bits());
+            assert_eq!(r.next_u64(), resumed.next_u64());
+        }
     }
 
     #[test]
