@@ -15,8 +15,12 @@
 #                    killed by a chaos crash and resumed from its
 #                    journal + snapshot must be bit-identical to an
 #                    uninterrupted run, and a durable campaign resume
-#                    byte-identical at 1/2/8 workers) — exit 1 on any
-#                    divergence)
+#                    byte-identical at 1/2/8 workers), plus the telemetry
+#                    determinism gate (the same scenario with the obs
+#                    layer off vs fully armed must leave metrics, journal
+#                    and campaign-report bytes identical, and the
+#                    exported trace.json / TELEMETRY.json must be
+#                    well-formed) — exit 1 on any divergence)
 #   ./ci.sh --bench  also run the unabridged selection bench
 #   ./ci.sh --arm    default run, then copy every fresh BENCH_*.json
 #                    over its .baseline.json (commit them afterwards)
@@ -190,6 +194,68 @@ compare_bench BENCH_selection.json BENCH_selection.baseline.json
 echo "== journal smoke (--quick: crash-resume bit-identity + campaign-resume gates) =="
 cargo bench --bench journal -- --quick
 compare_bench BENCH_journal.json BENCH_journal.baseline.json
+
+# Telemetry determinism gate: the SAME scenario run with the obs layer
+# off and fully armed (counters + histograms + span tracing) must leave
+# every deterministic output byte-identical — metrics file, write-ahead
+# journal, snapshots, campaign report (the latter also across worker
+# counts) — and the exported trace.json / TELEMETRY.json must be
+# well-formed. Exit 1 on any divergence.
+echo "== telemetry determinism gate (obs on vs off, byte-identical outputs) =="
+FZ=./target/release/fedzero
+OBS_TMP=$(mktemp -d)
+trap 'rm -rf "$OBS_TMP"' EXIT
+TRAIN_FLAGS=(--mock --days 1 --clients 20 --n 4 --dmax 30 --seed 3 --scale 0.2 --snapshot-every 3)
+"$FZ" train "${TRAIN_FLAGS[@]}" --out "$OBS_TMP/metrics_off.json" \
+    --checkpoint "$OBS_TMP/ckpt_off" >/dev/null
+"$FZ" train "${TRAIN_FLAGS[@]}" --out "$OBS_TMP/metrics_on.json" \
+    --checkpoint "$OBS_TMP/ckpt_on" \
+    --trace "$OBS_TMP/trace.json" --telemetry "$OBS_TMP/TELEMETRY.json" >/dev/null
+cmp "$OBS_TMP/metrics_off.json" "$OBS_TMP/metrics_on.json" \
+    || { echo "TELEMETRY GATE FAILED: metrics diverged with telemetry on"; exit 1; }
+diff -r "$OBS_TMP/ckpt_off" "$OBS_TMP/ckpt_on" >/dev/null \
+    || { echo "TELEMETRY GATE FAILED: journal/snapshot bytes diverged with telemetry on"; exit 1; }
+"$FZ" campaign smoke --workers 1 --out "$OBS_TMP/camp_off.json" >/dev/null
+"$FZ" campaign smoke --workers 4 --out "$OBS_TMP/camp_on.json" \
+    --telemetry "$OBS_TMP/TELEMETRY_camp.json" >/dev/null
+cmp "$OBS_TMP/camp_off.json" "$OBS_TMP/camp_on.json" \
+    || { echo "TELEMETRY GATE FAILED: campaign report diverged (telemetry on, 4 workers)"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OBS_TMP/trace.json" "$OBS_TMP/TELEMETRY.json" <<'PY'
+import json, sys
+
+with open(sys.argv[1]) as f:
+    trace = json.load(f)
+evs = trace["traceEvents"]
+assert isinstance(evs, list) and evs, "trace.json has no events"
+for e in evs:
+    for k in ("name", "ph", "ts", "dur", "pid", "tid"):
+        assert k in e, f"trace event missing {k!r}: {e}"
+    assert e["ph"] == "X", f"unexpected phase {e['ph']!r}"
+    assert e["ts"] >= 0 and e["dur"] >= 0
+names = {e["name"] for e in evs}
+for phase in ("round", "select", "aggregate"):
+    assert phase in names, f"missing {phase!r} span in trace.json"
+
+with open(sys.argv[2]) as f:
+    tele = json.load(f)
+assert tele["schema"] == "fedzero-telemetry-v1", tele.get("schema")
+subs = tele["subsystems"]
+assert len(subs) >= 6, f"expected >= 6 subsystem sections, got {sorted(subs)}"
+live = [s for s, sec in subs.items()
+        if any(v > 0 for v in sec["counters"].values())
+        or any(h["count"] > 0 for h in sec["histograms"].values())]
+for s in ("engine", "tree", "journal"):
+    assert s in live, f"{s} reported no activity (live: {live})"
+print(f"  telemetry schema: ok ({len(evs)} trace events, "
+      f"live subsystems: {', '.join(sorted(live))})")
+PY
+else
+    echo "  (python3 unavailable — skipping telemetry schema checks)"
+fi
+rm -rf "$OBS_TMP"
+trap - EXIT
+echo "telemetry gate: ok (outputs byte-identical with obs armed)"
 
 if [[ "${1:-}" == "--quick" ]]; then
     echo "CI OK (quick)"

@@ -24,6 +24,7 @@ use fedzero::coordinator::{build_dataset, run_built_mock, run_experiment, Experi
 use fedzero::scenario::campaign::{run_campaign, CampaignSpec};
 use fedzero::scenario::EnvSpec;
 use fedzero::util::json::Json;
+use fedzero::util::obs;
 use fedzero::util::par;
 
 /// The bench grid: the 2-cell smoke campaign in quick mode, a 16-cell
@@ -150,6 +151,11 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mode = if quick { "quick" } else { "default" };
     println!("== campaign benches [{mode}] ==");
+    // telemetry on for the whole bench: the determinism gate doubles as
+    // proof the probes change no report byte, and the snapshot feeds the
+    // per-cell wall-time percentile columns
+    obs::set_enabled(true);
+    obs::reset();
 
     let spec = bench_spec(quick);
     let n_cells = spec.expand().len();
@@ -239,6 +245,21 @@ fn main() {
         Json::Num(determinism_mismatch as f64),
     );
     root.insert("legacy_divergence".into(), Json::Num(legacy_mismatches as f64));
+    // per-cell wall-time distribution over every drain above (the _ns
+    // keys join the ratchet once a baseline is armed)
+    let s = obs::snapshot();
+    root.insert(
+        "cell_wall_p50_ns".into(),
+        Json::Num(s.hist_percentile(obs::Hist::CellWallNs, 50.0)),
+    );
+    root.insert(
+        "cell_wall_p99_ns".into(),
+        Json::Num(s.hist_percentile(obs::Hist::CellWallNs, 99.0)),
+    );
+    root.insert(
+        "cell_wall_sparkline".into(),
+        Json::Str(s.hist_sparkline(obs::Hist::CellWallNs)),
+    );
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_campaign.json";
     match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {

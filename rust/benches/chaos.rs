@@ -37,6 +37,7 @@ use fedzero::sim::{ChaosSpec, SimConfig, Simulation};
 use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
 use fedzero::util::bench::fmt_ns;
 use fedzero::util::json::Json;
+use fedzero::util::obs;
 
 /// Constant-power mock fixture (same shape as the endtoend bench).
 fn sim_parts(
@@ -119,6 +120,11 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mode = if quick { "quick" } else { "default" };
     println!("== chaos benches [{mode}] ==");
+    // telemetry on for the whole bench: the determinism gates below
+    // double as proof that enabling the probes changes no output, and
+    // the snapshot feeds the fault-counter / phase-percentile columns
+    obs::set_enabled(true);
+    obs::reset();
     let horizon = if quick { 400 } else { 1_200 };
 
     // aggressive schedule: every submission delayed past the 15-min
@@ -223,6 +229,25 @@ fn main() {
         "timeout_rounds".into(),
         Json::Num(m_a.timeout_rounds() as f64),
     );
+    // obs-layer view of the same runs: injected-fault counters and the
+    // round-phase latency percentiles from the log2 histograms
+    let s = obs::snapshot();
+    root.insert(
+        "round_p50_ns".into(),
+        Json::Num(s.hist_percentile(obs::Hist::RoundNs, 50.0)),
+    );
+    root.insert(
+        "round_p99_ns".into(),
+        Json::Num(s.hist_percentile(obs::Hist::RoundNs, 99.0)),
+    );
+    for (key, c) in [
+        ("obs_dropouts", obs::Ctr::ChaosDropouts),
+        ("obs_delays", obs::Ctr::ChaosDelays),
+        ("obs_slowdowns", obs::Ctr::ChaosSlowdowns),
+        ("obs_stale_rejected", obs::Ctr::ChaosStaleRejected),
+    ] {
+        root.insert(key.into(), Json::Num(s.ctr(c) as f64));
+    }
     root.insert("determinism_mismatch".into(), Json::Num(det_mismatch as f64));
     root.insert(
         "visibility_failures".into(),

@@ -51,6 +51,7 @@ use fedzero::sim::{ExecMode, SimConfig, Simulation};
 use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
 use fedzero::util::bench::fmt_ns;
 use fedzero::util::json::Json;
+use fedzero::util::obs;
 use fedzero::util::rng::Rng;
 
 fn spec(mock: bool, strategy: StrategyKind) -> ExperimentSpec {
@@ -655,6 +656,11 @@ fn tree_skew(n_clients: usize, dim: usize, reps: usize) -> (Vec<Json>, usize) {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    // telemetry on for the whole bench: every bitwise gate below doubles
+    // as proof the probes change no output, and the snapshot feeds the
+    // phase-percentile columns of the JSON
+    obs::set_enabled(true);
+    obs::reset();
     if std::env::args().any(|a| a == "--tree") {
         // fast standalone mode for `ci.sh --quick`: ONLY the 1M-client
         // flat-vs-tree scaling series + the skewed-domain stolen-fill
@@ -674,6 +680,22 @@ fn main() {
             Json::Num((mismatches + skew_mismatches) as f64),
         );
         root.insert("peak_arena_bytes".into(), Json::Num(peak as f64));
+        // shard-fill latency distribution from the obs layer across all
+        // the tree rounds above (the _ns keys join the ratchet once a
+        // baseline is armed; arena_reuses is informational)
+        let s = obs::snapshot();
+        root.insert(
+            "shard_fill_p50_ns".into(),
+            Json::Num(s.hist_percentile(obs::Hist::ShardFillNs, 50.0)),
+        );
+        root.insert(
+            "shard_fill_p99_ns".into(),
+            Json::Num(s.hist_percentile(obs::Hist::ShardFillNs, 99.0)),
+        );
+        root.insert(
+            "arena_reuses".into(),
+            Json::Num(s.ctr(obs::Ctr::TreeArenaReuses) as f64),
+        );
         let out = Json::Obj(root).to_string_pretty();
         let path = "BENCH_tree.json";
         match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {
@@ -927,6 +949,18 @@ fn main() {
         Json::Num(if tree_run_diverged { 1.0 } else { 0.0 }),
     );
     root.insert("tree_peak_arena_bytes".into(), Json::Num(tree_peak as f64));
+    // round-phase latency percentiles from the obs layer across every
+    // simulated round above (the _ns keys join the ratchet once armed)
+    let s = obs::snapshot();
+    for (key, h) in [
+        ("round_p50_ns", obs::Hist::RoundNs),
+        ("round_p99_ns", obs::Hist::RoundNs),
+        ("aggregate_p50_ns", obs::Hist::AggregateNs),
+        ("aggregate_p99_ns", obs::Hist::AggregateNs),
+    ] {
+        let q = if key.ends_with("p50_ns") { 50.0 } else { 99.0 };
+        root.insert(key.into(), Json::Num(s.hist_percentile(h, q)));
+    }
     let out = Json::Obj(root).to_string_pretty();
     let path = "BENCH_endtoend.json";
     match fedzero::util::fsx::write_atomic(std::path::Path::new(path), out.as_bytes()) {

@@ -39,6 +39,7 @@ use fedzero::sim::{ChaosSpec, CrashFault, DurableConfig, SimConfig, Simulation};
 use fedzero::trace::forecast::{ErrorLevel, SeriesForecaster};
 use fedzero::util::bench::fmt_ns;
 use fedzero::util::json::Json;
+use fedzero::util::stats;
 
 fn scratch(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!(
@@ -209,18 +210,26 @@ fn main() {
     let adir = scratch("append");
     let mut wal = Journal::create(&adir.join("journal.wal")).unwrap();
     let appends = if quick { 2_000usize } else { 20_000 };
+    let mut append_samples = Vec::with_capacity(appends);
     let t0 = Instant::now();
     for i in 0..appends {
+        let ta = Instant::now();
         wal.append(&JournalRecord::Event {
             at: i,
             ev: ClientEvent::UpdateSubmitted { client: i % 24, epoch: 7 },
         })
         .unwrap();
+        append_samples.push(ta.elapsed().as_nanos() as f64);
     }
     let ns_append = t0.elapsed().as_nanos() as f64 / appends as f64;
+    let append_p50 = stats::percentile(&append_samples, 50.0);
+    let append_p95 = stats::percentile(&append_samples, 95.0);
+    let append_p99 = stats::percentile(&append_samples, 99.0);
     println!(
-        "journal_append/{appends}rec {:>12} per record ({} bytes)",
+        "journal_append/{appends}rec {:>12} per record  p50 {:>12}  p99 {:>12} ({} bytes)",
         fmt_ns(ns_append),
+        fmt_ns(append_p50),
+        fmt_ns(append_p99),
         wal.len_bytes()
     );
     drop(wal);
@@ -260,6 +269,9 @@ fn main() {
     root.insert("bench".into(), Json::Str("journal".into()));
     root.insert("mode".into(), Json::Str(mode.into()));
     root.insert("ns_per_append".into(), Json::Num(ns_append));
+    root.insert("append_p50_ns".into(), Json::Num(append_p50));
+    root.insert("append_p95_ns".into(), Json::Num(append_p95));
+    root.insert("append_p99_ns".into(), Json::Num(append_p99));
     root.insert("recovery_ms".into(), Json::Num(recovery_ms));
     root.insert("journal_records".into(), Json::Num(journal_records as f64));
     root.insert("journal_bytes".into(), Json::Num(journal_bytes as f64));

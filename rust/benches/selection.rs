@@ -142,9 +142,14 @@ impl Point {
         );
         m.insert("median_ns".into(), Json::Num(self.median()));
         m.insert("mean_ns".into(), Json::Num(stats::mean(&self.samples_ns)));
+        m.insert("p50_ns".into(), Json::Num(self.median()));
         m.insert(
             "p95_ns".into(),
             Json::Num(stats::percentile(&self.samples_ns, 95.0)),
+        );
+        m.insert(
+            "p99_ns".into(),
+            Json::Num(stats::percentile(&self.samples_ns, 99.0)),
         );
         m.insert(
             "ref_median_ns".into(),

@@ -51,6 +51,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::selection::SelectionDecision;
 use crate::util::fsx;
 use crate::util::json::{num, obj, parse_u64_hex, s, u64_hex, Json};
+use crate::util::obs;
 
 use super::events::{ClientEvent, EventQueue};
 use super::fsm::RoundFsm;
@@ -334,12 +335,18 @@ impl Journal {
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
         frame.extend_from_slice(&payload);
-        self.file
-            .write_all(&frame)
-            .with_context(|| format!("appending to journal {}", self.path.display()))?;
-        self.file
-            .flush()
-            .with_context(|| format!("flushing journal {}", self.path.display()))?;
+        obs::add(obs::Ctr::JournalFrames, 1);
+        obs::add(obs::Ctr::JournalBytes, frame.len() as u64);
+        obs::observe(obs::Hist::JournalFrameBytes, frame.len() as u64);
+        {
+            let _append_timer = obs::timer(obs::Hist::JournalAppendNs);
+            self.file.write_all(&frame).with_context(|| {
+                format!("appending to journal {}", self.path.display())
+            })?;
+            self.file
+                .flush()
+                .with_context(|| format!("flushing journal {}", self.path.display()))?;
+        }
         self.len += frame.len() as u64;
         if let JournalRecord::SnapshotMark { round, .. } = rec {
             self.marks.push((*round, self.len));

@@ -62,6 +62,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::util::obs;
 use crate::util::par;
 use crate::util::par::thresholds;
 
@@ -344,6 +345,11 @@ impl TreeAggregator {
                 }
             }
         };
+        if self.partials.capacity() >= g * dim {
+            obs::add(obs::Ctr::TreeArenaReuses, 1);
+        } else {
+            obs::add(obs::Ctr::TreeArenaGrows, 1);
+        }
         self.partials.clear();
         self.partials.resize(g * dim, 0.0);
         let offsets = &self.offsets;
@@ -355,6 +361,7 @@ impl TreeAggregator {
             self.par_workers,
             || (Vec::new(), Vec::new()),
             |gi, row, scratch: &mut (Vec<_>, Vec<_>)| {
+                let _fill_timer = obs::timer(obs::Hist::ShardFillNs);
                 let (gu, gw) = scratch;
                 gu.clear();
                 gw.clear();
@@ -383,6 +390,8 @@ impl TreeAggregator {
 
         self.rounds += 1;
         self.shards_aggregated += g as u64;
+        obs::add(obs::Ctr::TreeAggregations, 1);
+        obs::add(obs::Ctr::TreeShards, g as u64);
         let bytes = self.arena_bytes();
         if bytes > self.peak_arena {
             self.peak_arena = bytes;

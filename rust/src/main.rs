@@ -11,15 +11,70 @@
 //!
 //! Every repro harness prints the same rows/series the paper reports, at a
 //! reduced default scale (--full for paper scale; see EXPERIMENTS.md).
+//!
+//! Global flags (all subcommands):
+//!   --verbose / --quiet    log level (also FEDZERO_LOG=error|info|debug)
+//!   --trace FILE           arm span tracing, write a Chrome trace-event
+//!                          file on exit (chrome://tracing / Perfetto)
+//!   --telemetry [FILE]     collect counters/histograms, write a
+//!                          TELEMETRY.json summary on exit
+//!                          (also FEDZERO_TELEMETRY=1 or =FILE)
 
 use anyhow::Result;
 use fedzero::util::cli::Args;
+use fedzero::util::obs;
 
 mod repro;
 
+/// Resolve the observability flags before any work runs. Returns the
+/// (telemetry, trace) output paths to write after the subcommand.
+fn init_obs(args: &Args) -> (Option<String>, Option<String>) {
+    if args.flag("verbose") {
+        obs::set_level(obs::Level::Debug);
+    } else if args.flag("quiet") {
+        obs::set_level(obs::Level::Error);
+    }
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    let telemetry_path = args
+        .get("telemetry")
+        .map(|s| s.to_string())
+        .or_else(|| {
+            if args.flag("telemetry") {
+                Some("TELEMETRY.json".to_string())
+            } else {
+                None
+            }
+        })
+        .or_else(|| match std::env::var("FEDZERO_TELEMETRY").ok()?.as_str() {
+            "" | "0" => None,
+            "1" | "true" => Some("TELEMETRY.json".to_string()),
+            path => Some(path.to_string()),
+        });
+    if telemetry_path.is_some() {
+        obs::set_enabled(true);
+    }
+    if trace_path.is_some() {
+        obs::set_tracing(true);
+    }
+    (telemetry_path, trace_path)
+}
+
+fn write_obs(telemetry: &Option<String>, trace: &Option<String>) -> Result<()> {
+    if let Some(p) = telemetry {
+        obs::write_telemetry(std::path::Path::new(p))?;
+        obs::log!(info, "wrote {p}");
+    }
+    if let Some(p) = trace {
+        obs::write_trace(std::path::Path::new(p))?;
+        obs::log!(info, "wrote {p}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse_env();
-    match args.subcommand.as_deref() {
+    let (telemetry, trace) = init_obs(&args);
+    let result = match args.subcommand.as_deref() {
         Some("train") => repro::cmd_train(&args),
         Some("selftest") => repro::cmd_selftest(&args),
         Some("repro") => repro::cmd_repro(&args),
@@ -29,15 +84,20 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some(other) => {
-            eprintln!("unknown subcommand {other:?}\n");
+            obs::log!(error, "unknown subcommand {other:?}\n");
             print_help();
             std::process::exit(2);
         }
-    }
+    };
+    // exports run even when the subcommand failed: a crashed run's
+    // partial telemetry is exactly what you want to look at
+    write_obs(&telemetry, &trace)?;
+    result
 }
 
 fn print_help() {
-    println!(
+    obs::log!(
+        info,
         "fedzero — FedZero paper reproduction (e-Energy '24)
 
 USAGE:
@@ -59,6 +119,14 @@ USAGE:
                     CAMPAIGN_report.json — see README for the schema.
                     --resume records finished cells under DIR and skips
                     them on rerun (same byte-identical report)
+
+Observability (any subcommand):
+    --verbose | --quiet     log level (or FEDZERO_LOG=error|info|debug)
+    --trace FILE            Chrome trace-event span timeline
+    --telemetry [FILE]      counters + latency histograms, default
+                            TELEMETRY.json (or FEDZERO_TELEMETRY=1)
+    Telemetry never changes deterministic outputs: metrics, model bits,
+    journal bytes and campaign reports are bit-identical on or off.
 
 Strategies: FedZero, FedZero-exact, Random, Random-1.3n, Random-fc,
             Oort, Oort-1.3n, Oort-fc, Upper-bound.

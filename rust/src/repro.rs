@@ -12,6 +12,7 @@ use fedzero::runtime::ModelRuntime;
 use fedzero::scenario::campaign::{run_campaign, run_campaign_durable, CampaignSpec};
 use fedzero::util::fsx;
 use fedzero::util::json::Json;
+use fedzero::util::obs;
 use fedzero::util::par;
 use fedzero::selection::fedzero::{FedZero, SolverKind};
 use fedzero::selection::{ClientRoundState, SelectionContext, Strategy};
@@ -54,7 +55,7 @@ fn spec_from_args(args: &Args) -> ExperimentSpec {
 fn run_and_summarize(spec: &ExperimentSpec) -> Result<RunReport> {
     let t0 = Instant::now();
     let report = run_experiment(spec)?;
-    println!(
+    obs::log!(info, 
         "  {:<36} {}  [{:.1}s wall, {} steps, select {:.1} ms]",
         report.spec_name,
         report.metrics.summary(""),
@@ -94,7 +95,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let report = run_and_summarize(&spec)?;
     if let Some(path) = args.get("out") {
         report.metrics.save(std::path::Path::new(path))?;
-        println!("wrote {path}");
+        obs::log!(info, "wrote {path}");
     }
     Ok(())
 }
@@ -102,17 +103,17 @@ pub fn cmd_train(args: &Args) -> Result<()> {
 pub fn cmd_selftest(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
     let preset = args.get_str("preset", "tiny");
-    println!("loading {preset} artifacts from {dir:?}...");
+    obs::log!(info, "loading {preset} artifacts from {dir:?}...");
     let rt = ModelRuntime::load(&dir, preset)?;
     let p = rt.param_count();
     let b = rt.batch_size();
     let d = rt.manifest.input_dim;
-    println!("  param_count={p} batch={b} dim={d}");
+    obs::log!(info, "  param_count={p} batch={b} dim={d}");
 
     let params = rt.init_params(7)?;
     assert_eq!(params.len(), p);
     let norm: f32 = params.iter().map(|x| x * x).sum::<f32>().sqrt();
-    println!("  init ok, |params| = {norm:.3}");
+    obs::log!(info, "  init ok, |params| = {norm:.3}");
 
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
@@ -122,7 +123,7 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let out = rt.train_step(&params, &params, &x, &y, 0.05, 0.01)?;
     let first = t0.elapsed();
-    println!("  train_step ok: loss={:.4} correct={}", out.loss, out.correct);
+    obs::log!(info, "  train_step ok: loss={:.4} correct={}", out.loss, out.correct);
 
     // loss must decrease over repeated steps on the same batch
     let mut pcur = params.clone();
@@ -135,7 +136,7 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
     if last_loss >= out.loss {
         return Err(anyhow!("loss did not decrease: {} -> {last_loss}", out.loss));
     }
-    println!("  8 steps on one batch: loss {:.4} -> {last_loss:.4}", out.loss);
+    obs::log!(info, "  8 steps on one batch: loss {:.4} -> {last_loss:.4}", out.loss);
 
     let t1 = Instant::now();
     let iters = 50;
@@ -144,19 +145,19 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
         pp = rt.train_step(&pp, &params, &x, &y, 0.05, 0.01)?.params;
     }
     let per = t1.elapsed().as_secs_f64() / iters as f64;
-    println!(
+    obs::log!(info, 
         "  train_step latency: first {:.1} ms, steady {:.3} ms",
         first.as_secs_f64() * 1e3,
         per * 1e3
     );
 
     let (loss_sum, correct) = rt.eval_step(&params, &x, &y)?;
-    println!("  eval_step ok: loss_sum={loss_sum:.3} correct={correct}");
+    obs::log!(info, "  eval_step ok: loss_sum={loss_sum:.3} correct={correct}");
 
     let agg = rt.aggregate(&[params.as_slice(), pcur.as_slice()], &[1.0, 1.0])?;
     assert_eq!(agg.len(), p);
-    println!("  aggregate ok");
-    println!("selftest PASSED");
+    obs::log!(info, "  aggregate ok");
+    obs::log!(info, "selftest PASSED");
     Ok(())
 }
 
@@ -184,7 +185,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
                 let mut a = args.clone();
                 a.positional = vec![id.to_string()];
                 cmd_repro(&a)?;
-                println!();
+                obs::log!(info);
             }
             Ok(())
         }
@@ -195,24 +196,24 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
 // --- Fig 1: CAISO curtailment ----------------------------------------------
 
 fn fig1(_args: &Args) -> Result<()> {
-    println!("=== Fig 1: quarterly wind+solar curtailment, CAISO-style model ===");
+    obs::log!(info, "=== Fig 1: quarterly wind+solar curtailment, CAISO-style model ===");
     let series = curtailment::caiso_series(2015, 2024, 1);
-    println!("{:>6} {:>4} {:>14}", "year", "qtr", "curtailed GWh");
+    obs::log!(info, "{:>6} {:>4} {:>14}", "year", "qtr", "curtailed GWh");
     for r in &series {
         let bar = "#".repeat((r.curtailment_gwh / 25.0) as usize);
-        println!("{:>6} {:>4} {:>14.0}  {bar}", r.year, r.quarter, r.curtailment_gwh);
+        obs::log!(info, "{:>6} {:>4} {:>14.0}  {bar}", r.year, r.quarter, r.curtailment_gwh);
     }
     for y in [2018, 2020, 2022, 2024] {
-        println!("  annual {y}: {:.2} TWh", curtailment::annual_twh(&series, y));
+        obs::log!(info, "  annual {y}: {:.2} TWh", curtailment::annual_twh(&series, y));
     }
-    println!("(paper cites >2.4 TWh CAISO solar curtailment in 2022 — ~7% of its solar)");
+    obs::log!(info, "(paper cites >2.4 TWh CAISO solar curtailment in 2022 — ~7% of its solar)");
     Ok(())
 }
 
 // --- Fig 2 / Fig 4: excess power + client availability ----------------------
 
 fn fig2_fig4(args: &Args) -> Result<()> {
-    println!("=== Fig 2/4: excess power and client availability ===");
+    obs::log!(info, "=== Fig 2/4: excess power and client availability ===");
     for scenario in [Scenario::Global, Scenario::Colocated] {
         let sites = scenario.sites();
         let days = args.get_usize("days", 7);
@@ -224,8 +225,8 @@ fn fig2_fig4(args: &Args) -> Result<()> {
             )),
             _ => None,
         };
-        println!("\n-- {} scenario ({} days) --", scenario.name(), days);
-        println!("{:<14} {:>10} {:>12}  hourly profile (day 1)", "domain", "peak W", "kWh/day");
+        obs::log!(info, "\n-- {} scenario ({} days) --", scenario.name(), days);
+        obs::log!(info, "{:<14} {:>10} {:>12}  hourly profile (day 1)", "domain", "peak W", "kWh/day");
         for site in &sites {
             let trace = solar::generate(
                 site,
@@ -246,7 +247,7 @@ fn fig2_fig4(args: &Args) -> Result<()> {
                     h.push(i as f64 / 60.0);
                 }
             }
-            println!(
+            obs::log!(info, 
                 "{:<14} {:>10.0} {:>12.2}  {}",
                 site.name,
                 peak,
@@ -255,20 +256,20 @@ fn fig2_fig4(args: &Args) -> Result<()> {
             );
         }
     }
-    println!("\n(global: staggered availability around the clock; co-located: synchronized)");
+    obs::log!(info, "\n(global: staggered availability around the clock; co-located: synchronized)");
     Ok(())
 }
 
 // --- Table 2: client profiles ------------------------------------------------
 
 fn table2(_args: &Args) -> Result<()> {
-    println!("=== Table 2: client types (max energy, samples/minute) ===");
-    println!(
+    obs::log!(info, "=== Table 2: client types (max energy, samples/minute) ===");
+    obs::log!(info, 
         "{:<8} {:>10} {:>14} {:>16} {:>8} {:>8}",
         "type", "max W", "DenseNet-121", "EfficientNet-B1", "LSTM", "KWT-1"
     );
     for device in DeviceType::ALL {
-        println!(
+        obs::log!(info, 
             "{:<8} {:>10.0} {:>14.0} {:>16.0} {:>8.0} {:>8.0}",
             device.name(),
             device.max_power_w(),
@@ -278,11 +279,11 @@ fn table2(_args: &Args) -> Result<()> {
             device.samples_per_min(ModelKind::Speech),
         );
     }
-    println!("\nderived per-batch constants (batch=10, 1-min steps):");
-    println!("{:<8} {:>18} {:>16}", "type", "m_c (batches/min)", "δ_c (Wh/batch)");
+    obs::log!(info, "\nderived per-batch constants (batch=10, 1-min steps):");
+    obs::log!(info, "{:<8} {:>18} {:>16}", "type", "m_c (batches/min)", "δ_c (Wh/batch)");
     for device in DeviceType::ALL {
         let p = ClientProfile::new(device, ModelKind::Vision, 10, 1.0);
-        println!(
+        obs::log!(info, 
             "{:<8} {:>18.1} {:>16.4}",
             device.name(),
             p.batches_per_step,
@@ -312,11 +313,11 @@ fn strategies_for(args: &Args) -> Vec<StrategyKind> {
 }
 
 fn fig5_table3(args: &Args) -> Result<()> {
-    println!("=== Fig 5 + Table 3: training progress / time+energy-to-accuracy ===");
+    obs::log!(info, "=== Fig 5 + Table 3: training progress / time+energy-to-accuracy ===");
     let scenarios = [Scenario::Global, Scenario::Colocated];
     let strategies = strategies_for(args);
     for scenario in scenarios {
-        println!("\n-- {} scenario, preset {} --", scenario.name(), args.get_str("preset", "tiny"));
+        obs::log!(info, "\n-- {} scenario, preset {} --", scenario.name(), args.get_str("preset", "tiny"));
         let mut reports: Vec<RunReport> = Vec::new();
         for strategy in &strategies {
             let mut spec = spec_from_args(args);
@@ -336,13 +337,13 @@ fn fig5_table3(args: &Args) -> Result<()> {
             .map(|r| r.metrics.best_accuracy())
             .unwrap_or(0.0)
             * 0.95;
-        println!("\n  Table 3 rows (target accuracy {:.2}%):", target * 100.0);
-        println!(
+        obs::log!(info, "\n  Table 3 rows (target accuracy {:.2}%):", target * 100.0);
+        obs::log!(info, 
             "  {:<14} {:>10} {:>12} {:>14} {:>12}",
             "approach", "best acc", "time-to-acc", "energy-to-acc", "mean round"
         );
         for r in &reports {
-            println!(
+            obs::log!(info, 
                 "  {:<14} {:>9.2}% {:>12} {:>14} {:>9.1} min",
                 r.strategy.name(),
                 r.metrics.best_accuracy() * 100.0,
@@ -352,7 +353,7 @@ fn fig5_table3(args: &Args) -> Result<()> {
             );
         }
         // Fig 5 series: accuracy over sim-days per strategy
-        println!("\n  Fig 5 series (accuracy % by sim-day):");
+        obs::log!(info, "\n  Fig 5 series (accuracy % by sim-day):");
         for r in &reports {
             let pts: Vec<String> = r
                 .metrics
@@ -366,7 +367,7 @@ fn fig5_table3(args: &Args) -> Result<()> {
                     )
                 })
                 .collect();
-            println!("    {:<14} {}", r.strategy.name(), pts.join(" "));
+            obs::log!(info, "    {:<14} {}", r.strategy.name(), pts.join(" "));
         }
     }
     Ok(())
@@ -375,7 +376,7 @@ fn fig5_table3(args: &Args) -> Result<()> {
 // --- Fig 6 / Table 4: fairness -----------------------------------------------
 
 fn fig6_table4(args: &Args) -> Result<()> {
-    println!("=== Fig 6 + Table 4: fairness of participation ===");
+    obs::log!(info, "=== Fig 6 + Table 4: fairness of participation ===");
     let strategies = [
         StrategyKind::Random,
         StrategyKind::Oort,
@@ -386,7 +387,7 @@ fn fig6_table4(args: &Args) -> Result<()> {
             None => "(a) base scenario".to_string(),
             Some(d) => format!("(b) domain {d} (Berlin) unlimited"),
         };
-        println!("\n-- {label} --");
+        obs::log!(info, "\n-- {label} --");
         let mut rows = Vec::new();
         for strategy in strategies {
             let mut spec = spec_from_args(args);
@@ -401,7 +402,7 @@ fn fig6_table4(args: &Args) -> Result<()> {
                 .iter()
                 .map(|(m, s)| format!("{:.1}±{:.1}", m * 100.0, s * 100.0))
                 .collect();
-            println!(
+            obs::log!(info, 
                 "    {:<10} between-domain std {:.2}%  per-domain %: {}",
                 strategy.name(),
                 between_std * 100.0,
@@ -410,8 +411,8 @@ fn fig6_table4(args: &Args) -> Result<()> {
             rows.push((strategy, report));
         }
         if unlimited.is_some() {
-            println!("\n  Table 4 (unlimited Berlin):");
-            println!(
+            obs::log!(info, "\n  Table 4 (unlimited Berlin):");
+            obs::log!(info, 
                 "  {:<10} {:>10} {:>12} {:>14}",
                 "approach", "best acc", "time-to-acc", "energy-to-acc"
             );
@@ -422,7 +423,7 @@ fn fig6_table4(args: &Args) -> Result<()> {
                 .unwrap_or(0.0)
                 * 0.95;
             for (s, r) in &rows {
-                println!(
+                obs::log!(info, 
                     "  {:<10} {:>9.2}% {:>12} {:>14}",
                     s.name(),
                     r.metrics.best_accuracy() * 100.0,
@@ -438,7 +439,7 @@ fn fig6_table4(args: &Args) -> Result<()> {
 // --- Fig 7: forecast error robustness ----------------------------------------
 
 fn fig7(args: &Args) -> Result<()> {
-    println!("=== Fig 7: robustness against forecasting errors ===");
+    obs::log!(info, "=== Fig 7: robustness against forecasting errors ===");
     let variants: [(&str, ErrorLevel, ErrorLevel); 3] = [
         ("FedZero w/ error", ErrorLevel::Realistic, ErrorLevel::Realistic),
         ("FedZero w/o error", ErrorLevel::Perfect, ErrorLevel::Perfect),
@@ -460,9 +461,9 @@ fn fig7(args: &Args) -> Result<()> {
         .map(|(_, r)| r.metrics.best_accuracy())
         .fold(f64::INFINITY, f64::min)
         * 0.95;
-    println!("\n  {:<30} {:>10} {:>12} {:>14} {:>12}", "variant", "best acc", "time-to-acc", "energy-to-acc", "mean round");
+    obs::log!(info, "\n  {:<30} {:>10} {:>12} {:>14} {:>12}", "variant", "best acc", "time-to-acc", "energy-to-acc", "mean round");
     for (name, r) in &reports {
-        println!(
+        obs::log!(info, 
             "  {:<30} {:>9.2}% {:>12} {:>14} {:>9.1} min",
             name,
             r.metrics.best_accuracy() * 100.0,
@@ -471,14 +472,14 @@ fn fig7(args: &Args) -> Result<()> {
             r.metrics.mean_round_duration_min(),
         );
     }
-    println!("\n  round duration distributions (min):");
+    obs::log!(info, "\n  round duration distributions (min):");
     for (name, r) in &reports {
         let durs = r.metrics.round_durations_min();
         let mut h = Histogram::new(0.0, 60.0, 12);
         for &d in &durs {
             h.push(d);
         }
-        println!(
+        obs::log!(info, 
             "    {:<30} p50 {:>5.1}  p95 {:>5.1}  {}",
             name,
             stats::percentile(&durs, 50.0),
@@ -518,7 +519,7 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
     };
     let workers = args.get_usize("workers", par::threads());
     let cells = spec.expand();
-    println!(
+    obs::log!(info, 
         "=== campaign {:?}: {} cells across {} workers ===",
         spec.name,
         cells.len(),
@@ -531,12 +532,12 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
         Some(dir) => run_campaign_durable(&spec, workers, std::path::Path::new(dir))?,
         None => run_campaign(&spec, workers)?,
     };
-    println!(
+    obs::log!(info, 
         "\n{:<52} {:>6} {:>9} {:>10} {:>10} {:>9} {:>7}",
         "cell", "rounds", "best acc", "tta (d)", "kWh", "waste", "jain"
     );
     for r in &run.results {
-        println!(
+        obs::log!(info, 
             "{:<52} {:>6} {:>8.2}% {:>10} {:>10.2} {:>9.2} {:>7.3}",
             r.cell.label,
             r.rounds,
@@ -549,7 +550,7 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
             r.fairness_jain,
         );
     }
-    println!(
+    obs::log!(info, 
         "\n{} cells in {:.1}s ({:.2} cells/s), trace memoization {}/{} hits ({:.0}%)",
         run.results.len(),
         run.wall_s,
@@ -564,7 +565,7 @@ pub fn cmd_campaign(args: &Args) -> Result<()> {
         std::path::Path::new(out),
         run.report_json().to_string_pretty().as_bytes(),
     )?;
-    println!("wrote {out}");
+    obs::log!(info, "wrote {out}");
     Ok(())
 }
 
@@ -603,13 +604,13 @@ pub fn synth_instance(
 }
 
 fn fig8(args: &Args) -> Result<()> {
-    println!("=== Fig 8: selection overhead & scalability ===");
+    obs::log!(info, "=== Fig 8: selection overhead & scalability ===");
     let full = args.flag("full");
     let seed = args.get_usize("seed", 0) as u64;
 
     // (a) full Algorithm-1 style run over increasing client counts
-    println!("\n(a) selection runtime vs number of clients (greedy solver)");
-    println!("{:>10} {:>10} {:>10} {:>12}", "clients", "domains", "steps", "runtime");
+    obs::log!(info, "\n(a) selection runtime vs number of clients (greedy solver)");
+    obs::log!(info, "{:>10} {:>10} {:>10} {:>12}", "clients", "domains", "steps", "runtime");
     let sizes: Vec<(usize, usize, usize)> = if full {
         vec![
             (100, 10, 60),
@@ -626,7 +627,7 @@ fn fig8(args: &Args) -> Result<()> {
         let t0 = Instant::now();
         let sol = greedy(&inst, 1);
         let dt = t0.elapsed();
-        println!(
+        obs::log!(info, 
             "{:>10} {:>10} {:>10} {:>12}",
             c,
             p,
@@ -637,8 +638,8 @@ fn fig8(args: &Args) -> Result<()> {
     }
 
     // (b) single solve for different domain counts
-    println!("\n(b) single-selection runtime vs #domains (10k clients)");
-    println!("{:>10} {:>12}", "domains", "runtime");
+    obs::log!(info, "\n(b) single-selection runtime vs #domains (10k clients)");
+    obs::log!(info, "{:>10} {:>12}", "domains", "runtime");
     let domain_counts = if full {
         vec![10, 100, 1_000, 10_000, 100_000]
     } else {
@@ -649,7 +650,7 @@ fn fig8(args: &Args) -> Result<()> {
         let inst = synth_instance(clients, p.min(clients), 60, 10, seed + 1);
         let t0 = Instant::now();
         let _ = greedy(&inst, 1);
-        println!("{:>10} {:>12}", p, format!("{:.3} s", t0.elapsed().as_secs_f64()));
+        obs::log!(info, "{:>10} {:>12}", p, format!("{:.3} s", t0.elapsed().as_secs_f64()));
     }
 
     // Overhead at evaluation scale, matching the paper's "0.1 s at
@@ -660,7 +661,7 @@ fn fig8(args: &Args) -> Result<()> {
     for _ in 0..reps {
         let _ = greedy(&inst, 1);
     }
-    println!(
+    obs::log!(info, 
         "\nevaluation-scale selection (100 clients, 10 domains, 60 steps): {:.1} ms",
         t0.elapsed().as_secs_f64() * 1e3 / reps as f64
     );

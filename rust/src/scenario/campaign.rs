@@ -105,6 +105,7 @@ use crate::data::Partition;
 use crate::trace::forecast::ErrorLevel;
 use crate::util::fsx;
 use crate::util::json::{arr, num, obj, parse_u64_hex, s, u64_hex, Json};
+use crate::util::obs;
 use crate::util::par;
 use crate::util::stats;
 
@@ -821,6 +822,8 @@ fn run_campaign_with(
     // before reporting it finished — a crash right after leaves either
     // a complete record or none (the write is atomic)
     let run_one = |i: usize| -> Result<CellResult> {
+        let _cell_span = obs::span("cell", obs::Hist::CellWallNs);
+        obs::add(obs::Ctr::CampaignCells, 1);
         let r = run_cell(spec, &cells[i], &envs, &datasets)?;
         if let Some(cd) = &cell_dir {
             write_cell_record(cd, &r, fingerprint)?;
@@ -859,6 +862,13 @@ fn run_campaign_with(
     for (i, slot) in done.into_iter().enumerate() {
         out.push(slot.ok_or_else(|| anyhow!("cell {i} was never run"))?);
     }
+    // mirror the memo accounting into the telemetry layer (the caches
+    // are per-campaign; the obs counters accumulate across campaigns)
+    obs::add(obs::Ctr::CampaignMemoHits, envs.hits.load(Ordering::Relaxed) as u64);
+    obs::add(
+        obs::Ctr::CampaignMemoMisses,
+        envs.misses.load(Ordering::Relaxed) as u64,
+    );
     Ok(CampaignRun {
         spec: spec.clone(),
         results: out,

@@ -99,6 +99,7 @@ use crate::selection::{ClientRoundState, SelectionContext, SelectionDecision, St
 use crate::trace::forecast::{ErrorLevel, SeriesForecaster};
 use crate::util::fsx;
 use crate::util::json::{num, obj, parse_u64_hex, s as jstr, u64_hex, Json};
+use crate::util::obs::{self, Ctr, Hist};
 use crate::util::par;
 use crate::util::par::thresholds;
 use crate::util::rng::Rng;
@@ -558,6 +559,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 j.append(&JournalRecord::Event { at: now, ev })?;
             }
             if self.fsm.apply(&ev) == EventOutcome::StaleUpdate {
+                obs::add(Ctr::ChaosStaleRejected, 1);
                 self.metrics.rejected_updates += 1;
             }
         }
@@ -1037,6 +1039,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // leaving journal + snapshots as the only surviving state
             if let Some(ca) = self.crash_at {
                 if t >= ca {
+                    obs::add(Ctr::ChaosCrashes, 1);
                     return Err(CrashFault { at: ca }.into());
                 }
             }
@@ -1075,11 +1078,13 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     } else {
                         ring.advance(&src);
                     }
+                    obs::add(Ctr::EngineRingAdvances, 1);
                 } else if !ring.is_built() || ring.window_start() != t {
                     ring.rebuild(&src, t, self.cfg.d_max);
                     if use_incr {
                         incr.rebuild(&self.clients, &self.states, ring.view());
                     }
+                    obs::add(Ctr::EngineRingRebuilds, 1);
                 }
             }
             // §Perf: the O(C) current-spare refresh only runs for
@@ -1105,10 +1110,13 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 };
                 let t0 = std::time::Instant::now();
                 let d = self.strategy.select(&ctx, &mut self.rng);
-                self.select_time += t0.elapsed();
+                let dt = t0.elapsed();
+                self.select_time += dt;
+                obs::span_at("select", t0, dt, Hist::SelectNs);
                 d
             };
             if decision.wait {
+                obs::add(Ctr::EngineIdleSteps, 1);
                 last_was_wait = true;
                 t += 1;
                 continue;
@@ -1124,6 +1132,8 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 return Err(anyhow::Error::new(e));
             }
 
+            let round_span = obs::span("round", Hist::RoundNs);
+            obs::add(Ctr::EngineRounds, 1);
             let (out, losses) = match self.exec {
                 ExecMode::Legacy => self.execute_round(&decision, t, &global)?,
                 ExecMode::Fsm => self.execute_round_fsm(&decision, round, t, &global)?,
@@ -1138,6 +1148,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // no-op aggregation.
             let mut agg_domains = 0usize;
             if !out.participants.is_empty() {
+                let _agg_span = obs::span("aggregate", Hist::AggregateNs);
                 let weights = fedavg_weights(
                     &out.participants
                         .iter()
@@ -1205,6 +1216,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 timed_out: out.timed_out,
                 agg_domains,
             });
+            drop(round_span);
             if self.exec == ExecMode::Fsm {
                 self.fsm.finish(); // RoundEnd → Idle
             }
@@ -1213,6 +1225,8 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             round += 1;
 
             if round % self.cfg.eval_every == 0 || t >= self.cfg.horizon {
+                let _eval_span = obs::span("eval", Hist::EvalNs);
+                obs::add(Ctr::EngineEvals, 1);
                 let (acc, loss) = self.backend.evaluate(&global)?;
                 self.metrics.evals.push(EvalRecord {
                     round,
@@ -1229,6 +1243,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             if let Some(d) = self.durable.clone() {
                 if round % d.snapshot_every == 0 {
                     self.write_snapshot(&d, &global, t, round)?;
+                    obs::add(Ctr::EngineSnapshots, 1);
                 }
             }
         }
@@ -1237,6 +1252,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
         // armed fault always kills the run, so crash_prob = 1.0 is a
         // guarantee, not a likelihood
         if let Some(ca) = self.crash_at {
+            obs::add(Ctr::ChaosCrashes, 1);
             return Err(CrashFault { at: ca }.into());
         }
         // updates still in flight when the horizon ends are stale by
@@ -1337,6 +1353,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // capture plain slices only (the backend/strategy fields are
             // not Sync) and read the pre-step `progress` snapshot.
             {
+                let _grant_span = obs::span("grant", Hist::GrantNs);
                 let clients = &self.clients;
                 let domains = &self.domains;
                 let load_actual = &self.load_actual;
@@ -1423,6 +1440,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 }
             }
             if !jobs.is_empty() {
+                let _train_span = obs::span("train", Hist::TrainNs);
                 self.backend.train_shard(global, &mut jobs, &mut round_states)?;
             }
             for j in &jobs {
@@ -1552,6 +1570,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 let plan =
                     ch.round_plan(self.cfg.seed, c, t0, round_cap, self.cfg.step_minutes);
                 if let Some((off, len)) = plan.drop_window {
+                    obs::add(Ctr::ChaosDropouts, 1);
                     if off == 0 {
                         self.fsm.add_initial_offline(s);
                     } else {
@@ -1563,8 +1582,12 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                         self.events.push(end, ClientEvent::Rejoin { client: c, epoch });
                     }
                 }
+                if plan.submit_delay > 0 {
+                    obs::add(Ctr::ChaosDelays, 1);
+                }
                 submit_delay[s] = plan.submit_delay;
                 if plan.slow < 1.0 {
+                    obs::add(Ctr::ChaosSlowdowns, 1);
                     any_slow = true;
                 }
                 slow[s] = plan.slow;
@@ -1624,6 +1647,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
             // delivered so far) that replay verification tolerates
             if let Some(ca) = self.crash_at {
                 if tt >= ca {
+                    obs::add(Ctr::ChaosCrashes, 1);
                     for (s, st) in round_states.into_iter().enumerate() {
                         self.train_states[sel[s]] = Some(st);
                     }
@@ -1641,7 +1665,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     j.append(&JournalRecord::Event { at: tt, ev })?;
                 }
                 match self.fsm.apply(&ev) {
-                    EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
+                    EventOutcome::StaleUpdate => {
+                        obs::add(Ctr::ChaosStaleRejected, 1);
+                        self.metrics.rejected_updates += 1;
+                    }
                     EventOutcome::TimeoutFired => {
                         timeout_fired = true;
                         break;
@@ -1661,6 +1688,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 *o = self.fsm.online(s);
             }
             {
+                let _grant_span = obs::span("grant", Hist::GrantNs);
                 let clients = &self.clients;
                 let domains = &self.domains;
                 let load_actual = &self.load_actual;
@@ -1745,6 +1773,7 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                 }
             }
             if !jobs.is_empty() {
+                let _train_span = obs::span("train", Hist::TrainNs);
                 self.backend.train_shard(global, &mut jobs, &mut round_states)?;
             }
             for j in &jobs {
@@ -1759,7 +1788,10 @@ impl<'a, B: TrainBackend> Simulation<'a, B> {
                     j.append(&JournalRecord::Event { at: tt, ev })?;
                 }
                 match self.fsm.apply(&ev) {
-                    EventOutcome::StaleUpdate => self.metrics.rejected_updates += 1,
+                    EventOutcome::StaleUpdate => {
+                        obs::add(Ctr::ChaosStaleRejected, 1);
+                        self.metrics.rejected_updates += 1;
+                    }
                     EventOutcome::TimeoutFired => {
                         timeout_fired = true;
                         break;

@@ -61,6 +61,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use super::alloc::{
     self, AllocClient, AllocClientView, AllocProblem, AllocWorkspace,
 };
+use crate::util::obs::{self, Ctr, Hist};
 use crate::util::par;
 // The fan-out thresholds live in ONE documented table (they used to be
 // duplicated per module and could drift): see `util::par::thresholds`.
@@ -779,7 +780,10 @@ fn bnb_dfs(
     let need = sh.inst.n - chosen.len();
     if need == 0 {
         if let Some((obj, totals)) = evaluate_view(sh.inst, chosen, &mut lo.ws) {
-            sh.incumbent.fetch_max(f64_key(obj), Ordering::Relaxed);
+            let prev = sh.incumbent.fetch_max(f64_key(obj), Ordering::Relaxed);
+            if f64_key(obj) > prev {
+                obs::add(Ctr::BnbIncumbentUpdates, 1);
+            }
             let is_better = better_solution(
                 obj,
                 chosen,
@@ -798,6 +802,7 @@ fn bnb_dfs(
     if f64_key(bnb_bound(sh.sorted_scores, chosen_score, idx, need)) < inc
         || f64_key(bnb_domain_bound(&lo.rem_score_sum, sh.dom_cap, chosen_score)) < inc
     {
+        obs::add(Ctr::BnbBoundCuts, 1);
         return;
     }
     let cand = sh.order[idx];
@@ -936,6 +941,7 @@ fn bnb_run(
     drain: BnbDrain,
     workers: usize,
 ) -> (SelSolution, usize, par::steal::StealStats) {
+    let _solve_timer = obs::timer(Hist::BnbSolveNs);
     let scores = standalone_scores_view(&inst);
     let mut order: Vec<usize> = (0..inst.clients.len()).collect();
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
@@ -1100,6 +1106,8 @@ fn bnb_run(
 
     let nodes = shared.nodes.load(Ordering::Relaxed);
     let complete = !shared.exhausted.load(Ordering::Relaxed);
+    obs::add(Ctr::BnbSolves, 1);
+    obs::add(Ctr::BnbNodes, nodes as u64);
     // deterministic final reduction (canonical total preference): the
     // greedy seed participates like any other candidate
     let mut best: Option<(f64, Vec<usize>, Vec<f64>)> = if seed_full {

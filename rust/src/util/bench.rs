@@ -30,16 +30,63 @@ impl BenchResult {
         stats::percentile(&self.samples_ns, 95.0)
     }
 
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 99.0)
+    }
+
+    /// Sparkline of the sample distribution over [min, max].
+    pub fn sparkline(&self) -> String {
+        let (lo, hi) = (stats::min(&self.samples_ns), stats::max(&self.samples_ns));
+        if self.samples_ns.is_empty() || !(hi > lo) {
+            // degenerate spread: a flat one-bin line
+            return "█".into();
+        }
+        let bins = self.samples_ns.len().clamp(2, 24);
+        // widen the top edge slightly so the max sample lands in-range
+        let mut h = stats::Histogram::new(lo, hi + (hi - lo) * 1e-9, bins);
+        for &s in &self.samples_ns {
+            h.push(s);
+        }
+        h.sparkline()
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "bench {:<40} mean {:>12}  median {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            "bench {:<40} mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  {}  ({} samples x {} iters)",
             self.name,
             fmt_ns(self.mean_ns()),
-            fmt_ns(self.median_ns()),
+            fmt_ns(self.p50_ns()),
             fmt_ns(self.p95_ns()),
+            fmt_ns(self.p99_ns()),
+            self.sparkline(),
             self.samples_ns.len(),
             self.iters_per_sample,
         )
+    }
+
+    /// Standard JSON digest for `BENCH_*.json` files.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns()));
+        m.insert("median_ns".into(), Json::Num(self.median_ns()));
+        m.insert("p50_ns".into(), Json::Num(self.p50_ns()));
+        m.insert("p95_ns".into(), Json::Num(self.p95_ns()));
+        m.insert("p99_ns".into(), Json::Num(self.p99_ns()));
+        m.insert("sparkline".into(), Json::Str(self.sparkline()));
+        m.insert(
+            "samples".into(),
+            Json::Num(self.samples_ns.len() as f64),
+        );
+        m.insert(
+            "iters_per_sample".into(),
+            Json::Num(self.iters_per_sample as f64),
+        );
+        Json::Obj(m)
     }
 }
 
@@ -113,7 +160,7 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: Config, mut f: F) -> BenchResu
         iters_per_sample: iters,
         samples_ns,
     };
-    println!("{}", result.report());
+    crate::util::obs::log!(info, "{}", result.report());
     result
 }
 
@@ -141,6 +188,12 @@ mod tests {
         assert!(r.mean_ns() > 0.0);
         assert!(r.samples_ns.len() == 4);
         assert!(r.iters_per_sample >= 1);
+        assert!(r.p50_ns() <= r.p95_ns() && r.p95_ns() <= r.p99_ns());
+        assert!(!r.sparkline().is_empty());
+        let j = r.to_json();
+        for key in ["mean_ns", "p50_ns", "p95_ns", "p99_ns", "sparkline"] {
+            assert!(j.get(key).is_some(), "to_json missing {key}");
+        }
     }
 
     #[test]

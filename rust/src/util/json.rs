@@ -72,6 +72,13 @@ impl Json {
         }
     }
 
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     /// Path lookup: `j.at(&["entry_points", "train_step", "inputs"])`.
     pub fn at(&self, path: &[&str]) -> Option<&Json> {
         let mut cur = self;

@@ -10,6 +10,7 @@ pub mod bench;
 pub mod cli;
 pub mod fsx;
 pub mod json;
+pub mod obs;
 pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,114 @@
+//! Machine-readable telemetry summary (`TELEMETRY.json`): one section
+//! per instrumented subsystem — engine, solver, par, tree, journal,
+//! chaos, campaign — each with its counters and histogram digests
+//! (count, sum, mean, p50/p95/p99, sparkline). Every section is always
+//! present (zeros included) so downstream schema checks are stable
+//! regardless of which code paths a given run exercised.
+//!
+//! The summary is written as its OWN file, never merged into
+//! deterministic reports: `CAMPAIGN_report.json`, `MetricsLog` saves
+//! and journal bytes stay byte-identical with telemetry on or off
+//! (latency digests are wall-clock and thus non-deterministic by
+//! nature).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{snapshot, Ctr, Hist, Snapshot};
+use crate::util::fsx;
+use crate::util::json::Json;
+
+/// The subsystem sections, in report order.
+pub const SUBSYSTEMS: [&str; 7] =
+    ["engine", "solver", "par", "tree", "journal", "chaos", "campaign"];
+
+fn hist_digest(s: &Snapshot, h: Hist) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".into(), Json::Num(s.hist_count(h) as f64));
+    m.insert("sum".into(), Json::Num(s.hist_sum(h) as f64));
+    m.insert("mean".into(), Json::Num(s.hist_mean(h)));
+    m.insert("p50".into(), Json::Num(s.hist_percentile(h, 50.0)));
+    m.insert("p95".into(), Json::Num(s.hist_percentile(h, 95.0)));
+    m.insert("p99".into(), Json::Num(s.hist_percentile(h, 99.0)));
+    m.insert("sparkline".into(), Json::Str(s.hist_sparkline(h)));
+    Json::Obj(m)
+}
+
+/// Build the full summary document from a merged snapshot.
+pub fn summary_json_from(s: &Snapshot) -> Json {
+    let mut subs = BTreeMap::new();
+    for sub in SUBSYSTEMS {
+        let mut counters = BTreeMap::new();
+        for c in Ctr::ALL {
+            if c.subsystem() == sub {
+                counters.insert(c.name().to_string(), Json::Num(s.ctr(c) as f64));
+            }
+        }
+        let mut hists = BTreeMap::new();
+        for h in Hist::ALL {
+            if h.subsystem() == sub {
+                hists.insert(h.name().to_string(), hist_digest(s, h));
+            }
+        }
+        let mut sec = BTreeMap::new();
+        sec.insert("counters".into(), Json::Obj(counters));
+        sec.insert("histograms".into(), Json::Obj(hists));
+        subs.insert(sub.to_string(), Json::Obj(sec));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("fedzero-telemetry-v1".into()));
+    root.insert("subsystems".into(), Json::Obj(subs));
+    Json::Obj(root)
+}
+
+/// Snapshot the current telemetry and build the summary document.
+pub fn summary_json() -> Json {
+    summary_json_from(&snapshot())
+}
+
+/// Write `TELEMETRY.json` to `path` (atomic temp + rename).
+pub fn write_telemetry(path: &Path) -> Result<()> {
+    fsx::write_atomic(path, summary_json().to_string_pretty().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{add, observe, reset, set_enabled};
+    use super::*;
+
+    #[test]
+    fn summary_always_lists_every_subsystem() {
+        let _g = super::super::tests::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        add(Ctr::JournalFrames, 3);
+        add(Ctr::JournalBytes, 300);
+        observe(Hist::JournalAppendNs, 2048);
+        let doc = summary_json();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            "fedzero-telemetry-v1"
+        );
+        let subs = doc.get("subsystems").unwrap();
+        for sub in SUBSYSTEMS {
+            let sec = subs.get(sub).unwrap_or_else(|| panic!("missing {sub}"));
+            assert!(sec.get("counters").is_some());
+            assert!(sec.get("histograms").is_some());
+        }
+        let j = subs.get("journal").unwrap();
+        assert_eq!(
+            j.get("counters").unwrap().get("frames").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        let ap = j.get("histograms").unwrap().get("append_ns").unwrap();
+        assert_eq!(ap.get("count").unwrap().as_f64().unwrap(), 1.0);
+        let p50 = ap.get("p50").unwrap().as_f64().unwrap();
+        assert!((2048.0..4096.0).contains(&p50), "p50 {p50}");
+        set_enabled(false);
+        reset();
+    }
+}

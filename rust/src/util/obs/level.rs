@@ -1,0 +1,138 @@
+//! Leveled logging: the `obs::log!` macro's level gate.
+//!
+//! Three levels — `error` (stderr), `info` (stdout, the default:
+//! byte-identical to the historical bare `println!` output), `debug`
+//! (stdout, off by default). The effective level comes from, in
+//! precedence order: [`set_level`] (the `--verbose`/`--quiet` CLI
+//! flags), the `FEDZERO_LOG` environment variable (`error`/`info`/
+//! `debug`, or `0`/`1`/`2`), then the `Info` default.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity; numerically ordered so `Error < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn parse_level(raw: &str) -> Option<Level> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "error" | "quiet" | "0" => Some(Level::Error),
+        "info" | "1" => Some(Level::Info),
+        "debug" | "verbose" | "2" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+fn env_level() -> Level {
+    std::env::var("FEDZERO_LOG")
+        .ok()
+        .as_deref()
+        .and_then(parse_level)
+        .unwrap_or(Level::Info)
+}
+
+/// The effective log level. First call resolves `FEDZERO_LOG` and
+/// caches it; [`set_level`] overrides at any time.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNSET => {
+            let l = env_level();
+            // racing first readers resolve the same env value, so a
+            // lost store is harmless
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        1 => Level::Info,
+        2 => Level::Debug,
+        _ => Level::Error,
+    }
+}
+
+/// Force the log level (CLI flags beat `FEDZERO_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at level `l` should be emitted.
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Leveled logging macro — use through the [`crate::util::obs`] alias:
+/// `obs::log!(info, "...")`, `obs::log!(error, "...")`,
+/// `obs::log!(debug, "...")`. `error` goes to stderr, `info`/`debug`
+/// to stdout; at the default level the output is byte-identical to the
+/// bare `println!`/`eprintln!` calls it replaced. A bare level
+/// (`obs::log!(info)`) prints an empty line, like `println!()`.
+#[macro_export]
+macro_rules! obs_log {
+    (error) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Error) {
+            eprintln!();
+        }
+    }};
+    (error, $($arg:tt)*) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Error) {
+            eprintln!($($arg)*);
+        }
+    }};
+    (info) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Info) {
+            println!();
+        }
+    }};
+    (info, $($arg:tt)*) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Info) {
+            println!($($arg)*);
+        }
+    }};
+    (debug) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Debug) {
+            println!();
+        }
+    }};
+    (debug, $($arg:tt)*) => {{
+        if $crate::util::obs::log_enabled($crate::util::obs::Level::Debug) {
+            println!($($arg)*);
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_digits() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("INFO"), Some(Level::Info));
+        assert_eq!(parse_level(" debug "), Some(Level::Debug));
+        assert_eq!(parse_level("0"), Some(Level::Error));
+        assert_eq!(parse_level("2"), Some(Level::Debug));
+        assert_eq!(parse_level("nope"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn levels_order_and_gate() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        // set_level is process-global; restore the default afterwards
+        let before = level();
+        set_level(Level::Error);
+        assert!(log_enabled(Level::Error));
+        assert!(!log_enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(log_enabled(Level::Debug));
+        set_level(before);
+    }
+}

@@ -1,0 +1,723 @@
+//! Zero-dependency structured telemetry: named counters, log₂-bucketed
+//! latency/size histograms, nestable phase spans, and a leveled logging
+//! macro — the crate-wide observability layer (ISSUE 10).
+//!
+//! # Determinism contract
+//!
+//! Enabling telemetry NEVER changes a single byte of deterministic
+//! output (`MetricsLog`, model bits, journal bytes, campaign reports) —
+//! the same discipline as `AggMode::Flat ≡ Tree` and the work-stealing
+//! scheduler. Two properties make that hold by construction:
+//!
+//! 1. **Probes only write probe state.** A counter add or histogram
+//!    observation touches a thread-local buffer; span guards read the
+//!    clock but feed nothing back into simulation arithmetic.
+//! 2. **The merge is canonical.** Thread-local buffers fold into one
+//!    global accumulator as commutative u64 sums (counter totals,
+//!    per-bucket histogram counts), so the merged telemetry itself is
+//!    independent of thread scheduling and exit order — stronger than
+//!    worker-index ordering: NO order can change a commutative sum.
+//!    (Span *timestamps* are wall-clock and therefore non-deterministic
+//!    by nature; they live only in the opt-in trace export.)
+//!
+//! # Zero overhead when disabled
+//!
+//! Every probe is a single relaxed-atomic load + branch on the global
+//! enable flag. Disabled spans never call `Instant::now()` — the guard
+//! holds `None` and its `Drop` is a no-op — so the instrumented binary
+//! with telemetry off IS the perf baseline.
+//!
+//! # Probe taxonomy
+//!
+//! * [`Ctr`] — monotone counters, enum-indexed (array slot, no hashing):
+//!   engine round/idle/ring activity, B&B nodes/incumbents/cuts, steal
+//!   scheduler traffic, tree-aggregator arena behaviour, journal frames
+//!   and bytes, chaos fault tallies, campaign cells and memo hits.
+//! * [`Hist`] — 64-bucket log₂ histograms of ns latencies or byte
+//!   sizes, rendered through [`stats::Histogram`] for sparklines and
+//!   summarised as p50/p95/p99 via geometric interpolation inside the
+//!   matching bucket.
+//! * [`Span`] — nestable phase timers (`round` ⊃ `select`/`grant`/
+//!   `train`/`aggregate`/`eval`): on drop they feed their histogram
+//!   and, when tracing is armed, append a Chrome trace-event
+//!   ([`trace`], `chrome://tracing` / Perfetto loads the file as-is).
+//! * `obs::log!` — the leveled logging macro (error/info/debug) behind
+//!   `FEDZERO_LOG` and the `--verbose`/`--quiet` CLI flags; see
+//!   [`level`]. Default level (`info`) reproduces the historical
+//!   `println!`/`eprintln!` output byte for byte.
+//!
+//! Exporters: [`trace::write_trace`] (`fedzero train --trace out.json`)
+//! and [`export::write_telemetry`] (`TELEMETRY.json`, one section per
+//! subsystem — engine, solver, par, tree, journal, chaos, campaign).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::stats;
+
+pub mod export;
+pub mod level;
+pub mod trace;
+
+pub use export::{summary_json, write_telemetry};
+pub use level::{log_enabled, set_level, Level};
+pub use trace::write_trace;
+
+// the leveled logging macro (defined in level.rs with #[macro_export],
+// which exports it at the crate root as `obs_log!`); this alias lets
+// call sites write `obs::log!(info, ...)`. A macro import lives in the
+// macro namespace, so it coexists with the `level` module above.
+pub use crate::obs_log as log;
+
+// ---------------------------------------------------------------------------
+// global enable flags
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+/// Whether counter/histogram collection is on. One relaxed load — this
+/// is the branch every probe pays when telemetry is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether span trace-event collection is on (implies [`enabled`]).
+#[inline(always)]
+pub fn tracing() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Arm or disarm counter/histogram collection.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the trace epoch before any span starts
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+    if !on {
+        TRACING.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Arm or disarm span tracing (arming implies [`set_enabled`]`(true)`).
+pub fn set_tracing(on: bool) {
+    if on {
+        set_enabled(true);
+    }
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide trace epoch: every span timestamp is reported
+/// relative to this instant.
+pub(crate) fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+// ---------------------------------------------------------------------------
+// probe identifiers
+// ---------------------------------------------------------------------------
+
+/// Named monotone counters, enum-indexed into fixed arrays (no hashing
+/// on the hot path). Grouped by the subsystem they instrument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    // sim/engine.rs
+    EngineRounds,
+    EngineIdleSteps,
+    EngineRingAdvances,
+    EngineRingRebuilds,
+    EngineEvals,
+    EngineSnapshots,
+    // solver/mip.rs branch-and-bound
+    BnbSolves,
+    BnbNodes,
+    BnbIncumbentUpdates,
+    BnbBoundCuts,
+    // util/par.rs work stealing
+    StealFanouts,
+    StealSteals,
+    StealStolenItems,
+    // fl/tree.rs hierarchical aggregation
+    TreeAggregations,
+    TreeShards,
+    TreeArenaReuses,
+    TreeArenaGrows,
+    // coordinator/journal.rs
+    JournalFrames,
+    JournalBytes,
+    // sim/chaos.rs fault plans (counted where the engine consumes them)
+    ChaosDropouts,
+    ChaosDelays,
+    ChaosSlowdowns,
+    ChaosCrashes,
+    ChaosStaleRejected,
+    // scenario/campaign.rs
+    CampaignCells,
+    CampaignMemoHits,
+    CampaignMemoMisses,
+}
+
+impl Ctr {
+    pub const COUNT: usize = 27;
+    pub const ALL: [Ctr; Ctr::COUNT] = [
+        Ctr::EngineRounds,
+        Ctr::EngineIdleSteps,
+        Ctr::EngineRingAdvances,
+        Ctr::EngineRingRebuilds,
+        Ctr::EngineEvals,
+        Ctr::EngineSnapshots,
+        Ctr::BnbSolves,
+        Ctr::BnbNodes,
+        Ctr::BnbIncumbentUpdates,
+        Ctr::BnbBoundCuts,
+        Ctr::StealFanouts,
+        Ctr::StealSteals,
+        Ctr::StealStolenItems,
+        Ctr::TreeAggregations,
+        Ctr::TreeShards,
+        Ctr::TreeArenaReuses,
+        Ctr::TreeArenaGrows,
+        Ctr::JournalFrames,
+        Ctr::JournalBytes,
+        Ctr::ChaosDropouts,
+        Ctr::ChaosDelays,
+        Ctr::ChaosSlowdowns,
+        Ctr::ChaosCrashes,
+        Ctr::ChaosStaleRejected,
+        Ctr::CampaignCells,
+        Ctr::CampaignMemoHits,
+        Ctr::CampaignMemoMisses,
+    ];
+
+    /// Subsystem section this counter is reported under.
+    pub fn subsystem(self) -> &'static str {
+        match self {
+            Ctr::EngineRounds
+            | Ctr::EngineIdleSteps
+            | Ctr::EngineRingAdvances
+            | Ctr::EngineRingRebuilds
+            | Ctr::EngineEvals
+            | Ctr::EngineSnapshots => "engine",
+            Ctr::BnbSolves
+            | Ctr::BnbNodes
+            | Ctr::BnbIncumbentUpdates
+            | Ctr::BnbBoundCuts => "solver",
+            Ctr::StealFanouts | Ctr::StealSteals | Ctr::StealStolenItems => "par",
+            Ctr::TreeAggregations
+            | Ctr::TreeShards
+            | Ctr::TreeArenaReuses
+            | Ctr::TreeArenaGrows => "tree",
+            Ctr::JournalFrames | Ctr::JournalBytes => "journal",
+            Ctr::ChaosDropouts
+            | Ctr::ChaosDelays
+            | Ctr::ChaosSlowdowns
+            | Ctr::ChaosCrashes
+            | Ctr::ChaosStaleRejected => "chaos",
+            Ctr::CampaignCells | Ctr::CampaignMemoHits | Ctr::CampaignMemoMisses => {
+                "campaign"
+            }
+        }
+    }
+
+    /// Report key within the subsystem section.
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::EngineRounds => "rounds",
+            Ctr::EngineIdleSteps => "idle_steps",
+            Ctr::EngineRingAdvances => "ring_advances",
+            Ctr::EngineRingRebuilds => "ring_rebuilds",
+            Ctr::EngineEvals => "evals",
+            Ctr::EngineSnapshots => "snapshots",
+            Ctr::BnbSolves => "bnb_solves",
+            Ctr::BnbNodes => "bnb_nodes",
+            Ctr::BnbIncumbentUpdates => "bnb_incumbent_updates",
+            Ctr::BnbBoundCuts => "bnb_bound_cuts",
+            Ctr::StealFanouts => "fanouts",
+            Ctr::StealSteals => "steals",
+            Ctr::StealStolenItems => "stolen_items",
+            Ctr::TreeAggregations => "aggregations",
+            Ctr::TreeShards => "shards",
+            Ctr::TreeArenaReuses => "arena_reuses",
+            Ctr::TreeArenaGrows => "arena_grows",
+            Ctr::JournalFrames => "frames",
+            Ctr::JournalBytes => "bytes",
+            Ctr::ChaosDropouts => "dropouts",
+            Ctr::ChaosDelays => "delays",
+            Ctr::ChaosSlowdowns => "slowdowns",
+            Ctr::ChaosCrashes => "crashes",
+            Ctr::ChaosStaleRejected => "stale_rejected",
+            Ctr::CampaignCells => "cells",
+            Ctr::CampaignMemoHits => "memo_hits",
+            Ctr::CampaignMemoMisses => "memo_misses",
+        }
+    }
+}
+
+/// Log₂-bucketed histograms (64 buckets: bucket `i` covers values in
+/// `[2^i, 2^(i+1))`, with 0 landing in bucket 0). Units are ns for
+/// `*_ns` probes and bytes for `*_bytes` probes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Hist {
+    SelectNs,
+    GrantNs,
+    TrainNs,
+    AggregateNs,
+    EvalNs,
+    RoundNs,
+    BnbSolveNs,
+    ShardFillNs,
+    JournalAppendNs,
+    JournalFrameBytes,
+    CellWallNs,
+}
+
+impl Hist {
+    pub const COUNT: usize = 11;
+    pub const ALL: [Hist; Hist::COUNT] = [
+        Hist::SelectNs,
+        Hist::GrantNs,
+        Hist::TrainNs,
+        Hist::AggregateNs,
+        Hist::EvalNs,
+        Hist::RoundNs,
+        Hist::BnbSolveNs,
+        Hist::ShardFillNs,
+        Hist::JournalAppendNs,
+        Hist::JournalFrameBytes,
+        Hist::CellWallNs,
+    ];
+
+    pub fn subsystem(self) -> &'static str {
+        match self {
+            Hist::SelectNs
+            | Hist::GrantNs
+            | Hist::TrainNs
+            | Hist::AggregateNs
+            | Hist::EvalNs
+            | Hist::RoundNs => "engine",
+            Hist::BnbSolveNs => "solver",
+            Hist::ShardFillNs => "tree",
+            Hist::JournalAppendNs | Hist::JournalFrameBytes => "journal",
+            Hist::CellWallNs => "campaign",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::SelectNs => "select_ns",
+            Hist::GrantNs => "grant_ns",
+            Hist::TrainNs => "train_ns",
+            Hist::AggregateNs => "aggregate_ns",
+            Hist::EvalNs => "eval_ns",
+            Hist::RoundNs => "round_ns",
+            Hist::BnbSolveNs => "bnb_solve_ns",
+            Hist::ShardFillNs => "shard_fill_ns",
+            Hist::JournalAppendNs => "append_ns",
+            Hist::JournalFrameBytes => "frame_bytes",
+            Hist::CellWallNs => "cell_wall_ns",
+        }
+    }
+}
+
+const BUCKETS: usize = 64;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    // floor(log2(max(v, 1))): 0 and 1 land in bucket 0
+    63 - (v | 1).leading_zeros() as usize
+}
+
+// ---------------------------------------------------------------------------
+// thread-local collection + canonical global merge
+// ---------------------------------------------------------------------------
+
+struct Acc {
+    ctrs: [u64; Ctr::COUNT],
+    buckets: [[u64; BUCKETS]; Hist::COUNT],
+    sums: [u64; Hist::COUNT],
+}
+
+impl Acc {
+    const ZERO: Acc = Acc {
+        ctrs: [0; Ctr::COUNT],
+        buckets: [[0; BUCKETS]; Hist::COUNT],
+        sums: [0; Hist::COUNT],
+    };
+
+    fn merge_from(&mut self, other: &Acc) {
+        for (a, b) in self.ctrs.iter_mut().zip(&other.ctrs) {
+            *a += b;
+        }
+        for (ah, bh) in self.buckets.iter_mut().zip(&other.buckets) {
+            for (a, b) in ah.iter_mut().zip(bh) {
+                *a += b;
+            }
+        }
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+    }
+}
+
+static GLOBAL: Mutex<Acc> = Mutex::new(Acc::ZERO);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+struct LocalBuf {
+    acc: Acc,
+    events: Vec<trace::TraceEvent>,
+    tid: u32,
+    dirty: bool,
+}
+
+impl LocalBuf {
+    fn new() -> LocalBuf {
+        LocalBuf {
+            acc: Acc::ZERO,
+            events: Vec::new(),
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            dirty: false,
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.dirty {
+            // counter and bucket merges are commutative u64 sums, so the
+            // fold is canonical no matter which thread flushes first
+            let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+            g.merge_from(&self.acc);
+            self.acc = Acc::ZERO;
+            self.dirty = false;
+        }
+        if !self.events.is_empty() {
+            trace::flush_events(std::mem::take(&mut self.events));
+        }
+    }
+}
+
+impl Drop for LocalBuf {
+    // worker threads (std::thread::scope fan-outs) die at the join;
+    // their buffers flush here so no probe is ever lost
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::new());
+}
+
+/// Add `n` to counter `c`. One relaxed load + branch when disabled.
+#[inline]
+pub fn add(c: Ctr, n: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = LOCAL.try_with(|l| {
+        let mut l = l.borrow_mut();
+        l.acc.ctrs[c as usize] += n;
+        l.dirty = true;
+    });
+}
+
+/// Record value `v` (ns or bytes) into histogram `h`.
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = LOCAL.try_with(|l| {
+        let mut l = l.borrow_mut();
+        l.acc.buckets[h as usize][bucket_of(v)] += 1;
+        l.acc.sums[h as usize] += v;
+        l.dirty = true;
+    });
+}
+
+pub(crate) fn push_event(ev: trace::TraceEvent) {
+    let _ = LOCAL.try_with(|l| l.borrow_mut().events.push(ev));
+}
+
+pub(crate) fn local_tid() -> u32 {
+    LOCAL.try_with(|l| l.borrow().tid).unwrap_or(u32::MAX)
+}
+
+/// Flush the calling thread's buffers into the global accumulator.
+/// Exporters call this on the main thread; worker threads flush
+/// automatically on exit.
+pub fn flush_thread() {
+    let _ = LOCAL.try_with(|l| l.borrow_mut().flush());
+}
+
+/// Zero all collected telemetry (flushes the calling thread first).
+/// Buffers on other *live* threads are not reclaimed — callers that
+/// reset between measurement windows (tests, benches) drive all work
+/// from one thread and join fan-outs in between, so nothing is in
+/// flight.
+pub fn reset() {
+    flush_thread();
+    *GLOBAL.lock().unwrap_or_else(|e| e.into_inner()) = Acc::ZERO;
+    trace::reset_events();
+}
+
+// ---------------------------------------------------------------------------
+// spans and timers
+// ---------------------------------------------------------------------------
+
+struct SpanActive {
+    name: &'static str,
+    hist: Hist,
+    t0: Instant,
+    traced: bool,
+}
+
+/// RAII phase timer: on drop, records its elapsed ns into `hist` and —
+/// when created by [`span`] with tracing armed — appends a Chrome
+/// trace event. Holds `None` when telemetry is off: creation is one
+/// relaxed load and the drop is a no-op (the clock is never read).
+pub struct Span(Option<SpanActive>);
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(a) = self.0.take() {
+            let dur = a.t0.elapsed();
+            observe(a.hist, dur.as_nanos() as u64);
+            if a.traced && tracing() {
+                trace::record(a.name, a.t0, dur);
+            }
+        }
+    }
+}
+
+/// Start a traced phase span feeding `hist`.
+#[inline]
+pub fn span(name: &'static str, hist: Hist) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanActive { name, hist, t0: Instant::now(), traced: true }))
+}
+
+/// Start a histogram-only timer (no trace event even when tracing is
+/// armed — for high-frequency probes like per-frame journal appends).
+#[inline]
+pub fn timer(hist: Hist) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanActive { name: "", hist, t0: Instant::now(), traced: false }))
+}
+
+/// Record an already-measured phase (callers that had to read the clock
+/// anyway, e.g. the engine's `select_time` metric): feeds `hist` and,
+/// when tracing, a trace event anchored at `t0`.
+#[inline]
+pub fn span_at(name: &'static str, t0: Instant, dur: std::time::Duration, hist: Hist) {
+    if !enabled() {
+        return;
+    }
+    observe(hist, dur.as_nanos() as u64);
+    if tracing() {
+        trace::record(name, t0, dur);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot (read side)
+// ---------------------------------------------------------------------------
+
+/// A merged copy of all telemetry collected so far (calling thread
+/// flushed first).
+#[derive(Clone)]
+pub struct Snapshot {
+    ctrs: [u64; Ctr::COUNT],
+    buckets: [[u64; BUCKETS]; Hist::COUNT],
+    sums: [u64; Hist::COUNT],
+}
+
+impl Snapshot {
+    pub fn ctr(&self, c: Ctr) -> u64 {
+        self.ctrs[c as usize]
+    }
+
+    pub fn hist_count(&self, h: Hist) -> u64 {
+        self.buckets[h as usize].iter().sum()
+    }
+
+    pub fn hist_sum(&self, h: Hist) -> u64 {
+        self.sums[h as usize]
+    }
+
+    pub fn hist_mean(&self, h: Hist) -> f64 {
+        let n = self.hist_count(h);
+        if n == 0 {
+            return 0.0;
+        }
+        self.hist_sum(h) as f64 / n as f64
+    }
+
+    /// Percentile (q in [0, 100]) with geometric interpolation inside
+    /// the matching log₂ bucket — exact to within one bucket's span.
+    pub fn hist_percentile(&self, h: Hist, q: f64) -> f64 {
+        let b = &self.buckets[h as usize];
+        let total: u64 = b.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 100.0) / 100.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in b.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= target {
+                let frac = if c == 0 {
+                    0.0
+                } else {
+                    ((target - cum as f64) / c as f64).clamp(0.0, 1.0)
+                };
+                return (i as f64 + frac).exp2();
+            }
+            cum = next;
+        }
+        ((BUCKETS - 1) as f64).exp2()
+    }
+
+    /// Render the occupied bucket range through [`stats::Histogram`].
+    pub fn hist_sparkline(&self, h: Hist) -> String {
+        let b = &self.buckets[h as usize];
+        let lo = b.iter().position(|&c| c > 0);
+        let Some(lo) = lo else {
+            return String::new();
+        };
+        let hi = b.iter().rposition(|&c| c > 0).unwrap_or(lo);
+        let mut sh = stats::Histogram::new(lo as f64, (hi + 1) as f64, hi - lo + 1);
+        sh.counts.copy_from_slice(&b[lo..=hi]);
+        sh.sparkline()
+    }
+}
+
+/// Take a merged snapshot of everything collected so far.
+pub fn snapshot() -> Snapshot {
+    flush_thread();
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    Snapshot { ctrs: g.ctrs, buckets: g.buckets, sums: g.sums }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::par;
+
+    // obs state is process-global; tests serialise on this lock so
+    // parallel `cargo test` threads don't interleave enable/reset
+    pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_probes_are_noops() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        reset();
+        add(Ctr::EngineRounds, 5);
+        observe(Hist::SelectNs, 123);
+        let sp = span("x", Hist::RoundNs);
+        assert!(sp.0.is_none(), "disabled span must not read the clock");
+        drop(sp);
+        let s = snapshot();
+        assert_eq!(s.ctr(Ctr::EngineRounds), 0);
+        assert_eq!(s.hist_count(Hist::SelectNs), 0);
+    }
+
+    #[test]
+    fn counters_merge_exactly_across_stealing_workers() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        let n = 10_000usize;
+        for &workers in &[1usize, 2, 8] {
+            par::steal::steal_exec(n, workers, |_| (), |i, _| {
+                add(Ctr::BnbNodes, 1);
+                observe(Hist::ShardFillNs, i as u64);
+            });
+        }
+        let s = snapshot();
+        assert_eq!(s.ctr(Ctr::BnbNodes), 3 * n as u64);
+        assert_eq!(s.hist_count(Hist::ShardFillNs), 3 * n as u64);
+        // sums are exact, not bucketed: 3 * Σ 0..n
+        assert_eq!(s.hist_sum(Hist::ShardFillNs), 3 * (n as u64 * (n as u64 - 1) / 2));
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn spans_feed_their_histogram() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        for _ in 0..4 {
+            let _s = span("phase", Hist::EvalNs);
+        }
+        let s = snapshot();
+        assert_eq!(s.hist_count(Hist::EvalNs), 4);
+        assert!(s.hist_percentile(Hist::EvalNs, 50.0) >= 1.0);
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn log2_percentiles_track_known_distributions() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        // 1000 observations of exactly 1024 ns: every percentile lands
+        // inside bucket 10, i.e. in [1024, 2048)
+        for _ in 0..1000 {
+            observe(Hist::JournalAppendNs, 1024);
+        }
+        let s = snapshot();
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let p = s.hist_percentile(Hist::JournalAppendNs, q);
+            assert!((1024.0..2048.0).contains(&p), "q={q}: {p}");
+        }
+        assert_eq!(s.hist_mean(Hist::JournalAppendNs), 1024.0);
+        assert!(!s.hist_sparkline(Hist::JournalAppendNs).is_empty());
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn bucket_of_is_floor_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn enum_tables_are_consistent() {
+        for (i, c) in Ctr::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "Ctr::ALL order drifted at {i}");
+        }
+        for (i, h) in Hist::ALL.iter().enumerate() {
+            assert_eq!(*h as usize, i, "Hist::ALL order drifted at {i}");
+        }
+        // every subsystem the acceptance criteria name is represented
+        for sub in ["engine", "solver", "par", "tree", "journal", "chaos", "campaign"] {
+            assert!(
+                Ctr::ALL.iter().any(|c| c.subsystem() == sub)
+                    || Hist::ALL.iter().any(|h| h.subsystem() == sub),
+                "no probe for subsystem {sub}"
+            );
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Chrome trace-event exporter: spans recorded while tracing is armed
+//! become `"ph": "X"` (complete) events that `chrome://tracing` and
+//! Perfetto load directly. Timestamps are µs relative to the process
+//! trace epoch; nesting falls out of enclosure — a `round` span's
+//! interval contains its `select`/`grant`/`train`/`aggregate`/`eval`
+//! children on the same thread track.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::fsx;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub(crate) struct TraceEvent {
+    pub name: &'static str,
+    pub tid: u32,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+/// Record one completed span (called from `Span::drop` / `span_at`
+/// when tracing is armed). Buffered thread-locally; flushed with the
+/// owning thread's counter buffer.
+pub(crate) fn record(name: &'static str, t0: Instant, dur: Duration) {
+    let ts_ns = t0
+        .checked_duration_since(super::epoch())
+        .unwrap_or(Duration::ZERO)
+        .as_nanos() as u64;
+    super::push_event(TraceEvent {
+        name,
+        tid: super::local_tid(),
+        ts_ns,
+        dur_ns: dur.as_nanos() as u64,
+    });
+}
+
+pub(crate) fn flush_events(mut evs: Vec<TraceEvent>) {
+    EVENTS
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .append(&mut evs);
+}
+
+pub(crate) fn reset_events() {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// All events collected so far, in canonical order: ascending start
+/// time, longer (enclosing) spans first on ties, then thread and name.
+fn drain_sorted() -> Vec<TraceEvent> {
+    super::flush_thread();
+    let mut evs = EVENTS
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone();
+    evs.sort_by(|a, b| {
+        a.ts_ns
+            .cmp(&b.ts_ns)
+            .then(b.dur_ns.cmp(&a.dur_ns))
+            .then(a.tid.cmp(&b.tid))
+            .then(a.name.cmp(b.name))
+    });
+    evs
+}
+
+/// Build the Chrome trace-event document (`{"traceEvents": [...]}`).
+pub fn trace_json() -> Json {
+    let events: Vec<Json> = drain_sorted()
+        .into_iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(e.name.to_string()));
+            m.insert("cat".into(), Json::Str("fedzero".into()));
+            m.insert("ph".into(), Json::Str("X".into()));
+            m.insert("ts".into(), Json::Num(e.ts_ns as f64 / 1e3));
+            m.insert("dur".into(), Json::Num(e.dur_ns as f64 / 1e3));
+            m.insert("pid".into(), Json::Num(1.0));
+            m.insert("tid".into(), Json::Num(e.tid as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root)
+}
+
+/// Write the trace to `path` (atomic temp + rename).
+pub fn write_trace(path: &Path) -> Result<()> {
+    fsx::write_atomic(path, trace_json().to_string_pretty().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{set_enabled, set_tracing, span, Hist};
+    use super::*;
+
+    #[test]
+    fn traced_spans_become_nested_x_events() {
+        let _g = super::super::tests::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        set_tracing(true);
+        super::super::reset();
+        {
+            let _round = span("round", Hist::RoundNs);
+            let _select = span("select", Hist::SelectNs);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let doc = trace_json();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        // canonical order: the enclosing round sorts before its child
+        assert_eq!(evs[0].get("name").unwrap().as_str().unwrap(), "round");
+        assert_eq!(evs[1].get("name").unwrap().as_str().unwrap(), "select");
+        for e in evs {
+            assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // enclosure: round starts no later and ends no earlier
+        let (rts, rdur) = (
+            evs[0].get("ts").unwrap().as_f64().unwrap(),
+            evs[0].get("dur").unwrap().as_f64().unwrap(),
+        );
+        let (sts, sdur) = (
+            evs[1].get("ts").unwrap().as_f64().unwrap(),
+            evs[1].get("dur").unwrap().as_f64().unwrap(),
+        );
+        assert!(rts <= sts && rts + rdur >= sts + sdur);
+        set_enabled(false);
+        super::super::reset();
+    }
+}

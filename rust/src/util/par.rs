@@ -403,6 +403,8 @@ pub mod steal {
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::thread;
 
+    use crate::util::obs;
+
     /// Scheduling telemetry from one fan-out. The *output* of a stolen
     /// fan-out is schedule-independent; these counters are not — they
     /// vary run to run with OS timing. Bench JSON records them as the
@@ -594,6 +596,10 @@ pub mod steal {
             steals: steals.load(Ordering::Relaxed),
             stolen_items: stolen_items.load(Ordering::Relaxed),
         };
+        // surface StealStats at every fan-out site, not just in benches
+        obs::add(obs::Ctr::StealFanouts, 1);
+        obs::add(obs::Ctr::StealSteals, stats.steals);
+        obs::add(obs::Ctr::StealStolenItems, stats.stolen_items);
         (states, stats)
     }
 

@@ -55,13 +55,18 @@ pub fn std(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Linear-interpolated percentile, q in [0, 100].
+/// Linear-interpolated percentile. `q` is clamped to [0, 100], so
+/// q=0 is the minimum and q=100 the maximum; a single-element slice
+/// returns that element for every q. Empty input returns NaN (there is
+/// no sensible number). NaN *elements* sort last (`total_cmp`) instead
+/// of panicking.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
+    let q = q.clamp(0.0, 100.0);
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -189,6 +194,54 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // single element: every q returns it
+        for q in [-5.0, 0.0, 37.2, 100.0, 250.0] {
+            assert_eq!(percentile(&[42.0], q), 42.0);
+        }
+        // out-of-range q clamps to the endpoints
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 1e9), 5.0);
+        // NaN elements sort last rather than panicking
+        let with_nan = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert_eq!(percentile(&with_nan, 50.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_matches_sorted_index_oracle() {
+        use crate::util::prop::forall;
+        forall(200, |rng| {
+            let n = 1 + (rng.next_u64() % 40) as usize;
+            let xs: Vec<f64> =
+                (0..n).map(|_| (rng.f64() * 2000.0) - 1000.0).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(f64::total_cmp);
+            // exact rank points hit the sorted element exactly
+            for (i, &s) in sorted.iter().enumerate() {
+                let q = 100.0 * i as f64 / (n - 1).max(1) as f64;
+                let p = percentile(&xs, q);
+                assert!(
+                    (p - s).abs() < 1e-9,
+                    "rank {i}/{n} q={q}: got {p}, oracle {s}"
+                );
+            }
+            // arbitrary q is monotone and bracketed by neighbours
+            let q = rng.f64() * 100.0;
+            let p = percentile(&xs, q);
+            let pos = q / 100.0 * (n - 1) as f64;
+            let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+            assert!(
+                sorted[lo] - 1e-9 <= p && p <= sorted[hi] + 1e-9,
+                "q={q}: {p} outside [{}, {}]",
+                sorted[lo],
+                sorted[hi]
+            );
+        });
     }
 
     #[test]
